@@ -1,0 +1,10 @@
+//! I/O study (paper Appendix B): sync-vs-async, buffered-vs-direct reads on
+//! the simulated SSD — the measurements motivating GNNDrive's asynchronous
+//! direct-I/O extraction.
+//!
+//!     cargo run --release --example io_study [-- --full]
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    print!("{}", gnndrive::experiments::figb1(!full));
+}

@@ -1,0 +1,9 @@
+//! Multi-GPU data parallelism demo (paper Fig 13): the same epoch's work
+//! split across 1/2/4 worker pipelines on the 8×K80 machine, with gradient
+//! synchronization over the shared PCIe link.
+//!
+//!     cargo run --release --example multi_gpu_scaling
+
+fn main() {
+    print!("{}", gnndrive::experiments::fig13(true));
+}

@@ -1,0 +1,71 @@
+//! Quickstart: build a dataset analog, run GNNDrive for one epoch, and show
+//! what the pipeline did.
+//!
+//!     cargo run --release --example quickstart
+
+use gnndrive::baselines::{build_system, SystemKind};
+use gnndrive::config::{Machine, MachineConfig, TrainConfig};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::runtime::simcompute::ModelKind;
+use gnndrive::sim::Clock;
+use gnndrive::util::units::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A machine: the paper's testbed at 1/256 memory scale — one
+    //    simulated PM883 SSD, 128 MiB host budget, two RTX-3090-class GPUs.
+    let machine = Machine::new(MachineConfig::paper(), Clock::from_env());
+    println!(
+        "machine: {} | host {} | device {} x{} | SSD {:.0} MB/s, {} IOPS",
+        machine.cfg.name,
+        fmt_bytes(machine.cfg.host_mem),
+        fmt_bytes(machine.cfg.dev_mem),
+        machine.cfg.gpus,
+        machine.cfg.ssd.read_bw / 1e6,
+        machine.cfg.ssd.iops,
+    );
+
+    // 2. A dataset: the Papers100M analog (Table 1 row 1). Topology goes to
+    //    the simulated SSD; features are served on demand; labels/splits are
+    //    deterministic.
+    let ds = Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine)?;
+    println!(
+        "dataset: {} | {} nodes | {} edges | topo {} | features {}",
+        ds.spec.name,
+        ds.spec.nodes,
+        ds.graph.edges(),
+        fmt_bytes(ds.graph.topo_bytes()),
+        fmt_bytes(ds.features.total_bytes()),
+    );
+
+    // 3. The paper's workload: batch 1000, 3-hop (10,10,10) sampling.
+    let cfg = TrainConfig {
+        batches_per_epoch: Some(4), // a short demo epoch
+        ..TrainConfig::default()
+    };
+
+    // 4. Run GNNDrive (GPU variant, simulated train stage): one warm-up
+    //    epoch, then the measured one (the paper averages warm epochs).
+    let mut sys = build_system(SystemKind::GnnDriveGpu, &machine, &ds, cfg, ModelKind::GraphSage)?;
+    sys.run_epoch(0)?;
+    let stats = sys.run_epoch(1)?;
+    println!("\nGNNDrive epoch (warm):\n  {}", stats.summary());
+    println!(
+        "  SSD read: {} | out-of-order completions (inversions): {}",
+        fmt_bytes(stats.ssd_read_bytes),
+        stats.reorder_inversions,
+    );
+
+    // 5. Compare against PyG+ on the same machine.
+    drop(sys);
+    machine.storage.cache.drop_all();
+    let cfg = TrainConfig { batches_per_epoch: Some(4), ..TrainConfig::default() };
+    let mut pyg = build_system(SystemKind::PygPlus, &machine, &ds, cfg, ModelKind::GraphSage)?;
+    pyg.run_epoch(0)?;
+    let pstats = pyg.run_epoch(1)?;
+    println!("\nPyG+ epoch (warm):\n  {}", pstats.summary());
+    println!(
+        "\nGNNDrive vs PyG+ epoch time: {:.2}x",
+        pstats.epoch_time.as_secs_f64() / stats.epoch_time.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,140 @@
+"""AOT lowering: JAX/Pallas train & eval steps → HLO *text* artifacts the
+Rust runtime loads via PJRT.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Each artifact `<name>` ships three files under ``artifacts/``:
+
+* ``<name>.hlo.txt``    — the lowered module (inputs: params… feats idx…
+  labels; output: a tuple, see meta);
+* ``<name>.meta.json``  — shapes/dtypes/param layout/hyperparams, consumed
+  by ``rust/src/runtime/artifacts.rs``;
+* ``<name>.params.bin`` — the initial parameters as concatenated f32
+  little-endian arrays in meta order (Rust loads these instead of
+  re-implementing the initializer).
+
+Python runs only here, at build time (`make artifacts`); it is never on the
+training path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: M.ModelConfig, kind: str):
+    """kind: 'train' or 'eval'."""
+    fn = M.make_train_step(cfg) if kind == "train" else M.make_eval_step(cfg)
+    params, feats, idxs, labels = M.example_args(cfg)
+    specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    specs.append(jax.ShapeDtypeStruct(feats.shape, feats.dtype))
+    specs += [jax.ShapeDtypeStruct(i.shape, i.dtype) for i in idxs]
+    specs.append(jax.ShapeDtypeStruct(labels.shape, labels.dtype))
+    return jax.jit(fn).lower(*specs)
+
+
+def meta_dict(cfg: M.ModelConfig, kind: str):
+    pspecs = M.param_specs(cfg)
+    inputs = [{"name": n, "shape": list(s), "dtype": "f32"} for n, s in pspecs]
+    inputs.append(
+        {"name": "feats", "shape": [cfg.caps[-1], cfg.dim], "dtype": "f32"}
+    )
+    for i, f in enumerate(cfg.fanouts):
+        inputs.append(
+            {"name": f"idx_{i}", "shape": [cfg.caps[i], f], "dtype": "i32"}
+        )
+    inputs.append({"name": "labels", "shape": [cfg.caps[0]], "dtype": "i32"})
+    if kind == "train":
+        outputs = [{"name": n, "shape": list(s), "dtype": "f32"} for n, s in pspecs]
+        outputs += [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "correct", "shape": [], "dtype": "f32"},
+        ]
+    else:
+        outputs = [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "correct", "shape": [], "dtype": "f32"},
+        ]
+    return {
+        "name": cfg.name,
+        "kind": kind,
+        "model": cfg.model,
+        "caps": list(cfg.caps),
+        "fanouts": list(cfg.fanouts),
+        "dim": cfg.dim,
+        "hidden": cfg.hidden,
+        "classes": cfg.classes,
+        "lr": cfg.lr,
+        "n_params": len(pspecs),
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def write_params_bin(cfg: M.ModelConfig, path: str, seed: int = 0):
+    params = M.init_params(cfg, seed)
+    with open(path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+
+def build(cfg: M.ModelConfig, out_dir: str, kinds=("train", "eval"), verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    write_params_bin(cfg, os.path.join(out_dir, f"{cfg.name}.params.bin"))
+    for kind in kinds:
+        name = cfg.name if kind == "train" else f"{cfg.name}_eval"
+        lowered = lower_config(cfg, kind)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        meta = meta_dict(cfg, kind)
+        meta["artifact"] = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        if verbose:
+            print(f"wrote {name}: {len(text)} chars of HLO")
+
+
+DEFAULT_CONFIGS = [
+    M.mini("graphsage"),
+    M.mini("gcn", name="gcn_mini"),
+    M.mini("gat", name="gat_mini"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names to build"
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    for cfg in DEFAULT_CONFIGS:
+        if only and cfg.name not in only:
+            continue
+        build(cfg, args.out)
+    print("artifacts complete", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Pallas kernels for neighbor-feature aggregation — the compute hot-spot of
+sample-based GNN training (layer-2 models call these; they lower into the
+same AOT HLO the Rust runtime executes).
+
+Hardware adaptation (DESIGN.md §4): the paper's testbed aggregates on CUDA
+GPUs; restated for an MXU/VMEM machine, the gather-reduce is blocked over
+(dst-rows × feature-dim) tiles via `BlockSpec` so each tile's output and its
+gathered source rows fit VMEM, with the HBM↔VMEM schedule expressed by the
+Pallas grid instead of CUDA threadblocks. `interpret=True` everywhere: the
+CPU PJRT plugin cannot run Mosaic custom-calls, and correctness (not
+wallclock) is what the CPU path validates — real-TPU tiling estimates live
+in DESIGN.md §Perf.
+
+VMEM budget at the default tile (bm=128, bd=128, F≤16, fp32):
+  out tile 128×128×4 = 64 KiB, idx tile 128×16×4 = 8 KiB, gathered rows
+  128×16×128×4 = 1 MiB → ≈1.1 MiB/tile, comfortably inside the ~16 MiB VMEM
+  of a TPUv4 core with double-buffering headroom.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (MXU-friendly multiples of the 8×128 lane layout).
+BLOCK_M = 128
+BLOCK_D = 128
+
+
+def _mean_kernel(idx_ref, x_ref, o_ref):
+    """One (bm × bd) output tile: masked mean over F gathered rows."""
+    idx = idx_ref[...]  # [bm, F] int32
+    x = x_ref[...]  # [N, bd] — full source rows, this dim-tile only
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    rows = jnp.take(x, safe.reshape(-1), axis=0)  # [bm*F, bd]
+    rows = rows.reshape(idx.shape + (x.shape[-1],))  # [bm, F, bd]
+    rows = rows * mask[..., None].astype(x.dtype)
+    cnt = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1).astype(x.dtype)
+    o_ref[...] = rows.sum(axis=1) / cnt
+
+
+def _sum_kernel(idx_ref, x_ref, o_ref):
+    idx = idx_ref[...]
+    x = x_ref[...]
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    rows = jnp.take(x, safe.reshape(-1), axis=0)
+    rows = rows.reshape(idx.shape + (x.shape[-1],))
+    rows = rows * mask[..., None].astype(x.dtype)
+    o_ref[...] = rows.sum(axis=1)
+
+
+def _rows_kernel(idx_ref, x_ref, o_ref):
+    """Gather tile without reduction: output [bm, F, bd]."""
+    idx = idx_ref[...]
+    x = x_ref[...]
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    rows = jnp.take(x, safe.reshape(-1), axis=0)
+    rows = rows.reshape(idx.shape + (x.shape[-1],))
+    o_ref[...] = rows * mask[..., None].astype(x.dtype)
+
+
+def _tiles(n, block):
+    """Grid size and effective block for a dimension (handles n < block)."""
+    b = min(block, n)
+    return pl.cdiv(n, b), b
+
+
+def pallas_gather_mean(x, idx, block_m=BLOCK_M, block_d=BLOCK_D):
+    """Raw Pallas call (no vjp) — exported for tests/tuning."""
+    m, f = idx.shape
+    n, d = x.shape
+    gm, bm = _tiles(m, block_m)
+    gd, bd = _tiles(d, block_d)
+    return pl.pallas_call(
+        _mean_kernel,
+        grid=(gm, gd),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(idx, x)
+
+
+def pallas_gather_sum(x, idx, block_m=BLOCK_M, block_d=BLOCK_D):
+    """Raw Pallas call (no vjp) — exported for tests/tuning."""
+    m, f = idx.shape
+    n, d = x.shape
+    gm, bm = _tiles(m, block_m)
+    gd, bd = _tiles(d, block_d)
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(gm, gd),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(idx, x)
+
+
+def pallas_gather_rows(x, idx, block_m=BLOCK_M, block_d=BLOCK_D):
+    """Raw Pallas call (no vjp) — exported for tests/tuning."""
+    m, f = idx.shape
+    n, d = x.shape
+    gm, bm = _tiles(m, block_m)
+    gd, bd = _tiles(d, block_d)
+    return pl.pallas_call(
+        _rows_kernel,
+        grid=(gm, gd),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, f, bd), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, f, d), x.dtype),
+        interpret=True,
+    )(idx, x)
+
+
+# --------------------------------------------------------------------------
+# Autodiff wrappers.
+#
+# Pallas (interpret mode included) has no reverse-mode rule, so each kernel
+# carries a custom VJP: the forward pass runs the Pallas kernel; the
+# backward pass is the mathematically exact scatter-add, expressed with
+# XLA's native scatter (`.at[].add`). This mirrors how real systems pair a
+# hand-written forward gather kernel with a scatter-based gradient; both
+# lower into the single AOT HLO module the Rust runtime executes.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def gather_mean(x, idx):
+    """Masked mean aggregation (Pallas forward). See ref.gather_mean."""
+    return pallas_gather_mean(x, idx)
+
+
+def _mean_fwd(x, idx):
+    # Residuals must be JAX values: an empty [N, 0] array carries x's row
+    # count and dtype without retaining its data.
+    return pallas_gather_mean(x, idx), (x[:, :0], idx)
+
+
+def _mean_bwd(res, g):
+    (xproto, idx) = res
+    xshape = (xproto.shape[0], g.shape[-1])
+    xdtype = xproto.dtype
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    cnt = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1).astype(g.dtype)
+    contrib = (g / cnt)[:, None, :] * mask[..., None].astype(g.dtype)  # [M,F,D]
+    dx = jnp.zeros(xshape, xdtype).at[safe.reshape(-1)].add(
+        contrib.reshape(-1, xshape[-1])
+    )
+    return dx, None
+
+
+gather_mean.defvjp(_mean_fwd, _mean_bwd)
+
+
+@jax.custom_vjp
+def gather_sum(x, idx):
+    """Masked sum aggregation (Pallas forward). See ref.gather_sum."""
+    return pallas_gather_sum(x, idx)
+
+
+def _sum_fwd(x, idx):
+    return pallas_gather_sum(x, idx), (x[:, :0], idx)
+
+
+def _sum_bwd(res, g):
+    (xproto, idx) = res
+    xshape = (xproto.shape[0], g.shape[-1])
+    xdtype = xproto.dtype
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    contrib = g[:, None, :] * mask[..., None].astype(g.dtype)
+    dx = jnp.zeros(xshape, xdtype).at[safe.reshape(-1)].add(
+        contrib.reshape(-1, xshape[-1])
+    )
+    return dx, None
+
+
+gather_sum.defvjp(_sum_fwd, _sum_bwd)
+
+
+@jax.custom_vjp
+def gather_rows(x, idx):
+    """Masked gather, no reduction (Pallas forward). See ref.gather_rows."""
+    return pallas_gather_rows(x, idx)
+
+
+def _rows_fwd(x, idx):
+    return pallas_gather_rows(x, idx), (x[:, :0], idx)
+
+
+def _rows_bwd(res, g):
+    (xproto, idx) = res
+    xshape = (xproto.shape[0], g.shape[-1])
+    xdtype = xproto.dtype
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    contrib = g * mask[..., None].astype(g.dtype)  # [M,F,D]
+    dx = jnp.zeros(xshape, xdtype).at[safe.reshape(-1)].add(
+        contrib.reshape(-1, xshape[-1])
+    )
+    return dx, None
+
+
+gather_rows.defvjp(_rows_fwd, _rows_bwd)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness reference (the paper's L1 hot-spot is neighbor
+feature aggregation): every Pallas kernel in this package must match its
+oracle to float tolerance under pytest + hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_mean(x, idx):
+    """Masked mean of gathered rows.
+
+    x:   [N, D] float
+    idx: [M, F] int32, entries in [0, N) or -1 for padding
+    out: [M, D] -- mean over valid entries; all-invalid rows are zero.
+    """
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    rows = jnp.take(x, safe, axis=0)  # [M, F, D]
+    rows = rows * mask[..., None].astype(x.dtype)
+    cnt = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1).astype(x.dtype)
+    return rows.sum(axis=1) / cnt
+
+
+def gather_sum(x, idx):
+    """Masked sum of gathered rows (same contract as gather_mean)."""
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    rows = jnp.take(x, safe, axis=0)
+    rows = rows * mask[..., None].astype(x.dtype)
+    return rows.sum(axis=1)
+
+
+def gather_rows(x, idx):
+    """Masked gather without reduction.
+
+    out: [M, F, D]; invalid entries produce zero rows.
+    """
+    mask = idx >= 0
+    safe = jnp.where(mask, idx, 0)
+    rows = jnp.take(x, safe, axis=0)
+    return rows * mask[..., None].astype(x.dtype)

@@ -1,0 +1,246 @@
+"""Layer-2 JAX models: GraphSAGE / GCN / GAT training steps over fixed
+padded mini-batch shapes (the paper's three evaluation models, §5).
+
+A mini-batch arrives from the Rust coordinator as:
+
+* ``feats``  — ``[caps[L], dim]`` f32, gathered from GNNDrive's feature
+  buffer by node alias (padding rows are zero);
+* ``idx_i``  — ``[caps[i], fanouts[i]]`` int32 adjacency per level, local
+  indices into the ``caps[i+1]`` prefix, ``-1`` = padding;
+* ``labels`` — ``[caps[0]]`` int32, ``-1`` = padded seed.
+
+``train_step`` runs forward + cross-entropy + backward + SGD in one pure
+function (lowered once to HLO text by :mod:`compile.aot`; Python never runs
+at training time). Neighbor aggregation is the L1 Pallas kernel
+(:mod:`compile.kernels.aggregate`).
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import aggregate
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/hyperparameter bundle — one AOT artifact per config."""
+
+    name: str
+    model: str  # "graphsage" | "gcn" | "gat"
+    caps: tuple  # node prefix caps per level, seeds first: (c0, ..., cL)
+    fanouts: tuple  # per-level fanout, len == L
+    dim: int
+    hidden: int
+    classes: int
+    lr: float = 0.05
+    leaky_slope: float = 0.2  # GAT attention nonlinearity
+
+    @property
+    def levels(self):
+        return len(self.fanouts)
+
+    def layer_dims(self):
+        """(d_in, d_out) per GNN step, deepest level first."""
+        dims = []
+        for step in range(self.levels):
+            level = self.levels - 1 - step  # consume adjacency L-1 … 0
+            d_in = self.dim if step == 0 else self.hidden
+            d_out = self.classes if level == 0 else self.hidden
+            dims.append((d_in, d_out))
+        return dims
+
+
+def mini(model="graphsage", **kw):
+    """The small e2e/Fig-14 config: batch 64, fanouts (5,5), caps to 2048."""
+    cfg = dict(
+        name=f"{'sage' if model == 'graphsage' else model}_mini",
+        model=model,
+        caps=(64, 384, 2048),
+        fanouts=(5, 5),
+        dim=64,
+        hidden=64,
+        classes=16,
+        lr=0.05,
+    )
+    cfg.update(kw)
+    return ModelConfig(**cfg)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the contract shared with Rust via the
+    meta sidecar and the params.bin dump."""
+    specs = []
+    for step, (d_in, d_out) in enumerate(cfg.layer_dims()):
+        if cfg.model in ("graphsage",):
+            specs.append((f"l{step}_w_self", (d_in, d_out)))
+            specs.append((f"l{step}_w_neigh", (d_in, d_out)))
+            specs.append((f"l{step}_b", (d_out,)))
+        elif cfg.model == "gcn":
+            specs.append((f"l{step}_w", (d_in, d_out)))
+            specs.append((f"l{step}_b", (d_out,)))
+        elif cfg.model == "gat":
+            specs.append((f"l{step}_w", (d_in, d_out)))
+            specs.append((f"l{step}_a_dst", (d_out,)))
+            specs.append((f"l{step}_a_src", (d_out,)))
+            specs.append((f"l{step}_b", (d_out,)))
+        else:
+            raise ValueError(cfg.model)
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed=0):
+    """Glorot-uniform weights / zero biases, deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            limit = float(np.sqrt(6.0 / (shape[0] + shape[1])))
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+        elif name.endswith(("a_dst", "a_src")):
+            limit = float(np.sqrt(3.0 / shape[0]))
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _layer(cfg, params_slice, h, idx, step, is_last):
+    """One GNN step: dst prefix = idx.shape[0], src = current h."""
+    dst = idx.shape[0]
+    h_dst = h[:dst]
+    if cfg.model == "graphsage":
+        w_self, w_neigh, b = params_slice
+        agg = aggregate.gather_mean(h, idx)
+        out = h_dst @ w_self + agg @ w_neigh + b
+    elif cfg.model == "gcn":
+        (w, b) = params_slice
+        # Mean over {self} ∪ sampled neighbors (degree-normalized mean of
+        # the sampled adjacency, the standard sampled-GCN estimator).
+        mask = (idx >= 0).astype(h.dtype)
+        cnt = mask.sum(axis=-1, keepdims=True)
+        agg = aggregate.gather_sum(h, idx)
+        out = ((h_dst + agg) / (cnt + 1.0)) @ w + b
+    elif cfg.model == "gat":
+        w, a_dst, a_src, b = params_slice
+        wh = h @ w  # [src, d_out]
+        wh_dst = wh[:dst]
+        rows = aggregate.gather_rows(wh, idx)  # [dst, F, d_out]
+        e = jnp.einsum("d,md->m", a_dst, wh_dst)[:, None] + jnp.einsum(
+            "d,mfd->mf", a_src, rows
+        )
+        e = jax.nn.leaky_relu(e, cfg.leaky_slope)
+        neg = jnp.finfo(h.dtype).min
+        e = jnp.where(idx >= 0, e, neg)
+        att = jax.nn.softmax(e, axis=-1)
+        att = jnp.where(idx >= 0, att, 0.0)  # all-invalid rows -> zeros
+        out = jnp.einsum("mf,mfd->md", att, rows) + wh_dst + b
+    else:
+        raise ValueError(cfg.model)
+    if not is_last:
+        out = jax.nn.relu(out)
+    return out
+
+
+def _split_params(cfg, params):
+    per = {"graphsage": 3, "gcn": 2, "gat": 4}[cfg.model]
+    return [params[i * per : (i + 1) * per] for i in range(cfg.levels)]
+
+
+def forward(cfg: ModelConfig, params, feats, idxs):
+    """Logits for the seed prefix. `idxs` are level adjacencies 0..L-1."""
+    h = feats
+    slices = _split_params(cfg, params)
+    for step in range(cfg.levels):
+        level = cfg.levels - 1 - step
+        h = _layer(cfg, slices[step], h, idxs[level], step, is_last=(level == 0))
+    return h  # [caps[0], classes]
+
+
+def _loss_and_acc(cfg, logits, labels):
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[:, None], axis=-1)[:, 0]
+    nll = jnp.where(valid, nll, 0.0)
+    n = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / n.astype(jnp.float32)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.where(valid, (pred == safe).astype(jnp.int32), 0).sum()
+    return loss, correct
+
+
+def make_train_step(cfg: ModelConfig):
+    """Pure SGD step: (*params, feats, idx_0.., labels) →
+    (*new_params, loss, correct)."""
+
+    n_params = len(param_specs(cfg))
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        feats = args[n_params]
+        idxs = list(args[n_params + 1 : n_params + 1 + cfg.levels])
+        labels = args[n_params + 1 + cfg.levels]
+
+        def loss_fn(ps):
+            logits = forward(cfg, ps, feats, idxs)
+            loss, correct = _loss_and_acc(cfg, logits, labels)
+            return loss, correct
+
+        (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss, correct.astype(jnp.float32))
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Inference: (*params, feats, idx_0.., labels) → (loss, correct)."""
+
+    n_params = len(param_specs(cfg))
+
+    def eval_step(*args):
+        params = list(args[:n_params])
+        feats = args[n_params]
+        idxs = list(args[n_params + 1 : n_params + 1 + cfg.levels])
+        labels = args[n_params + 1 + cfg.levels]
+        logits = forward(cfg, params, feats, idxs)
+        loss, correct = _loss_and_acc(cfg, logits, labels)
+        return (loss, correct.astype(jnp.float32))
+
+    return eval_step
+
+
+def example_args(cfg: ModelConfig, seed=0):
+    """Concrete example inputs (shapes only matter for lowering; also used
+    by tests)."""
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, seed)
+    feats = jnp.asarray(rng.normal(size=(cfg.caps[-1], cfg.dim)).astype(np.float32))
+    idxs = []
+    for i, f in enumerate(cfg.fanouts):
+        hi = cfg.caps[i + 1]
+        idx = rng.integers(-1, hi, size=(cfg.caps[i], f)).astype(np.int32)
+        idxs.append(jnp.asarray(idx))
+    labels = jnp.asarray(
+        rng.integers(0, cfg.classes, size=(cfg.caps[0],)).astype(np.int32)
+    )
+    return params, feats, idxs, labels
+
+
+def flat_args(cfg: ModelConfig, params, feats, idxs, labels):
+    return tuple(params) + (feats,) + tuple(idxs) + (labels,)

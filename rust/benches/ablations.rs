@@ -1,0 +1,7 @@
+//! `cargo bench --bench ablations` — GNNDrive with each mechanism disabled
+//! individually: async extraction, direct I/O, mini-batch reordering
+//! (the design-choice ablations called out in DESIGN.md §10).
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::ablation(quick));
+}

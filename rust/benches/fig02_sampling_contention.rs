@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig02_sampling_contention` — regenerates paper Fig 2 (memory contention: sampling time -only vs -all).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig02(quick));
+}

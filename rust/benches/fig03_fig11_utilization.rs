@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig03_fig11_utilization` — regenerates paper Figs 3 & 11 (CPU/GPU utilization + iowait timelines).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig03_fig11(quick));
+}

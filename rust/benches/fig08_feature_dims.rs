@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig08_feature_dims` — regenerates paper Fig 8 (epoch time vs feature dimensions).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig08(quick));
+}

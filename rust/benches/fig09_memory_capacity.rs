@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig09_memory_capacity` — regenerates paper Fig 9 (epoch time vs host memory).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig09(quick));
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig10_minibatch_sizes` — regenerates paper Fig 10 (epoch time vs mini-batch size).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig10(quick));
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig12_feature_buffer` — regenerates paper Fig 12 (feature buffer size sweep).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig12(quick));
+}

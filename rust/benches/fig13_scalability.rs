@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig13_scalability` — regenerates paper Fig 13 (multi-GPU scalability).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig13(quick));
+}

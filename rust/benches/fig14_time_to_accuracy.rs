@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig14_time_to_accuracy` — regenerates paper Fig 14 (time-to-accuracy, real PJRT training).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::fig14(quick));
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench figb1_async_io` — regenerates paper Fig B.1 (sync vs async I/O microbenchmark).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::figb1(quick));
+}

@@ -1,0 +1,108 @@
+//! `cargo bench --bench micro_hotpath` — microbenchmarks of the coordinator
+//! hot-path structures (mapping table / standby list, bounded queues, LRU,
+//! sampler CPU, feature-row synthesis). These back the §Perf iteration log
+//! in EXPERIMENTS.md.
+
+use gnndrive::bench::{measure, per_op};
+use gnndrive::config::{Machine, MachineConfig};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::membuf::FeatureBuffer;
+use gnndrive::sample::Sampler;
+use gnndrive::sim::queue::BoundedQueue;
+use gnndrive::sim::Clock;
+use gnndrive::storage::DeviceMemory;
+use gnndrive::util::lru::Lru;
+use gnndrive::util::rng::Pcg;
+use std::sync::Arc;
+
+fn main() {
+    println!("# micro_hotpath — coordinator hot-path microbenchmarks\n");
+
+    // Feature-buffer begin/release cycle (Algorithm 1 bookkeeping, no I/O).
+    {
+        let dev = DeviceMemory::new(1 << 30);
+        let fb = FeatureBuffer::in_device(&dev, 64 * 1024, 128).unwrap();
+        let mut rng = Pcg::new(1);
+        let batch: Vec<u32> = (0..4096).map(|_| rng.below(1 << 20)).collect();
+        let m = measure("feature_buffer begin+release (4096 nodes)", 3, 30, || {
+            let plan = fb.begin_batch(&batch);
+            // Publish a few so future batches exercise the hit path too.
+            for &(node, slot) in plan.to_load.iter().take(64) {
+                fb.publish(node, slot, &[0.0; 128]);
+            }
+            fb.release(&batch);
+        });
+        println!("{}", m.row());
+        println!("  -> {:?}/node", per_op(&m, 4096));
+    }
+
+    // Standby-list LRU ops.
+    {
+        let mut lru: Lru<u32> = Lru::new();
+        for i in 0..65_536u32 {
+            lru.insert(i);
+        }
+        let mut i = 0u32;
+        let m = measure("lru touch+pop+insert (batch of 1024)", 3, 50, || {
+            for _ in 0..1024 {
+                lru.touch(&(i % 65_536));
+                if let Some(k) = lru.pop_lru() {
+                    lru.insert(k);
+                }
+                i = i.wrapping_add(2654435761);
+            }
+        });
+        println!("{}", m.row());
+        println!("  -> {:?}/op", per_op(&m, 3 * 1024));
+    }
+
+    // Bounded queue round trip (the three pipeline queues are ID-only).
+    {
+        let q: BoundedQueue<u64> = BoundedQueue::new(1024);
+        let m = measure("bounded queue push+pop (batch of 1024)", 3, 50, || {
+            for v in 0..1024u64 {
+                q.push(v).unwrap();
+            }
+            for _ in 0..1024 {
+                q.pop().unwrap();
+            }
+        });
+        println!("{}", m.row());
+        println!("  -> {:?}/op", per_op(&m, 2 * 1024));
+    }
+
+    // Sampler CPU cost (warm page cache → pure coordinator work).
+    {
+        let machine = Machine::new(
+            MachineConfig::paper().with_host_mem(1 << 30),
+            Clock::new(1.0),
+        );
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let sampler = Sampler::new(vec![10, 10], 7);
+        let seeds: Vec<u32> = ds.train_ids.iter().take(256).copied().collect();
+        sampler.sample_batch(&ds, &machine.storage, 0, &seeds); // warm
+        let mut b = 1u64;
+        let m = measure("sampler 2-hop (256 seeds, fanout 10, warm cache)", 2, 15, || {
+            let sub = sampler.sample_batch(&ds, &machine.storage, b, &seeds);
+            std::hint::black_box(&sub);
+            b += 1;
+        });
+        println!("{}", m.row());
+    }
+
+    // Procedural feature-row synthesis (backing-store hot loop).
+    {
+        let labels = Arc::new(vec![0u16; 1 << 16]);
+        let gen = gnndrive::graph::FeatureGen::new(3, 128, 4, 0.5, labels);
+        let mut row = vec![0u8; 512];
+        let mut v = 0u64;
+        let m = measure("feature row synthesis (dim 128, batch of 256)", 3, 50, || {
+            for _ in 0..256 {
+                gen.fill_row(v % (1 << 16), &mut row);
+                v = v.wrapping_add(7919);
+            }
+        });
+        println!("{}", m.row());
+        println!("  -> {:?}/row", per_op(&m, 256));
+    }
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench tab02_marius_comparison` — regenerates paper Table 2 (MariusGNN vs GNNDrive).
+//! Quick grids by default; GNNDRIVE_BENCH_FULL=1 for the full sweep.
+fn main() {
+    let quick = !gnndrive::experiments::is_full();
+    print!("{}", gnndrive::experiments::tab02(quick));
+}

@@ -1,0 +1,135 @@
+//! Shared surface for all disk-based training systems under comparison:
+//! GNNDrive (GPU/CPU), PyG+, Ginex, MariusGNN. Every system runs on the
+//! same substrate (one SsdSim, one page cache, one host-memory budget) with
+//! the same sampler and the same (simulated or real) trainer, so measured
+//! differences come from each system's memory/I-O *mechanisms* — which is
+//! what the paper compares.
+
+use crate::config::{GpuModel, Machine, TrainConfig};
+use crate::graph::Dataset;
+use crate::pipeline::{derive_caps, EpochStats, Variant};
+use crate::runtime::simcompute::{ModelKind, SimTrainStep};
+use crate::train::TrainStep;
+use std::time::Duration;
+
+/// A disk-based GNN training system under test.
+pub trait TrainingSystem: Send {
+    fn name(&self) -> &'static str;
+
+    /// One full SET epoch (including any per-epoch preparation, reported in
+    /// `EpochStats::prep_time`).
+    fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats>;
+
+    /// Fig 2's `-only` condition: sampling alone; returns summed sample time.
+    fn run_sample_only(&mut self, epoch: u64) -> Duration;
+}
+
+/// Which system to build (CLI/bench selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    GnnDriveGpu,
+    GnnDriveCpu,
+    PygPlus,
+    Ginex,
+    MariusGnn,
+}
+
+impl SystemKind {
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "gnndrive" | "gnndrive-gpu" => Some(SystemKind::GnnDriveGpu),
+            "gnndrive-cpu" => Some(SystemKind::GnnDriveCpu),
+            "pyg+" | "pygplus" => Some(SystemKind::PygPlus),
+            "ginex" => Some(SystemKind::Ginex),
+            "marius" | "mariusgnn" => Some(SystemKind::MariusGnn),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::GnnDriveGpu => "GNNDrive(GPU)",
+            SystemKind::GnnDriveCpu => "GNNDrive(CPU)",
+            SystemKind::PygPlus => "PyG+",
+            SystemKind::Ginex => "Ginex",
+            SystemKind::MariusGnn => "MariusGNN",
+        }
+    }
+
+    pub fn all() -> [SystemKind; 5] {
+        [
+            SystemKind::GnnDriveGpu,
+            SystemKind::GnnDriveCpu,
+            SystemKind::PygPlus,
+            SystemKind::Ginex,
+            SystemKind::MariusGnn,
+        ]
+    }
+}
+
+/// Reference feature-buffer budget used to derive GPU-variant node caps —
+/// the paper's default sizing policy (≈2.38 GB of the 24 GB device at
+/// dim 128, i.e. ~10 %), scaled 1/32 with device memory. Caps derive at the
+/// reference dim so node counts per batch do NOT shrink when the feature
+/// dimension grows (the paper's GPU had headroom across the dim sweep);
+/// only the buffer's *byte* size grows with dim.
+pub const GPU_CAP_REF_BUDGET: u64 = 96 << 20;
+const CAP_REF_DIM: usize = 128;
+
+/// Derive the shared padded caps for a (machine, dataset, config) triple —
+/// identical across systems so every system extracts the same byte volume.
+pub fn shared_caps(
+    machine: &Machine,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    variant: Variant,
+) -> Vec<usize> {
+    let groups = cfg.train_queue_cap + cfg.extractors + 1;
+    match variant {
+        Variant::Gpu => derive_caps(
+            cfg.batch_size,
+            &cfg.fanouts,
+            CAP_REF_DIM,
+            GPU_CAP_REF_BUDGET,
+            groups,
+            1, // buffer mult affects slots, not caps
+        ),
+        // CPU training: the feature buffer competes with everything else in
+        // host memory; budget a quarter of it *at the actual dim* — higher
+        // dims squeeze the CPU variant, which is the paper's CPU story.
+        Variant::Cpu => derive_caps(
+            cfg.batch_size,
+            &cfg.fanouts,
+            ds.spec.dim,
+            machine.host.capacity() / 4,
+            groups,
+            1,
+        ),
+    }
+}
+
+/// Build the simulated-GPU trainer every sweep system uses.
+pub fn sim_trainer(
+    machine: &Machine,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    model: ModelKind,
+    variant: Variant,
+    hidden: usize,
+) -> Box<dyn TrainStep> {
+    let caps = shared_caps(machine, ds, cfg, variant);
+    let gpu = match variant {
+        Variant::Gpu => machine.cfg.gpu,
+        Variant::Cpu => GpuModel::CpuOnly,
+    };
+    Box::new(SimTrainStep::new(
+        gpu,
+        machine.clock.clone(),
+        model,
+        caps,
+        cfg.fanouts.clone(),
+        ds.spec.dim,
+        hidden, // paper default: 256
+        ds.spec.classes,
+    ))
+}

@@ -1,0 +1,372 @@
+//! Ginex baseline (Park et al., VLDB '22; paper §2/§3).
+//!
+//! Mechanisms reproduced:
+//! * two dedicated in-memory caches carved out of host memory (≥85 % of it,
+//!   per the paper's Fig 9 setup): a static **neighbor cache** holding the
+//!   hottest adjacency lists for sampling, and a **feature cache** with a
+//!   Belady-guided replacement policy;
+//! * **superbatch** processing: sample every mini-batch of the superbatch up
+//!   front, *write the sampled node lists to SSD*, read them back in an
+//!   **inspect** pass that computes next-use times, then synchronously
+//!   initialize the feature cache with the hottest rows (the I/O-congestion
+//!   spike of Fig 3b);
+//! * per-batch extraction hits the feature cache and pays synchronous
+//!   multi-threaded reads for misses; training is strictly in order.
+
+use super::common::TrainingSystem;
+use crate::config::{Machine, TrainConfig};
+use crate::graph::Dataset;
+use crate::metrics::state::{self, Role};
+use crate::pipeline::EpochStats;
+use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
+use crate::sim::Stopwatch;
+use crate::storage::Reservation;
+use crate::train::{TrainStats, TrainStep};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Host-memory fractions for the two caches (paper: together ≥85 %).
+const NEIGHBOR_CACHE_FRAC: f64 = 0.17;
+const FEATURE_CACHE_FRAC: f64 = 0.68;
+/// Threads for synchronous I/O phases (paper: > 2 × cores).
+const IO_THREADS: usize = 8;
+
+pub struct Ginex<'a> {
+    machine: &'a Machine,
+    ds: &'a Dataset,
+    cfg: TrainConfig,
+    caps: Vec<usize>,
+    trainer: Mutex<Box<dyn TrainStep>>,
+    /// Static neighbor cache: hottest nodes by degree.
+    topo_cache: Arc<HashSet<u32>>,
+    _nc_res: Reservation,
+    fc_rows: usize,
+    _fc_res: Reservation,
+}
+
+impl<'a> Ginex<'a> {
+    pub fn new(
+        machine: &'a Machine,
+        ds: &'a Dataset,
+        cfg: TrainConfig,
+        trainer: Box<dyn TrainStep>,
+    ) -> anyhow::Result<Self> {
+        let caps = trainer.caps().to_vec();
+        let host = machine.host.capacity() as f64;
+        let nc_bytes = (host * NEIGHBOR_CACHE_FRAC) as u64;
+        let fc_bytes = (host * FEATURE_CACHE_FRAC) as u64;
+        let _nc_res = machine.host.reserve("ginex neighbor cache", nc_bytes)?;
+        let _fc_res = machine.host.reserve("ginex feature cache", fc_bytes)?;
+        let fc_rows = (fc_bytes / ds.features.row_bytes()).max(1) as usize;
+
+        // Fill the neighbor cache greedily by degree (one-time, charged as
+        // a sequential scan of the degree array — negligible next to data).
+        let mut order: Vec<u32> = (0..ds.graph.nodes).collect();
+        order.sort_unstable_by_key(|&v| Reverse(ds.graph.degree(v)));
+        let mut used = 0u64;
+        let mut cached = HashSet::new();
+        for v in order {
+            let cost = ds.graph.degree(v) * 4 + 16;
+            if used + cost > nc_bytes {
+                break;
+            }
+            used += cost;
+            cached.insert(v);
+        }
+        Ok(Ginex {
+            machine,
+            ds,
+            cfg,
+            caps,
+            trainer: Mutex::new(trainer),
+            topo_cache: Arc::new(cached),
+            _nc_res,
+            fc_rows,
+            _fc_res,
+        })
+    }
+
+    fn sampler(&self, epoch: u64) -> Sampler {
+        Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8))
+            .with_topo_cache(self.topo_cache.clone())
+    }
+
+    /// Superbatch sampling: sample everything, dump node lists to SSD.
+    /// Returns padded batches + summed sampling time.
+    fn sample_superbatch(
+        &self,
+        epoch: u64,
+        plan: &EpochPlan,
+    ) -> (Vec<Arc<PaddedSubgraph>>, Duration) {
+        let clock = &self.machine.clock;
+        let sample_ns = AtomicU64::new(0);
+        let out: Mutex<Vec<(u64, Arc<PaddedSubgraph>)>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..self.cfg.samplers {
+                let sampler = self.sampler(epoch);
+                let sample_ns = &sample_ns;
+                let out = &out;
+                let this = &*self;
+                s.spawn(move || {
+                    state::register(Role::Sampler);
+                    while let Some((batch_id, seeds)) = plan.claim() {
+                        let sw = Stopwatch::start(clock);
+                        let sub =
+                            sampler.sample_batch(this.ds, &this.machine.storage, batch_id, seeds);
+                        // Ginex stores sampling results to SSD per
+                        // superbatch (extra write I/O on the sample path).
+                        this.machine
+                            .storage
+                            .ssd
+                            .write(sub.nodes.len() * 4);
+                        let padded = Arc::new(sub.pad(&this.caps, &this.cfg.fanouts));
+                        sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        out.lock().unwrap().push((batch_id, padded));
+                    }
+                    state::deregister();
+                });
+            }
+        });
+        let mut batches = out.into_inner().unwrap();
+        batches.sort_by_key(|(id, _)| *id); // Ginex trains in order
+        (
+            batches.into_iter().map(|(_, b)| b).collect(),
+            Duration::from_nanos(sample_ns.into_inner()),
+        )
+    }
+
+    /// Inspect pass: read the dumped sample lists back and compute per-node
+    /// occurrence queues (the Belady schedule). Charged: SSD reads of the
+    /// dumped lists + a host reservation for the schedule itself.
+    fn inspect(
+        &self,
+        batches: &[Arc<PaddedSubgraph>],
+    ) -> anyhow::Result<(HashMap<u32, VecDeque<usize>>, Reservation)> {
+        let mut total_ids = 0usize;
+        for b in batches {
+            total_ids += b.real_nodes;
+            self.machine.storage.ssd.read(b.real_nodes * 4);
+        }
+        // ~16 B/occurrence of workspace, the OOM lever at small memory.
+        let res = self
+            .machine
+            .host
+            .reserve("ginex inspect workspace", (total_ids * 16) as u64)?;
+        let mut occ: HashMap<u32, VecDeque<usize>> = HashMap::new();
+        for (i, b) in batches.iter().enumerate() {
+            for &v in &b.nodes[..b.real_nodes] {
+                occ.entry(v).or_default().push_back(i);
+            }
+        }
+        Ok((occ, res))
+    }
+
+    /// Synchronously load `rows` feature rows with IO_THREADS workers
+    /// (cache init + per-batch misses).
+    fn sync_load_rows(&self, rows: &[u32]) {
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..IO_THREADS.min(rows.len().max(1)) {
+                let cursor = &cursor;
+                let this = &*self;
+                s.spawn(move || {
+                    state::register(Role::IoWorker);
+                    let row_bytes = this.ds.features.row_bytes() as usize;
+                    let mut buf = vec![0u8; row_bytes];
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= rows.len() {
+                            break;
+                        }
+                        this.machine.storage.read_direct(
+                            &this.ds.features.file,
+                            this.ds.features.row_offset(rows[i] as u64),
+                            &mut buf,
+                        );
+                    }
+                    state::deregister();
+                });
+            }
+        });
+    }
+}
+
+/// Belady-guided feature cache state for one superbatch.
+struct FeatureCache {
+    rows: usize,
+    resident: HashSet<u32>,
+    /// Max-heap on next use; stale entries skipped lazily.
+    heap: BinaryHeap<(usize, u32)>,
+}
+
+impl FeatureCache {
+    fn next_use(occ: &HashMap<u32, VecDeque<usize>>, v: u32, after: usize) -> usize {
+        occ.get(&v)
+            .and_then(|q| q.iter().find(|&&b| b >= after))
+            .copied()
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Returns true on hit; on miss inserts v (evicting the entry with the
+    /// farthest next use when full).
+    fn access(&mut self, occ: &HashMap<u32, VecDeque<usize>>, v: u32, batch: usize) -> bool {
+        if self.resident.contains(&v) {
+            self.heap.push((Self::next_use(occ, v, batch + 1), v));
+            return true;
+        }
+        while self.resident.len() >= self.rows {
+            match self.heap.pop() {
+                Some((_, victim)) => {
+                    // Lazily skip stale heap entries.
+                    if self.resident.remove(&victim) {
+                        continue;
+                    }
+                }
+                None => {
+                    // Heap drained but residents remain (all stale):
+                    // rebuild by evicting arbitrarily.
+                    let any = *self.resident.iter().next().unwrap();
+                    self.resident.remove(&any);
+                }
+            }
+        }
+        self.resident.insert(v);
+        self.heap.push((Self::next_use(occ, v, batch + 1), v));
+        false
+    }
+}
+
+impl TrainingSystem for Ginex<'_> {
+    fn name(&self) -> &'static str {
+        "Ginex"
+    }
+
+    fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats> {
+        let clock = &self.machine.clock;
+        let plan = EpochPlan::new(
+            &self.ds.train_ids,
+            self.cfg.batch_size,
+            self.cfg.seed,
+            epoch,
+            self.cfg.batches_per_epoch,
+        );
+        let watch = Stopwatch::start(clock);
+        self.machine.storage.ssd.reset_stats();
+
+        // Phase 1+2: superbatch sampling + inspect.
+        let (batches, sample_time) = self.sample_superbatch(epoch, &plan);
+        let prep_watch = Stopwatch::start(clock);
+        let (occ, _inspect_res) = self.inspect(&batches)?;
+
+        // Phase 3: synchronous feature-cache initialization with the rows
+        // used soonest (the congestion spike).
+        let mut hottest: Vec<(usize, u32)> = occ
+            .iter()
+            .map(|(&v, q)| (*q.front().unwrap_or(&usize::MAX), v))
+            .collect();
+        hottest.sort_unstable();
+        let init_rows: Vec<u32> =
+            hottest.iter().take(self.fc_rows).map(|&(_, v)| v).collect();
+        self.sync_load_rows(&init_rows);
+        let mut fc = FeatureCache {
+            rows: self.fc_rows,
+            resident: init_rows.iter().copied().collect(),
+            heap: BinaryHeap::new(),
+        };
+        for &v in &init_rows {
+            fc.heap.push((FeatureCache::next_use(&occ, v, 0), v));
+        }
+        let prep_time = prep_watch.elapsed();
+
+        // Phase 4: per-batch extract (cache + sync misses) → transfer → train.
+        let mut extract_time = Duration::ZERO;
+        let mut train_time = Duration::ZERO;
+        let mut stats = TrainStats::default();
+        let mut trainer = self.trainer.lock().unwrap();
+        let dim = self.ds.spec.dim;
+        let cap_l = *self.caps.last().unwrap();
+        let mut feats = vec![0f32; cap_l * dim];
+        for (bi, padded) in batches.iter().enumerate() {
+            let sw = Stopwatch::start(clock);
+            let mut misses = Vec::new();
+            for &v in &padded.nodes[..padded.real_nodes] {
+                if !fc.access(&occ, v, bi) {
+                    misses.push(v);
+                }
+            }
+            self.sync_load_rows(&misses);
+            // Fill the feature block from the oracle generator (cache hits
+            // are host-memory copies; data correctness is preserved).
+            let mut row = vec![0u8; dim * 4];
+            for (i, &v) in padded.nodes[..padded.real_nodes].iter().enumerate() {
+                self.ds.feature_gen.fill_row(v as u64, &mut row);
+                for (j, b) in row.chunks_exact(4).enumerate() {
+                    feats[i * dim + j] = f32::from_le_bytes(b.try_into().unwrap());
+                }
+            }
+            self.machine.pcie.transfer_sync(padded.real_nodes * dim * 4);
+            extract_time += sw.elapsed();
+
+            let sw = Stopwatch::start(clock);
+            let r = trainer.step(padded, &feats);
+            train_time += sw.elapsed();
+            stats.push(&r);
+        }
+
+        Ok(EpochStats {
+            epoch_time: watch.elapsed(),
+            prep_time,
+            sample_time,
+            extract_time,
+            train_time,
+            batches: batches.len(),
+            train: stats,
+            reorder_inversions: 0,
+            ssd_read_bytes: self
+                .machine
+                .storage
+                .ssd
+                .counters()
+                .read_bytes
+                .load(Ordering::Relaxed),
+            truncated_edges: 0,
+        })
+    }
+
+    fn run_sample_only(&mut self, epoch: u64) -> Duration {
+        let plan = EpochPlan::new(
+            &self.ds.train_ids,
+            self.cfg.batch_size,
+            self.cfg.seed,
+            epoch,
+            self.cfg.batches_per_epoch,
+        );
+        let (_batches, t) = self.sample_superbatch(epoch, &plan);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn belady_cache_prefers_far_future_eviction() {
+        let mut occ: HashMap<u32, VecDeque<usize>> = HashMap::new();
+        occ.insert(1, VecDeque::from(vec![0, 1]));
+        occ.insert(2, VecDeque::from(vec![0, 9]));
+        occ.insert(3, VecDeque::from(vec![0, 2]));
+        let mut fc = FeatureCache { rows: 2, resident: HashSet::new(), heap: BinaryHeap::new() };
+        assert!(!fc.access(&occ, 1, 0)); // miss, insert
+        assert!(!fc.access(&occ, 2, 0)); // miss, insert (full now)
+        assert!(!fc.access(&occ, 3, 0)); // miss → evicts 2 (next use 9)
+        assert!(fc.resident.contains(&3));
+        assert!(fc.resident.contains(&1));
+        assert!(!fc.resident.contains(&2));
+        // 1 hits.
+        assert!(fc.access(&occ, 1, 1));
+    }
+}

@@ -1,0 +1,75 @@
+//! Baseline training systems (PyG+, Ginex, MariusGNN) + the factory that
+//! builds any system — including GNNDrive — behind the common
+//! [`TrainingSystem`] trait for the comparison benches.
+
+pub mod common;
+pub mod ginex;
+pub mod marius;
+pub mod pygplus;
+
+pub use common::{shared_caps, sim_trainer, SystemKind, TrainingSystem};
+pub use ginex::Ginex;
+pub use marius::MariusGnn;
+pub use pygplus::PygPlus;
+
+use crate::config::{Machine, TrainConfig};
+use crate::graph::Dataset;
+use crate::pipeline::{EpochStats, GnnDrive, Variant};
+use crate::runtime::simcompute::ModelKind;
+use std::time::Duration;
+
+/// Adapter: GNNDrive's pipeline engine as a `TrainingSystem`.
+pub struct GnnDriveSystem<'a> {
+    engine: GnnDrive<'a>,
+    label: &'static str,
+}
+
+impl TrainingSystem for GnnDriveSystem<'_> {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats> {
+        Ok(self.engine.run_epoch(epoch))
+    }
+
+    fn run_sample_only(&mut self, epoch: u64) -> Duration {
+        self.engine.run_sample_only(epoch)
+    }
+}
+
+/// Build any system under test with the shared simulated trainer (sweeps).
+/// Construction failures are OOMs — a reportable result, not a crash.
+pub fn build_system<'a>(
+    kind: SystemKind,
+    machine: &'a Machine,
+    ds: &'a Dataset,
+    cfg: TrainConfig,
+    model: ModelKind,
+) -> anyhow::Result<Box<dyn TrainingSystem + 'a>> {
+    let hidden = 256; // paper §5: hidden dimension 256
+    match kind {
+        SystemKind::GnnDriveGpu => {
+            let trainer = sim_trainer(machine, ds, &cfg, model, Variant::Gpu, hidden);
+            let engine = GnnDrive::new(machine, ds, cfg, Variant::Gpu, trainer)?;
+            Ok(Box::new(GnnDriveSystem { engine, label: "GNNDrive(GPU)" }))
+        }
+        SystemKind::GnnDriveCpu => {
+            let trainer = sim_trainer(machine, ds, &cfg, model, Variant::Cpu, hidden);
+            let engine = GnnDrive::new(machine, ds, cfg, Variant::Cpu, trainer)?;
+            Ok(Box::new(GnnDriveSystem { engine, label: "GNNDrive(CPU)" }))
+        }
+        SystemKind::PygPlus => {
+            let trainer = sim_trainer(machine, ds, &cfg, model, Variant::Gpu, hidden);
+            Ok(Box::new(PygPlus::new(machine, ds, cfg, trainer)))
+        }
+        SystemKind::Ginex => {
+            let trainer = sim_trainer(machine, ds, &cfg, model, Variant::Gpu, hidden);
+            Ok(Box::new(Ginex::new(machine, ds, cfg, trainer)?))
+        }
+        SystemKind::MariusGnn => {
+            let trainer = sim_trainer(machine, ds, &cfg, model, Variant::Gpu, hidden);
+            Ok(Box::new(MariusGnn::new(machine, ds, cfg, trainer)?))
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! PyG+ baseline (paper §2/§3): disk-based training by memory-mapping both
+//! topological and feature data and letting the OS page cache carry
+//! everything.
+//!
+//! Mechanisms reproduced:
+//! * loader workers each handle a whole mini-batch: sample (mmap topology
+//!   reads) then extract (mmap *feature* reads — synchronous, through the
+//!   shared page cache, where they evict topology pages: the D1 memory
+//!   contention), then a synchronous H2D transfer;
+//! * one trainer consumes prepared batches from a small prefetch queue;
+//! * no private caches, no async I/O: every miss stalls the worker (the D2
+//!   I/O congestion).
+
+use super::common::TrainingSystem;
+use crate::config::{Machine, TrainConfig};
+use crate::graph::Dataset;
+use crate::metrics::state::{self, Role, State};
+use crate::pipeline::EpochStats;
+use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
+use crate::sim::queue::BoundedQueue;
+use crate::sim::Stopwatch;
+use crate::train::{TrainStats, TrainStep};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct PygPlus<'a> {
+    machine: &'a Machine,
+    ds: &'a Dataset,
+    cfg: TrainConfig,
+    caps: Vec<usize>,
+    trainer: Mutex<Box<dyn TrainStep>>,
+    /// Loader workers (paper: DataLoader workers; sample+extract each).
+    workers: usize,
+}
+
+impl<'a> PygPlus<'a> {
+    pub fn new(
+        machine: &'a Machine,
+        ds: &'a Dataset,
+        cfg: TrainConfig,
+        trainer: Box<dyn TrainStep>,
+    ) -> Self {
+        let caps = trainer.caps().to_vec();
+        PygPlus {
+            workers: cfg.samplers + cfg.extractors, // same thread budget as GNNDrive
+            machine,
+            ds,
+            cfg,
+            caps,
+            trainer: Mutex::new(trainer),
+        }
+    }
+
+    /// Synchronous mmap-style feature extraction: one buffered read per
+    /// node row, through the shared page cache.
+    fn extract_sync(&self, padded: &PaddedSubgraph, out: &mut [f32]) {
+        let dim = self.ds.spec.dim;
+        let row_bytes = self.ds.features.row_bytes() as usize;
+        let mut buf = vec![0u8; row_bytes];
+        for (i, &node) in padded.nodes[..padded.real_nodes].iter().enumerate() {
+            self.machine.storage.read_buffered(
+                &self.ds.features.file,
+                self.ds.features.row_offset(node as u64),
+                &mut buf,
+            );
+            for (j, b) in buf.chunks_exact(4).take(dim).enumerate() {
+                out[i * dim + j] = f32::from_le_bytes(b.try_into().unwrap());
+            }
+        }
+        out[padded.real_nodes * dim..].fill(0.0);
+    }
+}
+
+struct Prepared {
+    padded: Arc<PaddedSubgraph>,
+    feats: Vec<f32>,
+}
+
+impl TrainingSystem for PygPlus<'_> {
+    fn name(&self) -> &'static str {
+        "PyG+"
+    }
+
+    fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats> {
+        let clock = &self.machine.clock;
+        let plan = EpochPlan::new(
+            &self.ds.train_ids,
+            self.cfg.batch_size,
+            self.cfg.seed,
+            epoch,
+            self.cfg.batches_per_epoch,
+        );
+        // Prefetch queue between loader workers and the trainer
+        // (DataLoader's prefetch_factor ≈ 2 × workers is capped small).
+        let ready = BoundedQueue::<Prepared>::new(4);
+        let sample_ns = AtomicU64::new(0);
+        let extract_ns = AtomicU64::new(0);
+        let train_ns = AtomicU64::new(0);
+        let workers_left = AtomicUsize::new(self.workers);
+        let train_stats = Mutex::new(TrainStats::default());
+        let batches_done = AtomicUsize::new(0);
+        let dim = self.ds.spec.dim;
+        let cap_l = *self.caps.last().unwrap();
+
+        let watch = Stopwatch::start(clock);
+        self.machine.storage.ssd.reset_stats();
+
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                let plan = &plan;
+                let ready = &ready;
+                let sample_ns = &sample_ns;
+                let extract_ns = &extract_ns;
+                let workers_left = &workers_left;
+                let this = &*self;
+                let sampler = Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8));
+                s.spawn(move || {
+                    state::register(Role::Sampler);
+                    while let Some((batch_id, seeds)) = plan.claim() {
+                        let sw = Stopwatch::start(clock);
+                        let sub =
+                            sampler.sample_batch(this.ds, &this.machine.storage, batch_id, seeds);
+                        let padded = Arc::new(sub.pad(&this.caps, &this.cfg.fanouts));
+                        sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+                        let sw = Stopwatch::start(clock);
+                        let mut feats = vec![0f32; cap_l * dim];
+                        this.extract_sync(&padded, &mut feats);
+                        // Synchronous H2D transfer of the whole batch.
+                        this.machine.pcie.transfer_sync(padded.real_nodes * dim * 4);
+                        extract_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+                        let _idle = state::enter(State::Idle);
+                        if ready.push(Prepared { padded, feats }).is_err() {
+                            break;
+                        }
+                    }
+                    if workers_left.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        ready.close();
+                    }
+                    state::deregister();
+                });
+            }
+
+            // Trainer.
+            {
+                let ready = &ready;
+                let train_ns = &train_ns;
+                let train_stats = &train_stats;
+                let batches_done = &batches_done;
+                let this = &*self;
+                s.spawn(move || {
+                    state::register(Role::Trainer);
+                    let mut trainer = this.trainer.lock().unwrap();
+                    loop {
+                        let item = {
+                            let _idle = state::enter(State::Idle);
+                            match ready.pop() {
+                                Ok(i) => i,
+                                Err(_) => break,
+                            }
+                        };
+                        let sw = Stopwatch::start(clock);
+                        let r = trainer.step(&item.padded, &item.feats);
+                        train_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        train_stats.lock().unwrap().push(&r);
+                        batches_done.fetch_add(1, Ordering::Relaxed);
+                    }
+                    state::deregister();
+                });
+            }
+        });
+
+        Ok(EpochStats {
+            epoch_time: watch.elapsed(),
+            prep_time: Duration::ZERO,
+            sample_time: Duration::from_nanos(sample_ns.into_inner()),
+            extract_time: Duration::from_nanos(extract_ns.into_inner()),
+            train_time: Duration::from_nanos(train_ns.into_inner()),
+            batches: batches_done.into_inner(),
+            train: train_stats.into_inner().unwrap(),
+            reorder_inversions: 0, // PyG+ trains strictly in order
+            ssd_read_bytes: self
+                .machine
+                .storage
+                .ssd
+                .counters()
+                .read_bytes
+                .load(Ordering::Relaxed),
+            truncated_edges: 0,
+        })
+    }
+
+    fn run_sample_only(&mut self, epoch: u64) -> Duration {
+        let clock = &self.machine.clock;
+        let plan = EpochPlan::new(
+            &self.ds.train_ids,
+            self.cfg.batch_size,
+            self.cfg.seed,
+            epoch,
+            self.cfg.batches_per_epoch,
+        );
+        let sample_ns = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                let plan = &plan;
+                let sample_ns = &sample_ns;
+                let this = &*self;
+                let sampler = Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8));
+                s.spawn(move || {
+                    state::register(Role::Sampler);
+                    while let Some((batch_id, seeds)) = plan.claim() {
+                        let sw = Stopwatch::start(clock);
+                        let sub =
+                            sampler.sample_batch(this.ds, &this.machine.storage, batch_id, seeds);
+                        std::hint::black_box(&sub);
+                        sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    state::deregister();
+                });
+            }
+        });
+        Duration::from_nanos(sample_ns.into_inner())
+    }
+}

@@ -1,0 +1,69 @@
+//! Minimal measurement harness (no criterion offline): warmup + timed
+//! iterations with mean/σ/min reporting, used by the micro-benchmarks.
+
+use crate::util::stats::Online;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  σ {:>9}  min {:>9}  ({} iters)",
+            self.name,
+            crate::util::units::fmt_dur(self.mean),
+            crate::util::units::fmt_dur(self.std),
+            crate::util::units::fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` runs; each sample is one
+/// iteration (use inner batching in `f` for sub-microsecond work).
+pub fn measure<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Online::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(stats.mean()),
+        std: Duration::from_secs_f64(stats.std()),
+        min: Duration::from_secs_f64(stats.min()),
+    }
+}
+
+/// Throughput helper: report ns/op for `ops` operations per call.
+pub fn per_op(m: &Measurement, ops: u64) -> Duration {
+    Duration::from_secs_f64(m.mean.as_secs_f64() / ops as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let m = measure("sleep 2ms", 1, 5, || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(m.mean >= Duration::from_millis(2));
+        assert!(m.mean < Duration::from_millis(20));
+        assert!(m.row().contains("sleep 2ms"));
+        assert!(per_op(&m, 1000) < Duration::from_micros(20));
+    }
+}

@@ -1,0 +1,5 @@
+//! In-repo measurement harness (criterion substitute for the offline build).
+
+pub mod harness;
+
+pub use harness::{measure, per_op, Measurement};

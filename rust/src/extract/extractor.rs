@@ -1,0 +1,361 @@
+//! Asynchronous two-phase feature extraction (paper §4.2, Fig 5,
+//! Algorithm 1).
+//!
+//! One extractor handles one mini-batch end to end, never blocking per
+//! request: phase 1 submits every missing node's SSD→staging load to its
+//! io_uring (direct I/O, large depth); phase 2 launches the staging→device
+//! PCIe transfer of each node *as soon as its load completes*, overlapping
+//! with outstanding loads; completion publishes the node's valid bit in the
+//! feature buffer. Nodes already resident are aliased (no I/O), nodes being
+//! extracted by peers are awaited at the end (shared I/O).
+
+use crate::membuf::{FeatureBuffer, StagingBuffer};
+use crate::storage::uring::{IoMode, Sqe, Uring};
+use crate::storage::{Pcie, Storage};
+use crate::graph::FeatureTable;
+use crate::sim::Latch;
+use std::sync::Arc;
+
+/// Where extracted rows land (§4.4 "CPU-based Training" skips the PCIe hop).
+pub enum ExtractTarget {
+    /// GPU training: staging → device via asynchronous PCIe transfers.
+    Device(Arc<Pcie>),
+    /// CPU training: rows go straight from staging into the host-resident
+    /// feature buffer.
+    Host,
+}
+
+/// Ablation switches (paper mechanisms turned off individually).
+#[derive(Clone, Copy, Debug)]
+pub struct ExtractOptions {
+    /// false → synchronous per-row reads on the extractor thread (the
+    /// paper's D2 congestion mode; `-async` ablation).
+    pub asynchronous: bool,
+    /// false → feature reads go through the OS page cache (the paper's D1
+    /// contention mode; `-direct` ablation).
+    pub direct: bool,
+}
+
+impl Default for ExtractOptions {
+    fn default() -> Self {
+        ExtractOptions { asynchronous: true, direct: true }
+    }
+}
+
+pub struct Extractor {
+    ring: Uring,
+    staging: StagingBuffer,
+    fb: Arc<FeatureBuffer>,
+    features: FeatureTable,
+    target: ExtractTarget,
+    storage: Storage,
+    opts: ExtractOptions,
+}
+
+impl Extractor {
+    pub fn new(
+        storage: Storage,
+        io_depth: usize,
+        staging: StagingBuffer,
+        fb: Arc<FeatureBuffer>,
+        features: FeatureTable,
+        target: ExtractTarget,
+    ) -> Self {
+        Self::with_options(storage, io_depth, staging, fb, features, target, ExtractOptions::default())
+    }
+
+    pub fn with_options(
+        storage: Storage,
+        io_depth: usize,
+        staging: StagingBuffer,
+        fb: Arc<FeatureBuffer>,
+        features: FeatureTable,
+        target: ExtractTarget,
+        opts: ExtractOptions,
+    ) -> Self {
+        Extractor {
+            ring: Uring::new(storage.clone(), io_depth),
+            staging,
+            fb,
+            features,
+            target,
+            storage,
+            opts,
+        }
+    }
+
+    /// Extract the feature rows of `nodes` into the feature buffer; returns
+    /// the node alias list (slot per node) for the trainer.
+    ///
+    /// Loads exceeding the staging capacity are processed in waves — the
+    /// staging buffer is intentionally small (bounded memory footprint), and
+    /// a wave still keeps `staging.slots()` requests in flight.
+    pub fn extract(&self, nodes: &[u32]) -> Vec<i32> {
+        let plan = self.fb.begin_batch(nodes);
+        let row_bytes = self.staging.row_bytes;
+        let dim = self.fb.dim;
+
+        if !self.opts.asynchronous {
+            // Ablation: synchronous extraction — one blocking read + one
+            // blocking transfer per row on this thread (no overlap).
+            let mut buf = vec![0u8; row_bytes];
+            for &(node, slot) in &plan.to_load {
+                let off = self.features.row_offset(node as u64);
+                if self.opts.direct {
+                    self.storage.read_direct(&self.features.file, off, &mut buf);
+                } else {
+                    self.storage.read_buffered(&self.features.file, off, &mut buf);
+                }
+                let row: Vec<f32> = buf
+                    .chunks_exact(4)
+                    .take(dim)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect();
+                if let ExtractTarget::Device(pcie) = &self.target {
+                    pcie.transfer_sync(row_bytes);
+                }
+                self.fb.publish(node, slot, &row);
+            }
+            self.fb.wait_valid(&plan.wait_list);
+            return plan.aliases;
+        }
+
+        let mode = if self.opts.direct { IoMode::Direct } else { IoMode::Buffered };
+        for wave in plan.to_load.chunks(self.staging.slots()) {
+            let latch = Arc::new(Latch::new(wave.len()));
+            // Phase 1: submit all loads asynchronously.
+            let sqes: Vec<Sqe> = wave
+                .iter()
+                .enumerate()
+                .map(|(i, &(node, _slot))| Sqe {
+                    file: self.features.file.clone(),
+                    offset: self.features.row_offset(node as u64),
+                    len: row_bytes,
+                    dst: self.staging.slot(i),
+                    dst_off: 0,
+                    user_data: i as u64,
+                    mode,
+                })
+                .collect();
+            self.ring.submit_batch(sqes);
+
+            // Phase 2: as each load completes, launch its transfer without
+            // waiting for the remaining loads.
+            for _ in 0..wave.len() {
+                let cqe = self.ring.wait_cqe();
+                let i = cqe.user_data as usize;
+                let (node, slot) = wave[i];
+                let staged = self.staging.slot(i);
+                match &self.target {
+                    ExtractTarget::Device(pcie) => {
+                        let fb = self.fb.clone();
+                        let latch = latch.clone();
+                        pcie.transfer_async(row_bytes, move || {
+                            let row = decode_row(&staged, dim);
+                            fb.publish(node, slot, &row);
+                            latch.count_down();
+                        });
+                    }
+                    ExtractTarget::Host => {
+                        let row = decode_row(&staged, dim);
+                        self.fb.publish(node, slot, &row);
+                        latch.count_down();
+                    }
+                }
+            }
+            // All transfers of this wave must land before its staging slots
+            // are reused by the next wave.
+            latch.wait();
+        }
+
+        // Wait for nodes being extracted by peer extractors.
+        self.fb.wait_valid(&plan.wait_list);
+        plan.aliases
+    }
+}
+
+fn decode_row(buf: &crate::storage::uring::IoBuf, dim: usize) -> Vec<f32> {
+    let bytes = buf.lock().unwrap();
+    bytes
+        .chunks_exact(4)
+        .take(dim)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Machine, MachineConfig};
+    use crate::graph::{Dataset, DatasetSpec};
+    use crate::sim::Clock;
+    use crate::storage::DeviceMemory;
+
+    fn setup() -> (Machine, Dataset, Arc<FeatureBuffer>) {
+        let m = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &m).unwrap();
+        let dev = DeviceMemory::new(8 << 20);
+        let fb = Arc::new(FeatureBuffer::in_device(&dev, 512, ds.spec.dim).unwrap());
+        (m, ds, fb)
+    }
+
+    fn extractor(m: &Machine, ds: &Dataset, fb: Arc<FeatureBuffer>, slots: usize) -> Extractor {
+        let staging =
+            StagingBuffer::new(&m.host, slots, ds.features.row_bytes() as usize).unwrap();
+        Extractor::new(
+            m.storage.clone(),
+            64,
+            staging,
+            fb,
+            ds.features.clone(),
+            ExtractTarget::Device(m.pcie.clone()),
+        )
+    }
+
+    #[test]
+    fn extracts_correct_rows() {
+        let (m, ds, fb) = setup();
+        let ex = extractor(&m, &ds, fb.clone(), 64);
+        let nodes: Vec<u32> = vec![5, 900, 33, 2999];
+        let aliases = ex.extract(&nodes);
+        assert!(aliases.iter().all(|&a| a >= 0));
+        let mut out = vec![0f32; nodes.len() * ds.spec.dim];
+        fb.gather(&aliases, &mut out);
+        // Compare against the oracle generator.
+        let mut want = vec![0u8; ds.spec.dim * 4];
+        for (i, &v) in nodes.iter().enumerate() {
+            ds.feature_gen.fill_row(v as u64, &mut want);
+            let exp = crate::graph::FeatureGen::decode_row(&want);
+            let got = &out[i * ds.spec.dim..(i + 1) * ds.spec.dim];
+            assert_eq!(got, &exp[..], "node {v}");
+        }
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn waves_handle_batches_larger_than_staging() {
+        let (m, ds, fb) = setup();
+        let ex = extractor(&m, &ds, fb.clone(), 8); // tiny staging
+        let nodes: Vec<u32> = (100..160).collect(); // 60 nodes, 8-slot staging
+        let aliases = ex.extract(&nodes);
+        assert_eq!(aliases.len(), 60);
+        let mut out = vec![0f32; ds.spec.dim];
+        let mut want = vec![0u8; ds.spec.dim * 4];
+        for (i, &v) in nodes.iter().enumerate() {
+            fb.gather(&aliases[i..i + 1], &mut out);
+            ds.feature_gen.fill_row(v as u64, &mut want);
+            assert_eq!(out, crate::graph::FeatureGen::decode_row(&want), "node {v}");
+        }
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn second_extraction_reuses_buffer() {
+        let (m, ds, fb) = setup();
+        let ex = extractor(&m, &ds, fb.clone(), 64);
+        let nodes: Vec<u32> = (0..32).collect();
+        ex.extract(&nodes);
+        fb.release(&nodes);
+        m.storage.ssd.reset_stats();
+        let aliases = ex.extract(&nodes);
+        // No SSD reads the second time.
+        assert_eq!(
+            m.storage.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+        assert_eq!(aliases.len(), 32);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn direct_io_bypasses_page_cache() {
+        let (m, ds, fb) = setup();
+        let ex = extractor(&m, &ds, fb, 64);
+        ex.extract(&(0..64).collect::<Vec<u32>>());
+        // Feature extraction must not populate the page cache (D1 fix).
+        let feat_hits = m
+            .storage
+            .cache
+            .stats()
+            .features
+            .hits
+            .load(std::sync::atomic::Ordering::Relaxed);
+        let feat_misses = m
+            .storage
+            .cache
+            .stats()
+            .features
+            .misses
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(feat_hits + feat_misses, 0, "feature reads went through page cache");
+    }
+
+    #[test]
+    fn sync_mode_produces_identical_rows() {
+        let (m, ds, fb) = setup();
+        let staging =
+            StagingBuffer::new(&m.host, 64, ds.features.row_bytes() as usize).unwrap();
+        let ex = Extractor::with_options(
+            m.storage.clone(),
+            64,
+            staging,
+            fb.clone(),
+            ds.features.clone(),
+            ExtractTarget::Device(m.pcie.clone()),
+            ExtractOptions { asynchronous: false, direct: true },
+        );
+        let nodes: Vec<u32> = (10..42).collect();
+        let aliases = ex.extract(&nodes);
+        let mut out = vec![0f32; ds.spec.dim];
+        let mut want = vec![0u8; ds.spec.dim * 4];
+        for (i, &v) in nodes.iter().enumerate() {
+            fb.gather(&aliases[i..i + 1], &mut out);
+            ds.feature_gen.fill_row(v as u64, &mut want);
+            assert_eq!(out, crate::graph::FeatureGen::decode_row(&want), "node {v}");
+        }
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn buffered_mode_populates_page_cache() {
+        let (m, ds, fb) = setup();
+        let staging =
+            StagingBuffer::new(&m.host, 64, ds.features.row_bytes() as usize).unwrap();
+        let ex = Extractor::with_options(
+            m.storage.clone(),
+            64,
+            staging,
+            fb,
+            ds.features.clone(),
+            ExtractTarget::Device(m.pcie.clone()),
+            ExtractOptions { asynchronous: true, direct: false },
+        );
+        m.storage.cache.stats().reset();
+        ex.extract(&(0..32).collect::<Vec<u32>>());
+        let touches = m
+            .storage
+            .cache
+            .stats()
+            .features
+            .misses
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(touches > 0, "-direct ablation must go through the page cache");
+    }
+
+    #[test]
+    fn concurrent_extractors_share_work() {
+        let (m, ds, fb) = setup();
+        let ex1 = Arc::new(extractor(&m, &ds, fb.clone(), 64));
+        let ex2 = Arc::new(extractor(&m, &ds, fb.clone(), 64));
+        let nodes: Vec<u32> = (0..48).collect();
+        let (n1, n2) = (nodes.clone(), nodes.clone());
+        let h1 = std::thread::spawn(move || ex1.extract(&n1));
+        let h2 = std::thread::spawn(move || ex2.extract(&n2));
+        let a1 = h1.join().unwrap();
+        let a2 = h2.join().unwrap();
+        assert_eq!(a1, a2, "both extractors must alias the same slots");
+        let (_, _, _, loads) = fb.stats();
+        assert_eq!(loads, 48, "each node loaded exactly once across extractors");
+        fb.check_invariants().unwrap();
+    }
+}

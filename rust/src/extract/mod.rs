@@ -1,0 +1,5 @@
+//! Extract stage: asynchronous two-phase feature extraction (Algorithm 1).
+
+pub mod extractor;
+
+pub use extractor::{ExtractOptions, ExtractTarget, Extractor};

@@ -1,0 +1,447 @@
+//! Dataset registry and materialization.
+//!
+//! Each paper dataset gets a 1/256-scale synthetic analog with matched
+//! byte ratios (DESIGN.md §8 / paper Table 1). A [`Dataset`] bundles the
+//! disk-resident topology, the on-SSD feature table, in-memory labels and
+//! the train split; `materialize` builds it against a [`Machine`]'s storage
+//! substrate, and `write_dir`/`load_dir` persist a real on-disk copy for the
+//! end-to-end example.
+
+use super::disk::DiskGraph;
+use super::features::{FeatureGen, FeatureTable};
+use super::gen::{generate, GraphGenSpec};
+use crate::config::Machine;
+use crate::storage::{
+    BackingRef, DataKind, FileBacking, FileId, MemBacking,
+};
+use crate::util::rng::hash2;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Unique simulated-file ids across the process.
+fn next_file_id() -> u32 {
+    static NEXT: AtomicU32 = AtomicU32::new(100);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub nodes: u32,
+    pub avg_degree: f64,
+    pub dim: usize,
+    pub classes: usize,
+    pub train_frac: f64,
+    pub community_size: u32,
+    pub homophily: f64,
+    pub degree_alpha: f64,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Papers100M analog (111 M nodes / 1.6 B edges / dim 128 / 172 classes).
+    pub fn papers100m_mini() -> Self {
+        DatasetSpec {
+            name: "papers100m-mini".into(),
+            nodes: 433_000,
+            avg_degree: 29.0,
+            dim: 128,
+            classes: 172,
+            train_frac: 0.05,
+            community_size: 400,
+            homophily: 0.55,
+            degree_alpha: 2.0,
+            noise: 0.7,
+            seed: 0x9A9E85,
+        }
+    }
+
+    /// Twitter analog (41.7 M / 1.5 B / 128 / 50).
+    pub fn twitter_mini() -> Self {
+        DatasetSpec {
+            name: "twitter-mini".into(),
+            nodes: 163_000,
+            avg_degree: 66.0,
+            dim: 128,
+            classes: 50,
+            train_frac: 0.05,
+            community_size: 250,
+            homophily: 0.45,
+            degree_alpha: 1.9, // heavier tail: social-network hubs
+            noise: 0.7,
+            seed: 0x7417E8,
+        }
+    }
+
+    /// Friendster analog (65.6 M / 1.8 B / 128 / 50).
+    pub fn friendster_mini() -> Self {
+        DatasetSpec {
+            name: "friendster-mini".into(),
+            nodes: 256_000,
+            avg_degree: 53.0,
+            dim: 128,
+            classes: 50,
+            train_frac: 0.05,
+            community_size: 320,
+            homophily: 0.5,
+            degree_alpha: 2.1,
+            seed: 0xF81E9D,
+            noise: 0.7,
+        }
+    }
+
+    /// MAG240M analog (122 M paper nodes / 1.3 B edges / dim 768 / 153).
+    pub fn mag240m_mini() -> Self {
+        DatasetSpec {
+            name: "mag240m-mini".into(),
+            nodes: 475_000,
+            avg_degree: 21.0,
+            dim: 768,
+            classes: 153,
+            train_frac: 0.02,
+            community_size: 500,
+            homophily: 0.55,
+            degree_alpha: 2.0,
+            noise: 0.7,
+            seed: 0x3A9240,
+        }
+    }
+
+    /// Tiny real-file dataset for the end-to-end PJRT-training example.
+    pub fn papers_tiny() -> Self {
+        DatasetSpec {
+            name: "papers-tiny".into(),
+            nodes: 60_000,
+            avg_degree: 20.0,
+            dim: 64,
+            classes: 16,
+            train_frac: 0.1,
+            community_size: 200,
+            homophily: 0.6,
+            degree_alpha: 2.1,
+            noise: 0.5,
+            seed: 0x7142,
+        }
+    }
+
+    /// Miniature spec for unit tests.
+    pub fn unit_test() -> Self {
+        DatasetSpec {
+            name: "unit-test".into(),
+            nodes: 3_000,
+            avg_degree: 10.0,
+            dim: 16,
+            classes: 4,
+            train_frac: 0.2,
+            community_size: 100,
+            homophily: 0.6,
+            degree_alpha: 2.2,
+            noise: 0.4,
+            seed: 0x0707,
+        }
+    }
+
+    /// Look up a spec by CLI name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "papers100m-mini" => Some(Self::papers100m_mini()),
+            "twitter-mini" => Some(Self::twitter_mini()),
+            "friendster-mini" => Some(Self::friendster_mini()),
+            "mag240m-mini" => Some(Self::mag240m_mini()),
+            "papers-tiny" => Some(Self::papers_tiny()),
+            "unit-test" => Some(Self::unit_test()),
+            _ => None,
+        }
+    }
+
+    pub fn all_minis() -> Vec<Self> {
+        vec![
+            Self::papers100m_mini(),
+            Self::twitter_mini(),
+            Self::friendster_mini(),
+            Self::mag240m_mini(),
+        ]
+    }
+
+    /// Dimension override (Fig 2/8/9 sweep 64–512).
+    pub fn with_dim(mut self, dim: usize) -> Self {
+        self.dim = dim;
+        self
+    }
+
+    /// Expected feature bytes on SSD.
+    pub fn feature_bytes(&self) -> u64 {
+        self.nodes as u64 * (self.dim as u64) * 4
+    }
+
+    fn gen_spec(&self) -> GraphGenSpec {
+        GraphGenSpec {
+            nodes: self.nodes,
+            avg_degree: self.avg_degree,
+            degree_alpha: self.degree_alpha,
+            classes: self.classes,
+            community_size: self.community_size,
+            homophily: self.homophily,
+            seed: self.seed,
+        }
+    }
+
+    /// Deterministic train split: node v trains iff hash(v) < frac·2⁶⁴.
+    pub fn train_ids(&self) -> Vec<u32> {
+        let threshold = (self.train_frac * u64::MAX as f64) as u64;
+        (0..self.nodes)
+            .filter(|&v| hash2(self.seed ^ 0x5917, v as u64) < threshold)
+            .collect()
+    }
+}
+
+/// A materialized dataset bound to a machine's storage substrate.
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub graph: DiskGraph,
+    pub features: FeatureTable,
+    pub labels: Arc<Vec<u16>>,
+    pub train_ids: Vec<u32>,
+    pub feature_gen: FeatureGen,
+}
+
+impl Dataset {
+    /// Build the synthetic analog in memory (topology) + procedurally
+    /// (features), charging the indptr pin to the machine's host memory.
+    pub fn materialize(spec: &DatasetSpec, machine: &Machine) -> anyhow::Result<Dataset> {
+        let g = generate(&spec.gen_spec());
+        let labels = Arc::new(g.labels);
+        let indices_backing: BackingRef = Arc::new(MemBacking::from_u32s(&g.indices));
+        let indices_file = crate::storage::SimFile::new(
+            FileId::new(next_file_id(), DataKind::Topology),
+            indices_backing,
+        );
+        let graph = DiskGraph::new(
+            spec.nodes,
+            Arc::new(g.indptr),
+            indices_file,
+            Some(&machine.host),
+        )?;
+        let feature_gen =
+            FeatureGen::new(spec.seed, spec.dim, spec.classes, spec.noise, labels.clone());
+        let features = FeatureTable::procedural(
+            FileId::new(next_file_id(), DataKind::Features),
+            spec.nodes as u64,
+            feature_gen.clone(),
+        );
+        Ok(Dataset {
+            train_ids: spec.train_ids(),
+            spec: spec.clone(),
+            graph,
+            features,
+            labels,
+            feature_gen,
+        })
+    }
+
+    /// Write a real on-disk copy (indptr/indices/labels/features/meta).
+    pub fn write_dir(spec: &DatasetSpec, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let g = generate(&spec.gen_spec());
+        let labels = Arc::new(g.labels);
+        write_slice_u64(&dir.join("indptr.bin"), &g.indptr)?;
+        write_slice_u32(&dir.join("indices.bin"), &g.indices)?;
+        write_slice_u16(&dir.join("labels.bin"), &labels)?;
+        let gen = FeatureGen::new(spec.seed, spec.dim, spec.classes, spec.noise, labels.clone());
+        FeatureTable::write_file(&dir.join("features.bin"), spec.nodes as u64, &gen)?;
+        let meta = format!(
+            "name = \"{}\"\nnodes = {}\ndim = {}\nclasses = {}\ntrain_frac = {}\nseed = {}\n\
+             avg_degree = {}\ncommunity_size = {}\nhomophily = {}\ndegree_alpha = {}\nnoise = {}\n",
+            spec.name,
+            spec.nodes,
+            spec.dim,
+            spec.classes,
+            spec.train_frac,
+            spec.seed,
+            spec.avg_degree,
+            spec.community_size,
+            spec.homophily,
+            spec.degree_alpha,
+            spec.noise,
+        );
+        std::fs::write(dir.join("meta.toml"), meta)?;
+        Ok(())
+    }
+
+    /// Load a dataset previously written with `write_dir`; features are
+    /// served from the real file (exercising the file-backed path).
+    pub fn load_dir(dir: &Path, machine: &Machine) -> anyhow::Result<Dataset> {
+        let meta = crate::util::toml::Doc::parse(&std::fs::read_to_string(dir.join("meta.toml"))?)
+            .map_err(anyhow::Error::msg)?;
+        let spec = DatasetSpec {
+            name: meta.get_str("name").unwrap_or("loaded").to_string(),
+            nodes: meta.get_i64("nodes").ok_or_else(|| anyhow::anyhow!("meta: nodes"))? as u32,
+            dim: meta.get_i64("dim").ok_or_else(|| anyhow::anyhow!("meta: dim"))? as usize,
+            classes: meta.get_i64("classes").ok_or_else(|| anyhow::anyhow!("meta: classes"))?
+                as usize,
+            train_frac: meta.get_f64("train_frac").unwrap_or(0.1),
+            seed: meta.get_i64("seed").unwrap_or(0) as u64,
+            avg_degree: meta.get_f64("avg_degree").unwrap_or(20.0),
+            community_size: meta.get_i64("community_size").unwrap_or(100) as u32,
+            homophily: meta.get_f64("homophily").unwrap_or(0.5),
+            degree_alpha: meta.get_f64("degree_alpha").unwrap_or(2.1),
+            noise: meta.get_f64("noise").unwrap_or(0.5) as f32,
+        };
+        let indptr = Arc::new(read_slice_u64(&dir.join("indptr.bin"))?);
+        let labels = Arc::new(read_slice_u16(&dir.join("labels.bin"))?);
+        let indices_backing: BackingRef =
+            Arc::new(FileBacking::open(&dir.join("indices.bin"))?);
+        let indices_file = crate::storage::SimFile::new(
+            FileId::new(next_file_id(), DataKind::Topology),
+            indices_backing,
+        );
+        let graph = DiskGraph::new(spec.nodes, indptr, indices_file, Some(&machine.host))?;
+        let feature_backing: BackingRef =
+            Arc::new(FileBacking::open(&dir.join("features.bin"))?);
+        let features = FeatureTable::from_backing(
+            FileId::new(next_file_id(), DataKind::Features),
+            spec.nodes as u64,
+            spec.dim,
+            feature_backing,
+        );
+        let feature_gen =
+            FeatureGen::new(spec.seed, spec.dim, spec.classes, spec.noise, labels.clone());
+        Ok(Dataset {
+            train_ids: spec.train_ids(),
+            spec,
+            graph,
+            features,
+            labels,
+            feature_gen,
+        })
+    }
+
+    /// Paper-style Table 1 row: name, nodes, edges, dim, classes, topo/feat MB.
+    pub fn table1_row(&self) -> String {
+        format!(
+            "{:<18} {:>9} {:>10} {:>5} {:>7} {:>10} {:>10}",
+            self.spec.name,
+            self.spec.nodes,
+            self.graph.edges(),
+            self.spec.dim,
+            self.spec.classes,
+            crate::util::units::fmt_bytes(self.graph.topo_bytes()),
+            crate::util::units::fmt_bytes(self.features.total_bytes()),
+        )
+    }
+}
+
+fn write_slice_u64(path: &Path, xs: &[u64]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+fn write_slice_u32(path: &Path, xs: &[u32]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+fn write_slice_u16(path: &Path, xs: &[u16]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+fn read_slice_u64(path: &Path) -> std::io::Result<Vec<u64>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes.chunks_exact(8).map(|b| u64::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+fn read_slice_u16(path: &Path) -> std::io::Result<Vec<u16>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes.chunks_exact(2).map(|b| u16::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::sim::Clock;
+
+    fn machine() -> Machine {
+        Machine::new(MachineConfig::paper(), Clock::new(0.1))
+    }
+
+    #[test]
+    fn registry_resolves_names() {
+        for name in [
+            "papers100m-mini",
+            "twitter-mini",
+            "friendster-mini",
+            "mag240m-mini",
+            "papers-tiny",
+            "unit-test",
+        ] {
+            assert!(DatasetSpec::by_name(name).is_some(), "{name}");
+        }
+        assert!(DatasetSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn materialize_unit_test_dataset() {
+        let m = machine();
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &m).unwrap();
+        assert_eq!(ds.graph.nodes, 3000);
+        assert!(ds.graph.edges() > 20_000);
+        assert_eq!(ds.labels.len(), 3000);
+        let expected = (3000.0 * 0.2) as f64;
+        assert!((ds.train_ids.len() as f64 - expected).abs() < expected * 0.25);
+        // Features readable and deterministic.
+        let mut a = vec![0u8; 64];
+        ds.features.file.backing.read_at(ds.features.row_offset(10), &mut a);
+        let mut b = vec![0u8; 64];
+        ds.feature_gen.fill_row(10, &mut b);
+        assert_eq!(a, b);
+        // indptr pinned in host memory.
+        assert!(m.host.reserved() >= 3001 * 8);
+    }
+
+    #[test]
+    fn train_ids_sorted_unique_in_range() {
+        let spec = DatasetSpec::unit_test();
+        let ids = spec.train_ids();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        assert!(ids.iter().all(|&v| v < spec.nodes));
+    }
+
+    #[test]
+    fn write_and_load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join("gnndrive_ds_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::unit_test();
+        spec.nodes = 500;
+        spec.name = "rt".into();
+        Dataset::write_dir(&spec, &dir).unwrap();
+        let m = machine();
+        let ds = Dataset::load_dir(&dir, &m).unwrap();
+        assert_eq!(ds.spec.nodes, 500);
+        assert_eq!(ds.labels.len(), 500);
+        // File-backed features equal procedural generation.
+        let mut got = vec![0u8; 64];
+        ds.features.file.backing.read_at(ds.features.row_offset(3), &mut got);
+        let mut want = vec![0u8; 64];
+        ds.feature_gen.fill_row(3, &mut want);
+        assert_eq!(got, want);
+        // Topology readable through the storage stack.
+        let nbrs = ds.graph.neighbors(&m.storage, 0);
+        assert_eq!(nbrs.len() as u64, ds.graph.degree(0));
+    }
+}

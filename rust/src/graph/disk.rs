@@ -1,0 +1,168 @@
+//! Disk-resident CSC topology.
+//!
+//! Mirrors the paper's layout (§4.1/§5): the *index pointer* array (`indptr`,
+//! one u64 per node) is pinned in host memory — it is small and hot during
+//! sampling — while the *index* array (`indices`, one u32 per edge) lives on
+//! SSD and is accessed through the OS page cache (mmap-style), where it
+//! contends with whatever else occupies host memory.
+
+use crate::storage::{HostMemory, Reservation, SimFile, Storage};
+use std::sync::Arc;
+
+pub struct DiskGraph {
+    pub nodes: u32,
+    pub indptr: Arc<Vec<u64>>,
+    pub indices_file: SimFile,
+    /// Host-memory reservation pinning `indptr` (paper: <1 GB, kept in RAM).
+    _indptr_reservation: Option<Reservation>,
+}
+
+impl DiskGraph {
+    pub fn new(
+        nodes: u32,
+        indptr: Arc<Vec<u64>>,
+        indices_file: SimFile,
+        host: Option<&HostMemory>,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        assert_eq!(indptr.len(), nodes as usize + 1);
+        let reservation = match host {
+            Some(h) => Some(h.reserve("topology indptr", (indptr.len() * 8) as u64)?),
+            None => None,
+        };
+        Ok(DiskGraph { nodes, indptr, indices_file, _indptr_reservation: reservation })
+    }
+
+    pub fn edges(&self) -> u64 {
+        *self.indptr.last().unwrap()
+    }
+
+    pub fn degree(&self, v: u32) -> u64 {
+        self.indptr[v as usize + 1] - self.indptr[v as usize]
+    }
+
+    /// Read v's in-neighbor list from SSD through the page cache (mmap
+    /// semantics), appending into `out`. This is the sampling-side I/O that
+    /// memory contention (D1) slows down.
+    pub fn neighbors_into(&self, storage: &Storage, v: u32, out: &mut Vec<u32>) {
+        let mut scratch = Vec::new();
+        self.neighbors_into_scratch(storage, v, out, &mut scratch);
+    }
+
+    /// Allocation-free variant: the caller supplies a reusable byte scratch
+    /// (the sampler hot loop reads ~10⁴ lists per mini-batch).
+    pub fn neighbors_into_scratch(
+        &self,
+        storage: &Storage,
+        v: u32,
+        out: &mut Vec<u32>,
+        scratch: &mut Vec<u8>,
+    ) {
+        let start = self.indptr[v as usize];
+        let end = self.indptr[v as usize + 1];
+        let deg = (end - start) as usize;
+        if deg == 0 {
+            return;
+        }
+        scratch.clear();
+        scratch.resize(deg * 4, 0);
+        storage.read_buffered(&self.indices_file, start * 4, scratch);
+        out.reserve(deg);
+        for b in scratch.chunks_exact(4) {
+            out.push(u32::from_le_bytes(b.try_into().unwrap()));
+        }
+    }
+
+    /// Convenience wrapper allocating a fresh vec.
+    pub fn neighbors(&self, storage: &Storage, v: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.neighbors_into(storage, v, &mut out);
+        out
+    }
+
+    /// Read v's in-neighbors *without* charging device time — used when a
+    /// system holds this adjacency in its own in-memory cache (Ginex's
+    /// neighbor cache, MariusGNN's buffered partitions).
+    pub fn neighbors_into_nocharge(&self, v: u32, out: &mut Vec<u32>) {
+        let start = self.indptr[v as usize];
+        let end = self.indptr[v as usize + 1];
+        let deg = (end - start) as usize;
+        if deg == 0 {
+            return;
+        }
+        let mut buf = vec![0u8; deg * 4];
+        self.indices_file.backing.read_at(start * 4, &mut buf);
+        out.reserve(deg);
+        for b in buf.chunks_exact(4) {
+            out.push(u32::from_le_bytes(b.try_into().unwrap()));
+        }
+    }
+
+    /// Topology bytes on SSD (the indices array).
+    pub fn topo_bytes(&self) -> u64 {
+        self.indices_file.len()
+    }
+}
+
+impl std::fmt::Debug for DiskGraph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DiskGraph")
+            .field("nodes", &self.nodes)
+            .field("edges", &self.edges())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Clock;
+    use crate::storage::{
+        DataKind, FileId, MemBacking, PageCache, SsdConfig, SsdSim,
+    };
+
+    fn storage() -> Storage {
+        let clock = Clock::new(0.1);
+        let ssd = SsdSim::new(SsdConfig::pm883(), clock);
+        let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
+        Storage::new(ssd, cache)
+    }
+
+    fn tiny_graph(host: Option<&HostMemory>) -> DiskGraph {
+        // 3 nodes: in-neighbors 0←{1,2}, 1←{0}, 2←{} .
+        let indptr = Arc::new(vec![0u64, 2, 3, 3]);
+        let indices = MemBacking::from_u32s(&[1, 2, 0]);
+        let file = SimFile::new(FileId::new(0, DataKind::Topology), Arc::new(indices));
+        DiskGraph::new(3, indptr, file, host).unwrap()
+    }
+
+    #[test]
+    fn neighbors_roundtrip() {
+        let st = storage();
+        let g = tiny_graph(None);
+        assert_eq!(g.edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(&st, 0), vec![1, 2]);
+        assert_eq!(g.neighbors(&st, 1), vec![0]);
+        assert!(g.neighbors(&st, 2).is_empty());
+    }
+
+    #[test]
+    fn indptr_reserves_host_memory() {
+        let host = HostMemory::new(1 << 20);
+        let _g = tiny_graph(Some(&host));
+        assert_eq!(host.reserved(), 4 * 8);
+    }
+
+    #[test]
+    fn neighbor_reads_hit_page_cache_second_time() {
+        let st = storage();
+        let g = tiny_graph(None);
+        g.neighbors(&st, 0);
+        let reads = st.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed);
+        g.neighbors(&st, 0);
+        assert_eq!(
+            st.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed),
+            reads
+        );
+    }
+}

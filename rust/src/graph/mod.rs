@@ -1,0 +1,11 @@
+//! Graph substrate: synthetic generation, disk-resident CSC topology,
+//! on-SSD feature tables, dataset registry (paper Table 1 analogs).
+
+pub mod dataset;
+pub mod disk;
+pub mod features;
+pub mod gen;
+
+pub use dataset::{Dataset, DatasetSpec};
+pub use disk::DiskGraph;
+pub use features::{FeatureGen, FeatureTable};

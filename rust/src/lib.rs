@@ -1,0 +1,26 @@
+//! GNNDrive — a reproduction of *Reducing Memory Contention and I/O
+//! Congestion for Disk-based GNN Training* (ICPP '24) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod extract;
+pub mod membuf;
+pub mod parallel;
+pub mod pipeline;
+pub mod runtime;
+pub mod sample;
+pub mod train;
+pub mod sim;
+pub mod storage;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,166 @@
+//! `gnndrive` — CLI launcher for the GNNDrive reproduction.
+//!
+//! Subcommands:
+//!   gen-data   materialize a dataset to a real on-disk directory
+//!   table1     print the dataset summary (paper Table 1)
+//!   train      run epochs of one system on one dataset (sim or PJRT)
+//!   figure     regenerate a paper figure/table (2,3,8,9,10,11,12,13,14,tab2,b1)
+//!   iostat     fio-style sync/async I/O study on the SSD model (Fig B.1)
+
+use gnndrive::baselines::{build_system, SystemKind};
+use gnndrive::config::{Machine, MachineConfig, TrainConfig};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::runtime::simcompute::ModelKind;
+use gnndrive::sim::Clock;
+use gnndrive::util::args::Args;
+
+fn main() {
+    let args = Args::new(
+        "gnndrive — disk-based GNN training (ICPP '24 reproduction)\n\n\
+         USAGE: gnndrive <gen-data|table1|train|figure|iostat> [options]",
+    )
+    .opt("dataset", "papers100m-mini", "dataset name (see table1)")
+    .opt("system", "gnndrive", "gnndrive|gnndrive-cpu|pyg+|ginex|marius")
+    .opt("model", "graphsage", "graphsage|gcn|gat")
+    .opt("epochs", "1", "epochs to run")
+    .opt("batches", "", "mini-batches per epoch (default: full epoch)")
+    .opt("batch-size", "1000", "mini-batch size")
+    .opt("fanouts", "10,10,10", "comma-separated neighbor fanouts")
+    .opt("memory-gb", "32", "host memory in paper-scale GB (divided by 256)")
+    .opt("dim", "", "feature dimension override")
+    .opt("out", "data/papers-tiny", "output directory for gen-data")
+    .flag("full", "full sweep grids for `figure` (default: quick)")
+    .parse();
+
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "table1" => {
+            print!("{}", gnndrive::experiments::table1());
+            0
+        }
+        "train" => cmd_train(&args),
+        "figure" => cmd_figure(&args),
+        "iostat" => {
+            print!("{}", gnndrive::experiments::figb1(!args.has("full")));
+            0
+        }
+        _ => {
+            args.print_help();
+            if cmd == "help" {
+                0
+            } else {
+                eprintln!("\nunknown command {cmd:?}");
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_gen_data(args: &Args) -> i32 {
+    let name = if args.get("dataset").is_none() {
+        "papers-tiny"
+    } else {
+        args.get_or_default("dataset")
+    };
+    let Some(spec) = DatasetSpec::by_name(name) else {
+        eprintln!("unknown dataset {name:?}");
+        return 2;
+    };
+    let out = std::path::PathBuf::from(args.get_or_default("out"));
+    println!("writing {name} to {out:?} …");
+    match Dataset::write_dir(&spec, &out) {
+        Ok(()) => {
+            println!("done: indptr.bin indices.bin labels.bin features.bin meta.toml");
+            0
+        }
+        Err(e) => {
+            eprintln!("gen-data failed: {e}");
+            1
+        }
+    }
+}
+
+fn parse_fanouts(s: &str) -> Vec<usize> {
+    s.split(',').filter_map(|p| p.trim().parse().ok()).collect()
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let Some(mut spec) = DatasetSpec::by_name(args.get_or_default("dataset")) else {
+        eprintln!("unknown dataset");
+        return 2;
+    };
+    if let Some(d) = args.get("dim").and_then(|d| d.parse().ok()) {
+        spec = spec.with_dim(d);
+    }
+    let Some(kind) = SystemKind::by_name(args.get_or_default("system")) else {
+        eprintln!("unknown system");
+        return 2;
+    };
+    let Some(model) = ModelKind::by_name(args.get_or_default("model")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let gb: u64 = args.get_usize("memory-gb").unwrap_or(32) as u64;
+    let machine = Machine::new(MachineConfig::paper().with_paper_host_gb(gb), Clock::from_env());
+    let ds = match Dataset::materialize(&spec, &machine) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("dataset: {e}");
+            return 1;
+        }
+    };
+    let cfg = TrainConfig {
+        batch_size: args.get_usize("batch-size").unwrap_or(1000),
+        fanouts: parse_fanouts(args.get_or_default("fanouts")),
+        batches_per_epoch: args.get("batches").and_then(|b| b.parse().ok()),
+        ..TrainConfig::default()
+    };
+    let epochs = args.get_usize("epochs").unwrap_or(1);
+    println!(
+        "{} on {} ({} nodes, dim {}), {} epochs, machine {} ({} host)",
+        kind.label(),
+        ds.spec.name,
+        ds.spec.nodes,
+        ds.spec.dim,
+        epochs,
+        machine.cfg.name,
+        gnndrive::util::units::fmt_bytes(machine.cfg.host_mem),
+    );
+    let mut sys = match build_system(kind, &machine, &ds, cfg, model) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{}: {e}", kind.label());
+            return 1;
+        }
+    };
+    for e in 0..epochs {
+        match sys.run_epoch(e as u64) {
+            Ok(st) => println!("epoch {e}: {}", st.summary()),
+            Err(err) => {
+                eprintln!("epoch {e}: {err}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let Some(id) = args.positional.get(1) else {
+        eprintln!("usage: gnndrive figure <2|3|8|9|10|11|12|13|14|tab1|tab2|b1> [--full]");
+        return 2;
+    };
+    let quick = !(args.has("full") || gnndrive::experiments::is_full());
+    match gnndrive::experiments::run_figure(id, quick) {
+        Some(report) => {
+            print!("{report}");
+            0
+        }
+        None => {
+            eprintln!("unknown figure {id:?}");
+            2
+        }
+    }
+}

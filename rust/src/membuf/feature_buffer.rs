@@ -1,0 +1,442 @@
+//! GNNDrive's feature-buffer manager (paper §4.2, Fig 6, Algorithm 1).
+//!
+//! The feature buffer lives in device memory (host memory for CPU-based
+//! training) and holds one slot per extracted node row. Four structures
+//! manage it, exactly as in the paper:
+//!
+//! * **mapping table** — node → (slot index, reference count, valid bit);
+//! * **reverse mapping** — slot → node (or −1), to identify a slot's tenant;
+//! * **standby list** — LRU of slots with zero references: free slots plus
+//!   retired-but-reusable ones (inter-batch locality);
+//! * **node alias list** — per-batch slot indexes handed to the trainer.
+//!
+//! State machine per entry: `(slot=-1, valid=0)` absent → `(slot=s,
+//! valid=0, ref>0)` being extracted → `(slot=s, valid=1)` ready; a ready
+//! node with `ref=0` sits in the standby list and can be either *reused*
+//! (hit) or *stolen* (its slot reassigned, entry invalidated). Extractors
+//! that find a node mid-extraction by a peer alias its slot, join a wait
+//! list, and re-check validity at the end (`wait_valid`) — sharing I/O
+//! instead of duplicating it.
+
+use crate::storage::{DeviceMemory, HostMemory, Reservation};
+use crate::util::lru::Lru;
+use crate::util::fxhash::FxHashMap;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+/// Where the buffer's memory is charged.
+pub enum BufferHome {
+    Device(Reservation),
+    Host(Reservation),
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct MapEntry {
+    slot: i32,
+    ref_count: u32,
+    valid: bool,
+}
+
+struct BufState {
+    map: FxHashMap<u32, MapEntry>,
+    /// slot → node id or -1.
+    reverse: Vec<i64>,
+    /// Zero-reference slots, LRU order (free slots enter via `release`).
+    standby: Lru<u32>,
+    /// Diagnostics.
+    hits: u64,
+    shared: u64,
+    steals: u64,
+    loads: u64,
+}
+
+/// The extraction plan for one mini-batch (outcome of Algorithm 1 lines
+/// 1–30, before I/O).
+#[derive(Debug)]
+pub struct BatchPlan {
+    /// Slot alias per batch node (parallel to the node list).
+    pub aliases: Vec<i32>,
+    /// (node, slot) pairs whose rows must be loaded from SSD.
+    pub to_load: Vec<(u32, u32)>,
+    /// Nodes being extracted by peer extractors; wait for their valid bits.
+    pub wait_list: Vec<u32>,
+}
+
+pub struct FeatureBuffer {
+    pub n_slots: usize,
+    pub dim: usize,
+    state: Mutex<BufState>,
+    /// Signalled when slots enter the standby list.
+    slot_freed: Condvar,
+    /// Signalled when any node's valid bit is set.
+    valid_set: Condvar,
+    /// Slot payload. One mutex per slot: writers are PCIe-completion
+    /// callbacks, readers are the trainer; contention is per-row and brief.
+    data: Vec<Mutex<Box<[f32]>>>,
+    _home: BufferHome,
+}
+
+impl FeatureBuffer {
+    /// Reserve `n_slots × dim` f32 slots in device memory.
+    pub fn in_device(
+        dev: &DeviceMemory,
+        n_slots: usize,
+        dim: usize,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        let bytes = (n_slots * dim * 4) as u64;
+        let res = dev.reserve("feature buffer", bytes)?;
+        Ok(Self::build(n_slots, dim, BufferHome::Device(res)))
+    }
+
+    /// CPU-training variant: the buffer is charged to host memory (§4.4).
+    pub fn in_host(
+        host: &HostMemory,
+        n_slots: usize,
+        dim: usize,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        let bytes = (n_slots * dim * 4) as u64;
+        let res = host.reserve("feature buffer (cpu)", bytes)?;
+        Ok(Self::build(n_slots, dim, BufferHome::Host(res)))
+    }
+
+    fn build(n_slots: usize, dim: usize, home: BufferHome) -> Self {
+        let mut standby = Lru::new();
+        for s in 0..n_slots as u32 {
+            standby.insert(s);
+        }
+        // Free slots should be consumed oldest-first; insertion above leaves
+        // slot 0 at the LRU end… insert order: 0 first → 0 is least recent. ✓
+        let data = (0..n_slots)
+            .map(|_| Mutex::new(vec![0f32; dim].into_boxed_slice()))
+            .collect();
+        FeatureBuffer {
+            n_slots,
+            dim,
+            state: Mutex::new(BufState {
+                map: FxHashMap::default(),
+                reverse: vec![-1; n_slots],
+                standby,
+                hits: 0,
+                shared: 0,
+                steals: 0,
+                loads: 0,
+            }),
+            slot_freed: Condvar::new(),
+            valid_set: Condvar::new(),
+            data,
+            _home: home,
+        }
+    }
+
+    /// Algorithm 1, planning phase: resolve every batch node to a slot,
+    /// reusing valid data, sharing in-flight extractions, and allocating LRU
+    /// standby slots for the rest (blocking if none are free — the engine
+    /// sizes the buffer ≥ (queue depth + extractors) × batch cap so waiting
+    /// always terminates). Reference counts of all batch nodes are
+    /// incremented here and dropped by `release`.
+    pub fn begin_batch(&self, node_ids: &[u32]) -> BatchPlan {
+        let mut st = self.state.lock().unwrap();
+        let mut aliases = vec![-1i32; node_ids.len()];
+        let mut to_load = Vec::new();
+        let mut wait_list = Vec::new();
+
+        for (i, &id) in node_ids.iter().enumerate() {
+            if let Some(e) = st.map.get(&id).copied() {
+                if e.valid {
+                    // Ready in the buffer: reuse. A zero-ref entry sits in
+                    // the standby list — pull it out so it cannot be stolen.
+                    if e.ref_count == 0 {
+                        st.standby.remove(&(e.slot as u32));
+                    }
+                    st.hits += 1;
+                    aliases[i] = e.slot;
+                } else {
+                    // Being extracted by a peer (ref>0, invalid): share it.
+                    debug_assert!(e.ref_count > 0, "invalid zero-ref entry leaked");
+                    st.shared += 1;
+                    aliases[i] = e.slot;
+                    wait_list.push(id);
+                }
+                st.map.get_mut(&id).unwrap().ref_count += 1;
+            } else {
+                // Absent: allocate the LRU standby slot (Algorithm 1 L24-29).
+                let slot = loop {
+                    if let Some(s) = st.standby.pop_lru() {
+                        break s;
+                    }
+                    // No standby slot: wait for the releaser.
+                    st = self.slot_freed.wait(st).unwrap();
+                };
+                // Steal: invalidate the previous tenant's mapping.
+                let prev = st.reverse[slot as usize];
+                if prev >= 0 {
+                    st.map.remove(&(prev as u32));
+                    st.steals += 1;
+                }
+                st.reverse[slot as usize] = id as i64;
+                st.map.insert(id, MapEntry { slot: slot as i32, ref_count: 1, valid: false });
+                st.loads += 1;
+                aliases[i] = slot as i32;
+                to_load.push((id, slot));
+            }
+        }
+        BatchPlan { aliases, to_load, wait_list }
+    }
+
+    /// Write a loaded row into its slot and publish the valid bit
+    /// (Algorithm 1 L36; called from the transfer-completion path).
+    pub fn publish(&self, node: u32, slot: u32, row: &[f32]) {
+        {
+            let mut dst = self.data[slot as usize].lock().unwrap();
+            let n = dst.len().min(row.len());
+            dst[..n].copy_from_slice(&row[..n]);
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.map.get_mut(&node) {
+            // The entry may have been stolen+reassigned only if ref hit 0,
+            // which cannot happen mid-extraction (we hold a reference).
+            debug_assert_eq!(e.slot, slot as i32);
+            e.valid = true;
+        }
+        drop(st);
+        self.valid_set.notify_all();
+    }
+
+    /// Block until every node in `nodes` has a set valid bit (end of
+    /// Algorithm 1: the wait-list check).
+    pub fn wait_valid(&self, nodes: &[u32]) {
+        let mut st = self.state.lock().unwrap();
+        for &id in nodes {
+            loop {
+                match st.map.get(&id) {
+                    Some(e) if e.valid => break,
+                    Some(_) => {
+                        st = self.valid_set.wait(st).unwrap();
+                    }
+                    None => break, // released+stolen after we trained on it — impossible while we hold a ref; tolerate in release builds
+                }
+            }
+        }
+    }
+
+    /// Releaser: drop one reference per node; zero-ref slots re-enter the
+    /// standby list MRU-first (retired but reusable — inter-batch locality).
+    /// Mapping entries stay valid until stolen (§4.2 "Release").
+    pub fn release(&self, node_ids: &[u32]) {
+        let mut st = self.state.lock().unwrap();
+        let mut freed = false;
+        for &id in node_ids {
+            let e = st.map.get_mut(&id).expect("release of unmapped node");
+            assert!(e.ref_count > 0, "refcount underflow for node {id}");
+            e.ref_count -= 1;
+            if e.ref_count == 0 {
+                let slot = e.slot as u32;
+                st.standby.insert(slot);
+                freed = true;
+            }
+        }
+        drop(st);
+        if freed {
+            self.slot_freed.notify_all();
+        }
+    }
+
+    /// Trainer-side gather: copy each alias's row into `out` (row-major).
+    /// Negative aliases (padding) produce zero rows.
+    pub fn gather(&self, aliases: &[i32], out: &mut [f32]) {
+        assert!(out.len() >= aliases.len() * self.dim);
+        for (i, &a) in aliases.iter().enumerate() {
+            let dst = &mut out[i * self.dim..(i + 1) * self.dim];
+            if a < 0 {
+                dst.fill(0.0);
+            } else {
+                let row = self.data[a as usize].lock().unwrap();
+                dst.copy_from_slice(&row);
+            }
+        }
+    }
+
+    /// (hits, shared, steals, loads) counters for the reuse diagnostics.
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.hits, st.shared, st.steals, st.loads)
+    }
+
+    /// Number of slots currently in the standby list (tests/diagnostics).
+    pub fn standby_len(&self) -> usize {
+        self.state.lock().unwrap().standby.len()
+    }
+
+    /// Validate cross-structure invariants (tests/property checks):
+    /// mapping↔reverse bijection, standby = exactly the zero-ref mapped
+    /// slots plus never-used free slots, no two nodes sharing a slot.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let st = self.state.lock().unwrap();
+        let mut slot_owner: HashMap<i32, u32> = HashMap::new();
+        for (&node, e) in &st.map {
+            if e.slot < 0 || e.slot as usize >= self.n_slots {
+                return Err(format!("node {node} has bad slot {}", e.slot));
+            }
+            if let Some(prev) = slot_owner.insert(e.slot, node) {
+                return Err(format!("slot {} owned by {prev} and {node}", e.slot));
+            }
+            if st.reverse[e.slot as usize] != node as i64 {
+                return Err(format!(
+                    "reverse[{}]={} but node {node} maps there",
+                    e.slot, st.reverse[e.slot as usize]
+                ));
+            }
+            if e.ref_count == 0 && !st.standby.contains(&(e.slot as u32)) {
+                return Err(format!("zero-ref node {node} slot {} not standby", e.slot));
+            }
+            if e.ref_count > 0 && st.standby.contains(&(e.slot as u32)) {
+                return Err(format!("referenced slot {} in standby", e.slot));
+            }
+        }
+        for (slot, &node) in st.reverse.iter().enumerate() {
+            if node >= 0 {
+                match st.map.get(&(node as u32)) {
+                    Some(e) if e.slot == slot as i32 => {}
+                    _ => return Err(format!("reverse[{slot}]={node} dangling")),
+                }
+            } else if !st.standby.contains(&(slot as u32)) {
+                return Err(format!("empty slot {slot} missing from standby"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DeviceMemory;
+    use std::sync::Arc;
+
+    fn buf(slots: usize, dim: usize) -> FeatureBuffer {
+        let dev = DeviceMemory::new(64 << 20);
+        FeatureBuffer::in_device(&dev, slots, dim).unwrap()
+    }
+
+    fn load_all(fb: &FeatureBuffer, plan: &BatchPlan) {
+        for &(node, slot) in &plan.to_load {
+            let row: Vec<f32> = (0..fb.dim).map(|j| (node * 100 + j as u32) as f32).collect();
+            fb.publish(node, slot, &row);
+        }
+    }
+
+    #[test]
+    fn fresh_batch_allocates_and_gathers() {
+        let fb = buf(8, 4);
+        let plan = fb.begin_batch(&[10, 11, 12]);
+        assert_eq!(plan.to_load.len(), 3);
+        assert!(plan.wait_list.is_empty());
+        assert!(plan.aliases.iter().all(|&a| a >= 0));
+        load_all(&fb, &plan);
+        let mut out = vec![0f32; 3 * 4];
+        fb.gather(&plan.aliases, &mut out);
+        assert_eq!(out[0], 1000.0); // node 10, j 0
+        assert_eq!(out[5], 1101.0); // node 11, j 1
+        fb.check_invariants().unwrap();
+        fb.release(&[10, 11, 12]);
+        fb.check_invariants().unwrap();
+        assert_eq!(fb.standby_len(), 8);
+    }
+
+    #[test]
+    fn released_nodes_are_reused_without_reload() {
+        let fb = buf(8, 2);
+        let p1 = fb.begin_batch(&[1, 2, 3]);
+        load_all(&fb, &p1);
+        fb.release(&[1, 2, 3]);
+        let p2 = fb.begin_batch(&[2, 3, 4]);
+        // 2 and 3 are hits; only 4 loads.
+        assert_eq!(p2.to_load.len(), 1);
+        assert_eq!(p2.to_load[0].0, 4);
+        let (hits, _, _, loads) = fb.stats();
+        assert_eq!(hits, 2);
+        assert_eq!(loads, 4);
+        // Aliases of 2,3 match their original slots.
+        assert_eq!(p2.aliases[0], p1.aliases[1]);
+        assert_eq!(p2.aliases[1], p1.aliases[2]);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_steal_invalidates_previous_tenant() {
+        let fb = buf(4, 2);
+        let p1 = fb.begin_batch(&[1, 2, 3, 4]);
+        load_all(&fb, &p1);
+        fb.release(&[1, 2, 3, 4]);
+        // All four slots standby, LRU order 1,2,3,4. Two new nodes steal
+        // the two LRU slots (1's and 2's).
+        let p2 = fb.begin_batch(&[5, 6]);
+        assert_eq!(p2.to_load.len(), 2);
+        let (_, _, steals, _) = fb.stats();
+        assert_eq!(steals, 2);
+        // Nodes 1,2 are gone from the mapping; 3,4 still reusable.
+        let p3 = fb.begin_batch(&[3, 4]);
+        assert!(p3.to_load.is_empty());
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn concurrent_extraction_shares_inflight_node() {
+        let fb = buf(8, 2);
+        let p1 = fb.begin_batch(&[7]);
+        assert_eq!(p1.to_load.len(), 1);
+        // A second "extractor" wants node 7 before it is valid.
+        let p2 = fb.begin_batch(&[7, 8]);
+        assert_eq!(p2.to_load.len(), 1, "only node 8 loads");
+        assert_eq!(p2.wait_list, vec![7]);
+        assert_eq!(p2.aliases[0], p1.aliases[0], "shared slot alias");
+        // Publish from extractor 1; waiter unblocks.
+        let fb = Arc::new(fb);
+        let waiter = {
+            let fb = fb.clone();
+            std::thread::spawn(move || fb.wait_valid(&[7]))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        fb.publish(7, p1.to_load[0].1, &[1.0, 2.0]);
+        waiter.join().unwrap();
+        let (_, shared, _, _) = fb.stats();
+        assert_eq!(shared, 1);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn begin_batch_blocks_until_release_frees_slots() {
+        let fb = Arc::new(buf(4, 2));
+        let p1 = fb.begin_batch(&[1, 2, 3, 4]);
+        load_all(&fb, &p1);
+        // All slots referenced; a new batch must wait for release.
+        let fb2 = fb.clone();
+        let h = std::thread::spawn(move || {
+            let p = fb2.begin_batch(&[9]);
+            assert_eq!(p.to_load.len(), 1);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(!h.is_finished(), "allocation should be blocked");
+        fb.release(&[1, 2, 3, 4]);
+        h.join().unwrap();
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "refcount underflow")]
+    fn double_release_panics() {
+        let fb = buf(4, 2);
+        let p = fb.begin_batch(&[1]);
+        load_all(&fb, &p);
+        fb.release(&[1]);
+        fb.release(&[1]);
+    }
+
+    #[test]
+    fn device_memory_charged() {
+        let dev = DeviceMemory::new(1 << 20);
+        let _fb = FeatureBuffer::in_device(&dev, 100, 16).unwrap();
+        assert_eq!(dev.reserved(), 100 * 16 * 4);
+        assert!(FeatureBuffer::in_device(&dev, 1 << 20, 16).is_err());
+    }
+}

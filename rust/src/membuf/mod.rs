@@ -1,0 +1,9 @@
+//! Inter-stage buffer management (the paper's §4.2): feature buffer with
+//! mapping table / reverse map / standby LRU, plus the bounded host-side
+//! staging buffer.
+
+pub mod feature_buffer;
+pub mod staging;
+
+pub use feature_buffer::{BatchPlan, FeatureBuffer};
+pub use staging::StagingBuffer;

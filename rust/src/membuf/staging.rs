@@ -1,0 +1,74 @@
+//! Staging buffer: the *only* host memory GNNDrive's extract stage uses.
+//!
+//! Per the paper (§4.2), its size is bounded by #extractors × the maximum
+//! nodes per mini-batch × row bytes — it exists solely to land direct-I/O
+//! reads from SSD before the asynchronous PCIe transfer into the device
+//! feature buffer, so host memory stays available for the sampling working
+//! set. Each extractor owns one [`StagingBuffer`]; slots are reused across
+//! mini-batches.
+
+use crate::storage::uring::IoBuf;
+use crate::storage::{HostMemory, Reservation};
+use std::sync::{Arc, Mutex};
+
+pub struct StagingBuffer {
+    bufs: Vec<IoBuf>,
+    pub row_bytes: usize,
+    _res: Reservation,
+}
+
+impl StagingBuffer {
+    /// Reserve `slots × row_bytes` of host memory for one extractor.
+    pub fn new(
+        host: &HostMemory,
+        slots: usize,
+        row_bytes: usize,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        let res = host.reserve("staging buffer", (slots * row_bytes) as u64)?;
+        let bufs = (0..slots)
+            .map(|_| Arc::new(Mutex::new(vec![0u8; row_bytes])) as IoBuf)
+            .collect();
+        Ok(StagingBuffer { bufs, row_bytes, _res: res })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Slot `i`'s buffer (cloned handle; the ring and the PCIe callback
+    /// share it).
+    pub fn slot(&self, i: usize) -> IoBuf {
+        self.bufs[i].clone()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.bufs.len() * self.row_bytes) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserves_and_exposes_slots() {
+        let host = HostMemory::new(1 << 20);
+        let sb = StagingBuffer::new(&host, 16, 512).unwrap();
+        assert_eq!(sb.slots(), 16);
+        assert_eq!(sb.bytes(), 16 * 512);
+        assert_eq!(host.reserved(), 16 * 512);
+        {
+            let b = sb.slot(3);
+            b.lock().unwrap()[0] = 42;
+        }
+        assert_eq!(sb.slot(3).lock().unwrap()[0], 42);
+        drop(sb);
+        assert_eq!(host.reserved(), 0);
+    }
+
+    #[test]
+    fn oom_when_host_too_small() {
+        let host = HostMemory::new(1024);
+        assert!(StagingBuffer::new(&host, 16, 512).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Metrics: thread-state registry, counters and utilization timelines.
+
+pub mod state;
+pub mod timeline;
+
+pub use timeline::{bucketize, render, Sample, TimelineRecorder};

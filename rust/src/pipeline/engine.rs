@@ -1,0 +1,612 @@
+//! The GNNDrive pipeline engine (paper §4.1, Fig 4).
+//!
+//! Four stages — sample, extract, train, release — run as concurrent thread
+//! pools connected by three bounded, ID-only queues (extracting, training,
+//! releasing). Samplers claim mini-batches from the epoch plan; extractors
+//! perform asynchronous two-phase feature extraction into the shared
+//! feature buffer; one trainer consumes node-alias lists; one releaser
+//! drops references so slots re-enter the standby list. Completion order is
+//! naturally out-of-order (mini-batch reordering, §4.3) and backpressure is
+//! exactly the paper's: a full queue blocks its producers.
+
+use crate::config::{Machine, TrainConfig};
+use crate::extract::{ExtractOptions, ExtractTarget, Extractor};
+use crate::graph::Dataset;
+use crate::membuf::{FeatureBuffer, StagingBuffer};
+use crate::metrics::state::{self, Role, State};
+use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
+use crate::sim::queue::BoundedQueue;
+use crate::sim::Stopwatch;
+use crate::train::{TrainStats, TrainStep};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// GPU- or CPU-based training variant (§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Gpu,
+    Cpu,
+}
+
+/// Derive padded node caps per level from the memory budget: the feature
+/// buffer must hold `(train queue + extractors + 1)` batches, so the cap on
+/// nodes per batch follows from the buffer-home capacity — exactly the
+/// paper's "the training queue's depth is restricted by the capacity of
+/// device memory" (§4.2). Intermediate caps interpolate geometrically and
+/// never exceed the no-dedup worst case.
+pub fn derive_caps(
+    batch: usize,
+    fanouts: &[usize],
+    dim: usize,
+    budget_bytes: u64,
+    groups: usize,
+    mult: usize,
+) -> Vec<usize> {
+    let row = (dim * 4) as u64;
+    let rows_budget = (budget_bytes / row) as usize;
+    let cap_l = (rows_budget / (groups.max(1) * mult.max(1))).max(batch + 1);
+    let levels = fanouts.len();
+    // No-dedup worst case per level.
+    let mut worst = vec![batch];
+    for (i, &f) in fanouts.iter().enumerate() {
+        worst.push(worst[i] + worst[i] * f);
+    }
+    let ratio = (cap_l as f64 / batch as f64).max(1.0);
+    let mut caps = Vec::with_capacity(levels + 1);
+    for i in 0..=levels {
+        let geo = (batch as f64 * ratio.powf(i as f64 / levels.max(1) as f64)).round() as usize;
+        caps.push(geo.min(worst[i]).max(batch));
+    }
+    // Monotone non-decreasing.
+    for i in 1..caps.len() {
+        caps[i] = caps[i].max(caps[i - 1]);
+    }
+    caps
+}
+
+/// Per-epoch outcome of a training system (shared with the baselines).
+#[derive(Clone, Debug, Default)]
+pub struct EpochStats {
+    pub epoch_time: Duration,
+    /// Per-epoch preparation time on the critical path (MariusGNN's data
+    /// preparation; zero for GNNDrive/PyG+; Ginex's superbatch inspect).
+    pub prep_time: Duration,
+    /// Sum of per-thread stage busy time.
+    pub sample_time: Duration,
+    pub extract_time: Duration,
+    pub train_time: Duration,
+    pub batches: usize,
+    pub train: TrainStats,
+    /// Out-of-order completions observed by the trainer (inversion count).
+    pub reorder_inversions: usize,
+    pub ssd_read_bytes: u64,
+    pub truncated_edges: usize,
+}
+
+impl EpochStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "epoch {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  loss {:.4}  acc {:.3}",
+            crate::util::units::fmt_dur(self.epoch_time),
+            crate::util::units::fmt_dur(self.sample_time),
+            crate::util::units::fmt_dur(self.extract_time),
+            crate::util::units::fmt_dur(self.train_time),
+            self.batches,
+            self.train.mean_loss(),
+            self.train.accuracy(),
+        )
+    }
+}
+
+struct TrainItem {
+    padded: Arc<PaddedSubgraph>,
+    aliases: Vec<i32>,
+}
+
+/// The GNNDrive engine bound to one machine + dataset + trainer.
+pub struct GnnDrive<'a> {
+    machine: &'a Machine,
+    ds: &'a Dataset,
+    cfg: TrainConfig,
+    variant: Variant,
+    /// Which GPU's memory holds the feature buffer (Fig 13 workers).
+    #[allow(dead_code)]
+    device_idx: usize,
+    fb: Arc<FeatureBuffer>,
+    extractors: Vec<Mutex<Extractor>>,
+    trainer: Mutex<Box<dyn TrainStep>>,
+    caps: Vec<usize>,
+}
+
+impl<'a> GnnDrive<'a> {
+    /// Build the engine: size and reserve the feature buffer
+    /// ((queue+extractors+1) × cap_L slots), one staging buffer + io_uring
+    /// per extractor. Fails with OOM if the budgets cannot fit (which is a
+    /// *result* for the memory-sweep experiments, not a crash).
+    pub fn new(
+        machine: &'a Machine,
+        ds: &'a Dataset,
+        cfg: TrainConfig,
+        variant: Variant,
+        trainer: Box<dyn TrainStep>,
+    ) -> anyhow::Result<Self> {
+        Self::new_on_device(machine, ds, cfg, variant, 0, trainer)
+    }
+
+    /// Multi-GPU data parallelism (Fig 13): each worker's pipeline owns one
+    /// GPU's feature buffer.
+    pub fn new_on_device(
+        machine: &'a Machine,
+        ds: &'a Dataset,
+        cfg: TrainConfig,
+        variant: Variant,
+        device_idx: usize,
+        trainer: Box<dyn TrainStep>,
+    ) -> anyhow::Result<Self> {
+        let caps = trainer.caps().to_vec();
+        assert_eq!(trainer.dim(), ds.spec.dim, "trainer/dataset dim mismatch");
+        let cap_l = *caps.last().unwrap();
+        let mut groups = cfg.train_queue_cap + cfg.extractors + 1;
+        if cfg.enforce_order {
+            // In-order training can hold up to `extractors` additional
+            // batches in the trainer's reorder hold-back buffer.
+            groups += cfg.extractors;
+        }
+        let slots = groups * cap_l * cfg.feature_buffer_mult.max(1);
+        let fb = match variant {
+            Variant::Gpu => FeatureBuffer::in_device(&machine.devices[device_idx], slots, ds.spec.dim)
+                .map_err(anyhow::Error::new)?,
+            Variant::Cpu => FeatureBuffer::in_host(&machine.host, slots, ds.spec.dim)
+                .map_err(anyhow::Error::new)?,
+        };
+        let fb = Arc::new(fb);
+        let row_bytes = ds.features.row_bytes() as usize;
+        // The staging buffer "can be expanded or shrunk … with regard to the
+        // volume of topological data and the capacity of available host
+        // memory" (§4.2): start at cap_L (capped) and halve until the
+        // reservation fits, down to a 256-row floor. Extraction then simply
+        // proceeds in more waves.
+        let mut staging_slots = cap_l.min(4096);
+        let mut extractors = Vec::with_capacity(cfg.extractors);
+        for _ in 0..cfg.extractors {
+            let staging = loop {
+                match StagingBuffer::new(&machine.host, staging_slots, row_bytes) {
+                    Ok(s) => break s,
+                    Err(_) if staging_slots > 256 => staging_slots /= 2,
+                    Err(e) => return Err(anyhow::Error::new(e)),
+                }
+            };
+            let target = match variant {
+                Variant::Gpu => ExtractTarget::Device(machine.pcie.clone()),
+                Variant::Cpu => ExtractTarget::Host,
+            };
+            extractors.push(Mutex::new(Extractor::with_options(
+                machine.storage.clone(),
+                cfg.io_depth,
+                staging,
+                fb.clone(),
+                ds.features.clone(),
+                target,
+                ExtractOptions {
+                    asynchronous: !cfg.sync_extract,
+                    direct: !cfg.buffered_features,
+                },
+            )));
+        }
+        Ok(GnnDrive {
+            machine,
+            ds,
+            cfg,
+            variant,
+            device_idx,
+            fb,
+            extractors,
+            trainer: Mutex::new(trainer),
+            caps,
+        })
+    }
+
+    pub fn caps(&self) -> &[usize] {
+        &self.caps
+    }
+
+    pub fn feature_buffer(&self) -> &Arc<FeatureBuffer> {
+        &self.fb
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// This engine's share of the train split (strided segment, §4.3).
+    fn segment_ids(&self) -> Vec<u32> {
+        match self.cfg.segment {
+            Some((w, n)) if n > 1 => self
+                .ds
+                .train_ids
+                .iter()
+                .copied()
+                .skip(w)
+                .step_by(n)
+                .collect(),
+            _ => self.ds.train_ids.clone(),
+        }
+    }
+
+    /// Run one full SET epoch; returns per-stage stats.
+    pub fn run_epoch(&self, epoch: u64) -> EpochStats {
+        let clock = &self.machine.clock;
+        let ids = self.segment_ids();
+        let plan = EpochPlan::new(
+            &ids,
+            self.cfg.batch_size,
+            self.cfg.seed,
+            epoch,
+            self.cfg.batches_per_epoch,
+        );
+        let total_batches = plan.len();
+        let extract_q = BoundedQueue::<Arc<PaddedSubgraph>>::new(self.cfg.extract_queue_cap);
+        let train_q = BoundedQueue::<TrainItem>::new(self.cfg.train_queue_cap);
+        let release_q = BoundedQueue::<Arc<PaddedSubgraph>>::new(64);
+
+        let sample_ns = AtomicU64::new(0);
+        let extract_ns = AtomicU64::new(0);
+        let train_ns = AtomicU64::new(0);
+        let samplers_left = AtomicUsize::new(self.cfg.samplers);
+        let extractors_left = AtomicUsize::new(self.cfg.extractors);
+        let train_stats = Mutex::new(TrainStats::default());
+        let train_order = Mutex::new(Vec::<u64>::with_capacity(total_batches));
+        let truncated = AtomicUsize::new(0);
+
+        let epoch_watch = Stopwatch::start(clock);
+        self.machine.storage.ssd.reset_stats();
+
+        std::thread::scope(|s| {
+            // ---- samplers ----
+            for t in 0..self.cfg.samplers {
+                let plan = &plan;
+                let extract_q = &extract_q;
+                let sample_ns = &sample_ns;
+                let samplers_left = &samplers_left;
+                let truncated = &truncated;
+                let sampler =
+                    Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8));
+                s.spawn(move || {
+                    state::register(Role::Sampler);
+                    let _ = t;
+                    while let Some((batch_id, seeds)) = plan.claim() {
+                        let sw = Stopwatch::start(clock);
+                        let sub = sampler.sample_batch(self.ds, &self.machine.storage, batch_id, seeds);
+                        let padded = sub.pad(&self.caps, &self.cfg.fanouts);
+                        truncated.fetch_add(padded.truncated_edges, Ordering::Relaxed);
+                        sample_ns
+                            .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        let _idle = state::enter(State::Idle);
+                        if extract_q.push(Arc::new(padded)).is_err() {
+                            break;
+                        }
+                    }
+                    if samplers_left.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        extract_q.close();
+                    }
+                    state::deregister();
+                });
+            }
+
+            // ---- extractors ----
+            for ex in self.extractors.iter() {
+                let extract_q = &extract_q;
+                let train_q = &train_q;
+                let extract_ns = &extract_ns;
+                let extractors_left = &extractors_left;
+                s.spawn(move || {
+                    state::register(Role::Extractor);
+                    let ex = ex.lock().unwrap();
+                    loop {
+                        let padded = {
+                            let _idle = state::enter(State::Idle);
+                            match extract_q.pop() {
+                                Ok(p) => p,
+                                Err(_) => break,
+                            }
+                        };
+                        let sw = Stopwatch::start(clock);
+                        let aliases = ex.extract(&padded.nodes[..padded.real_nodes]);
+                        extract_ns
+                            .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        let _idle = state::enter(State::Idle);
+                        if train_q.push(TrainItem { padded, aliases }).is_err() {
+                            break;
+                        }
+                    }
+                    if extractors_left.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        train_q.close();
+                    }
+                    state::deregister();
+                });
+            }
+
+            // ---- trainer ----
+            {
+                let train_q = &train_q;
+                let release_q = &release_q;
+                let train_ns = &train_ns;
+                let train_stats = &train_stats;
+                let train_order = &train_order;
+                let fb = &self.fb;
+                s.spawn(move || {
+                    state::register(Role::Trainer);
+                    let mut trainer = self.trainer.lock().unwrap();
+                    let dim = trainer.dim();
+                    let cap_l = *trainer.caps().last().unwrap();
+                    let mut feats = vec![0f32; cap_l * dim];
+                    // Ablation (`enforce_order`): hold out-of-order batches
+                    // until the expected id arrives — the paper's reordering
+                    // disabled.
+                    let mut pending: std::collections::BTreeMap<u64, TrainItem> =
+                        std::collections::BTreeMap::new();
+                    let mut next_id: u64 = 0;
+                    loop {
+                        let item = if self.cfg.enforce_order {
+                            if let Some(item) = pending.remove(&next_id) {
+                                item
+                            } else {
+                                let _idle = state::enter(State::Idle);
+                                match train_q.pop() {
+                                    Ok(i) if i.padded.batch_id == next_id => i,
+                                    Ok(i) => {
+                                        pending.insert(i.padded.batch_id, i);
+                                        continue;
+                                    }
+                                    Err(_) => match pending.pop_first() {
+                                        Some((_, i)) => i,
+                                        None => break,
+                                    },
+                                }
+                            }
+                        } else {
+                            let _idle = state::enter(State::Idle);
+                            match train_q.pop() {
+                                Ok(i) => i,
+                                Err(_) => break,
+                            }
+                        };
+                        next_id = item.padded.batch_id + 1;
+                        let sw = Stopwatch::start(clock);
+                        if trainer.is_real() {
+                            // Index the device feature buffer by node alias.
+                            let _busy = state::enter(State::Busy);
+                            fb.gather(&item.aliases, &mut feats[..item.aliases.len() * dim]);
+                            feats[item.aliases.len() * dim..].fill(0.0);
+                        }
+                        let r = trainer.step(&item.padded, &feats);
+                        train_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        train_stats.lock().unwrap().push(&r);
+                        train_order.lock().unwrap().push(item.padded.batch_id);
+                        let _idle = state::enter(State::Idle);
+                        if release_q.push(item.padded).is_err() {
+                            break;
+                        }
+                    }
+                    release_q.close();
+                    state::deregister();
+                });
+            }
+
+            // ---- releaser ----
+            {
+                let release_q = &release_q;
+                let fb = &self.fb;
+                s.spawn(move || {
+                    state::register(Role::Releaser);
+                    loop {
+                        let padded = {
+                            let _idle = state::enter(State::Idle);
+                            match release_q.pop() {
+                                Ok(p) => p,
+                                Err(_) => break,
+                            }
+                        };
+                        fb.release(&padded.nodes[..padded.real_nodes]);
+                    }
+                    state::deregister();
+                });
+            }
+        });
+
+        let order = train_order.into_inner().unwrap();
+        EpochStats {
+            epoch_time: epoch_watch.elapsed(),
+            prep_time: Duration::ZERO,
+            sample_time: Duration::from_nanos(sample_ns.into_inner()),
+            extract_time: Duration::from_nanos(extract_ns.into_inner()),
+            train_time: Duration::from_nanos(train_ns.into_inner()),
+            batches: order.len(),
+            train: train_stats.into_inner().unwrap(),
+            reorder_inversions: count_inversions(&order),
+            ssd_read_bytes: self
+                .machine
+                .storage
+                .ssd
+                .counters()
+                .read_bytes
+                .load(Ordering::Relaxed),
+            truncated_edges: truncated.into_inner(),
+        }
+    }
+
+    /// Sample-only epoch (Fig 2's `-only` condition): run the samplers over
+    /// the full plan with no extraction; returns the summed sampling time.
+    pub fn run_sample_only(&self, epoch: u64) -> Duration {
+        let clock = &self.machine.clock;
+        let ids = self.segment_ids();
+        let plan = EpochPlan::new(
+            &ids,
+            self.cfg.batch_size,
+            self.cfg.seed,
+            epoch,
+            self.cfg.batches_per_epoch,
+        );
+        let sample_ns = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..self.cfg.samplers {
+                let plan = &plan;
+                let sample_ns = &sample_ns;
+                let sampler =
+                    Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8));
+                s.spawn(move || {
+                    state::register(Role::Sampler);
+                    while let Some((batch_id, seeds)) = plan.claim() {
+                        let sw = Stopwatch::start(clock);
+                        let sub =
+                            sampler.sample_batch(self.ds, &self.machine.storage, batch_id, seeds);
+                        std::hint::black_box(&sub);
+                        sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    state::deregister();
+                });
+            }
+        });
+        Duration::from_nanos(sample_ns.into_inner())
+    }
+}
+
+/// Inversions in the trainer's observed batch order (0 = fully in-order).
+fn count_inversions(order: &[u64]) -> usize {
+    let mut inv = 0;
+    for i in 0..order.len() {
+        for j in i + 1..order.len() {
+            if order[i] > order[j] {
+                inv += 1;
+            }
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuModel, MachineConfig};
+    use crate::graph::DatasetSpec;
+    use crate::runtime::simcompute::{ModelKind, SimTrainStep};
+    use crate::sim::Clock;
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            batch_size: 64,
+            fanouts: vec![4, 4],
+            batches_per_epoch: Some(4),
+            samplers: 2,
+            extractors: 2,
+            io_depth: 32,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn build_engine<'a>(
+        machine: &'a Machine,
+        ds: &'a Dataset,
+        cfg: &TrainConfig,
+        variant: Variant,
+    ) -> GnnDrive<'a> {
+        let budget = match variant {
+            Variant::Gpu => machine.devices[0].capacity() * 9 / 10,
+            Variant::Cpu => machine.host.capacity() / 4,
+        };
+        let groups = cfg.train_queue_cap + cfg.extractors + 1;
+        let caps = derive_caps(cfg.batch_size, &cfg.fanouts, ds.spec.dim, budget, groups, 1);
+        let trainer = SimTrainStep::new(
+            if variant == Variant::Cpu { GpuModel::CpuOnly } else { GpuModel::Rtx3090 },
+            machine.clock.clone(),
+            ModelKind::GraphSage,
+            caps,
+            cfg.fanouts.clone(),
+            ds.spec.dim,
+            64,
+            ds.spec.classes,
+        );
+        GnnDrive::new(machine, ds, cfg.clone(), variant, Box::new(trainer)).unwrap()
+    }
+
+    #[test]
+    fn caps_derivation_monotone_and_bounded() {
+        let caps = derive_caps(1000, &[10, 10, 10], 128, 96 << 20, 9, 1);
+        assert_eq!(caps.len(), 4);
+        assert_eq!(caps[0], 1000);
+        for w in caps.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // cap_L bounded by budget: 96MiB/512B/9 ≈ 21.8k rows.
+        assert!(*caps.last().unwrap() <= 22_000);
+        // Worst-case bound respected for small fanouts.
+        let caps = derive_caps(10, &[2, 2], 16, 1 << 30, 2, 1);
+        assert!(caps[1] <= 30);
+        assert!(caps[2] <= 90);
+    }
+
+    #[test]
+    fn gpu_epoch_runs_and_trains_all_batches() {
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let cfg = quick_cfg();
+        let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
+        let stats = engine.run_epoch(0);
+        assert_eq!(stats.batches, 4);
+        assert_eq!(stats.train.steps, 4);
+        assert!(stats.epoch_time > Duration::ZERO);
+        assert!(stats.extract_time > Duration::ZERO);
+        assert!(stats.ssd_read_bytes > 0);
+        engine.feature_buffer().check_invariants().unwrap();
+        // After release, every slot with zero refs: standby holds them all.
+        let (_, _, _, loads) = engine.feature_buffer().stats();
+        assert!(loads > 0);
+    }
+
+    #[test]
+    fn cpu_variant_runs() {
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let cfg = quick_cfg();
+        let engine = build_engine(&machine, &ds, &cfg, Variant::Cpu);
+        let stats = engine.run_epoch(0);
+        assert_eq!(stats.batches, 4);
+        engine.feature_buffer().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sample_only_mode_reports_time() {
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let cfg = quick_cfg();
+        let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
+        let t = engine.run_sample_only(0);
+        assert!(t > Duration::ZERO);
+    }
+
+    #[test]
+    fn second_epoch_reuses_buffer_contents() {
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let mut cfg = quick_cfg();
+        cfg.batches_per_epoch = Some(2);
+        let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
+        engine.run_epoch(0);
+        let (hits0, _, _, loads0) = engine.feature_buffer().stats();
+        engine.run_epoch(1);
+        let (hits1, _, _, loads1) = engine.feature_buffer().stats();
+        // Epoch 2 should find some rows still resident (inter-batch
+        // locality through the standby list).
+        assert!(hits1 > hits0, "no cross-epoch reuse: {hits0}->{hits1}");
+        assert!(loads1 > loads0);
+        engine.feature_buffer().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn inversion_count() {
+        assert_eq!(count_inversions(&[0, 1, 2, 3]), 0);
+        assert_eq!(count_inversions(&[1, 0, 2, 3]), 1);
+        assert_eq!(count_inversions(&[3, 2, 1, 0]), 6);
+    }
+}

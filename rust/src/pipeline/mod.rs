@@ -1,0 +1,5 @@
+//! The GNNDrive pipeline: stages, queues, reordering (paper §4.1/§4.3).
+
+pub mod engine;
+
+pub use engine::{derive_caps, EpochStats, GnnDrive, Variant};

@@ -1,0 +1,205 @@
+//! AOT artifact registry: each artifact is `<name>.hlo.txt` (the lowered
+//! module) + `<name>.meta.json` (shapes/param layout, written by
+//! `python/compile/aot.py`) + `<base>.params.bin` (initial parameters).
+//! This module parses the sidecars; `pjrt.rs` loads and executes.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String, // "train" | "eval"
+    pub model: String,
+    pub caps: Vec<usize>,
+    pub fanouts: Vec<usize>,
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub lr: f64,
+    pub n_params: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_path: PathBuf,
+    pub params_path: PathBuf,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec missing name"))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("spec missing shape"))?,
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl ArtifactMeta {
+    /// Load `<dir>/<name>.meta.json` and resolve the sibling paths.
+    pub fn load(dir: &Path, name: &str) -> Result<ArtifactMeta> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{meta_path:?}: {e}"))?;
+        let get_usize = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta missing {k}"))
+        };
+        let base = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("meta missing name"))?
+            .to_string();
+        Ok(ArtifactMeta {
+            kind: j.get("kind").and_then(Json::as_str).unwrap_or("train").to_string(),
+            model: j.get("model").and_then(Json::as_str).unwrap_or("?").to_string(),
+            caps: j
+                .get("caps")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("meta missing caps"))?,
+            fanouts: j
+                .get("fanouts")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("meta missing fanouts"))?,
+            dim: get_usize("dim")?,
+            hidden: get_usize("hidden")?,
+            classes: get_usize("classes")?,
+            lr: j.get("lr").and_then(Json::as_f64).unwrap_or(0.05),
+            n_params: get_usize("n_params")?,
+            inputs: tensor_specs(j.get("inputs").ok_or_else(|| anyhow!("meta missing inputs"))?)?,
+            outputs: tensor_specs(
+                j.get("outputs").ok_or_else(|| anyhow!("meta missing outputs"))?,
+            )?,
+            hlo_path: dir.join(format!("{name}.hlo.txt")),
+            params_path: dir.join(format!("{base}.params.bin")),
+            name: name.to_string(),
+        })
+    }
+
+    /// Read the initial parameters (concatenated little-endian f32 arrays in
+    /// input order).
+    pub fn load_params(&self) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&self.params_path)
+            .with_context(|| format!("reading {:?}", self.params_path))?;
+        let mut params = Vec::with_capacity(self.n_params);
+        let mut off = 0usize;
+        for spec in self.inputs.iter().take(self.n_params) {
+            let n = spec.elements();
+            let end = off + n * 4;
+            if end > bytes.len() {
+                return Err(anyhow!(
+                    "params.bin too short: need {end}, have {}",
+                    bytes.len()
+                ));
+            }
+            params.push(
+                bytes[off..end]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            );
+            off = end;
+        }
+        if off != bytes.len() {
+            return Err(anyhow!("params.bin has {} trailing bytes", bytes.len() - off));
+        }
+        Ok(params)
+    }
+
+    /// Default artifacts directory: `$GNNDRIVE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GNNDRIVE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("t.meta.json"),
+            r#"{
+              "name": "t", "kind": "train", "model": "graphsage",
+              "caps": [2, 4, 8], "fanouts": [2, 2],
+              "dim": 4, "hidden": 4, "classes": 2, "lr": 0.05, "n_params": 1,
+              "inputs": [
+                {"name": "w", "shape": [2, 3], "dtype": "f32"},
+                {"name": "feats", "shape": [8, 4], "dtype": "f32"},
+                {"name": "idx_0", "shape": [2, 2], "dtype": "i32"},
+                {"name": "idx_1", "shape": [4, 2], "dtype": "i32"},
+                {"name": "labels", "shape": [2], "dtype": "i32"}
+              ],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+            }"#,
+        )
+        .unwrap();
+        let vals: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.params.bin"), bytes).unwrap();
+    }
+
+    #[test]
+    fn parses_meta_and_params() {
+        let dir = std::env::temp_dir().join("gnndrive_artifact_test");
+        write_fixture(&dir);
+        let meta = ArtifactMeta::load(&dir, "t").unwrap();
+        assert_eq!(meta.caps, vec![2, 4, 8]);
+        assert_eq!(meta.inputs.len(), 5);
+        assert_eq!(meta.inputs[1].name, "feats");
+        assert_eq!(meta.inputs[1].elements(), 32);
+        let params = meta.load_params().unwrap();
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn missing_meta_is_helpful() {
+        let dir = std::env::temp_dir().join("gnndrive_artifact_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ArtifactMeta::load(&dir, "nope").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn short_params_rejected() {
+        let dir = std::env::temp_dir().join("gnndrive_artifact_short");
+        write_fixture(&dir);
+        std::fs::write(dir.join("t.params.bin"), [0u8; 8]).unwrap();
+        let meta = ArtifactMeta::load(&dir, "t").unwrap();
+        assert!(meta.load_params().is_err());
+    }
+}

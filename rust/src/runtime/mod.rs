@@ -1,0 +1,11 @@
+//! Runtime: AOT artifact loading/execution over PJRT, plus the roofline
+//! cost model used by large sweeps.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod service;
+pub mod simcompute;
+
+pub use artifacts::ArtifactMeta;
+pub use pjrt::{LoadedArtifact, PjrtRuntime, PjrtTrainStep};
+pub use service::TrainHandle;

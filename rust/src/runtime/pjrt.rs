@@ -1,0 +1,206 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`: the Rust hot path runs the JAX/Pallas-authored computation
+//! with no Python anywhere near it. One [`PjrtTrainStep`] owns the compiled
+//! executable and the current parameters; each `step` packs the padded
+//! mini-batch into literals, executes, and keeps the updated parameters for
+//! the next step.
+
+use super::artifacts::ArtifactMeta;
+use crate::sample::PaddedSubgraph;
+use crate::train::StepResult;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Shared CPU PJRT client (compilation is per-artifact; the client is
+/// process-wide).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<dir>/<name>.hlo.txt`.
+    pub fn load(&self, dir: &Path, name: &str) -> Result<LoadedArtifact> {
+        let meta = ArtifactMeta::load(dir, name)?;
+        let path = meta
+            .hlo_path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {:?}", meta.hlo_path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        Ok(LoadedArtifact { exe, meta })
+    }
+}
+
+pub struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl LoadedArtifact {
+    /// Execute with the given literals; unpacks the 1-tuple output into its
+    /// elements (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Real-numerics training step backed by the compiled artifact.
+pub struct PjrtTrainStep {
+    train: LoadedArtifact,
+    eval: Option<LoadedArtifact>,
+    params: Vec<xla::Literal>,
+    caps: Vec<usize>,
+    fanouts: Vec<usize>,
+    dim: usize,
+    steps_done: u64,
+}
+
+impl PjrtTrainStep {
+    /// Load `<name>` (+ `<name>_eval` if present) and its initial params.
+    pub fn load(runtime: &PjrtRuntime, dir: &Path, name: &str) -> Result<Self> {
+        let train = runtime.load(dir, name)?;
+        let eval = runtime.load(dir, &format!("{name}_eval")).ok();
+        let raw = train.meta.load_params()?;
+        let mut params = Vec::with_capacity(raw.len());
+        for (vals, spec) in raw.iter().zip(&train.meta.inputs) {
+            params.push(lit_f32(vals, &spec.shape)?);
+        }
+        Ok(PjrtTrainStep {
+            caps: train.meta.caps.clone(),
+            fanouts: train.meta.fanouts.clone(),
+            dim: train.meta.dim,
+            train,
+            eval,
+            params,
+            steps_done: 0,
+        })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.train.meta
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
+    fn pack_batch(
+        &self,
+        batch: &PaddedSubgraph,
+        features: &[f32],
+    ) -> Result<Vec<xla::Literal>> {
+        let n_params = self.params.len();
+        let mut inputs = Vec::with_capacity(n_params + 2 + self.fanouts.len());
+        // Parameters are cheap to clone? Literals are host buffers; cloning
+        // copies — instead pass borrows via execute's Borrow bound.
+        // pack_batch returns only the non-param literals; see step().
+        let feats_spec = &self.train.meta.inputs[n_params];
+        let want = feats_spec.elements();
+        if features.len() < want {
+            return Err(anyhow!("features slice too short: {} < {want}", features.len()));
+        }
+        inputs.push(lit_f32(&features[..want], &feats_spec.shape)?);
+        for (i, adj) in batch.adjs.iter().enumerate() {
+            let spec = &self.train.meta.inputs[n_params + 1 + i];
+            if adj.idx.len() != spec.elements() {
+                return Err(anyhow!(
+                    "idx_{i} has {} entries, artifact expects {}",
+                    adj.idx.len(),
+                    spec.elements()
+                ));
+            }
+            inputs.push(lit_i32(&adj.idx, &spec.shape)?);
+        }
+        inputs.push(lit_i32(&batch.labels, &[batch.labels.len()])?);
+        Ok(inputs)
+    }
+
+    /// Evaluate without updating parameters (requires the `_eval` artifact).
+    pub fn evaluate(&self, batch: &PaddedSubgraph, features: &[f32]) -> Result<StepResult> {
+        let eval = self
+            .eval
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval artifact for {}", self.train.meta.name))?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        let rest = self.pack_batch(batch, features)?;
+        let rest_refs: Vec<&xla::Literal> = rest.iter().collect();
+        inputs.extend(rest_refs);
+        let result = eval.exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let loss = outs[0].get_first_element::<f32>()?;
+        let correct = outs[1].get_first_element::<f32>()? as usize;
+        Ok(StepResult { loss, correct, examples: batch.real_seeds })
+    }
+}
+
+// NOTE: `TrainStep` requires `Send`, which PJRT's Rc-backed FFI handles are
+// not. PjrtTrainStep therefore exposes the same surface as inherent methods
+// and is driven by [`super::service::TrainHandle`], whose dedicated thread
+// owns it for the process lifetime.
+impl PjrtTrainStep {
+    pub fn caps(&self) -> &[usize] {
+        &self.caps
+    }
+
+    pub fn fanouts(&self) -> &[usize] {
+        &self.fanouts
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn step(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult {
+        // The CPU PJRT execution *is* the accelerator here; flag it for the
+        // utilization timeline.
+        let _gpu = crate::metrics::state::gpu_enter();
+        let rest = match self.pack_batch(batch, features) {
+            Ok(r) => r,
+            Err(e) => panic!("pack_batch: {e}"),
+        };
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend(rest.iter());
+        let result = self
+            .train
+            .exe
+            .execute::<&xla::Literal>(&inputs)
+            .and_then(|r| r[0][0].to_literal_sync())
+            .unwrap_or_else(|e| panic!("PJRT execute: {e}"));
+        let mut outs = result.to_tuple().expect("tuple output");
+        let correct_lit = outs.pop().expect("correct");
+        let loss_lit = outs.pop().expect("loss");
+        self.params = outs; // updated parameters
+        self.steps_done += 1;
+        StepResult {
+            loss: loss_lit.get_first_element::<f32>().unwrap_or(f32::NAN),
+            correct: correct_lit.get_first_element::<f32>().unwrap_or(0.0) as usize,
+            examples: batch.real_seeds,
+        }
+    }
+}

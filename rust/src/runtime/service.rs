@@ -1,0 +1,113 @@
+//! Train service: PJRT objects are `!Send` (Rc-backed FFI handles), but the
+//! pipeline's trainer runs on its own thread. The service owns the PJRT
+//! client + executable + parameters on one dedicated thread for the process
+//! lifetime; [`TrainHandle`] is a `Send` façade implementing
+//! [`TrainStep`] that ships batches over a channel. Parameters persist in
+//! the service across epochs.
+
+use super::pjrt::{PjrtRuntime, PjrtTrainStep};
+use crate::sample::PaddedSubgraph;
+use crate::train::{StepResult, TrainStep};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+enum Req {
+    Step { padded: Arc<PaddedSubgraph>, feats: Vec<f32>, resp: mpsc::Sender<StepResult> },
+    Eval { padded: Arc<PaddedSubgraph>, feats: Vec<f32>, resp: mpsc::Sender<Result<StepResult>> },
+    Shutdown,
+}
+
+/// `Send` handle to the PJRT train service.
+pub struct TrainHandle {
+    tx: mpsc::Sender<Req>,
+    caps: Vec<usize>,
+    fanouts: Vec<usize>,
+    dim: usize,
+    _thread: std::thread::JoinHandle<()>,
+}
+
+impl TrainHandle {
+    /// Spawn the service thread, loading artifact `<name>` from `dir`.
+    pub fn spawn(dir: PathBuf, name: String) -> Result<TrainHandle> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(Vec<usize>, Vec<usize>, usize)>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-train".into())
+            .spawn(move || {
+                let mut step = match PjrtRuntime::cpu()
+                    .and_then(|rt| PjrtTrainStep::load(&rt, &dir, &name))
+                {
+                    Ok(s) => {
+                        let _ = init_tx.send(Ok((
+                            s.caps().to_vec(),
+                            s.fanouts().to_vec(),
+                            s.dim(),
+                        )));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Step { padded, feats, resp } => {
+                            let r = step.step(&padded, &feats);
+                            let _ = resp.send(r);
+                        }
+                        Req::Eval { padded, feats, resp } => {
+                            let _ = resp.send(step.evaluate(&padded, &feats));
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        let (caps, fanouts, dim) = init_rx.recv()??;
+        Ok(TrainHandle { tx, caps, fanouts, dim, _thread: thread })
+    }
+
+    /// Evaluate without a parameter update (uses the `_eval` artifact).
+    pub fn evaluate(&self, padded: Arc<PaddedSubgraph>, feats: Vec<f32>) -> Result<StepResult> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Eval { padded, feats, resp })
+            .map_err(|_| anyhow::anyhow!("train service stopped"))?;
+        rx.recv()?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+impl TrainStep for TrainHandle {
+    fn caps(&self) -> &[usize] {
+        &self.caps
+    }
+
+    fn fanouts(&self) -> &[usize] {
+        &self.fanouts
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn step(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult {
+        let (resp, rx) = mpsc::channel();
+        // One copy of the feature block crosses the channel — the same
+        // H2D-ish copy a real accelerator pays.
+        let padded = Arc::new(batch.clone());
+        self.tx
+            .send(Req::Step { padded, feats: features.to_vec(), resp })
+            .expect("train service stopped");
+        rx.recv().expect("train service died")
+    }
+
+    fn is_real(&self) -> bool {
+        true
+    }
+}

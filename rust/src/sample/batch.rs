@@ -1,0 +1,118 @@
+//! Mini-batch scheduling: shuffle the train split each epoch, chunk into
+//! mini-batches, and hand them to samplers via a shared cursor (multiple
+//! sampler threads claim batches concurrently; completion order is then
+//! naturally out-of-order — the paper's mini-batch reordering, §4.3).
+
+use crate::util::rng::Pcg;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One epoch's batch plan.
+#[derive(Debug)]
+pub struct EpochPlan {
+    batches: Vec<Vec<u32>>,
+    cursor: AtomicUsize,
+}
+
+impl EpochPlan {
+    /// Shuffle `train_ids` with (seed, epoch) and chunk into `batch_size`
+    /// pieces; `cap` optionally limits the number of batches (quick benches).
+    pub fn new(
+        train_ids: &[u32],
+        batch_size: usize,
+        seed: u64,
+        epoch: u64,
+        cap: Option<usize>,
+    ) -> Self {
+        let mut ids = train_ids.to_vec();
+        let mut rng = Pcg::with_stream(seed ^ 0xE90C4, epoch);
+        rng.shuffle(&mut ids);
+        let mut batches: Vec<Vec<u32>> =
+            ids.chunks(batch_size.max(1)).map(|c| c.to_vec()).collect();
+        if let Some(cap) = cap {
+            batches.truncate(cap);
+        }
+        EpochPlan { batches, cursor: AtomicUsize::new(0) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+
+    /// Total seed nodes across all planned batches.
+    pub fn total_seeds(&self) -> usize {
+        self.batches.iter().map(Vec::len).sum()
+    }
+
+    /// Claim the next batch (thread-safe; each batch handed out once).
+    pub fn claim(&self) -> Option<(u64, &[u32])> {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.batches.get(i).map(|b| (i as u64, b.as_slice()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn chunks_cover_all_ids_exactly_once() {
+        let ids: Vec<u32> = (0..105).collect();
+        let plan = EpochPlan::new(&ids, 10, 1, 0, None);
+        assert_eq!(plan.len(), 11);
+        assert_eq!(plan.total_seeds(), 105);
+        let mut seen = HashSet::new();
+        while let Some((_, b)) = plan.claim() {
+            for &v in b {
+                assert!(seen.insert(v), "dup {v}");
+            }
+        }
+        assert_eq!(seen.len(), 105);
+    }
+
+    #[test]
+    fn shuffle_differs_per_epoch_but_is_deterministic() {
+        let ids: Vec<u32> = (0..50).collect();
+        let a = EpochPlan::new(&ids, 50, 7, 0, None);
+        let b = EpochPlan::new(&ids, 50, 7, 0, None);
+        let c = EpochPlan::new(&ids, 50, 7, 1, None);
+        let (_, ba) = a.claim().unwrap();
+        let (_, bb) = b.claim().unwrap();
+        let (_, bc) = c.claim().unwrap();
+        assert_eq!(ba, bb);
+        assert_ne!(ba, bc);
+    }
+
+    #[test]
+    fn cap_limits_batches() {
+        let ids: Vec<u32> = (0..100).collect();
+        let plan = EpochPlan::new(&ids, 10, 1, 0, Some(3));
+        assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    fn concurrent_claims_are_disjoint() {
+        let ids: Vec<u32> = (0..1000).collect();
+        let plan = Arc::new(EpochPlan::new(&ids, 10, 1, 0, None));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let plan = plan.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some((id, _)) = plan.claim() {
+                        got.push(id);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<u64>>());
+    }
+}

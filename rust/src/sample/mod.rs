@@ -1,0 +1,10 @@
+//! Sample stage: mini-batch planning, k-hop neighbor sampling, layered
+//! subgraphs and AOT-shape padding.
+
+pub mod batch;
+pub mod sampler;
+pub mod subgraph;
+
+pub use batch::EpochPlan;
+pub use sampler::{SamplePolicy, Sampler};
+pub use subgraph::{LayerAdj, PaddedSubgraph, SampledSubgraph};

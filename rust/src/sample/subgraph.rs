@@ -1,0 +1,228 @@
+//! Layered sampled subgraphs.
+//!
+//! A mini-batch's k-hop sample is stored as one deduplicated node list with
+//! the *prefix property*: `nodes[..cum[i]]` is exactly the node set needed
+//! at expansion level `i` (seeds are `nodes[..cum[0]]`). Level-`i` adjacency
+//! maps each of the first `cum[i]` nodes to `fanout_i` sampled in-neighbors
+//! as local indices into the prefix `cum[i+1]` (`-1` = padding/missing).
+//! A GNN with L layers runs t = L..1 over levels L-t, shrinking the active
+//! prefix each layer until only the seeds remain.
+
+/// Adjacency for one expansion level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAdj {
+    pub fanout: usize,
+    /// `idx[d * fanout + f]`: local index of dst-d's f-th sampled neighbor,
+    /// or -1. Length = `dst_count * fanout`.
+    pub idx: Vec<i32>,
+}
+
+impl LayerAdj {
+    pub fn dst_count(&self) -> usize {
+        if self.fanout == 0 {
+            0
+        } else {
+            self.idx.len() / self.fanout
+        }
+    }
+}
+
+/// The sampled subgraph for one mini-batch.
+#[derive(Clone, Debug)]
+pub struct SampledSubgraph {
+    /// Mini-batch sequence number (for reordering bookkeeping).
+    pub batch_id: u64,
+    /// Deduplicated global node ids; seeds first.
+    pub nodes: Vec<u32>,
+    /// Prefix sizes per level: `cum[0]` = #seeds … `cum[L]` = nodes.len().
+    pub cum: Vec<usize>,
+    /// `adjs[i]` connects prefix `cum[i]` (dst) to prefix `cum[i+1]` (src).
+    pub adjs: Vec<LayerAdj>,
+    /// Seed labels (training targets), one per seed.
+    pub labels: Vec<u16>,
+}
+
+impl SampledSubgraph {
+    pub fn seeds(&self) -> &[u32] {
+        &self.nodes[..self.cum[0]]
+    }
+
+    pub fn levels(&self) -> usize {
+        self.adjs.len()
+    }
+
+    /// Validate the structural invariants (used by tests & property checks).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.cum.len() != self.adjs.len() + 1 {
+            return Err("cum/adjs length mismatch".into());
+        }
+        if *self.cum.last().unwrap() != self.nodes.len() {
+            return Err("cum[L] != nodes.len()".into());
+        }
+        if self.labels.len() != self.cum[0] {
+            return Err("labels != seed count".into());
+        }
+        for w in self.cum.windows(2) {
+            if w[0] > w[1] {
+                return Err("cum not monotone".into());
+            }
+        }
+        // Dedup check.
+        let mut seen = std::collections::HashSet::with_capacity(self.nodes.len());
+        for &v in &self.nodes {
+            if !seen.insert(v) {
+                return Err(format!("duplicate node {v}"));
+            }
+        }
+        for (i, adj) in self.adjs.iter().enumerate() {
+            if adj.dst_count() != self.cum[i] {
+                return Err(format!("adj {i} dst_count {} != cum {}", adj.dst_count(), self.cum[i]));
+            }
+            for &ix in &adj.idx {
+                if ix < -1 || ix >= self.cum[i + 1] as i32 {
+                    return Err(format!("adj {i} index {ix} out of prefix {}", self.cum[i + 1]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pad (and if necessary truncate) to fixed AOT shapes: node prefix caps
+    /// per level and fixed fanouts. Returns flat arrays ready for literal
+    /// packing. Truncated adjacency entries (pointing past a cap) become -1;
+    /// padded node slots use node id 0 (their rows are never selected).
+    pub fn pad(&self, caps: &[usize], fanouts: &[usize]) -> PaddedSubgraph {
+        assert_eq!(caps.len(), self.cum.len(), "caps must cover every level");
+        assert_eq!(fanouts.len(), self.adjs.len());
+        let total_cap = *caps.last().unwrap();
+        let mut nodes = Vec::with_capacity(total_cap);
+        nodes.extend(self.nodes.iter().take(total_cap).copied());
+        let truncated_nodes = self.nodes.len().saturating_sub(total_cap);
+        nodes.resize(total_cap, 0);
+
+        let mut adjs = Vec::with_capacity(self.adjs.len());
+        let mut truncated_edges = 0usize;
+        for (i, adj) in self.adjs.iter().enumerate() {
+            let dst_cap = caps[i];
+            let src_cap = caps[i + 1];
+            let f_out = fanouts[i];
+            let mut out = vec![-1i32; dst_cap * f_out];
+            let dst_real = adj.dst_count().min(dst_cap);
+            for d in 0..dst_real {
+                for f in 0..adj.fanout.min(f_out) {
+                    let ix = adj.idx[d * adj.fanout + f];
+                    if ix >= 0 && (ix as usize) < src_cap {
+                        out[d * f_out + f] = ix;
+                    } else if ix >= 0 {
+                        truncated_edges += 1;
+                    }
+                }
+            }
+            adjs.push(LayerAdj { fanout: f_out, idx: out });
+        }
+
+        let seed_cap = caps[0];
+        let mut labels: Vec<i32> = self.labels.iter().take(seed_cap).map(|&l| l as i32).collect();
+        let real_seeds = labels.len();
+        labels.resize(seed_cap, -1); // -1 = padded seed, masked out of the loss
+
+        PaddedSubgraph {
+            batch_id: self.batch_id,
+            real_nodes: self.nodes.len().min(total_cap),
+            nodes,
+            adjs,
+            labels,
+            real_seeds,
+            truncated_nodes,
+            truncated_edges,
+        }
+    }
+}
+
+/// Fixed-shape padded form matching an AOT artifact's input signature.
+#[derive(Clone, Debug)]
+pub struct PaddedSubgraph {
+    pub batch_id: u64,
+    /// How many leading entries of `nodes` are real (non-padding).
+    pub real_nodes: usize,
+    /// Global node ids, length = cap\[L\]; slot 0-padded.
+    pub nodes: Vec<u32>,
+    /// Fixed-fanout adjacencies (−1-padded), lengths = cap\[i\]·fanout\[i\].
+    pub adjs: Vec<LayerAdj>,
+    /// Seed labels, −1 for padded seed slots; length = cap\[0\].
+    pub labels: Vec<i32>,
+    pub real_seeds: usize,
+    pub truncated_nodes: usize,
+    pub truncated_edges: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two seeds {10, 11}; level 0 fanout 2 sampling {12, 13}; level 1
+    /// fanout 1 over prefix 4.
+    fn sample() -> SampledSubgraph {
+        SampledSubgraph {
+            batch_id: 0,
+            nodes: vec![10, 11, 12, 13, 14],
+            cum: vec![2, 4, 5],
+            adjs: vec![
+                LayerAdj { fanout: 2, idx: vec![2, 3, 3, -1] },
+                LayerAdj { fanout: 1, idx: vec![2, 3, 4, -1] },
+            ],
+            labels: vec![1, 0],
+        }
+    }
+
+    #[test]
+    fn invariants_hold_for_sample() {
+        sample().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariants_catch_corruption() {
+        let mut s = sample();
+        s.adjs[0].idx[0] = 4; // outside prefix cum[1] = 4
+        assert!(s.check_invariants().is_err());
+        let mut s = sample();
+        s.nodes[4] = 10; // duplicate
+        assert!(s.check_invariants().is_err());
+        let mut s = sample();
+        s.cum[1] = 1; // not monotone w.r.t. adj dst_count
+        assert!(s.check_invariants().is_err());
+    }
+
+    #[test]
+    fn pad_expands_to_caps() {
+        let p = sample().pad(&[4, 8, 16], &[2, 2]);
+        assert_eq!(p.nodes.len(), 16);
+        assert_eq!(p.nodes[..5], [10, 11, 12, 13, 14]);
+        assert!(p.nodes[5..].iter().all(|&v| v == 0));
+        assert_eq!(p.adjs[0].idx.len(), 4 * 2);
+        assert_eq!(&p.adjs[0].idx[..4], &[2, 3, 3, -1]);
+        assert!(p.adjs[0].idx[4..].iter().all(|&x| x == -1));
+        assert_eq!(p.labels, vec![1, 0, -1, -1]);
+        assert_eq!(p.real_seeds, 2);
+        assert_eq!(p.truncated_nodes, 0);
+        assert_eq!(p.truncated_edges, 0);
+    }
+
+    #[test]
+    fn pad_truncates_overflow() {
+        // Caps smaller than the sample: total cap 4 (drops node 14),
+        // src cap at level 1 is 4 so index 4 is truncated to -1.
+        let p = sample().pad(&[2, 4, 4], &[2, 1]);
+        assert_eq!(p.nodes.len(), 4);
+        assert_eq!(p.truncated_nodes, 1);
+        assert_eq!(p.adjs[1].idx, vec![2, 3, -1, -1]);
+        assert_eq!(p.truncated_edges, 1);
+    }
+
+    #[test]
+    fn pad_narrows_fanout() {
+        let p = sample().pad(&[2, 4, 5], &[1, 1]);
+        // Only the first neighbor of each dst survives fanout narrowing.
+        assert_eq!(p.adjs[0].idx, vec![2, 3]);
+    }
+}

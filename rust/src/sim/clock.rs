@@ -1,0 +1,171 @@
+//! Simulation clock with optional time scaling.
+//!
+//! The storage/compute substrate charges *simulated* time by sleeping real
+//! threads, so the whole pipeline (queues, backpressure, overlap) behaves
+//! exactly as it would against real devices. `time_scale < 1` compresses all
+//! charged waits by that factor — every *reported* duration is converted back
+//! to simulated time, so results stay in device-time units. CPU-bound work
+//! (sampling, bookkeeping) is real and is not scaled; with aggressive scaling
+//! this inflates CPU stages relative to I/O, which is why benches default to
+//! scale 1.0 (see DESIGN.md §3).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Clock {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    start: Instant,
+    /// real seconds per simulated second (≤ 1 compresses waits).
+    scale: f64,
+}
+
+impl Clock {
+    pub fn new(scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0, "time_scale must be in (0, 1]");
+        Clock { inner: Arc::new(Inner { start: Instant::now(), scale }) }
+    }
+
+    /// Honor `GNNDRIVE_TIME_SCALE` if set; default 1.0 (honest real time).
+    pub fn from_env() -> Self {
+        let scale = std::env::var("GNNDRIVE_TIME_SCALE")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|s| *s > 0.0 && *s <= 1.0)
+            .unwrap_or(1.0);
+        Clock::new(scale)
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.inner.scale
+    }
+
+    /// Simulated time elapsed since clock creation.
+    pub fn now(&self) -> Duration {
+        self.inner.start.elapsed().div_f64(self.inner.scale)
+    }
+
+    /// Convert a real elapsed duration into simulated units.
+    pub fn to_sim(&self, real: Duration) -> Duration {
+        real.div_f64(self.inner.scale)
+    }
+
+    /// Convert a simulated duration into the real wait to charge.
+    pub fn to_real(&self, sim: Duration) -> Duration {
+        sim.mul_f64(self.inner.scale)
+    }
+
+    /// Block the calling thread for `sim` simulated time.
+    ///
+    /// OS sleeps overshoot (timer slack + scheduler latency, ~30 µs on this
+    /// box even with `PR_SET_TIMERSLACK=1`), which would systematically
+    /// inflate microsecond-scale device latencies. Two corrections keep the
+    /// aggregate honest: a calibrated fixed overhead is subtracted from each
+    /// sleep, and sleeps shorter than the overhead are *accrued as debt* on
+    /// the calling thread and slept off in batches — so high-frequency tiny
+    /// charges cost the right total time without per-call overshoot.
+    pub fn sleep(&self, sim: Duration) {
+        let real = self.to_real(sim);
+        if real.is_zero() {
+            return;
+        }
+        tight_timerslack();
+        let oh = sleep_overhead();
+        DEBT.with(|debt| {
+            let owed = debt.get() + real;
+            if owed > oh + Duration::from_micros(20) {
+                std::thread::sleep(owed - oh);
+                debt.set(Duration::ZERO);
+            } else {
+                debt.set(owed);
+            }
+        });
+    }
+}
+
+thread_local! {
+    /// Un-slept simulated-time debt for this thread (see [`Clock::sleep`]).
+    static DEBT: std::cell::Cell<Duration> = const { std::cell::Cell::new(Duration::ZERO) };
+    static SLACK_SET: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Request 1 ns of timer slack for this thread (Linux default is 50 µs,
+/// which would dominate 90 µs device latencies).
+fn tight_timerslack() {
+    SLACK_SET.with(|s| {
+        if !s.get() {
+            unsafe {
+                libc::prctl(libc::PR_SET_TIMERSLACK, 1usize);
+            }
+            s.set(true);
+        }
+    });
+}
+
+/// One-time calibration of the fixed sleep overshoot on this machine.
+fn sleep_overhead() -> Duration {
+    use std::sync::OnceLock;
+    static OVERHEAD: OnceLock<Duration> = OnceLock::new();
+    *OVERHEAD.get_or_init(|| {
+        tight_timerslack();
+        let target = Duration::from_micros(5);
+        let n = 40;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            std::thread::sleep(target);
+        }
+        let per = t0.elapsed() / n;
+        per.saturating_sub(target).clamp(Duration::from_micros(5), Duration::from_micros(120))
+    })
+}
+
+/// Stopwatch measuring in simulated units.
+pub struct Stopwatch<'a> {
+    clock: &'a Clock,
+    start: Instant,
+}
+
+impl<'a> Stopwatch<'a> {
+    pub fn start(clock: &'a Clock) -> Self {
+        Stopwatch { clock, start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.clock.to_sim(self.start.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_sleep_compresses_real_time() {
+        let clock = Clock::new(0.1);
+        let t0 = Instant::now();
+        clock.sleep(Duration::from_millis(100)); // should take ~10ms real
+        let real = t0.elapsed();
+        assert!(real < Duration::from_millis(60), "real={real:?}");
+        assert!(real >= Duration::from_millis(9), "real={real:?}");
+    }
+
+    #[test]
+    fn now_reports_sim_units() {
+        let clock = Clock::new(0.5);
+        std::thread::sleep(Duration::from_millis(20));
+        let sim = clock.now();
+        assert!(sim >= Duration::from_millis(35), "sim={sim:?}");
+    }
+
+    #[test]
+    fn stopwatch_matches_clock() {
+        let clock = Clock::new(1.0);
+        let sw = Stopwatch::start(&clock);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed() >= Duration::from_millis(4));
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulation primitives: scaled clock, token buckets, semaphores/latches.
+
+pub mod bucket;
+pub mod clock;
+pub mod queue;
+pub mod sema;
+
+pub use bucket::TokenBucket;
+pub use clock::{Clock, Stopwatch};
+pub use queue::BoundedQueue;
+pub use sema::{Latch, SemGuard, Semaphore};

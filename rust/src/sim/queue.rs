@@ -1,0 +1,252 @@
+//! Bounded MPMC queue with close semantics (no crossbeam-channel offline).
+//!
+//! This is the backbone of both the uring-style I/O rings and the paper's
+//! three pipeline queues (extracting / training / releasing, Fig 4): pushes
+//! block when full (backpressure — "samplers and extractors would be blocked
+//! if corresponding queues are full", §5), pops block when empty, and
+//! `close()` drains remaining items then reports disconnection.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<QState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+#[derive(Debug)]
+struct QState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Result of a pop on a closed, drained queue.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        BoundedQueue {
+            state: Mutex::new(QState { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; returns Err if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; returns Err only when closed *and* drained.
+    pub fn pop(&self) -> Result<T, Closed> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(Closed);
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Push a whole batch, blocking as needed; one lock + one wakeup per
+    /// burst of space instead of per item.
+    pub fn push_all(&self, items: Vec<T>) -> Result<(), Closed> {
+        let mut iter = items.into_iter();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            let mut pushed = false;
+            while st.items.len() < self.cap {
+                match iter.next() {
+                    Some(item) => {
+                        st.items.push_back(item);
+                        pushed = true;
+                    }
+                    None => {
+                        drop(st);
+                        self.not_empty.notify_all();
+                        return Ok(());
+                    }
+                }
+            }
+            if pushed {
+                self.not_empty.notify_all();
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Pop 1..=max items: blocks for the first, then drains up to `max - 1`
+    /// more that are already queued (batch consumers amortize wakeups).
+    pub fn pop_many(&self, max: usize) -> Result<Vec<T>, Closed> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.items.is_empty() {
+                let take = st.items.len().min(max.max(1));
+                let out: Vec<T> = st.items.drain(..take).collect();
+                drop(st);
+                self.not_full.notify_all();
+                return Ok(out);
+            }
+            if st.closed {
+                return Err(Closed);
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close: waiting producers fail, consumers drain what remains.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(1).unwrap());
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.len(), 1); // producer is blocked
+        assert_eq!(q.pop().unwrap(), 0);
+        h.join().unwrap();
+        assert_eq!(q.pop().unwrap(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_disconnects() {
+        let q = BoundedQueue::new(4);
+        q.push('a').unwrap();
+        q.close();
+        assert!(q.push('b').is_err());
+        assert_eq!(q.pop().unwrap(), 'a');
+        assert!(q.pop().is_err());
+    }
+
+    #[test]
+    fn mpmc_sums_match() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut sum = 0u64;
+                    while let Ok(v) = q.pop() {
+                        sum += v;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let got: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        let want: u64 = (0..4).map(|p| (0..100).map(|i| p * 1000 + i).sum::<u64>()).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn try_ops() {
+        let q = BoundedQueue::new(1);
+        assert!(q.try_pop().is_none());
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_err());
+        assert_eq!(q.try_pop(), Some(1));
+    }
+}

@@ -1,0 +1,142 @@
+//! Counting semaphore and completion latch (std has no semaphore; the
+//! offline build has no tokio). Used for device queue-depth limits and for
+//! joining asynchronous I/O batches.
+
+use std::sync::{Condvar, Mutex};
+
+/// Counting semaphore with FIFO-ish wakeup.
+#[derive(Debug)]
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Self {
+        Semaphore { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    pub fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    pub fn try_acquire(&self) -> bool {
+        let mut p = self.permits.lock().unwrap();
+        if *p > 0 {
+            *p -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&self) {
+        let mut p = self.permits.lock().unwrap();
+        *p += 1;
+        drop(p);
+        self.cv.notify_one();
+    }
+
+    /// RAII guard.
+    pub fn guard(&self) -> SemGuard<'_> {
+        self.acquire();
+        SemGuard { sem: self }
+    }
+
+    pub fn available(&self) -> usize {
+        *self.permits.lock().unwrap()
+    }
+}
+
+pub struct SemGuard<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemGuard<'_> {
+    fn drop(&mut self) {
+        self.sem.release();
+    }
+}
+
+/// Countdown latch: `wait()` blocks until `count_down()` has been called the
+/// configured number of times. Used to join a batch of async completions.
+#[derive(Debug)]
+pub struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    pub fn new(count: usize) -> Self {
+        Latch { remaining: Mutex::new(count), cv: Condvar::new() }
+    }
+
+    pub fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        assert!(*r > 0, "latch over-released");
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    pub fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        *self.remaining.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let sem = Arc::new(Semaphore::new(3));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                let (sem, peak, cur) = (sem.clone(), peak.clone(), cur.clone());
+                std::thread::spawn(move || {
+                    let _g = sem.guard();
+                    let c = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(c, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    cur.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 3);
+        assert_eq!(sem.available(), 3);
+    }
+
+    #[test]
+    fn latch_joins() {
+        let latch = Arc::new(Latch::new(4));
+        for _ in 0..4 {
+            let l = latch.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                l.count_down();
+            });
+        }
+        latch.wait();
+        assert_eq!(latch.remaining(), 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Synchronous I/O engines over the simulated device: buffered (page-cache,
+//! mmap-style) and direct (O_DIRECT-style, sector-aligned, cache-bypassing).
+//!
+//! GNNDrive reads *topology* through the buffered path (the paper mmaps the
+//! CSC index array and lets the page cache hold it) and *features* through
+//! the direct path; PyG+ reads both through the buffered path, which is what
+//! makes the two working sets contend (D1).
+
+use super::backing::BackingRef;
+use super::page_cache::{FileId, PageCache, PAGE_SIZE};
+use super::ssd::SsdSim;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A "file" on the simulated SSD: identity for the page cache + real bytes.
+#[derive(Clone)]
+pub struct SimFile {
+    pub id: FileId,
+    pub backing: BackingRef,
+}
+
+impl SimFile {
+    pub fn new(id: FileId, backing: BackingRef) -> Self {
+        SimFile { id, backing }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.backing.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backing.is_empty()
+    }
+}
+
+/// Counters for direct-I/O alignment overhead (redundant bytes loaded when a
+/// request does not fit sector granularity — §4.4 "Access Granularity").
+#[derive(Debug, Default)]
+pub struct DirectIoStats {
+    pub requests: AtomicU64,
+    pub useful_bytes: AtomicU64,
+    pub aligned_bytes: AtomicU64,
+}
+
+/// The I/O stack: one simulated device + one page cache, shared by every
+/// training system in an experiment (as on a real machine).
+#[derive(Clone)]
+pub struct Storage {
+    pub ssd: SsdSim,
+    pub cache: Arc<PageCache>,
+    direct_stats: Arc<DirectIoStats>,
+}
+
+impl Storage {
+    pub fn new(ssd: SsdSim, cache: Arc<PageCache>) -> Self {
+        Storage { ssd, cache, direct_stats: Arc::new(DirectIoStats::default()) }
+    }
+
+    pub fn direct_stats(&self) -> &DirectIoStats {
+        &self.direct_stats
+    }
+
+    /// Buffered read (mmap semantics): page-granular, through the page
+    /// cache. Contiguous missing pages coalesce into one device request, so
+    /// sequential scans are bandwidth-bound while random row accesses are
+    /// IOPS-bound — both behaviours the experiments rely on.
+    pub fn read_buffered(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        let first = offset / PAGE_SIZE;
+        let last = (offset + buf.len() as u64 - 1) / PAGE_SIZE;
+        let mut pending: u64 = 0; // contiguous missing pages to fetch
+        for page in first..=last {
+            if self.cache.access(file.id, page) {
+                if pending > 0 {
+                    self.ssd.read((pending * PAGE_SIZE) as usize);
+                    pending = 0;
+                }
+            } else {
+                pending += 1;
+            }
+        }
+        if pending > 0 {
+            self.ssd.read((pending * PAGE_SIZE) as usize);
+        }
+        file.backing.read_at(offset, buf);
+    }
+
+    /// Direct read (O_DIRECT semantics): bypasses the page cache; offset and
+    /// length are rounded out to sector alignment and the *aligned* size is
+    /// charged to the device, so sub-sector feature rows pay redundancy
+    /// (§4.4) unless callers batch neighbors jointly.
+    pub fn read_direct(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        let sector = self.ssd.config().sector as u64;
+        let lo = offset / sector * sector;
+        let hi = (offset + buf.len() as u64).div_ceil(sector) * sector;
+        let aligned = (hi - lo) as usize;
+        self.direct_stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.direct_stats.useful_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.direct_stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
+        self.ssd.read(aligned);
+        file.backing.read_at(offset, buf);
+    }
+
+    /// Direct-read accounting + data copy *without* charging device time;
+    /// returns the sector-aligned byte count. The async engine uses this to
+    /// coalesce several requests into one [`SsdSim::read_multi`] charge.
+    pub fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize {
+        if buf.is_empty() {
+            return 0;
+        }
+        let sector = self.ssd.config().sector as u64;
+        let lo = offset / sector * sector;
+        let hi = (offset + buf.len() as u64).div_ceil(sector) * sector;
+        let aligned = (hi - lo) as usize;
+        self.direct_stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.direct_stats.useful_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.direct_stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
+        file.backing.read_at(offset, buf);
+        aligned
+    }
+
+    /// Buffered write: pages become resident (they'd be dirty in a real
+    /// cache); device time is charged for the whole range (write-through
+    /// keeps the model simple; Ginex's superbatch dumps are large and
+    /// sequential either way).
+    pub fn write_buffered(&self, file: &SimFile, offset: u64, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let first = offset / PAGE_SIZE;
+        let last = (offset + len as u64 - 1) / PAGE_SIZE;
+        for page in first..=last {
+            self.cache.access(file.id, page);
+        }
+        self.ssd.write(len);
+    }
+
+    /// Direct write of an aligned range.
+    pub fn write_direct(&self, _file: &SimFile, _offset: u64, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let sector = self.ssd.config().sector;
+        let aligned = len.div_ceil(sector) * sector;
+        self.ssd.write(aligned);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Clock;
+    use crate::storage::backing::MemBacking;
+    use crate::storage::mem::HostMemory;
+    use crate::storage::page_cache::DataKind;
+    use crate::storage::ssd::SsdConfig;
+
+    fn setup(cache_pages: u64) -> (Storage, SimFile) {
+        let clock = Clock::new(0.02);
+        let ssd = SsdSim::new(SsdConfig::pm883(), clock);
+        let hm = HostMemory::new(cache_pages * PAGE_SIZE);
+        let cache = Arc::new(PageCache::new(hm));
+        let storage = Storage::new(ssd, cache);
+        let bytes: Vec<u8> = (0..64 * 1024u32).map(|i| (i % 251) as u8).collect();
+        let file = SimFile::new(
+            FileId::new(1, DataKind::Features),
+            Arc::new(MemBacking::new(bytes)),
+        );
+        (storage, file)
+    }
+
+    #[test]
+    fn buffered_read_returns_bytes_and_caches() {
+        let (st, f) = setup(64);
+        let mut buf = vec![0u8; 100];
+        st.read_buffered(&f, 1000, &mut buf);
+        for (i, &b) in buf.iter().enumerate() {
+            assert_eq!(b, ((1000 + i) % 251) as u8);
+        }
+        let reads_before = st.ssd.counters().reads.load(Ordering::Relaxed);
+        st.read_buffered(&f, 1000, &mut buf); // same page: hit, no device read
+        assert_eq!(st.ssd.counters().reads.load(Ordering::Relaxed), reads_before);
+    }
+
+    #[test]
+    fn buffered_coalesces_sequential_misses() {
+        let (st, f) = setup(64);
+        let mut buf = vec![0u8; 8 * PAGE_SIZE as usize];
+        st.read_buffered(&f, 0, &mut buf);
+        // 8 missing contiguous pages = ONE device request.
+        assert_eq!(st.ssd.counters().reads.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            st.ssd.counters().read_bytes.load(Ordering::Relaxed),
+            8 * PAGE_SIZE
+        );
+    }
+
+    #[test]
+    fn direct_read_bypasses_cache_and_aligns() {
+        let (st, f) = setup(64);
+        let mut buf = vec![0u8; 100]; // sub-sector
+        st.read_direct(&f, 700, &mut buf);
+        for (i, &b) in buf.iter().enumerate() {
+            assert_eq!(b, ((700 + i) % 251) as u8);
+        }
+        // 100 B at offset 700 spans sectors [512,1024) → 512-aligned = 512 B,
+        // but range [700, 800) fits in one sector? 700..800 ⊂ [512,1024) → 512 B.
+        assert_eq!(st.direct_stats().aligned_bytes.load(Ordering::Relaxed), 512);
+        assert_eq!(st.direct_stats().useful_bytes.load(Ordering::Relaxed), 100);
+        // No page cached.
+        assert_eq!(st.cache.resident_bytes(), 0);
+        // Re-read pays again (no cache).
+        let reads_before = st.ssd.counters().reads.load(Ordering::Relaxed);
+        st.read_direct(&f, 700, &mut buf);
+        assert_eq!(st.ssd.counters().reads.load(Ordering::Relaxed), reads_before + 1);
+    }
+
+    #[test]
+    fn buffered_write_charges_device() {
+        let (st, f) = setup(64);
+        st.write_buffered(&f, 0, 10 * PAGE_SIZE as usize);
+        assert_eq!(st.ssd.counters().writes.load(Ordering::Relaxed), 1);
+        // Pages are now resident: reading them back is free.
+        let reads_before = st.ssd.counters().reads.load(Ordering::Relaxed);
+        let mut buf = vec![0u8; PAGE_SIZE as usize];
+        st.read_buffered(&f, 0, &mut buf);
+        assert_eq!(st.ssd.counters().reads.load(Ordering::Relaxed), reads_before);
+    }
+}

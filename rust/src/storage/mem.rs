@@ -1,0 +1,260 @@
+//! Host and device memory budgets.
+//!
+//! The paper's experiments pivot on a hard host-memory capacity (32 GB,
+//! swept 8–128 GB in Fig 9) shared between *hard* allocations (caches,
+//! staging buffers, partition buffers, pinned index arrays) and the OS page
+//! cache, plus a GPU device-memory capacity (24 GB) holding the feature
+//! buffer. [`HostMemory`] hands out RAII [`Reservation`]s for hard
+//! allocations — exceeding capacity is an out-of-memory error, which is how
+//! the Ginex/MariusGNN OOM rows of Fig 9 / Table 2 arise — and exposes the
+//! remainder as the page-cache budget. Byte sizes here are *simulated*
+//! capacities (scaled 1/256 from the paper), not process RSS.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Error carrying the failed allocation for paper-style OOM reporting.
+#[derive(Debug, Clone)]
+pub struct OutOfMemory {
+    pub what: String,
+    pub requested: u64,
+    pub capacity: u64,
+    pub reserved: u64,
+}
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM: {} needs {} but only {} of {} remain",
+            self.what,
+            crate::util::units::fmt_bytes(self.requested),
+            crate::util::units::fmt_bytes(self.capacity.saturating_sub(self.reserved)),
+            crate::util::units::fmt_bytes(self.capacity),
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
+
+#[derive(Debug)]
+struct Budget {
+    capacity: u64,
+    reserved: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Budget {
+    fn reserve(&self, what: &str, bytes: u64) -> Result<(), OutOfMemory> {
+        let mut cur = self.reserved.load(Ordering::Relaxed);
+        loop {
+            let next = cur + bytes;
+            if next > self.capacity {
+                return Err(OutOfMemory {
+                    what: what.to_string(),
+                    requested: bytes,
+                    capacity: self.capacity,
+                    reserved: cur,
+                });
+            }
+            match self.reserved.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(next, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn release(&self, bytes: u64) {
+        self.reserved.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Host memory: hard reservations + the page cache's residual budget.
+#[derive(Clone, Debug)]
+pub struct HostMemory {
+    budget: Arc<Budget>,
+}
+
+impl HostMemory {
+    pub fn new(capacity: u64) -> Self {
+        HostMemory {
+            budget: Arc::new(Budget {
+                capacity,
+                reserved: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.budget.capacity
+    }
+
+    pub fn reserved(&self) -> u64 {
+        self.budget.reserved.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.budget.peak.load(Ordering::Relaxed)
+    }
+
+    /// Bytes the OS page cache may occupy right now (everything not hard-
+    /// reserved). The page cache re-checks this on every insertion and
+    /// evicts to fit, so growing reservations squeeze cached pages out —
+    /// exactly the paper's memory-contention mechanism (D1).
+    pub fn cache_budget(&self) -> u64 {
+        self.budget.capacity.saturating_sub(self.reserved())
+    }
+
+    /// Hard-reserve `bytes` (cache-evictable memory does not count; the page
+    /// cache yields by shrinking its budget). RAII: dropping the reservation
+    /// releases the bytes.
+    pub fn reserve(&self, what: &str, bytes: u64) -> Result<Reservation, OutOfMemory> {
+        self.budget.reserve(what, bytes)?;
+        Ok(Reservation { budget: self.budget.clone(), bytes, what: what.to_string() })
+    }
+}
+
+/// Device (GPU) memory: reservations only; no page cache.
+#[derive(Clone, Debug)]
+pub struct DeviceMemory {
+    budget: Arc<Budget>,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: u64) -> Self {
+        DeviceMemory {
+            budget: Arc::new(Budget {
+                capacity,
+                reserved: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.budget.capacity
+    }
+
+    pub fn reserved(&self) -> u64 {
+        self.budget.reserved.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.budget.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reserve(&self, what: &str, bytes: u64) -> Result<Reservation, OutOfMemory> {
+        self.budget.reserve(what, bytes)?;
+        Ok(Reservation { budget: self.budget.clone(), bytes, what: what.to_string() })
+    }
+}
+
+/// RAII hard-memory reservation.
+#[derive(Debug)]
+pub struct Reservation {
+    budget: Arc<Budget>,
+    bytes: u64,
+    what: String,
+}
+
+impl Reservation {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn what(&self) -> &str {
+        &self.what
+    }
+
+    /// Grow the reservation in place (e.g. a cache warming up).
+    pub fn grow(&mut self, extra: u64) -> Result<(), OutOfMemory> {
+        self.budget.reserve(&self.what, extra)?;
+        self.bytes += extra;
+        Ok(())
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        self.budget.release(self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_cycle() {
+        let hm = HostMemory::new(1000);
+        let r1 = hm.reserve("a", 400).unwrap();
+        assert_eq!(hm.reserved(), 400);
+        assert_eq!(hm.cache_budget(), 600);
+        let r2 = hm.reserve("b", 600).unwrap();
+        assert_eq!(hm.cache_budget(), 0);
+        assert!(hm.reserve("c", 1).is_err());
+        drop(r1);
+        assert_eq!(hm.reserved(), 600);
+        drop(r2);
+        assert_eq!(hm.reserved(), 0);
+        assert_eq!(hm.peak(), 1000);
+    }
+
+    #[test]
+    fn oom_reports_details() {
+        let hm = HostMemory::new(100);
+        let _r = hm.reserve("cache", 80).unwrap();
+        let err = hm.reserve("staging buffer", 50).unwrap_err();
+        assert_eq!(err.requested, 50);
+        assert_eq!(err.reserved, 80);
+        assert!(err.to_string().contains("staging buffer"));
+    }
+
+    #[test]
+    fn reservation_grow() {
+        let dm = DeviceMemory::new(100);
+        let mut r = dm.reserve("feature buffer", 40).unwrap();
+        r.grow(40).unwrap();
+        assert_eq!(dm.reserved(), 80);
+        assert!(r.grow(40).is_err());
+        assert_eq!(r.bytes(), 80);
+        drop(r);
+        assert_eq!(dm.reserved(), 0);
+    }
+
+    #[test]
+    fn concurrent_reservations_respect_capacity() {
+        let hm = HostMemory::new(10_000);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let hm = hm.clone();
+                std::thread::spawn(move || {
+                    let mut held = Vec::new();
+                    let mut failed = 0u32;
+                    for _ in 0..50 {
+                        match hm.reserve("x", 100) {
+                            Ok(r) => held.push(r),
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (held.len(), failed)
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Reservations may come and go across threads, but the budget is
+        // never oversubscribed at any instant.
+        assert!(hm.peak() <= 10_000, "peak={}", hm.peak());
+    }
+}

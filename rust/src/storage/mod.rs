@@ -1,0 +1,18 @@
+//! Storage substrate: simulated SSD + page cache + I/O engines + memory
+//! budgets. Timing is simulated; bytes are real. See DESIGN.md §3.
+
+pub mod backing;
+pub mod engine;
+pub mod mem;
+pub mod page_cache;
+pub mod pcie;
+pub mod ssd;
+pub mod uring;
+
+pub use backing::{Backing, BackingRef, FileBacking, MemBacking, ProceduralBacking};
+pub use engine::{SimFile, Storage};
+pub use mem::{DeviceMemory, HostMemory, OutOfMemory, Reservation};
+pub use page_cache::{DataKind, FileId, PageCache, PAGE_SIZE};
+pub use pcie::{Pcie, PcieConfig};
+pub use ssd::{SsdConfig, SsdSim};
+pub use uring::{Cqe, IoBuf, IoMode, Sqe, Uring};

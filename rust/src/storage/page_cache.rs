@@ -1,0 +1,237 @@
+//! Simulated OS page cache.
+//!
+//! Buffered (mmap-style) I/O goes through this cache; direct I/O bypasses
+//! it. Pages are 4 KiB and are charged against the *residual* host-memory
+//! budget ([`HostMemory::cache_budget`]) — hard reservations squeeze pages
+//! out, and topology pages compete with feature pages, which is the paper's
+//! memory-contention mechanism (D1, Fig 2). The cache stores no data (the
+//! backing store is authoritative); it decides only whether a page access
+//! pays SSD time. Hit/miss/eviction counters are attributed per data kind so
+//! experiments can show *which* working set got thrashed.
+
+use super::mem::HostMemory;
+use crate::util::lru::Lru;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub const PAGE_SIZE: u64 = 4096;
+
+/// What a file holds, for counter attribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DataKind {
+    Topology,
+    Features,
+    Other,
+}
+
+/// Identifies a simulated file within the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FileId {
+    pub id: u32,
+    pub kind: DataKind,
+}
+
+impl FileId {
+    pub fn new(id: u32, kind: DataKind) -> Self {
+        FileId { id, kind }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct KindCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+pub struct PageCacheStats {
+    pub topology: KindCounters,
+    pub features: KindCounters,
+    pub other: KindCounters,
+}
+
+impl PageCacheStats {
+    pub fn for_kind(&self, kind: DataKind) -> &KindCounters {
+        match kind {
+            DataKind::Topology => &self.topology,
+            DataKind::Features => &self.features,
+            DataKind::Other => &self.other,
+        }
+    }
+
+    pub fn reset(&self) {
+        for k in [&self.topology, &self.features, &self.other] {
+            k.hits.store(0, Ordering::Relaxed);
+            k.misses.store(0, Ordering::Relaxed);
+            k.evictions.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+pub struct PageCache {
+    host: HostMemory,
+    lru: Mutex<Lru<(FileId, u64)>>,
+    stats: PageCacheStats,
+}
+
+impl PageCache {
+    pub fn new(host: HostMemory) -> Self {
+        PageCache { host, lru: Mutex::new(Lru::new()), stats: PageCacheStats::default() }
+    }
+
+    pub fn stats(&self) -> &PageCacheStats {
+        &self.stats
+    }
+
+    pub fn host(&self) -> &HostMemory {
+        &self.host
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.lru.lock().unwrap().len() as u64 * PAGE_SIZE
+    }
+
+    /// Probe one page. On hit: touch and return `true` (no device time).
+    /// On miss: insert the page, evicting LRU pages until the cache fits the
+    /// current residual budget, and return `false` (caller pays SSD time).
+    pub fn access(&self, file: FileId, page: u64) -> bool {
+        let mut lru = self.lru.lock().unwrap();
+        if lru.touch(&(file, page)) {
+            self.stats.for_kind(file.kind).hits.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        self.stats.for_kind(file.kind).misses.fetch_add(1, Ordering::Relaxed);
+        let budget_pages = self.host.cache_budget() / PAGE_SIZE;
+        if budget_pages == 0 {
+            // No room to cache at all: pure pass-through.
+            return false;
+        }
+        while lru.len() as u64 >= budget_pages {
+            if let Some((evicted, _)) = lru.pop_lru() {
+                self.stats.for_kind(evicted.kind).evictions.fetch_add(1, Ordering::Relaxed);
+            } else {
+                break;
+            }
+        }
+        lru.insert((file, page));
+        false
+    }
+
+    /// Shrink to the current budget (called after a large reservation when
+    /// the caller wants the squeeze to happen immediately rather than lazily
+    /// on the next access).
+    pub fn shrink_to_budget(&self) {
+        let mut lru = self.lru.lock().unwrap();
+        let budget_pages = self.host.cache_budget() / PAGE_SIZE;
+        while lru.len() as u64 > budget_pages {
+            if let Some((evicted, _)) = lru.pop_lru() {
+                self.stats.for_kind(evicted.kind).evictions.fetch_add(1, Ordering::Relaxed);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drop every cached page (e.g. between experiment runs).
+    pub fn drop_all(&self) {
+        let mut lru = self.lru.lock().unwrap();
+        while lru.pop_lru().is_some() {}
+    }
+
+    /// Hit ratio for a kind since the last stats reset.
+    pub fn hit_ratio(&self, kind: DataKind) -> f64 {
+        let c = self.stats.for_kind(kind);
+        let h = c.hits.load(Ordering::Relaxed) as f64;
+        let m = c.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> FileId {
+        FileId::new(0, DataKind::Topology)
+    }
+
+    fn feat() -> FileId {
+        FileId::new(1, DataKind::Features)
+    }
+
+    #[test]
+    fn hits_after_insert() {
+        let hm = HostMemory::new(64 * PAGE_SIZE);
+        let pc = PageCache::new(hm);
+        assert!(!pc.access(topo(), 0)); // miss
+        assert!(pc.access(topo(), 0)); // hit
+        assert_eq!(pc.stats().topology.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(pc.stats().topology.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn capacity_bounds_residency() {
+        let hm = HostMemory::new(8 * PAGE_SIZE);
+        let pc = PageCache::new(hm);
+        for p in 0..100 {
+            pc.access(topo(), p);
+        }
+        assert!(pc.resident_bytes() <= 8 * PAGE_SIZE);
+        assert!(pc.stats().topology.evictions.load(Ordering::Relaxed) >= 92);
+    }
+
+    #[test]
+    fn feature_pressure_evicts_topology() {
+        // The D1 mechanism in miniature: a topology working set that fits
+        // alone gets thrashed once a larger feature stream shares the cache.
+        let hm = HostMemory::new(32 * PAGE_SIZE);
+        let pc = PageCache::new(hm);
+        for p in 0..16 {
+            pc.access(topo(), p);
+        }
+        pc.stats().reset();
+        // Topology alone: all hits.
+        for p in 0..16 {
+            assert!(pc.access(topo(), p));
+        }
+        // Interleave a feature scan 4× the cache size.
+        for p in 0..128 {
+            pc.access(feat(), p);
+        }
+        // Topology re-scan now misses (pages were evicted by features).
+        let before = pc.stats().topology.misses.load(Ordering::Relaxed);
+        for p in 0..16 {
+            pc.access(topo(), p);
+        }
+        let after = pc.stats().topology.misses.load(Ordering::Relaxed);
+        assert!(after - before >= 12, "topology misses {before} -> {after}");
+    }
+
+    #[test]
+    fn reservation_squeezes_cache() {
+        let hm = HostMemory::new(32 * PAGE_SIZE);
+        let pc = PageCache::new(hm.clone());
+        for p in 0..32 {
+            pc.access(topo(), p);
+        }
+        assert!(pc.resident_bytes() >= 24 * PAGE_SIZE);
+        let _r = hm.reserve("staging", 24 * PAGE_SIZE).unwrap();
+        pc.shrink_to_budget();
+        assert!(pc.resident_bytes() <= 8 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn zero_budget_is_passthrough() {
+        let hm = HostMemory::new(PAGE_SIZE);
+        let _r = hm.reserve("all", PAGE_SIZE).unwrap();
+        let pc = PageCache::new(hm);
+        assert!(!pc.access(topo(), 0));
+        assert!(!pc.access(topo(), 0)); // still a miss: nothing cached
+        assert_eq!(pc.resident_bytes(), 0);
+    }
+}

@@ -1,0 +1,295 @@
+//! SSD device model.
+//!
+//! Timing-accurate simulation of a SATA/NVMe SSD in front of a real
+//! [`Backing`](super::backing::Backing) store. Three limits shape every
+//! request, mirroring how a real device behaves under fio (Appendix B of the
+//! paper):
+//!
+//! * **per-request latency** — media + interface time, charged by sleeping;
+//!   overlapped requests hide it, which is the async-I/O win;
+//! * **IOPS ceiling** — a token bucket in operations/second (random small
+//!   reads are IOPS-bound: 512 B feature rows on a PM883-class disk);
+//! * **bandwidth ceiling** — a token bucket in bytes/second (large/sequential
+//!   reads are bandwidth-bound);
+//!
+//! plus a bounded **device queue depth** (NCQ) limiting in-flight requests.
+//! Defaults approximate the paper's SAMSUNG PM883 (§5); `k80_machine` in
+//! [`crate::config`] models the older Intel DC S3510 of Fig 13.
+
+use crate::sim::{Clock, Semaphore, TokenBucket};
+use crate::util::stats::LatencyHist;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct SsdConfig {
+    /// Read bandwidth ceiling, bytes/second.
+    pub read_bw: f64,
+    /// Write bandwidth ceiling, bytes/second.
+    pub write_bw: f64,
+    /// Per-request service latency (media + interface).
+    pub latency: Duration,
+    /// Random-read IOPS ceiling.
+    pub iops: f64,
+    /// Device queue depth (max in-flight requests).
+    pub queue_depth: usize,
+    /// Sector size; direct I/O must align to this.
+    pub sector: usize,
+}
+
+impl SsdConfig {
+    /// SAMSUNG PM883-class SATA SSD (the paper's testbed drive).
+    pub fn pm883() -> Self {
+        SsdConfig {
+            read_bw: 520e6,
+            write_bw: 480e6,
+            latency: Duration::from_micros(90),
+            iops: 97_000.0,
+            queue_depth: 32,
+            sector: 512,
+        }
+    }
+
+    /// Intel DC S3510-class SATA SSD (the Fig 13 multi-GPU machine).
+    pub fn s3510() -> Self {
+        SsdConfig {
+            read_bw: 500e6,
+            write_bw: 440e6,
+            latency: Duration::from_micros(110),
+            iops: 68_000.0,
+            queue_depth: 32,
+            sector: 512,
+        }
+    }
+}
+
+/// Running counters, attributable per data kind (topology vs features),
+/// which the memory-contention analysis of Fig 2 relies on.
+#[derive(Debug, Default)]
+pub struct SsdCounters {
+    pub reads: AtomicU64,
+    pub read_bytes: AtomicU64,
+    pub writes: AtomicU64,
+    pub write_bytes: AtomicU64,
+}
+
+/// The simulated device. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct SsdSim {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    cfg: SsdConfig,
+    clock: Clock,
+    slots: Semaphore,
+    read_bw: TokenBucket,
+    write_bw: TokenBucket,
+    iops: TokenBucket,
+    counters: SsdCounters,
+    lat_hist: Mutex<LatencyHist>,
+}
+
+impl SsdSim {
+    pub fn new(cfg: SsdConfig, clock: Clock) -> Self {
+        let read_bw = TokenBucket::new(clock.clone(), cfg.read_bw, 256.0 * 1024.0);
+        let write_bw = TokenBucket::new(clock.clone(), cfg.write_bw, 256.0 * 1024.0);
+        // IOPS burst ≈ one queue depth's worth keeps short bursts cheap while
+        // sustained load converges to the ceiling.
+        let iops = TokenBucket::new(clock.clone(), cfg.iops, cfg.queue_depth as f64);
+        SsdSim {
+            inner: Arc::new(Inner {
+                slots: Semaphore::new(cfg.queue_depth),
+                read_bw,
+                write_bw,
+                iops,
+                counters: SsdCounters::default(),
+                lat_hist: Mutex::new(LatencyHist::default()),
+                cfg,
+                clock,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &SsdConfig {
+        &self.inner.cfg
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.inner.clock
+    }
+
+    pub fn counters(&self) -> &SsdCounters {
+        &self.inner.counters
+    }
+
+    pub fn latency_hist(&self) -> LatencyHist {
+        self.inner.lat_hist.lock().unwrap().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        let c = &self.inner.counters;
+        c.reads.store(0, Ordering::Relaxed);
+        c.read_bytes.store(0, Ordering::Relaxed);
+        c.writes.store(0, Ordering::Relaxed);
+        c.write_bytes.store(0, Ordering::Relaxed);
+        *self.inner.lat_hist.lock().unwrap() = LatencyHist::default();
+    }
+
+    /// Charge the time for one read of `len` bytes. Blocks the calling
+    /// thread for the simulated service duration. The caller copies the data
+    /// from the backing store itself (the device model is timing-only).
+    pub fn read(&self, len: usize) -> Duration {
+        let t0 = Instant::now();
+        {
+            let _state = crate::metrics::state::enter(crate::metrics::state::State::Io);
+            let _slot = self.inner.slots.guard();
+            self.inner.iops.acquire(1.0);
+            self.inner.read_bw.acquire(len as f64);
+            self.inner.clock.sleep(self.inner.cfg.latency);
+        }
+        let sim = self.inner.clock.to_sim(t0.elapsed());
+        self.inner.counters.reads.fetch_add(1, Ordering::Relaxed);
+        self.inner.counters.read_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        self.inner.lat_hist.lock().unwrap().record(sim);
+        sim
+    }
+
+    /// Charge the time for a coalesced batch of `ops` reads totalling
+    /// `bytes`. One device slot and one latency period cover the batch
+    /// (NCQ-style coalescing used by the async engine to amortize
+    /// bookkeeping); the IOPS and bandwidth buckets are charged in full, so
+    /// sustained throughput is identical to per-op charging.
+    pub fn read_multi(&self, ops: u64, bytes: usize) -> Duration {
+        if ops == 0 {
+            return Duration::ZERO;
+        }
+        let t0 = Instant::now();
+        {
+            let _state = crate::metrics::state::enter(crate::metrics::state::State::Io);
+            let _slot = self.inner.slots.guard();
+            self.inner.iops.acquire(ops as f64);
+            self.inner.read_bw.acquire(bytes as f64);
+            self.inner.clock.sleep(self.inner.cfg.latency);
+        }
+        let sim = self.inner.clock.to_sim(t0.elapsed());
+        self.inner.counters.reads.fetch_add(ops, Ordering::Relaxed);
+        self.inner.counters.read_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.inner.lat_hist.lock().unwrap().record(sim);
+        sim
+    }
+
+    /// Charge the time for one write of `len` bytes.
+    pub fn write(&self, len: usize) -> Duration {
+        let t0 = Instant::now();
+        {
+            let _state = crate::metrics::state::enter(crate::metrics::state::State::Io);
+            let _slot = self.inner.slots.guard();
+            self.inner.iops.acquire(1.0);
+            self.inner.write_bw.acquire(len as f64);
+            self.inner.clock.sleep(self.inner.cfg.latency);
+        }
+        let sim = self.inner.clock.to_sim(t0.elapsed());
+        self.inner.counters.writes.fetch_add(1, Ordering::Relaxed);
+        self.inner.counters.write_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        self.inner.lat_hist.lock().unwrap().record(sim);
+        sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_ssd() -> SsdSim {
+        // Compressed time so tests are quick but the ratios hold.
+        let clock = Clock::new(0.2);
+        SsdSim::new(SsdConfig::pm883(), clock)
+    }
+
+    #[test]
+    fn single_thread_sync_is_latency_bound() {
+        let ssd = fast_ssd();
+        let n = 100;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            ssd.read(512);
+        }
+        let sim = ssd.clock().to_sim(t0.elapsed());
+        let per_req = sim / n;
+        // ~latency per request (90us) once the IOPS burst is used up;
+        // single-core scheduling noise allows a generous upper band.
+        assert!(per_req >= Duration::from_micros(55), "per_req={per_req:?}");
+        assert!(per_req < Duration::from_micros(500), "per_req={per_req:?}");
+    }
+
+    #[test]
+    fn parallel_requests_hide_latency_until_iops_cap() {
+        // Comparative (robust to single-core scheduling noise): the same
+        // request count with 16 threads must be much faster than with one,
+        // and aggregate throughput must not exceed the device IOPS ceiling.
+        // Runs at scale 1.0: compressed time amplifies the (real) per-op
+        // bookkeeping cost relative to (scaled) device time.
+        let ssd = SsdSim::new(SsdConfig::pm883(), Clock::new(1.0));
+        let total = 160usize;
+
+        let t0 = Instant::now();
+        for _ in 0..total {
+            ssd.read(512);
+        }
+        let serial = ssd.clock().to_sim(t0.elapsed());
+
+        let threads = 16;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let ssd = ssd.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..total / 16 {
+                        ssd.read(512);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let parallel = ssd.clock().to_sim(t0.elapsed());
+        let iops = total as f64 / parallel.as_secs_f64();
+
+        assert!(
+            parallel.as_secs_f64() < serial.as_secs_f64() * 0.55,
+            "parallel {parallel:?} not ≪ serial {serial:?}"
+        );
+        assert!(iops < 140_000.0, "iops above device ceiling: {iops}");
+    }
+
+    #[test]
+    fn large_reads_are_bandwidth_bound() {
+        let ssd = fast_ssd();
+        let n = 10;
+        let chunk = 4 << 20; // 4 MiB
+        let t0 = Instant::now();
+        for _ in 0..n {
+            ssd.read(chunk);
+        }
+        let sim = ssd.clock().to_sim(t0.elapsed()).as_secs_f64();
+        let bw = (n * chunk) as f64 / sim;
+        assert!(bw < 620e6, "bw={bw}");
+        assert!(bw > 300e6, "bw={bw}");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let ssd = fast_ssd();
+        ssd.read(512);
+        ssd.write(1024);
+        assert_eq!(ssd.counters().reads.load(Ordering::Relaxed), 1);
+        assert_eq!(ssd.counters().read_bytes.load(Ordering::Relaxed), 512);
+        assert_eq!(ssd.counters().write_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(ssd.latency_hist().count(), 2);
+        ssd.reset_stats();
+        assert_eq!(ssd.counters().reads.load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Time-to-accuracy tracking (paper §5.3, Fig 14).
+//!
+//! Records (simulated time, epoch, loss, accuracy) points over a training
+//! run and answers "when did the run first reach accuracy X".
+
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergencePoint {
+    pub time: Duration,
+    pub epoch: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTrace {
+    pub points: Vec<ConvergencePoint>,
+}
+
+impl ConvergenceTrace {
+    pub fn record(&mut self, time: Duration, epoch: usize, loss: f64, accuracy: f64) {
+        self.points.push(ConvergencePoint { time, epoch, loss, accuracy });
+    }
+
+    /// First time the accuracy reached `target`, if ever.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<Duration> {
+        self.points.iter().find(|p| p.accuracy >= target).map(|p| p.time)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    /// Paper-style series rows: `time_s  epoch  loss  acc`.
+    pub fn rows(&self) -> String {
+        let mut out = String::from("time_s\tepoch\tloss\taccuracy\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:.2}\t{}\t{:.4}\t{:.4}\n",
+                p.time.as_secs_f64(),
+                p.epoch,
+                p.loss,
+                p.accuracy
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut t = ConvergenceTrace::default();
+        t.record(Duration::from_secs(1), 0, 2.0, 0.2);
+        t.record(Duration::from_secs(2), 1, 1.0, 0.5);
+        t.record(Duration::from_secs(3), 2, 0.5, 0.6);
+        assert_eq!(t.time_to_accuracy(0.5), Some(Duration::from_secs(2)));
+        assert_eq!(t.time_to_accuracy(0.9), None);
+        assert_eq!(t.best_accuracy(), 0.6);
+        assert_eq!(t.final_loss(), Some(0.5));
+        assert!(t.rows().contains("2.00\t1\t1.0000\t0.5000"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Train stage: the `TrainStep` abstraction plus loss/accuracy accounting.
+//!
+//! Two implementations exist: [`crate::runtime::PjrtTrainStep`] executes the
+//! AOT-compiled JAX/Pallas artifact on the PJRT CPU client (real numerics —
+//! the end-to-end example and Fig 14), and
+//! [`crate::runtime::simcompute::SimTrainStep`] charges a roofline-model GPU
+//! time (large sweeps, where the paper's train stage is never the
+//! bottleneck: extract is 97.3 % of epoch time).
+
+pub mod convergence;
+
+use crate::sample::PaddedSubgraph;
+
+/// Outcome of one training step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepResult {
+    /// Mean cross-entropy over real (non-padded) seeds; NaN for simulated
+    /// compute.
+    pub loss: f32,
+    /// Correct predictions among real seeds.
+    pub correct: usize,
+    /// Real seeds in the step.
+    pub examples: usize,
+}
+
+/// A fixed-shape training step (one AOT artifact or one cost model).
+pub trait TrainStep: Send {
+    /// Node prefix caps per level (the padding shape contract).
+    fn caps(&self) -> &[usize];
+    /// Fixed fanouts per level.
+    fn fanouts(&self) -> &[usize];
+    /// Feature dimension.
+    fn dim(&self) -> usize;
+    /// Execute one step. `features` is row-major `[caps.last(), dim]`,
+    /// gathered from the feature buffer by node alias.
+    fn step(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult;
+    /// True when `loss`/`correct` are real numerics (PJRT path).
+    fn is_real(&self) -> bool;
+}
+
+/// Running loss/accuracy aggregation over an epoch or a whole run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub steps: usize,
+    pub examples: usize,
+    pub correct: usize,
+    pub loss_sum: f64,
+}
+
+impl TrainStats {
+    pub fn push(&mut self, r: &StepResult) {
+        self.steps += 1;
+        self.examples += r.examples;
+        self.correct += r.correct;
+        if r.loss.is_finite() {
+            self.loss_sum += r.loss as f64 * r.examples as f64;
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.examples == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.examples as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.examples as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &TrainStats) {
+        self.steps += other.steps;
+        self.examples += other.examples;
+        self.correct += other.correct;
+        self.loss_sum += other.loss_sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_aggregate() {
+        let mut s = TrainStats::default();
+        s.push(&StepResult { loss: 2.0, correct: 10, examples: 100 });
+        s.push(&StepResult { loss: 1.0, correct: 30, examples: 100 });
+        assert_eq!(s.steps, 2);
+        assert!((s.mean_loss() - 1.5).abs() < 1e-9);
+        assert!((s.accuracy() - 0.2).abs() < 1e-9);
+        let mut t = TrainStats::default();
+        t.merge(&s);
+        assert_eq!(t.examples, 200);
+    }
+
+    #[test]
+    fn nan_loss_ignored_in_mean() {
+        let mut s = TrainStats::default();
+        s.push(&StepResult { loss: f32::NAN, correct: 0, examples: 50 });
+        assert_eq!(s.loss_sum, 0.0);
+        assert_eq!(s.examples, 50);
+    }
+}

@@ -1,0 +1,180 @@
+//! Tiny CLI argument parser (no `clap` in the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with declared options for `--help` generation. Used by the `gnndrive`
+//! binary, the examples and every bench harness.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments plus declarations for `--help`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    specs: Vec<OptSpec>,
+    program: String,
+    about: &'static str,
+}
+
+impl Args {
+    /// Build a parser: declare options first, then call `parse`.
+    pub fn new(about: &'static str) -> Self {
+        Args { about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse process args; prints help and exits on `--help`.
+    pub fn parse(self) -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(Help) => {
+                // help was printed
+                std::process::exit(0);
+            }
+        }
+    }
+
+    /// Parse an explicit argv (first element is the program name).
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Self, Help> {
+        self.program = argv.first().cloned().unwrap_or_default();
+        let is_flag = |specs: &[OptSpec], name: &str| {
+            specs.iter().any(|s| s.is_flag && s.name == name)
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                self.print_help();
+                return Err(Help);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    self.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if is_flag(&self.specs, body) {
+                    self.flags.push(body.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    self.options.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // unknown bare `--name`: treat as a flag
+                    self.flags.push(body.to_string());
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn print_help(&self) {
+        println!("{}\n", self.about);
+        println!("OPTIONS:");
+        for s in &self.specs {
+            let kind = if s.is_flag { "".to_string() } else { " <value>".to_string() };
+            let def = s
+                .default
+                .filter(|d| !d.is_empty())
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            println!("  --{}{kind}\n      {}{def}", s.name, s.help);
+        }
+        println!("  --help\n      print this message");
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Value or declared default; panics if the option was never declared
+    /// with a default (programming error, not user error).
+    pub fn get_or_default(&self, key: &str) -> &str {
+        if let Some(v) = self.get(key) {
+            return v;
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == key)
+            .and_then(|s| s.default)
+            .unwrap_or_else(|| panic!("option --{key} has no declared default"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        self.get_or_default(key)
+            .parse()
+            .map_err(|_| format!("--{key} expects an integer, got {:?}", self.get_or_default(key)))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        self.get_or_default(key)
+            .parse()
+            .map_err(|_| format!("--{key} expects a number, got {:?}", self.get_or_default(key)))
+    }
+}
+
+/// Marker: `--help` was requested and printed.
+#[derive(Debug)]
+pub struct Help;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog").chain(s.iter().copied()).map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::new("t")
+            .opt("dataset", "papers100m-mini", "dataset name")
+            .opt("epochs", "1", "epoch count")
+            .flag("verbose", "chatty")
+            .parse_from(&argv(&["train", "--dataset=twitter-mini", "--epochs", "3", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("dataset"), Some("twitter-mini"));
+        assert_eq!(a.get_usize("epochs").unwrap(), 3);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t")
+            .opt("epochs", "2", "epoch count")
+            .parse_from(&argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), 2);
+        assert!(a.get_f64("epochs").is_ok());
+    }
+
+    #[test]
+    fn unknown_bare_option_is_flag() {
+        let a = Args::new("t").parse_from(&argv(&["--quick"])).unwrap();
+        assert!(a.has("quick"));
+    }
+}

@@ -1,0 +1,81 @@
+//! Fx-style multiplicative hasher (no external crates offline).
+//!
+//! The sampler's dedup map and the feature buffer's mapping table hash
+//! millions of small integer keys per epoch; std's SipHash costs ~3× more
+//! than a multiplicative mix for these keys. Same construction as rustc's
+//! FxHasher (not DoS-resistant — keys are internal node ids, never
+//! attacker-controlled).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_and_distributes() {
+        let mut m: FxHashMap<u32, u32> = FxHashMap::default();
+        for i in 0..10_000u32 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in (0..10_000u32).step_by(97) {
+            assert_eq!(m[&i], i * 2);
+        }
+        // Distinct keys hash differently (sanity, not a statistical test).
+        let mut h1 = FxHasher::default();
+        h1.write_u32(1);
+        let mut h2 = FxHasher::default();
+        h2.write_u32(2);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+}

@@ -1,0 +1,252 @@
+//! Intrusive O(1) LRU list over hashable keys — shared by the simulated OS
+//! page cache and GNNDrive's standby list (Fig 6), both of which need
+//! `touch` / `pop_lru` / `remove-by-key` in constant time.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node<K> {
+    key: K,
+    prev: usize,
+    next: usize,
+}
+
+/// Doubly-linked LRU: head = most-recently-used, tail = least-recently-used.
+#[derive(Debug)]
+pub struct Lru<K: Eq + Hash + Clone> {
+    map: HashMap<K, usize>,
+    nodes: Vec<Node<K>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl<K: Eq + Hash + Clone> Default for Lru<K> {
+    fn default() -> Self {
+        Lru { map: HashMap::new(), nodes: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+    }
+}
+
+impl<K: Eq + Hash + Clone> Lru<K> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.nodes[idx].prev, self.nodes[idx].next);
+        if prev != NIL {
+            self.nodes[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Insert as MRU (or touch if present). Returns true if newly inserted.
+    pub fn insert(&mut self, key: K) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.unlink(idx);
+            self.push_front(idx);
+            return false;
+        }
+        let idx = if let Some(idx) = self.free.pop() {
+            self.nodes[idx] = Node { key: key.clone(), prev: NIL, next: NIL };
+            idx
+        } else {
+            self.nodes.push(Node { key: key.clone(), prev: NIL, next: NIL });
+            self.nodes.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+        true
+    }
+
+    /// Move to MRU if present. Returns whether the key was present.
+    pub fn touch(&mut self, key: &K) -> bool {
+        if let Some(&idx) = self.map.get(key) {
+            self.unlink(idx);
+            self.push_front(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove a specific key.
+    pub fn remove(&mut self, key: &K) -> bool {
+        if let Some(idx) = self.map.remove(key) {
+            self.unlink(idx);
+            self.free.push(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict and return the least-recently-used key.
+    pub fn pop_lru(&mut self) -> Option<K> {
+        if self.tail == NIL {
+            return None;
+        }
+        let idx = self.tail;
+        let key = self.nodes[idx].key.clone();
+        self.unlink(idx);
+        self.map.remove(&key);
+        self.free.push(idx);
+        Some(key)
+    }
+
+    /// Peek the LRU key without evicting.
+    pub fn peek_lru(&self) -> Option<&K> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(&self.nodes[self.tail].key)
+        }
+    }
+
+    /// Iterate keys from MRU to LRU (test/debug aid; O(n)).
+    pub fn iter_mru(&self) -> impl Iterator<Item = &K> {
+        let mut idx = self.head;
+        std::iter::from_fn(move || {
+            if idx == NIL {
+                None
+            } else {
+                let k = &self.nodes[idx].key;
+                idx = self.nodes[idx].next;
+                Some(k)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn basic_lru_order() {
+        let mut l = Lru::new();
+        l.insert(1);
+        l.insert(2);
+        l.insert(3);
+        assert_eq!(l.pop_lru(), Some(1));
+        l.touch(&2); // order now: 2 (MRU), 3 (LRU)
+        assert_eq!(l.pop_lru(), Some(3));
+        assert_eq!(l.pop_lru(), Some(2));
+        assert_eq!(l.pop_lru(), None);
+    }
+
+    #[test]
+    fn remove_and_reuse_slots() {
+        let mut l = Lru::new();
+        for i in 0..10 {
+            l.insert(i);
+        }
+        assert!(l.remove(&5));
+        assert!(!l.remove(&5));
+        assert_eq!(l.len(), 9);
+        l.insert(100); // reuses freed node
+        assert_eq!(l.len(), 10);
+        assert_eq!(l.iter_mru().next(), Some(&100));
+    }
+
+    #[test]
+    fn reinsert_touches() {
+        let mut l = Lru::new();
+        l.insert("a");
+        l.insert("b");
+        assert!(!l.insert("a")); // already present → touch
+        assert_eq!(l.pop_lru(), Some("b"));
+    }
+
+    #[test]
+    fn matches_reference_model() {
+        // Property: against a naive VecDeque reference under a random
+        // op sequence, order and membership always agree.
+        #[derive(Clone, Debug)]
+        struct Ops(Vec<(u8, u8)>);
+        prop::check(
+            prop::Config::default().cases(60).sizes(4, 200),
+            "lru matches reference",
+            |rng: &mut Pcg, size| {
+                Ops((0..size).map(|_| (rng.below(4) as u8, rng.below(16) as u8)).collect())
+            },
+            |ops| prop::shrink_vec(&ops.0).into_iter().map(Ops).collect(),
+            |Ops(ops)| {
+                let mut lru = Lru::new();
+                let mut reference: VecDeque<u8> = VecDeque::new(); // front = MRU
+                for &(op, key) in ops {
+                    match op {
+                        0 => {
+                            lru.insert(key);
+                            reference.retain(|&k| k != key);
+                            reference.push_front(key);
+                        }
+                        1 => {
+                            lru.touch(&key);
+                            if reference.contains(&key) {
+                                reference.retain(|&k| k != key);
+                                reference.push_front(key);
+                            }
+                        }
+                        2 => {
+                            lru.remove(&key);
+                            reference.retain(|&k| k != key);
+                        }
+                        _ => {
+                            let a = lru.pop_lru();
+                            let b = reference.pop_back();
+                            if a != b {
+                                return Err(format!("pop_lru {a:?} != {b:?}"));
+                            }
+                        }
+                    }
+                    if lru.len() != reference.len() {
+                        return Err(format!("len {} != {}", lru.len(), reference.len()));
+                    }
+                }
+                let got: Vec<u8> = lru.iter_mru().copied().collect();
+                let want: Vec<u8> = reference.iter().copied().collect();
+                if got != want {
+                    return Err(format!("order {got:?} != {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

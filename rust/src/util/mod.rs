@@ -1,0 +1,13 @@
+//! Self-contained utility substrate (the offline build has no access to
+//! crates.io beyond the `xla` vendor set, so rng/config/CLI/json/stats and
+//! the property-test harness are all implemented here).
+
+pub mod args;
+pub mod fxhash;
+pub mod json;
+pub mod lru;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+pub mod units;

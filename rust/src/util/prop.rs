@@ -1,0 +1,180 @@
+//! In-repo property-testing harness (the offline build has no `proptest`).
+//!
+//! A property is checked over many generated cases; generation is seeded and
+//! sized (sizes ramp up so small counterexamples are found first), and a
+//! user-supplied shrinker is applied greedily to any failing case. Failures
+//! report the seed so a run can be reproduced exactly:
+//! `GNNDRIVE_PROP_SEED=<seed> cargo test`.
+
+use super::rng::Pcg;
+use std::fmt::Debug;
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub min_size: usize,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("GNNDRIVE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 128, seed, min_size: 1, max_size: 64 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn sizes(mut self, lo: usize, hi: usize) -> Self {
+        self.min_size = lo;
+        self.max_size = hi;
+        self
+    }
+}
+
+/// Check `prop` over `cfg.cases` generated inputs. Panics (failing the test)
+/// on the first property violation, after shrinking.
+pub fn check<T, G, S, P>(cfg: Config, name: &str, gen: G, shrink: S, prop: P)
+where
+    T: Debug + Clone,
+    G: Fn(&mut Pcg, usize) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case_no in 0..cfg.cases {
+        // Ramp the size hint: early cases are small, later ones large.
+        let span = cfg.max_size.saturating_sub(cfg.min_size).max(1);
+        let size = cfg.min_size + (case_no * span) / cfg.cases.max(1);
+        let mut rng = Pcg::with_stream(cfg.seed, case_no as u64);
+        let input = gen(&mut rng, size.max(cfg.min_size));
+        if let Err(msg) = prop(&input) {
+            let (smallest, small_msg, steps) = do_shrink(&shrink, &prop, input.clone(), msg);
+            panic!(
+                "property {name:?} failed (case {case_no}, seed {seed}, {steps} shrink steps)\n\
+                 original failure on: {input:?}\n\
+                 smallest failing:    {smallest:?}\n\
+                 reason: {small_msg}\n\
+                 reproduce with GNNDRIVE_PROP_SEED={seed}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly take the first shrunken candidate that still
+/// fails, until no candidate fails or a step budget is hit.
+fn do_shrink<T, S, P>(shrink: &S, prop: &P, mut cur: T, mut msg: String) -> (T, String, usize)
+where
+    T: Debug + Clone,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut steps = 0;
+    'outer: while steps < 1000 {
+        for cand in shrink(&cur) {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, msg, steps)
+}
+
+/// Convenience: no shrinking.
+pub fn check_noshrink<T, G, P>(cfg: Config, name: &str, gen: G, prop: P)
+where
+    T: Debug + Clone,
+    G: Fn(&mut Pcg, usize) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check(cfg, name, gen, |_| Vec::new(), prop);
+}
+
+/// Standard shrinker for vectors: drop halves, then drop single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 16 {
+        for i in 0..v.len() {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check_noshrink(
+            Config::default().cases(50),
+            "reverse-reverse is identity",
+            |rng, size| (0..size).map(|_| rng.next_u32()).collect::<Vec<u32>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse^2 != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"finds bug\" failed")]
+    fn finds_and_shrinks_failure() {
+        check(
+            Config::default().cases(200).sizes(1, 50),
+            "finds bug",
+            |rng, size| (0..size).map(|_| rng.below(100)).collect::<Vec<u32>>(),
+            |v| shrink_vec(v),
+            |v| {
+                // Falsely claim no vector contains a value >= 90.
+                if v.iter().any(|&x| x >= 90) {
+                    Err(format!("contains {:?}", v.iter().find(|&&x| x >= 90)))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinker_reduces_to_minimal() {
+        // Directly test the greedy shrinker: smallest failing vec for
+        // "contains an element >= 90" is a single element.
+        let failing = vec![1u32, 95, 3, 99, 5];
+        let prop = |v: &Vec<u32>| {
+            if v.iter().any(|&x| x >= 90) {
+                Err("has big".to_string())
+            } else {
+                Ok(())
+            }
+        };
+        let (smallest, _, _) = do_shrink(&|v: &Vec<u32>| shrink_vec(v), &prop, failing, "x".into());
+        assert_eq!(smallest.len(), 1);
+        assert!(smallest[0] >= 90);
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so the library carries its own
+//! small, well-tested generator. We use PCG-XSH-RR 64/32 (O'Neill 2014) with
+//! SplitMix64 seeding — fast, statistically solid for simulation work, and
+//! fully deterministic across platforms, which the reproduction relies on
+//! (datasets, sampling and parameter init are all seeded).
+
+/// SplitMix64 step; used for seeding and for stateless per-key hashing.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of a (seed, key) pair to a u64. Handy for procedural data
+/// (feature rows, labels) where random access by key matters more than
+/// sequence quality.
+#[inline]
+pub fn hash2(seed: u64, key: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(key.wrapping_add(0xA0761D6478BD642F)))
+}
+
+/// Stateless hash of a (seed, a, b) triple.
+#[inline]
+pub fn hash3(seed: u64, a: u64, b: u64) -> u64 {
+    hash2(hash2(seed, a), b)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E39CB94B95BDB)
+    }
+
+    /// Independent stream selected by `stream`; distinct streams never
+    /// collide regardless of seed.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.state.wrapping_add(splitmix64(seed));
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(splitmix64(seed ^ 0x5851F42D4C957F2D));
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32() as u64;
+            let m = x * bound as u64;
+            let l = m as u32;
+            if l >= bound || l >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u32) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast here).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Approximate Zipf(s) sample over `[0, n)` by inverse-CDF on the
+    /// continuous bounded Pareto — good enough for skewed-workload shaping.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        if s <= 0.0 {
+            return self.range(0, n);
+        }
+        let u = self.f64();
+        if (s - 1.0).abs() < 1e-9 {
+            let x = (n as f64).powf(u);
+            return (x as usize).min(n - 1);
+        }
+        let a = 1.0 - s;
+        let x = ((u * ((n as f64).powf(a) - 1.0)) + 1.0).powf(1.0 / a);
+        (x as usize).min(n - 1).max(0)
+    }
+}
+
+/// Deterministic standard-normal value for a (seed, key) pair, for
+/// procedural feature generation (random access, no sequence state).
+#[inline]
+pub fn hash_normal(seed: u64, key: u64) -> f32 {
+    let h = hash2(seed, key);
+    let u1 = ((h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)).max(f64::MIN_POSITIVE);
+    let h2 = splitmix64(h);
+    let u2 = (h2 >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg::new(43);
+        assert_ne!(Pcg::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut r = Pcg::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn zipf_skews_low() {
+        let mut r = Pcg::new(5);
+        let n = 10_000;
+        let lows = (0..n).filter(|_| r.zipf(1000, 1.2) < 10).count();
+        // Zipf(1.2) should put a large mass on the first few ranks.
+        assert!(lows > n / 10, "lows={lows}");
+    }
+
+    #[test]
+    fn hash_normal_deterministic() {
+        assert_eq!(hash_normal(1, 2), hash_normal(1, 2));
+        assert_ne!(hash_normal(1, 2), hash_normal(1, 3));
+    }
+}

@@ -1,0 +1,210 @@
+//! Small statistics helpers: online mean/variance, percentile histograms and
+//! EWMA. Used by the metrics layer and the bench harness.
+
+use std::time::Duration;
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Log-bucketed latency histogram (~4 % resolution) with percentile queries.
+/// Fixed memory, lock-free-friendly (callers own it or shard it).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+}
+
+const HIST_BUCKETS: usize = 512;
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0 }
+    }
+}
+
+impl LatencyHist {
+    fn index(ns: u64) -> usize {
+        // 16 sub-buckets per power of two starting at 64 ns.
+        if ns < 64 {
+            return 0;
+        }
+        let lz = 63 - ns.leading_zeros() as u64; // floor(log2)
+        let base = (lz - 6) * 16;
+        let frac = (ns >> (lz.saturating_sub(4))) & 0xF;
+        ((base + frac) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> u64 {
+        if i == 0 {
+            return 64;
+        }
+        let pow = (i / 16) as u64 + 6;
+        let frac = (i % 16) as u64;
+        (1u64 << pow) + (frac << pow.saturating_sub(4))
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_value(i));
+            }
+        }
+        Duration::from_nanos(Self::bucket_value(HIST_BUCKETS - 1))
+    }
+}
+
+/// Exponentially-weighted moving average.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_moments() {
+        let mut o = Online::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            o.push(x);
+        }
+        assert_eq!(o.count(), 8);
+        assert!((o.mean() - 5.0).abs() < 1e-9);
+        assert!((o.std() - 2.138).abs() < 0.01);
+        assert_eq!(o.min(), 2.0);
+        assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn hist_percentiles_roughly_right() {
+        let mut h = LatencyHist::default();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.percentile(50.0).as_micros() as f64;
+        let p99 = h.percentile(99.0).as_micros() as f64;
+        assert!((p50 - 500.0).abs() / 500.0 < 0.1, "p50={p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.1, "p99={p99}");
+        assert!(h.mean().as_micros() > 400 && h.mean().as_micros() < 600);
+    }
+
+    #[test]
+    fn hist_merge_adds() {
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        e.push(0.0);
+        for _ in 0..20 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 0.01);
+    }
+}

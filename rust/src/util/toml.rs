@@ -1,0 +1,228 @@
+//! Minimal TOML-subset parser for config files.
+//!
+//! The offline environment has no `serde`/`toml` crates, so configuration is
+//! parsed by this hand-rolled reader. Supported subset (all this project
+//! needs): `[section]` and `[section.sub]` headers, `key = value` pairs with
+//! string / integer / float / boolean / flat-array values, `#` comments.
+//! Keys are exposed flattened as `"section.sub.key"`.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A flat view of a parsed document: dotted path → value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            entries.insert(format!("{prefix}{key}"), val);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    /// Keys that live directly under `section.` (one level).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{section}.");
+        self.entries.keys().filter_map(move |k| k.strip_prefix(&want))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.rfind('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas not inside quotes (arrays are flat, so no nesting).
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # machine preset
+            title = "paper"
+            [ssd]
+            read_bw = "520MB"   # string, parsed later by units
+            iops = 98000
+            latency_us = 90.0
+            [memory]
+            enforce = true
+            sweep = [32, 64, 128]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("paper"));
+        assert_eq!(doc.get_str("ssd.read_bw"), Some("520MB"));
+        assert_eq!(doc.get_i64("ssd.iops"), Some(98000));
+        assert_eq!(doc.get_f64("ssd.latency_us"), Some(90.0));
+        assert_eq!(doc.get_bool("memory.enforce"), Some(true));
+        match doc.get("memory.sweep").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 3),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn comments_and_errors() {
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("keyonly").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        let doc = Doc::parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a # not comment"));
+    }
+
+    #[test]
+    fn section_keys_iterates() {
+        let doc = Doc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.section_keys("a").collect();
+        assert_eq!(keys, vec!["x", "y"]);
+    }
+}

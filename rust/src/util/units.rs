@@ -1,0 +1,122 @@
+//! Byte- and time-unit parsing and human-readable formatting used by the
+//! config system, the CLI and every report table.
+
+use std::time::Duration;
+
+/// Parse a byte count: `"128MiB"`, `"32G"`, `"512"`, `"4k"`. Decimal (k/M/G)
+/// multipliers are powers of 1000; binary (`Ki`/`Mi`/`Gi`) are powers of 1024.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let split = s.find(|c: char| !(c.is_ascii_digit() || c == '.')).unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    let num: f64 = num.parse().map_err(|_| format!("bad byte count {s:?}"))?;
+    let suffix = suffix.trim().trim_end_matches(['b', 'B']);
+    let mult: u64 = match suffix.to_ascii_lowercase().as_str() {
+        "" => 1,
+        "k" => 1000,
+        "m" => 1000_u64.pow(2),
+        "g" => 1000_u64.pow(3),
+        "t" => 1000_u64.pow(4),
+        "ki" => 1024,
+        "mi" => 1024_u64.pow(2),
+        "gi" => 1024_u64.pow(3),
+        "ti" => 1024_u64.pow(4),
+        other => return Err(format!("unknown byte suffix {other:?} in {s:?}")),
+    };
+    Ok((num * mult as f64).round() as u64)
+}
+
+/// Parse a duration: `"90us"`, `"1.5ms"`, `"3s"`, `"2m"`.
+pub fn parse_duration(s: &str) -> Result<Duration, String> {
+    let s = s.trim();
+    let split = s.find(|c: char| !(c.is_ascii_digit() || c == '.')).unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    let num: f64 = num.parse().map_err(|_| format!("bad duration {s:?}"))?;
+    let secs = match suffix.trim() {
+        "ns" => num * 1e-9,
+        "us" | "µs" => num * 1e-6,
+        "ms" => num * 1e-3,
+        "" | "s" => num,
+        "m" | "min" => num * 60.0,
+        "h" => num * 3600.0,
+        other => return Err(format!("unknown time suffix {other:?} in {s:?}")),
+    };
+    Ok(Duration::from_secs_f64(secs))
+}
+
+/// Format bytes with binary units: `"1.50 MiB"`.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i + 1 < UNITS.len() {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[i])
+    }
+}
+
+/// Format a duration adaptively: `"91.0us"`, `"12.3ms"`, `"4.56s"`.
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+/// Format a rate in bytes/second: `"520.0 MB/s"` (decimal units, like fio).
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    const UNITS: [&str; 4] = ["B/s", "KB/s", "MB/s", "GB/s"];
+    let mut v = bytes_per_sec;
+    let mut i = 0;
+    while v >= 1000.0 && i + 1 < UNITS.len() {
+        v /= 1000.0;
+        i += 1;
+    }
+    format!("{v:.1} {}", UNITS[i])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert_eq!(parse_bytes("4k").unwrap(), 4000);
+        assert_eq!(parse_bytes("4KiB").unwrap(), 4096);
+        assert_eq!(parse_bytes("128MiB").unwrap(), 128 << 20);
+        assert_eq!(parse_bytes("32GiB").unwrap(), 32 << 30);
+        assert_eq!(parse_bytes("1.5Ki").unwrap(), 1536);
+        assert!(parse_bytes("12xx").is_err());
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(parse_duration("90us").unwrap(), Duration::from_micros(90));
+        assert_eq!(parse_duration("1.5ms").unwrap(), Duration::from_micros(1500));
+        assert_eq!(parse_duration("3s").unwrap(), Duration::from_secs(3));
+        assert!(parse_duration("3parsecs").is_err());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_dur(Duration::from_micros(91)), "91.0us");
+        assert_eq!(fmt_dur(Duration::from_millis(12)), "12.0ms");
+        assert_eq!(fmt_rate(520e6), "520.0 MB/s");
+    }
+}

@@ -1,0 +1,167 @@
+//! Property tests on the feature-buffer manager (paper Fig 6/Algorithm 1):
+//! randomized begin/publish/release schedules across concurrent extractors
+//! must preserve every structural invariant and never lose or duplicate
+//! data.
+
+use gnndrive::membuf::FeatureBuffer;
+use gnndrive::storage::DeviceMemory;
+use gnndrive::util::prop::{self, Config};
+use gnndrive::util::rng::Pcg;
+use std::sync::Arc;
+
+fn make_fb(slots: usize, dim: usize) -> FeatureBuffer {
+    let dev = DeviceMemory::new(1 << 30);
+    FeatureBuffer::in_device(&dev, slots, dim).unwrap()
+}
+
+#[test]
+fn random_schedules_preserve_invariants() {
+    // A schedule is a list of batches (node sets); each batch goes through
+    // begin -> publish(to_load) -> gather -> release, with interleavings
+    // created by keeping several batches open at once.
+    #[derive(Clone, Debug)]
+    struct Schedule {
+        slots: usize,
+        batches: Vec<Vec<u32>>,
+    }
+    prop::check(
+        Config::default().cases(60).sizes(2, 24),
+        "feature buffer invariants under random schedules",
+        |rng: &mut Pcg, size| {
+            let batch_len = 1 + rng.below(8) as usize;
+            // Slots must fit the max concurrently-open batches (3) per the
+            // engine's sizing rule.
+            let slots = 3 * batch_len + 1 + rng.below(8) as usize;
+            let batches = (0..size)
+                .map(|_| (0..batch_len).map(|_| rng.below(40)).collect::<Vec<u32>>())
+                .map(|mut b| {
+                    b.sort_unstable();
+                    b.dedup();
+                    b
+                })
+                .filter(|b| !b.is_empty())
+                .collect();
+            Schedule { slots, batches }
+        },
+        |s| {
+            prop::shrink_vec(&s.batches)
+                .into_iter()
+                .map(|smaller| Schedule { slots: s.slots, batches: smaller })
+                .collect()
+        },
+        |s| {
+            if s.batches.is_empty() {
+                return Ok(());
+            }
+            let fb = make_fb(s.slots, 4);
+            // Keep up to 2 batches in flight (like extractors + train queue).
+            let mut open: Vec<usize> = Vec::new();
+            for (bi, batch) in s.batches.iter().enumerate() {
+                let plan = fb.begin_batch(batch);
+                for &(node, slot) in &plan.to_load {
+                    let row: Vec<f32> = (0..4).map(|j| (node * 10 + j) as f32).collect();
+                    fb.publish(node, slot, &row);
+                }
+                fb.wait_valid(&plan.wait_list);
+                // Verify gathered data matches node identity (no slot mixups).
+                let mut out = vec![0f32; batch.len() * 4];
+                fb.gather(&plan.aliases, &mut out);
+                for (i, &node) in batch.iter().enumerate() {
+                    if out[i * 4] != (node * 10) as f32 {
+                        return Err(format!(
+                            "batch {bi}: node {node} row corrupted ({})",
+                            out[i * 4]
+                        ));
+                    }
+                }
+                open.push(bi);
+                fb.check_invariants()?;
+                if open.len() > 2 {
+                    let done_bi = open.remove(0);
+                    fb.release(&s.batches[done_bi]);
+                    fb.check_invariants()?;
+                }
+            }
+            for bi in open {
+                fb.release(&s.batches[bi]);
+            }
+            fb.check_invariants()?;
+            // Everything released -> standby holds all slots.
+            if fb.standby_len() != s.slots {
+                return Err(format!(
+                    "standby {} != slots {} after full release",
+                    fb.standby_len(),
+                    s.slots
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn concurrent_extractors_never_duplicate_loads() {
+    // N threads extract overlapping node sets; total loads across all
+    // threads must equal the number of distinct nodes (each row fetched
+    // once — the sharing property of the wait list).
+    prop::check_noshrink(
+        Config::default().cases(12).sizes(4, 32),
+        "no duplicate loads across concurrent extractors",
+        |rng: &mut Pcg, size| {
+            let sets: Vec<Vec<u32>> = (0..3)
+                .map(|_| {
+                    let mut v: Vec<u32> = (0..size).map(|_| rng.below(64)).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect();
+            sets
+        },
+        |sets| {
+            let fb = Arc::new(make_fb(512, 2));
+            let handles: Vec<_> = sets
+                .iter()
+                .cloned()
+                .map(|set| {
+                    let fb = fb.clone();
+                    std::thread::spawn(move || {
+                        let plan = fb.begin_batch(&set);
+                        for &(node, slot) in &plan.to_load {
+                            fb.publish(node, slot, &[node as f32, 0.0]);
+                        }
+                        fb.wait_valid(&plan.wait_list);
+                        (set, plan.aliases)
+                    })
+                })
+                .collect();
+            let results: Vec<(Vec<u32>, Vec<i32>)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            let mut distinct: Vec<u32> =
+                results.iter().flat_map(|(s, _)| s.iter().copied()).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            let (_, _, _, loads) = fb.stats();
+            if loads as usize != distinct.len() {
+                return Err(format!("{} loads for {} distinct nodes", loads, distinct.len()));
+            }
+            // All threads agree on aliases for shared nodes.
+            for (set_a, al_a) in &results {
+                for (set_b, al_b) in &results {
+                    for (i, n) in set_a.iter().enumerate() {
+                        if let Some(j) = set_b.iter().position(|m| m == n) {
+                            if al_a[i] != al_b[j] {
+                                return Err(format!("node {n} has two aliases"));
+                            }
+                        }
+                    }
+                }
+            }
+            for (set, _) in &results {
+                fb.release(set);
+            }
+            fb.check_invariants()?;
+            Ok(())
+        },
+    );
+}

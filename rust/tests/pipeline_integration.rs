@@ -1,0 +1,178 @@
+//! Integration tests over the full GNNDrive pipeline: determinism, data
+//! integrity through the stages, reordering behaviour, backpressure, and
+//! the CPU variant's host-memory coupling.
+
+use gnndrive::baselines::{shared_caps, sim_trainer};
+use gnndrive::config::{Machine, MachineConfig, TrainConfig};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::pipeline::{GnnDrive, Variant};
+use gnndrive::runtime::simcompute::ModelKind;
+use gnndrive::sample::{EpochPlan, Sampler};
+use gnndrive::sim::Clock;
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg() -> TrainConfig {
+    TrainConfig {
+        batch_size: 64,
+        fanouts: vec![4, 4],
+        batches_per_epoch: Some(5),
+        samplers: 2,
+        extractors: 2,
+        io_depth: 32,
+        ..TrainConfig::default()
+    }
+}
+
+fn engine<'a>(machine: &'a Machine, ds: &'a Dataset, cfg: &TrainConfig) -> GnnDrive<'a> {
+    let trainer = sim_trainer(machine, ds, cfg, ModelKind::GraphSage, Variant::Gpu, 64);
+    GnnDrive::new(machine, ds, cfg.clone(), Variant::Gpu, trainer).unwrap()
+}
+
+#[test]
+fn pipeline_extracts_exactly_the_sampled_rows() {
+    let _s = serial();
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let cfg = cfg();
+    let e = engine(&machine, &ds, &cfg);
+    machine.storage.direct_stats().useful_bytes.store(0, std::sync::atomic::Ordering::Relaxed);
+    let stats = e.run_epoch(0);
+    // Loads through the feature buffer equal direct-I/O requests (each
+    // node's row fetched exactly once thanks to cross-extractor sharing).
+    let (_, _, _, loads) = e.feature_buffer().stats();
+    let reqs = machine
+        .storage
+        .direct_stats()
+        .requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(loads, reqs, "every load is exactly one direct I/O request");
+    assert!(stats.batches == 5);
+}
+
+#[test]
+fn sampling_is_deterministic_across_engines() {
+    let _s = serial();
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    // Two identical samplers over the same plan produce identical batches.
+    let ids = &ds.train_ids;
+    let plan_a = EpochPlan::new(ids, 32, 9, 0, Some(4));
+    let plan_b = EpochPlan::new(ids, 32, 9, 0, Some(4));
+    let s = Sampler::new(vec![3, 3], 42);
+    while let (Some((ia, a)), Some((ib, b))) = (plan_a.claim(), plan_b.claim()) {
+        assert_eq!(ia, ib);
+        assert_eq!(a, b);
+        let sub_a = s.sample_batch(&ds, &machine.storage, ia, a);
+        let sub_b = s.sample_batch(&ds, &machine.storage, ib, b);
+        assert_eq!(sub_a.nodes, sub_b.nodes);
+        assert_eq!(sub_a.labels, sub_b.labels);
+    }
+}
+
+#[test]
+fn reordering_occurs_with_parallel_stages_but_all_batches_train() {
+    let _s = serial();
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let mut c = cfg();
+    c.batches_per_epoch = Some(12);
+    c.samplers = 3;
+    c.extractors = 3;
+    let e = engine(&machine, &ds, &c);
+    let expected = ds.train_ids.len().div_ceil(c.batch_size).min(12);
+    let stats = e.run_epoch(0);
+    assert_eq!(stats.batches, expected, "no batch may be lost to reordering");
+    assert_eq!(stats.train.steps, expected);
+    // (Inversions usually occur but are not guaranteed on 1 core; we only
+    // require correctness, and surface the count for the curious.)
+    eprintln!("observed {} inversions", stats.reorder_inversions);
+}
+
+#[test]
+fn cpu_variant_feature_buffer_charges_host_memory() {
+    let _s = serial();
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let c = cfg();
+    let before = machine.host.reserved();
+    let trainer = sim_trainer(&machine, &ds, &c, ModelKind::GraphSage, Variant::Cpu, 64);
+    let e = GnnDrive::new(&machine, &ds, c, Variant::Cpu, trainer).unwrap();
+    let during = machine.host.reserved();
+    assert!(
+        during > before + (1 << 10),
+        "CPU variant must hold the feature buffer in host memory"
+    );
+    assert_eq!(machine.devices[0].reserved(), 0);
+    drop(e);
+    assert_eq!(machine.host.reserved(), before);
+}
+
+#[test]
+fn multi_epoch_runs_are_stable_and_release_slots() {
+    let _s = serial();
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let c = cfg();
+    let e = engine(&machine, &ds, &c);
+    for epoch in 0..3 {
+        let st = e.run_epoch(epoch);
+        assert_eq!(st.batches, 5, "epoch {epoch}");
+        e.feature_buffer().check_invariants().unwrap();
+    }
+    // After every epoch finishes, all slots have zero refs.
+    assert_eq!(e.feature_buffer().standby_len(), {
+        // total slots = groups * cap_L
+        let groups = c.train_queue_cap + c.extractors + 1;
+        groups * e.caps().last().unwrap()
+    });
+}
+
+#[test]
+fn enforce_order_trains_in_batch_id_order() {
+    let _s = serial();
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let mut c = cfg();
+    c.enforce_order = true;
+    c.samplers = 3;
+    c.extractors = 3;
+    c.batches_per_epoch = Some(8);
+    let e = engine(&machine, &ds, &c);
+    let expected = ds.train_ids.len().div_ceil(c.batch_size).min(8);
+    let st = e.run_epoch(0);
+    assert_eq!(st.batches, expected);
+    assert_eq!(st.reorder_inversions, 0, "in-order mode must see zero inversions");
+}
+
+#[test]
+fn padded_caps_respected_under_truncation() {
+    let _s = serial();
+    // CPU variant with a small host budget → caps truncate below the
+    // no-dedup worst case, but shapes stay exact and nothing crashes.
+    let machine = Machine::new(
+        MachineConfig::paper().with_host_mem(16 << 20),
+        Clock::new(0.05),
+    );
+    let mut spec = DatasetSpec::unit_test();
+    spec.nodes = 30_000; // big enough that sampled prefixes exceed the caps
+    let ds = Dataset::materialize(&spec, &machine).unwrap();
+    let mut c = cfg();
+    c.batch_size = 200;
+    c.fanouts = vec![10, 10];
+    let caps = shared_caps(&machine, &ds, &c, Variant::Cpu);
+    let worst = 200 * (1 + 10 + 110);
+    assert!(
+        *caps.last().unwrap() < worst,
+        "caps should be squeezed below worst {worst}: {caps:?}"
+    );
+    let trainer = sim_trainer(&machine, &ds, &c, ModelKind::GraphSage, Variant::Cpu, 64);
+    let expected = ds.train_ids.len().div_ceil(200).min(5);
+    let e = GnnDrive::new(&machine, &ds, c, Variant::Cpu, trainer).unwrap();
+    let st = e.run_epoch(0);
+    assert_eq!(st.batches, expected);
+    assert!(st.truncated_edges > 0, "expected truncation at this budget");
+}
