@@ -1,39 +1,202 @@
 //! `cargo bench --bench micro_hotpath` — microbenchmarks of the coordinator
-//! hot-path structures (mapping table / standby list, bounded queues, LRU,
-//! sampler CPU, feature-row synthesis). These back the §Perf iteration log
-//! in EXPERIMENTS.md.
+//! hot-path structures (feature-buffer bookkeeping under contention, bounded
+//! queues, LRU, sampler CPU, feature-row synthesis). These back the §Perf
+//! iteration log in EXPERIMENTS.md.
+//!
+//! The feature-buffer section runs the same begin+publish+release workload
+//! against the sharded [`FeatureBuffer`] and the preserved single-mutex
+//! baseline, single-threaded and with 4/8 concurrent extractor threads, and
+//! appends machine-readable results to `BENCH_hotpath.json` so future PRs
+//! can track the contention numbers.
 
 use gnndrive::bench::{measure, per_op};
 use gnndrive::config::{Machine, MachineConfig};
 use gnndrive::graph::{Dataset, DatasetSpec};
-use gnndrive::membuf::FeatureBuffer;
+use gnndrive::membuf::{FeatureBuffer, SingleMutexFeatureBuffer};
 use gnndrive::sample::Sampler;
 use gnndrive::sim::queue::BoundedQueue;
 use gnndrive::sim::Clock;
 use gnndrive::storage::DeviceMemory;
+use gnndrive::util::json::Json;
 use gnndrive::util::lru::Lru;
 use gnndrive::util::rng::Pcg;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+const DIM: usize = 16;
+const ROW: [f32; DIM] = [0.5; DIM];
+
+/// The coordinator workload: plan a batch, publish every planned load,
+/// release. Implemented for both buffer generations so the bench bodies are
+/// shared.
+trait Coordinator: Sync {
+    fn run_batch(&self, batch: &[u32]);
+}
+
+impl Coordinator for FeatureBuffer {
+    fn run_batch(&self, batch: &[u32]) {
+        let plan = self.begin_batch(batch);
+        for &(node, slot) in &plan.to_load {
+            self.publish(node, slot, &ROW);
+        }
+        self.release(batch);
+    }
+}
+
+impl Coordinator for SingleMutexFeatureBuffer {
+    fn run_batch(&self, batch: &[u32]) {
+        let plan = self.begin_batch(batch);
+        for &(node, slot) in &plan.to_load {
+            self.publish(node, slot, &ROW);
+        }
+        self.release(batch);
+    }
+}
+
+/// One record for stdout + BENCH_hotpath.json.
+struct Record {
+    name: String,
+    threads: usize,
+    per_op_ns: f64,
+    mean_ns: f64,
+    min_ns: f64,
+    ops: u64,
+}
+
+/// Convert a harness `Measurement` into a single-threaded record; `ops` is
+/// the number of operations one iteration performs (the per-op divisor).
+fn record_of(m: &gnndrive::bench::Measurement, ops: u64) -> Record {
+    Record {
+        name: m.name.clone(),
+        threads: 1,
+        per_op_ns: per_op(m, ops).as_nanos() as f64,
+        mean_ns: m.mean.as_nanos() as f64,
+        min_ns: m.min.as_nanos() as f64,
+        ops,
+    }
+}
+
+impl Record {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("threads".into(), Json::Num(self.threads as f64));
+        m.insert("per_op_ns".into(), Json::Num(self.per_op_ns));
+        m.insert("mean_ns".into(), Json::Num(self.mean_ns));
+        m.insert("min_ns".into(), Json::Num(self.min_ns));
+        m.insert("ops".into(), Json::Num(self.ops as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Per-thread node-id stream: mostly disjoint ranges (each extractor works
+/// its own region of the graph) with enough reuse for hits and steals.
+fn batch_for(thread: usize, iter: u64, batch_len: usize, id_space: u32) -> Vec<u32> {
+    let mut rng = Pcg::with_stream(0xB0B + thread as u64, iter);
+    (0..batch_len)
+        .map(|_| thread as u32 * id_space + rng.below(id_space))
+        .collect()
+}
+
+/// Run `iters` batches of `batch_len` on each of `threads` threads against
+/// one shared coordinator; repeat `reps` times and keep mean + best.
+fn bench_coordinator<C: Coordinator>(
+    name: &str,
+    fb: &C,
+    threads: usize,
+    iters: u64,
+    batch_len: usize,
+    reps: usize,
+) -> Record {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let barrier = Barrier::new(threads);
+        let elapsed = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let barrier = &barrier;
+                    s.spawn(move || {
+                        // Generate the workload outside the timed region so
+                        // RNG/alloc cost does not dilute the measured ratio.
+                        let batches: Vec<Vec<u32>> = (0..iters)
+                            .map(|i| batch_for(t, i, batch_len, 100_000))
+                            .collect();
+                        barrier.wait();
+                        let t0 = Instant::now();
+                        for batch in &batches {
+                            fb.run_batch(batch);
+                        }
+                        t0.elapsed()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).max().unwrap()
+        });
+        samples.push(elapsed);
+    }
+    let ops = threads as u64 * iters * batch_len as u64;
+    let mean = samples.iter().sum::<Duration>() / reps as u32;
+    let min = *samples.iter().min().unwrap();
+    let rec = Record {
+        name: name.to_string(),
+        threads,
+        per_op_ns: mean.as_nanos() as f64 / ops as f64,
+        mean_ns: mean.as_nanos() as f64,
+        min_ns: min.as_nanos() as f64,
+        ops,
+    };
+    println!(
+        "{:<52} {:>8.1} ns/op  (mean {:>9?}, best {:>9?}, {} threads)",
+        rec.name,
+        rec.per_op_ns,
+        mean,
+        min,
+        threads
+    );
+    rec
+}
 
 fn main() {
     println!("# micro_hotpath — coordinator hot-path microbenchmarks\n");
+    let mut records: Vec<Record> = Vec::new();
 
-    // Feature-buffer begin/release cycle (Algorithm 1 bookkeeping, no I/O).
+    // Feature-buffer begin+publish+release (Algorithm 1 bookkeeping, no
+    // I/O): sharded coordinator vs the single-mutex baseline, 1/4/8
+    // concurrent extractor threads on one shared buffer.
     {
-        let dev = DeviceMemory::new(1 << 30);
-        let fb = FeatureBuffer::in_device(&dev, 64 * 1024, 128).unwrap();
-        let mut rng = Pcg::new(1);
-        let batch: Vec<u32> = (0..4096).map(|_| rng.below(1 << 20)).collect();
-        let m = measure("feature_buffer begin+release (4096 nodes)", 3, 30, || {
-            let plan = fb.begin_batch(&batch);
-            // Publish a few so future batches exercise the hit path too.
-            for &(node, slot) in plan.to_load.iter().take(64) {
-                fb.publish(node, slot, &[0.0; 128]);
-            }
-            fb.release(&batch);
-        });
-        println!("{}", m.row());
-        println!("  -> {:?}/node", per_op(&m, 4096));
+        const SLOTS: usize = 16 * 1024;
+        const BATCH: usize = 1024;
+        const ITERS: u64 = 40;
+        println!("## feature buffer: sharded vs single-mutex baseline");
+        for &threads in &[1usize, 4, 8] {
+            let dev = DeviceMemory::new(1 << 30);
+            let sharded = FeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
+            let r_sharded = bench_coordinator(
+                &format!("sharded begin+publish+release t{threads}"),
+                &sharded,
+                threads,
+                ITERS,
+                BATCH,
+                3,
+            );
+            let baseline = SingleMutexFeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
+            let r_base = bench_coordinator(
+                &format!("single-mutex begin+publish+release t{threads}"),
+                &baseline,
+                threads,
+                ITERS,
+                BATCH,
+                3,
+            );
+            println!(
+                "  -> t{threads} speedup: {:.2}x per-op (shards={})\n",
+                r_base.per_op_ns / r_sharded.per_op_ns,
+                sharded.shard_count(),
+            );
+            records.push(r_sharded);
+            records.push(r_base);
+        }
     }
 
     // Standby-list LRU ops.
@@ -54,6 +217,7 @@ fn main() {
         });
         println!("{}", m.row());
         println!("  -> {:?}/op", per_op(&m, 3 * 1024));
+        records.push(record_of(&m, 3 * 1024));
     }
 
     // Bounded queue round trip (the three pipeline queues are ID-only).
@@ -69,6 +233,7 @@ fn main() {
         });
         println!("{}", m.row());
         println!("  -> {:?}/op", per_op(&m, 2 * 1024));
+        records.push(record_of(&m, 2 * 1024));
     }
 
     // Sampler CPU cost (warm page cache → pure coordinator work).
@@ -88,6 +253,7 @@ fn main() {
             b += 1;
         });
         println!("{}", m.row());
+        records.push(record_of(&m, 1)); // one sampled batch per iteration
     }
 
     // Procedural feature-row synthesis (backing-store hot loop).
@@ -104,5 +270,19 @@ fn main() {
         });
         println!("{}", m.row());
         println!("  -> {:?}/row", per_op(&m, 256));
+        records.push(record_of(&m, 256));
+    }
+
+    // Machine-readable sidecar for perf tracking across PRs: one JSON array
+    // per run, appended as a line (JSONL) so earlier runs are preserved.
+    let line = Json::Arr(records.iter().map(Record::json).collect()).to_string() + "\n";
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_hotpath.json")
+        .and_then(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+    match appended {
+        Ok(()) => println!("\nappended {} records to BENCH_hotpath.json", records.len()),
+        Err(e) => eprintln!("\ncould not append to BENCH_hotpath.json: {e}"),
     }
 }

@@ -93,7 +93,6 @@ impl Extractor {
     pub fn extract(&self, nodes: &[u32]) -> Vec<i32> {
         let plan = self.fb.begin_batch(nodes);
         let row_bytes = self.staging.row_bytes;
-        let dim = self.fb.dim;
 
         if !self.opts.asynchronous {
             // Ablation: synchronous extraction — one blocking read + one
@@ -106,17 +105,12 @@ impl Extractor {
                 } else {
                     self.storage.read_buffered(&self.features.file, off, &mut buf);
                 }
-                let row: Vec<f32> = buf
-                    .chunks_exact(4)
-                    .take(dim)
-                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                    .collect();
                 if let ExtractTarget::Device(pcie) = &self.target {
                     pcie.transfer_sync(row_bytes);
                 }
-                self.fb.publish(node, slot, &row);
+                self.fb.publish_le_bytes(node, slot, &buf);
             }
-            self.fb.wait_valid(&plan.wait_list);
+            self.fb.wait_plan(&plan);
             return plan.aliases;
         }
 
@@ -151,14 +145,14 @@ impl Extractor {
                         let fb = self.fb.clone();
                         let latch = latch.clone();
                         pcie.transfer_async(row_bytes, move || {
-                            let row = decode_row(&staged, dim);
-                            fb.publish(node, slot, &row);
+                            // Decode straight from the staging bytes into
+                            // the arena row — no intermediate Vec<f32>.
+                            fb.publish_le_bytes(node, slot, &staged.lock().unwrap());
                             latch.count_down();
                         });
                     }
                     ExtractTarget::Host => {
-                        let row = decode_row(&staged, dim);
-                        self.fb.publish(node, slot, &row);
+                        self.fb.publish_le_bytes(node, slot, &staged.lock().unwrap());
                         latch.count_down();
                     }
                 }
@@ -168,19 +162,11 @@ impl Extractor {
             latch.wait();
         }
 
-        // Wait for nodes being extracted by peer extractors.
-        self.fb.wait_valid(&plan.wait_list);
+        // Wait for nodes being extracted by peer extractors (pre-resolved
+        // tickets: no shard locks on the wait path).
+        self.fb.wait_plan(&plan);
         plan.aliases
     }
-}
-
-fn decode_row(buf: &crate::storage::uring::IoBuf, dim: usize) -> Vec<f32> {
-    let bytes = buf.lock().unwrap();
-    bytes
-        .chunks_exact(4)
-        .take(dim)
-        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-        .collect()
 }
 
 #[cfg(test)]

@@ -1,28 +1,48 @@
-//! GNNDrive's feature-buffer manager (paper §4.2, Fig 6, Algorithm 1).
+//! GNNDrive's feature-buffer manager (paper §4.2, Fig 6, Algorithm 1),
+//! re-architected as a sharded, lock-minimized coordinator.
 //!
 //! The feature buffer lives in device memory (host memory for CPU-based
-//! training) and holds one slot per extracted node row. Four structures
-//! manage it, exactly as in the paper:
+//! training) and holds one slot per extracted node row. The paper's four
+//! structures are all here, but arranged for concurrency:
 //!
-//! * **mapping table** — node → (slot index, reference count, valid bit);
-//! * **reverse mapping** — slot → node (or −1), to identify a slot's tenant;
-//! * **standby list** — LRU of slots with zero references: free slots plus
-//!   retired-but-reusable ones (inter-batch locality);
+//! * **mapping table** — node → (slot, generation); *sharded by node-id
+//!   hash* so concurrent extractors planning different batches take
+//!   different locks (`begin_batch` groups its node list per shard and takes
+//!   each shard mutex at most once on the fast path);
+//! * **reverse mapping** — slot → node (or −1), per-slot atomics;
+//! * **standby list** — LRU of zero-reference slots, one list per shard
+//!   (a freed slot parks in its tenant node's shard; a dry shard steals the
+//!   LRU slot of a peer shard — approximate global LRU, exact within a
+//!   shard, and exactly the old global order when there is one shard);
 //! * **node alias list** — per-batch slot indexes handed to the trainer.
 //!
-//! State machine per entry: `(slot=-1, valid=0)` absent → `(slot=s,
-//! valid=0, ref>0)` being extracted → `(slot=s, valid=1)` ready; a ready
-//! node with `ref=0` sits in the standby list and can be either *reused*
-//! (hit) or *stolen* (its slot reassigned, entry invalidated). Extractors
-//! that find a node mid-extraction by a peer alias its slot, join a wait
-//! list, and re-check validity at the end (`wait_valid`) — sharing I/O
-//! instead of duplicating it.
+//! Row payloads live in one contiguous flat arena instead of
+//! `Vec<Mutex<Box<[f32]>>>`; a packed per-slot `AtomicU64`
+//! (`refcount | valid | generation`, see [`super::slot_state`]) carries the
+//! slot's lifecycle. `publish` is write-row + release-store of the valid bit
+//! + targeted wakeup; `gather` is an acquire load + `copy_nonoverlapping`
+//! per row — no per-row locks anywhere. The old condvar broadcasts
+//! (`notify_all` on every release and publish) are replaced by
+//! [`EventCount`]s whose signal side is one atomic load when nobody waits.
+//!
+//! State machine per entry is unchanged from the paper: `(slot=-1,
+//! valid=0)` absent → `(slot=s, valid=0, ref>0)` being extracted →
+//! `(slot=s, valid=1)` ready; a ready node with `ref=0` sits in a standby
+//! list and can be either *reused* (hit) or *stolen* (slot reassigned,
+//! generation bumped, entry invalidated). Extractors that find a node
+//! mid-extraction by a peer alias its slot, join the wait list, and re-check
+//! validity at the end (`wait_valid`/`wait_plan`) — sharing I/O instead of
+//! duplicating it.
+//!
+//! The pre-shard single-mutex coordinator is preserved verbatim as
+//! [`super::single_mutex::SingleMutexFeatureBuffer`] so
+//! `benches/micro_hotpath.rs` can measure the contention win against it.
 
+use super::shard::{EventCount, MapEntry, Shard, ShardState};
+use super::slot_state::{self, SlotStates};
 use crate::storage::{DeviceMemory, HostMemory, Reservation};
-use crate::util::lru::Lru;
-use crate::util::fxhash::FxHashMap;
 use std::collections::HashMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Where the buffer's memory is charged.
 pub enum BufferHome {
@@ -30,24 +50,18 @@ pub enum BufferHome {
     Host(Reservation),
 }
 
-#[derive(Clone, Copy, Debug, Default)]
-struct MapEntry {
-    slot: i32,
-    ref_count: u32,
-    valid: bool,
-}
+/// Wait-group fan-out for publish wakeups (power of two; a waiter parks on
+/// `slot % WAIT_GROUPS`, so a publish wakes only the waiters hashed to its
+/// group instead of every waiter in the system).
+const WAIT_GROUPS: usize = 64;
 
-struct BufState {
-    map: FxHashMap<u32, MapEntry>,
-    /// slot → node id or -1.
-    reverse: Vec<i64>,
-    /// Zero-reference slots, LRU order (free slots enter via `release`).
-    standby: Lru<u32>,
-    /// Diagnostics.
-    hits: u64,
-    shared: u64,
-    steals: u64,
-    loads: u64,
+/// Stale-handle ticket for one awaited slot: resolved once at plan time so
+/// `wait_plan` never re-locks a shard.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitHandle {
+    pub node: u32,
+    pub slot: u32,
+    pub generation: u32,
 }
 
 /// The extraction plan for one mini-batch (outcome of Algorithm 1 lines
@@ -60,20 +74,93 @@ pub struct BatchPlan {
     pub to_load: Vec<(u32, u32)>,
     /// Nodes being extracted by peer extractors; wait for their valid bits.
     pub wait_list: Vec<u32>,
+    /// Pre-resolved (slot, generation) tickets for `wait_list` — lets
+    /// `wait_plan` spin on the packed slot words without shard locks.
+    pub wait_handles: Vec<WaitHandle>,
+}
+
+/// Flat row arena. Rows are disjoint and single-writer by protocol (only
+/// the extractor that planned a slot's load publishes into it, and readers
+/// are ordered behind the valid bit), so access goes through raw pointers —
+/// no per-row mutex, no `&mut` aliasing over the whole buffer.
+struct Arena {
+    base: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for Arena {}
+unsafe impl Sync for Arena {}
+
+impl Arena {
+    fn new(len: usize) -> Self {
+        let boxed = vec![0f32; len].into_boxed_slice();
+        Arena { base: Box::into_raw(boxed) as *mut f32, len }
+    }
+
+    #[inline]
+    fn row(&self, slot: usize, dim: usize) -> *mut f32 {
+        debug_assert!((slot + 1) * dim <= self.len);
+        // Provenance: `base` came from Box::into_raw over the whole arena.
+        unsafe { self.base.add(slot * dim) }
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.base, self.len)));
+        }
+    }
+}
+
+/// Outcome of resolving one node inside its shard.
+enum Resolved {
+    /// Ready in the buffer (hit): alias this slot.
+    Alias(u32),
+    /// Being extracted by a peer: alias + wait for its valid bit.
+    Wait(u32, u32),
+    /// Newly allocated: caller must load the row, then publish.
+    Load(u32),
+    /// Shard has no standby slot; take the slow allocation path.
+    Dry,
 }
 
 pub struct FeatureBuffer {
     pub n_slots: usize,
     pub dim: usize,
-    state: Mutex<BufState>,
-    /// Signalled when slots enter the standby list.
-    slot_freed: Condvar,
-    /// Signalled when any node's valid bit is set.
-    valid_set: Condvar,
-    /// Slot payload. One mutex per slot: writers are PCIe-completion
-    /// callbacks, readers are the trainer; contention is per-row and brief.
-    data: Vec<Mutex<Box<[f32]>>>,
+    shards: Vec<Shard>,
+    /// `shards.len() - 1`; shard count is a power of two.
+    shard_mask: usize,
+    states: SlotStates,
+    /// slot → tenant node id or -1.
+    reverse: Vec<AtomicI64>,
+    arena: Arena,
+    /// Signalled when slots enter a standby list and allocators are waiting.
+    free_event: EventCount,
+    /// Publish wakeups, fanned out by `slot % WAIT_GROUPS`.
+    valid_events: Vec<EventCount>,
+    /// Diagnostics.
+    hits: AtomicU64,
+    shared: AtomicU64,
+    steals: AtomicU64,
+    loads: AtomicU64,
     _home: BufferHome,
+}
+
+/// Largest power of two ≤ `x` (x ≥ 1).
+fn floor_pow2(x: usize) -> usize {
+    1 << (usize::BITS - 1 - x.leading_zeros())
+}
+
+/// Shard count policy: tiny buffers (unit tests, degenerate configs) get one
+/// shard — making the coordinator *exactly* the paper's global-LRU machine —
+/// while production-sized buffers get up to 16 shards with ≥64 slots each.
+fn shard_count_for(n_slots: usize) -> usize {
+    if n_slots < 256 {
+        1
+    } else {
+        floor_pow2((n_slots / 64).min(16))
+    }
 }
 
 impl FeatureBuffer {
@@ -100,207 +187,529 @@ impl FeatureBuffer {
     }
 
     fn build(n_slots: usize, dim: usize, home: BufferHome) -> Self {
-        let mut standby = Lru::new();
-        for s in 0..n_slots as u32 {
-            standby.insert(s);
+        let n_shards = shard_count_for(n_slots);
+        let shards: Vec<Shard> =
+            (0..n_shards).map(|_| Shard::new(n_slots / n_shards + 1)).collect();
+        // Distribute the free slots round-robin; within a shard the insert
+        // order is ascending, so slot `s` is consumed before slot `s + n`.
+        for (sx, shard) in shards.iter().enumerate() {
+            let mut st = shard.state.lock().unwrap();
+            for s in (sx..n_slots).step_by(n_shards) {
+                st.standby.insert(s as u32);
+            }
         }
-        // Free slots should be consumed oldest-first; insertion above leaves
-        // slot 0 at the LRU end… insert order: 0 first → 0 is least recent. ✓
-        let data = (0..n_slots)
-            .map(|_| Mutex::new(vec![0f32; dim].into_boxed_slice()))
-            .collect();
         FeatureBuffer {
             n_slots,
             dim,
-            state: Mutex::new(BufState {
-                map: FxHashMap::default(),
-                reverse: vec![-1; n_slots],
-                standby,
-                hits: 0,
-                shared: 0,
-                steals: 0,
-                loads: 0,
-            }),
-            slot_freed: Condvar::new(),
-            valid_set: Condvar::new(),
-            data,
+            shard_mask: n_shards - 1,
+            shards,
+            states: SlotStates::new(n_slots),
+            reverse: (0..n_slots).map(|_| AtomicI64::new(-1)).collect(),
+            arena: Arena::new(n_slots * dim),
+            free_event: EventCount::new(),
+            valid_events: (0..WAIT_GROUPS.min(n_slots.max(1))).map(|_| EventCount::new()).collect(),
+            hits: AtomicU64::new(0),
+            shared: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            loads: AtomicU64::new(0),
             _home: home,
         }
     }
 
+    /// Number of mapping-table shards (diagnostics / benches).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn node_shard(&self, node: u32) -> usize {
+        // Fibonacci mix; the low bits of raw node ids correlate with batch
+        // layout, which would unbalance the shards.
+        let h = (node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) & self.shard_mask
+    }
+
+    #[inline]
+    fn valid_event(&self, slot: u32) -> &EventCount {
+        &self.valid_events[slot as usize % self.valid_events.len()]
+    }
+
+    /// Resolve one node against its own shard (`st` is `shard_idx`'s state,
+    /// and `node_shard(id) == shard_idx`). Increments the reference count on
+    /// every outcome except `Dry`.
+    fn resolve_in_shard(&self, st: &mut ShardState, id: u32) -> Resolved {
+        if let Some(e) = st.map.get(&id).copied() {
+            let word = self.states.load(e.slot);
+            debug_assert_eq!(slot_state::generation(word), e.generation, "map/word gen skew");
+            if slot_state::is_valid(word) {
+                // Ready in the buffer: reuse. A zero-ref entry sits in this
+                // shard's standby list — pull it out so it cannot be stolen.
+                if slot_state::refs(word) == 0 {
+                    let removed = st.standby.remove(&e.slot);
+                    debug_assert!(removed, "zero-ref valid slot {} not in standby", e.slot);
+                }
+                self.states.add_ref(e.slot);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Resolved::Alias(e.slot)
+            } else {
+                // Being extracted by a peer (ref>0, invalid): share it.
+                debug_assert!(slot_state::refs(word) > 0, "invalid zero-ref entry leaked");
+                self.states.add_ref(e.slot);
+                self.shared.fetch_add(1, Ordering::Relaxed);
+                Resolved::Wait(e.slot, e.generation)
+            }
+        } else if let Some(slot) = st.standby.pop_lru() {
+            // Absent: allocate this shard's LRU standby slot (Algorithm 1
+            // L24-29). Steal = invalidate the previous tenant's mapping; by
+            // the parking invariant the tenant hashes to this same shard.
+            let generation = self.claim_slot(st, slot);
+            self.install(st, id, slot, generation);
+            Resolved::Load(slot)
+        } else {
+            Resolved::Dry
+        }
+    }
+
+    /// Evict `slot`'s previous tenant (if any) from `st`'s map and bump the
+    /// slot generation. Returns the new generation; the slot is left
+    /// unmapped, invalid, zero-ref — exclusively owned by the caller.
+    fn claim_slot(&self, st: &mut ShardState, slot: u32) -> u32 {
+        let prev = self.reverse[slot as usize].swap(-1, Ordering::SeqCst);
+        if prev >= 0 {
+            let removed = st.map.remove(&(prev as u32));
+            debug_assert!(removed.is_some(), "stolen slot {slot} had no mapping");
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        let generation = slot_state::generation(self.states.load(slot)).wrapping_add(1);
+        self.states.reset(slot, 0, false, generation);
+        // A waiter parked on the old generation must re-check and bail.
+        self.valid_event(slot).signal();
+        generation
+    }
+
+    /// Map `id` to an exclusively-owned free slot inside `id`'s shard.
+    fn install(&self, st: &mut ShardState, id: u32, slot: u32, generation: u32) {
+        self.reverse[slot as usize].store(id as i64, Ordering::SeqCst);
+        self.states.reset(slot, 1, false, generation);
+        st.map.insert(id, MapEntry { slot, generation });
+        self.loads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Stable counting sort of batch positions by shard: `order` holds the
+    /// positions `0..len` grouped per shard (original order within a
+    /// shard), `ends[s]` the exclusive end of shard `s`'s run. Two
+    /// allocations per batch instead of one `Vec` per shard.
+    fn group_positions(&self, node_ids: &[u32]) -> (Vec<u32>, Vec<u32>) {
+        let n_shards = self.shards.len();
+        let mut cursor = vec![0u32; n_shards];
+        for &id in node_ids {
+            cursor[self.node_shard(id)] += 1;
+        }
+        let mut start = 0u32;
+        for c in cursor.iter_mut() {
+            let count = *c;
+            *c = start;
+            start += count;
+        }
+        let mut order = vec![0u32; node_ids.len()];
+        for (i, &id) in node_ids.iter().enumerate() {
+            let s = self.node_shard(id);
+            order[cursor[s] as usize] = i as u32;
+            cursor[s] += 1;
+        }
+        // After the fill, cursor[s] is exactly shard s's exclusive end.
+        (order, cursor)
+    }
+
     /// Algorithm 1, planning phase: resolve every batch node to a slot,
     /// reusing valid data, sharing in-flight extractions, and allocating LRU
-    /// standby slots for the rest (blocking if none are free — the engine
-    /// sizes the buffer ≥ (queue depth + extractors) × batch cap so waiting
-    /// always terminates). Reference counts of all batch nodes are
+    /// standby slots for the rest (blocking if none are free anywhere — the
+    /// engine sizes the buffer ≥ (queue depth + extractors) × batch cap so
+    /// waiting always terminates). Reference counts of all batch nodes are
     /// incremented here and dropped by `release`.
     pub fn begin_batch(&self, node_ids: &[u32]) -> BatchPlan {
-        let mut st = self.state.lock().unwrap();
         let mut aliases = vec![-1i32; node_ids.len()];
         let mut to_load = Vec::new();
         let mut wait_list = Vec::new();
+        let mut wait_handles = Vec::new();
+        let mut deferred: Vec<usize> = Vec::new();
 
-        for (i, &id) in node_ids.iter().enumerate() {
-            if let Some(e) = st.map.get(&id).copied() {
-                if e.valid {
-                    // Ready in the buffer: reuse. A zero-ref entry sits in
-                    // the standby list — pull it out so it cannot be stolen.
-                    if e.ref_count == 0 {
-                        st.standby.remove(&(e.slot as u32));
-                    }
-                    st.hits += 1;
-                    aliases[i] = e.slot;
-                } else {
-                    // Being extracted by a peer (ref>0, invalid): share it.
-                    debug_assert!(e.ref_count > 0, "invalid zero-ref entry leaked");
-                    st.shared += 1;
-                    aliases[i] = e.slot;
+        let apply = |i: usize,
+                         r: Resolved,
+                         aliases: &mut Vec<i32>,
+                         to_load: &mut Vec<(u32, u32)>,
+                         wait_list: &mut Vec<u32>,
+                         wait_handles: &mut Vec<WaitHandle>|
+         -> bool {
+            let id = node_ids[i];
+            match r {
+                Resolved::Alias(slot) => aliases[i] = slot as i32,
+                Resolved::Wait(slot, generation) => {
+                    aliases[i] = slot as i32;
                     wait_list.push(id);
+                    wait_handles.push(WaitHandle { node: id, slot, generation });
                 }
-                st.map.get_mut(&id).unwrap().ref_count += 1;
-            } else {
-                // Absent: allocate the LRU standby slot (Algorithm 1 L24-29).
-                let slot = loop {
-                    if let Some(s) = st.standby.pop_lru() {
-                        break s;
+                Resolved::Load(slot) => {
+                    aliases[i] = slot as i32;
+                    to_load.push((id, slot));
+                }
+                Resolved::Dry => return false,
+            }
+            true
+        };
+
+        if self.shards.len() == 1 {
+            // Single shard: one lock for the whole batch, original order.
+            let mut st = self.shards[0].state.lock().unwrap();
+            for (i, &id) in node_ids.iter().enumerate() {
+                let r = self.resolve_in_shard(&mut st, id);
+                if !apply(i, r, &mut aliases, &mut to_load, &mut wait_list, &mut wait_handles) {
+                    deferred.push(i);
+                }
+            }
+        } else {
+            // Group the batch per shard so each shard lock is taken at most
+            // once on this fast path (within a shard, batch order holds).
+            let (order, ends) = self.group_positions(node_ids);
+            let mut start = 0usize;
+            for (sx, &end) in ends.iter().enumerate() {
+                let end = end as usize;
+                if end > start {
+                    let mut st = self.shards[sx].state.lock().unwrap();
+                    for &pos in &order[start..end] {
+                        let i = pos as usize;
+                        let r = self.resolve_in_shard(&mut st, node_ids[i]);
+                        if !apply(
+                            i,
+                            r,
+                            &mut aliases,
+                            &mut to_load,
+                            &mut wait_list,
+                            &mut wait_handles,
+                        ) {
+                            deferred.push(i);
+                        }
                     }
-                    // No standby slot: wait for the releaser.
-                    st = self.slot_freed.wait(st).unwrap();
-                };
-                // Steal: invalidate the previous tenant's mapping.
-                let prev = st.reverse[slot as usize];
-                if prev >= 0 {
-                    st.map.remove(&(prev as u32));
-                    st.steals += 1;
                 }
-                st.reverse[slot as usize] = id as i64;
-                st.map.insert(id, MapEntry { slot: slot as i32, ref_count: 1, valid: false });
-                st.loads += 1;
-                aliases[i] = slot as i32;
-                to_load.push((id, slot));
+                start = end;
+            }
+            deferred.sort_unstable(); // re-establish batch order across shards
+        }
+
+        // Slow path: the node's home shard was dry — steal from a peer shard
+        // or wait for a release.
+        for i in deferred {
+            let r = self.alloc_slow(node_ids[i]);
+            let ok =
+                apply(i, r, &mut aliases, &mut to_load, &mut wait_list, &mut wait_handles);
+            debug_assert!(ok, "alloc_slow cannot return Dry");
+        }
+        BatchPlan { aliases, to_load, wait_list, wait_handles }
+    }
+
+    /// Allocate a slot for `id` when its home shard has no standby slot:
+    /// retry the home shard, then steal another shard's LRU slot, then block
+    /// on the free event until a release parks something.
+    fn alloc_slow(&self, id: u32) -> Resolved {
+        let home = self.node_shard(id);
+        loop {
+            if let Some(r) = self.try_alloc(home, id) {
+                return r;
+            }
+            let seen = self.free_event.begin_wait();
+            if let Some(r) = self.try_alloc(home, id) {
+                self.free_event.cancel_wait();
+                return r;
+            }
+            self.free_event.wait(seen);
+        }
+    }
+
+    fn try_alloc(&self, home: usize, id: u32) -> Option<Resolved> {
+        // A peer may have mapped the node (or released a slot) meanwhile.
+        {
+            let mut st = self.shards[home].state.lock().unwrap();
+            match self.resolve_in_shard(&mut st, id) {
+                Resolved::Dry => {}
+                r => return Some(r),
             }
         }
-        BatchPlan { aliases, to_load, wait_list }
+        // Steal a peer shard's LRU slot. The stolen slot's previous tenant
+        // hashes to that same shard, so eviction needs only that one lock;
+        // the slot then migrates into `home`.
+        for d in 1..self.shards.len() {
+            let sx = (home + d) & self.shard_mask;
+            let stolen = {
+                let mut st = self.shards[sx].state.lock().unwrap();
+                st.standby.pop_lru().map(|slot| (slot, self.claim_slot(&mut st, slot)))
+            };
+            let Some((slot, generation)) = stolen else { continue };
+            let mut st = self.shards[home].state.lock().unwrap();
+            match self.resolve_in_shard(&mut st, id) {
+                Resolved::Dry => {
+                    self.install(&mut st, id, slot, generation);
+                    return Some(Resolved::Load(slot));
+                }
+                r => {
+                    // Raced: the node got mapped (or home refilled) while we
+                    // were stealing. Park the stolen slot here as free.
+                    st.standby.insert(slot);
+                    drop(st);
+                    self.free_event.signal();
+                    return Some(r);
+                }
+            }
+        }
+        None
     }
 
     /// Write a loaded row into its slot and publish the valid bit
-    /// (Algorithm 1 L36; called from the transfer-completion path).
+    /// (Algorithm 1 L36; called from the transfer-completion path). The
+    /// caller is the slot's unique loader (it holds a reference and planned
+    /// the load), so the row write is race-free by protocol.
     pub fn publish(&self, node: u32, slot: u32, row: &[f32]) {
-        {
-            let mut dst = self.data[slot as usize].lock().unwrap();
-            let n = dst.len().min(row.len());
-            dst[..n].copy_from_slice(&row[..n]);
+        let n = self.dim.min(row.len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(row.as_ptr(), self.arena.row(slot as usize, self.dim), n);
         }
-        let mut st = self.state.lock().unwrap();
-        if let Some(e) = st.map.get_mut(&node) {
-            // The entry may have been stolen+reassigned only if ref hit 0,
-            // which cannot happen mid-extraction (we hold a reference).
-            debug_assert_eq!(e.slot, slot as i32);
-            e.valid = true;
+        self.finish_publish(node, slot);
+    }
+
+    /// `publish` from little-endian raw bytes (the staging buffer's wire
+    /// format) — decodes straight into the arena with no intermediate
+    /// `Vec<f32>` per row.
+    pub fn publish_le_bytes(&self, node: u32, slot: u32, bytes: &[u8]) {
+        let n = self.dim.min(bytes.len() / 4);
+        let dst = self.arena.row(slot as usize, self.dim);
+        for (i, chunk) in bytes.chunks_exact(4).take(n).enumerate() {
+            let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            unsafe {
+                *dst.add(i) = v;
+            }
         }
-        drop(st);
-        self.valid_set.notify_all();
+        self.finish_publish(node, slot);
+    }
+
+    fn finish_publish(&self, node: u32, slot: u32) {
+        debug_assert_eq!(
+            self.reverse[slot as usize].load(Ordering::SeqCst),
+            node as i64,
+            "publish into a slot node {node} does not own"
+        );
+        let word = self.states.set_valid(slot);
+        debug_assert!(slot_state::refs(word) > 0, "publish into zero-ref slot {slot}");
+        self.valid_event(slot).signal();
+    }
+
+    /// Wait until `slot`'s valid bit is set — or until the slot is stolen
+    /// out from under a stale handle (generation moved), which mirrors the
+    /// old "entry vanished from the map" tolerance.
+    fn wait_slot(&self, slot: u32, generation: u32) {
+        let done = |word: u64| {
+            slot_state::is_valid(word) || slot_state::generation(word) != generation
+        };
+        loop {
+            if done(self.states.load(slot)) {
+                return;
+            }
+            let ev = self.valid_event(slot);
+            let seen = ev.begin_wait();
+            if done(self.states.load(slot)) {
+                ev.cancel_wait();
+                return;
+            }
+            ev.wait(seen);
+        }
     }
 
     /// Block until every node in `nodes` has a set valid bit (end of
-    /// Algorithm 1: the wait-list check).
+    /// Algorithm 1: the wait-list check). Nodes no longer mapped are
+    /// skipped, as before.
     pub fn wait_valid(&self, nodes: &[u32]) {
-        let mut st = self.state.lock().unwrap();
         for &id in nodes {
-            loop {
-                match st.map.get(&id) {
-                    Some(e) if e.valid => break,
-                    Some(_) => {
-                        st = self.valid_set.wait(st).unwrap();
-                    }
-                    None => break, // released+stolen after we trained on it — impossible while we hold a ref; tolerate in release builds
-                }
+            let handle = {
+                let st = self.shards[self.node_shard(id)].state.lock().unwrap();
+                st.map.get(&id).map(|e| (e.slot, e.generation))
+            };
+            if let Some((slot, generation)) = handle {
+                self.wait_slot(slot, generation);
             }
         }
     }
 
-    /// Releaser: drop one reference per node; zero-ref slots re-enter the
-    /// standby list MRU-first (retired but reusable — inter-batch locality).
-    /// Mapping entries stay valid until stolen (§4.2 "Release").
+    /// `wait_valid` over a plan's pre-resolved tickets: no shard locks at
+    /// all on the wait path.
+    pub fn wait_plan(&self, plan: &BatchPlan) {
+        for h in &plan.wait_handles {
+            self.wait_slot(h.slot, h.generation);
+        }
+    }
+
+    /// Releaser: drop one reference per node; zero-ref slots re-enter their
+    /// shard's standby list MRU-first (retired but reusable — inter-batch
+    /// locality). Mapping entries stay valid until stolen (§4.2 "Release").
     pub fn release(&self, node_ids: &[u32]) {
-        let mut st = self.state.lock().unwrap();
         let mut freed = false;
-        for &id in node_ids {
-            let e = st.map.get_mut(&id).expect("release of unmapped node");
-            assert!(e.ref_count > 0, "refcount underflow for node {id}");
-            e.ref_count -= 1;
-            if e.ref_count == 0 {
-                let slot = e.slot as u32;
-                st.standby.insert(slot);
-                freed = true;
+        if self.shards.len() == 1 {
+            let mut st = self.shards[0].state.lock().unwrap();
+            for &id in node_ids {
+                freed |= self.release_one(&mut st, id);
+            }
+        } else {
+            let (order, ends) = self.group_positions(node_ids);
+            let mut start = 0usize;
+            for (sx, &end) in ends.iter().enumerate() {
+                let end = end as usize;
+                if end > start {
+                    let mut st = self.shards[sx].state.lock().unwrap();
+                    for &pos in &order[start..end] {
+                        freed |= self.release_one(&mut st, node_ids[pos as usize]);
+                    }
+                }
+                start = end;
             }
         }
-        drop(st);
         if freed {
-            self.slot_freed.notify_all();
+            self.free_event.signal();
+        }
+    }
+
+    fn release_one(&self, st: &mut ShardState, id: u32) -> bool {
+        let e = *st.map.get(&id).expect("release of unmapped node");
+        let word = self.states.load(e.slot);
+        assert!(slot_state::refs(word) > 0, "refcount underflow for node {id}");
+        let prev = self.states.sub_ref(e.slot);
+        if slot_state::refs(prev) == 1 {
+            st.standby.insert(e.slot);
+            true
+        } else {
+            false
         }
     }
 
     /// Trainer-side gather: copy each alias's row into `out` (row-major).
-    /// Negative aliases (padding) produce zero rows.
+    /// Negative aliases (padding) produce zero rows. Lock-free: one acquire
+    /// load per row orders the copy behind the publisher's valid store.
     pub fn gather(&self, aliases: &[i32], out: &mut [f32]) {
         assert!(out.len() >= aliases.len() * self.dim);
+        let dim = self.dim;
         for (i, &a) in aliases.iter().enumerate() {
-            let dst = &mut out[i * self.dim..(i + 1) * self.dim];
+            let dst = &mut out[i * dim..(i + 1) * dim];
             if a < 0 {
                 dst.fill(0.0);
             } else {
-                let row = self.data[a as usize].lock().unwrap();
-                dst.copy_from_slice(&row);
+                debug_assert!((a as usize) < self.n_slots, "alias {a} out of range");
+                let _word = self.states.load_acquire(a as u32);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        self.arena.row(a as usize, dim) as *const f32,
+                        dst.as_mut_ptr(),
+                        dim,
+                    );
+                }
             }
         }
     }
 
     /// (hits, shared, steals, loads) counters for the reuse diagnostics.
     pub fn stats(&self) -> (u64, u64, u64, u64) {
-        let st = self.state.lock().unwrap();
-        (st.hits, st.shared, st.steals, st.loads)
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.shared.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+            self.loads.load(Ordering::Relaxed),
+        )
     }
 
-    /// Number of slots currently in the standby list (tests/diagnostics).
+    /// Number of slots currently in standby lists (tests/diagnostics).
     pub fn standby_len(&self) -> usize {
-        self.state.lock().unwrap().standby.len()
+        self.shards.iter().map(|s| s.state.lock().unwrap().standby.len()).sum()
     }
 
     /// Validate cross-structure invariants (tests/property checks):
-    /// mapping↔reverse bijection, standby = exactly the zero-ref mapped
-    /// slots plus never-used free slots, no two nodes sharing a slot.
+    /// mapping↔reverse bijection, per-shard standby = exactly that shard's
+    /// zero-ref mapped slots plus parked free slots, packed slot words
+    /// consistent with the mapping, no two nodes sharing a slot. Takes every
+    /// shard lock; call at quiesce points.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let st = self.state.lock().unwrap();
-        let mut slot_owner: HashMap<i32, u32> = HashMap::new();
-        for (&node, e) in &st.map {
-            if e.slot < 0 || e.slot as usize >= self.n_slots {
-                return Err(format!("node {node} has bad slot {}", e.slot));
-            }
-            if let Some(prev) = slot_owner.insert(e.slot, node) {
-                return Err(format!("slot {} owned by {prev} and {node}", e.slot));
-            }
-            if st.reverse[e.slot as usize] != node as i64 {
-                return Err(format!(
-                    "reverse[{}]={} but node {node} maps there",
-                    e.slot, st.reverse[e.slot as usize]
-                ));
-            }
-            if e.ref_count == 0 && !st.standby.contains(&(e.slot as u32)) {
-                return Err(format!("zero-ref node {node} slot {} not standby", e.slot));
-            }
-            if e.ref_count > 0 && st.standby.contains(&(e.slot as u32)) {
-                return Err(format!("referenced slot {} in standby", e.slot));
+        let guards: Vec<_> = self.shards.iter().map(|s| s.state.lock().unwrap()).collect();
+        // Standby membership: each slot in at most one shard's list.
+        let mut standby_shard: HashMap<u32, usize> = HashMap::new();
+        for (sx, st) in guards.iter().enumerate() {
+            for &slot in st.standby.iter_mru() {
+                if slot as usize >= self.n_slots {
+                    return Err(format!("standby slot {slot} out of range"));
+                }
+                if let Some(other) = standby_shard.insert(slot, sx) {
+                    return Err(format!("slot {slot} in standby of shards {other} and {sx}"));
+                }
             }
         }
-        for (slot, &node) in st.reverse.iter().enumerate() {
-            if node >= 0 {
-                match st.map.get(&(node as u32)) {
-                    Some(e) if e.slot == slot as i32 => {}
-                    _ => return Err(format!("reverse[{slot}]={node} dangling")),
+        let mut slot_owner: HashMap<u32, u32> = HashMap::new();
+        for (sx, st) in guards.iter().enumerate() {
+            for (&node, e) in &st.map {
+                if self.node_shard(node) != sx {
+                    return Err(format!("node {node} mapped in wrong shard {sx}"));
                 }
-            } else if !st.standby.contains(&(slot as u32)) {
-                return Err(format!("empty slot {slot} missing from standby"));
+                if e.slot as usize >= self.n_slots {
+                    return Err(format!("node {node} has bad slot {}", e.slot));
+                }
+                if let Some(prev) = slot_owner.insert(e.slot, node) {
+                    return Err(format!("slot {} owned by {prev} and {node}", e.slot));
+                }
+                let rev = self.reverse[e.slot as usize].load(Ordering::SeqCst);
+                if rev != node as i64 {
+                    return Err(format!(
+                        "reverse[{}]={} but node {node} maps there",
+                        e.slot, rev
+                    ));
+                }
+                let word = self.states.load(e.slot);
+                if slot_state::generation(word) != e.generation {
+                    return Err(format!(
+                        "node {node} slot {} generation skew: word {} vs map {}",
+                        e.slot,
+                        slot_state::generation(word),
+                        e.generation
+                    ));
+                }
+                let refs = slot_state::refs(word);
+                match standby_shard.get(&e.slot) {
+                    Some(&home) if refs == 0 => {
+                        if home != sx {
+                            return Err(format!(
+                                "zero-ref slot {} parked in shard {home}, tenant shard {sx}",
+                                e.slot
+                            ));
+                        }
+                    }
+                    Some(_) => {
+                        return Err(format!("referenced slot {} in standby", e.slot));
+                    }
+                    None if refs == 0 => {
+                        return Err(format!(
+                            "zero-ref node {node} slot {} not standby",
+                            e.slot
+                        ));
+                    }
+                    None => {}
+                }
+            }
+        }
+        for slot in 0..self.n_slots as u32 {
+            let rev = self.reverse[slot as usize].load(Ordering::SeqCst);
+            if rev >= 0 {
+                if slot_owner.get(&slot) != Some(&(rev as u32)) {
+                    return Err(format!("reverse[{slot}]={rev} dangling"));
+                }
+            } else {
+                if !standby_shard.contains_key(&slot) {
+                    return Err(format!("empty slot {slot} missing from standby"));
+                }
+                let word = self.states.load(slot);
+                if slot_state::refs(word) != 0 {
+                    return Err(format!("free slot {slot} holds references"));
+                }
             }
         }
         Ok(())
@@ -390,6 +799,8 @@ mod tests {
         assert_eq!(p2.to_load.len(), 1, "only node 8 loads");
         assert_eq!(p2.wait_list, vec![7]);
         assert_eq!(p2.aliases[0], p1.aliases[0], "shared slot alias");
+        assert_eq!(p2.wait_handles.len(), 1);
+        assert_eq!(p2.wait_handles[0].node, 7);
         // Publish from extractor 1; waiter unblocks.
         let fb = Arc::new(fb);
         let waiter = {
@@ -399,6 +810,7 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(5));
         fb.publish(7, p1.to_load[0].1, &[1.0, 2.0]);
         waiter.join().unwrap();
+        fb.wait_plan(&p2); // ticket path: returns immediately, row is valid
         let (_, shared, _, _) = fb.stats();
         assert_eq!(shared, 1);
         fb.check_invariants().unwrap();
@@ -438,5 +850,82 @@ mod tests {
         let _fb = FeatureBuffer::in_device(&dev, 100, 16).unwrap();
         assert_eq!(dev.reserved(), 100 * 16 * 4);
         assert!(FeatureBuffer::in_device(&dev, 1 << 20, 16).is_err());
+    }
+
+    // ---- sharded-path coverage (the tests above run with one shard) ----
+
+    #[test]
+    fn big_buffers_shard_and_roundtrip() {
+        let fb = buf(512, 4);
+        assert!(fb.shard_count() > 1, "512 slots should shard");
+        let nodes: Vec<u32> = (0..300).map(|i| i * 7 + 1).collect();
+        let plan = fb.begin_batch(&nodes);
+        assert_eq!(plan.to_load.len(), nodes.len());
+        assert!(plan.wait_list.is_empty());
+        load_all(&fb, &plan);
+        let mut out = vec![0f32; nodes.len() * 4];
+        fb.gather(&plan.aliases, &mut out);
+        for (i, &node) in nodes.iter().enumerate() {
+            assert_eq!(out[i * 4], (node * 100) as f32, "node {node} row");
+            assert_eq!(out[i * 4 + 3], (node * 100 + 3) as f32, "node {node} row tail");
+        }
+        fb.check_invariants().unwrap();
+        fb.release(&nodes);
+        fb.check_invariants().unwrap();
+        assert_eq!(fb.standby_len(), 512);
+        // Second pass: everything hits, nothing reloads.
+        let p2 = fb.begin_batch(&nodes);
+        assert!(p2.to_load.is_empty());
+        assert_eq!(p2.aliases, plan.aliases);
+        fb.release(&nodes);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dry_shard_steals_cross_shard() {
+        // Fill the whole buffer: node hashing is uneven, so at least one
+        // shard runs dry and must migrate slots from its peers. Everything
+        // still allocates exactly once without blocking.
+        let fb = buf(256, 2);
+        assert!(fb.shard_count() > 1);
+        let nodes: Vec<u32> = (0..256).collect();
+        let plan = fb.begin_batch(&nodes);
+        assert_eq!(plan.to_load.len(), 256, "every slot allocated exactly once");
+        let (_, _, _, loads) = fb.stats();
+        assert_eq!(loads, 256);
+        load_all(&fb, &plan);
+        fb.check_invariants().unwrap();
+        // All referenced: one more node must block until a release.
+        let fb = Arc::new(fb);
+        let fb2 = fb.clone();
+        let h = std::thread::spawn(move || {
+            let p = fb2.begin_batch(&[9999]);
+            assert_eq!(p.to_load.len(), 1);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(!h.is_finished(), "allocation should be blocked");
+        fb.release(&nodes);
+        h.join().unwrap();
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_wait_handle_returns_after_steal() {
+        let fb = buf(4, 2);
+        let p1 = fb.begin_batch(&[1]);
+        load_all(&fb, &p1);
+        let slot = p1.to_load[0].1;
+        let gen1 = {
+            // Ticket as a sharer would have captured it pre-publish.
+            WaitHandle { node: 1, slot, generation: slot_state::generation(fb.states.load(slot)) }
+        };
+        fb.release(&[1]);
+        // Steal node 1's slot: generation moves, the stale ticket must not
+        // hang even though valid is cleared again.
+        let p2 = fb.begin_batch(&[2, 3, 4, 5]);
+        assert_eq!(p2.to_load.len(), 4);
+        fb.wait_slot(gen1.slot, gen1.generation); // returns: generation moved
+        fb.release(&[2, 3, 4, 5]);
+        fb.check_invariants().unwrap();
     }
 }

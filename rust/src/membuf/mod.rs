@@ -1,9 +1,15 @@
-//! Inter-stage buffer management (the paper's §4.2): feature buffer with
-//! mapping table / reverse map / standby LRU, plus the bounded host-side
-//! staging buffer.
+//! Inter-stage buffer management (the paper's §4.2): the sharded,
+//! lock-minimized feature buffer (mapping-table shards + per-shard standby
+//! LRUs over a flat slot arena with packed atomic slot state), the bounded
+//! host-side staging buffer, and the preserved single-mutex coordinator used
+//! as a contention baseline by `benches/micro_hotpath.rs`.
 
 pub mod feature_buffer;
+mod shard;
+pub mod single_mutex;
+pub mod slot_state;
 pub mod staging;
 
-pub use feature_buffer::{BatchPlan, FeatureBuffer};
+pub use feature_buffer::{BatchPlan, FeatureBuffer, WaitHandle};
+pub use single_mutex::{SingleMutexFeatureBuffer, SmBatchPlan};
 pub use staging::StagingBuffer;

@@ -1,0 +1,166 @@
+//! Shards of the feature-buffer coordinator, plus the eventcount used for
+//! targeted wakeups.
+//!
+//! The mapping table and standby list are sharded by node-id hash: one batch
+//! groups its node list per shard and takes each shard mutex at most once on
+//! the fast path, so `cfg.extractors` threads planning different batches no
+//! longer serialize on a single global lock. Slots migrate between shards:
+//! a freed slot parks in the standby list of its tenant node's shard, and a
+//! dry shard may steal the LRU slot of another shard (the stolen slot's old
+//! mapping lives in that same shard, so the steal needs exactly one lock).
+//!
+//! [`EventCount`] replaces the old `Condvar::notify_all` broadcasts: the
+//! signal side is a single relaxed-cost atomic load when nobody is waiting,
+//! and waiters re-check their predicate between registration and sleep so
+//! wakeups cannot be lost.
+
+use crate::util::fxhash::FxHashMap;
+use crate::util::lru::Lru;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Mapping-table entry: node → slot plus the slot generation observed when
+/// the entry was created (stale-handle detection for waiters).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MapEntry {
+    pub slot: u32,
+    pub generation: u32,
+}
+
+/// One shard's mutable coordinator state.
+pub(crate) struct ShardState {
+    /// node → (slot, generation) for nodes hashed to this shard.
+    pub map: FxHashMap<u32, MapEntry>,
+    /// Zero-reference slots currently parked in this shard, LRU order.
+    pub standby: Lru<u32>,
+}
+
+pub(crate) struct Shard {
+    pub state: Mutex<ShardState>,
+}
+
+impl Shard {
+    pub fn new(expected_slots: usize) -> Self {
+        Shard {
+            state: Mutex::new(ShardState {
+                map: FxHashMap::default(),
+                standby: Lru::with_capacity(expected_slots),
+            }),
+        }
+    }
+}
+
+/// Lost-wakeup-free event counter (a sequence lock for sleeping).
+///
+/// Waiter protocol:
+/// ```text
+///   loop {
+///       if predicate() { break }
+///       let seen = ec.begin_wait();            // register, then snapshot
+///       if predicate() { ec.cancel_wait(); break }
+///       ec.wait(seen);                         // sleeps unless seq moved
+///   }
+/// ```
+/// Signal protocol: make the state change visible (e.g. drop the shard
+/// lock), then call [`EventCount::signal`] — it bumps the sequence and
+/// notifies only when a waiter is registered, so the hot path costs one
+/// atomic load instead of a broadcast storm.
+///
+/// Why no wakeup is lost: the waiter increments the registration counter
+/// (SeqCst) *before* re-checking the predicate, and the signaler changes
+/// state *before* loading the counter. If the signaler reads zero waiters,
+/// the waiter's increment — and therefore its predicate re-check — comes
+/// later in the SeqCst total order and observes the state change.
+pub(crate) struct EventCount {
+    seq: Mutex<u64>,
+    cond: Condvar,
+    waiters: AtomicUsize,
+}
+
+impl EventCount {
+    pub fn new() -> Self {
+        EventCount { seq: Mutex::new(0), cond: Condvar::new(), waiters: AtomicUsize::new(0) }
+    }
+
+    /// Register as a waiter and snapshot the sequence. Must be paired with
+    /// exactly one `cancel_wait` or `wait`.
+    pub fn begin_wait(&self) -> u64 {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        *self.seq.lock().unwrap()
+    }
+
+    /// Deregister without sleeping (the predicate turned true).
+    pub fn cancel_wait(&self) {
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Sleep until the sequence moves past `seen`, then deregister.
+    pub fn wait(&self, seen: u64) {
+        let mut seq = self.seq.lock().unwrap();
+        while *seq == seen {
+            seq = self.cond.wait(seq).unwrap();
+        }
+        drop(seq);
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake registered waiters; near-free when there are none.
+    pub fn signal(&self) {
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            *self.seq.lock().unwrap() += 1;
+            self.cond.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn signal_with_no_waiters_is_cheap_and_safe() {
+        let ec = EventCount::new();
+        ec.signal();
+        assert_eq!(*ec.seq.lock().unwrap(), 0, "no waiter → no bump");
+        let seen = ec.begin_wait();
+        ec.cancel_wait();
+        assert_eq!(seen, 0);
+    }
+
+    #[test]
+    fn waiter_wakes_on_signal() {
+        let ec = Arc::new(EventCount::new());
+        let flag = Arc::new(AtomicBool::new(false));
+        let (ec2, flag2) = (ec.clone(), flag.clone());
+        let h = std::thread::spawn(move || loop {
+            if flag2.load(Ordering::SeqCst) {
+                return;
+            }
+            let seen = ec2.begin_wait();
+            if flag2.load(Ordering::SeqCst) {
+                ec2.cancel_wait();
+                return;
+            }
+            ec2.wait(seen);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        flag.store(true, Ordering::SeqCst);
+        ec.signal();
+        h.join().unwrap();
+        assert_eq!(ec.waiters.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn predicate_flip_between_register_and_sleep_is_not_missed() {
+        // The canonical lost-wakeup interleaving: signal lands after the
+        // waiter's first check but before it sleeps. The re-check after
+        // begin_wait (or the moved sequence) must catch it.
+        let ec = EventCount::new();
+        let seen = ec.begin_wait();
+        ec.signal(); // bumps: a waiter is registered
+        ec.wait(seen); // returns immediately — seq already moved
+        assert_eq!(ec.waiters.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,292 @@
+//! The pre-shard feature-buffer coordinator, preserved as a benchmark
+//! baseline.
+//!
+//! This is the original §4.2 implementation: one global `Mutex<BufState>`
+//! serializing begin/publish/release/gather bookkeeping, one `Mutex` per
+//! row payload, and `Condvar::notify_all` broadcasts for slot-freed /
+//! valid-set events. `benches/micro_hotpath.rs` runs the same multi-threaded
+//! begin+publish+release workload against this and against the sharded
+//! [`super::FeatureBuffer`] to quantify the contention win; it is not used
+//! by the pipeline.
+
+use crate::storage::{DeviceMemory, HostMemory, Reservation};
+use crate::util::fxhash::FxHashMap;
+use crate::util::lru::Lru;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+enum Home {
+    #[allow(dead_code)]
+    Device(Reservation),
+    #[allow(dead_code)]
+    Host(Reservation),
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct MapEntry {
+    slot: i32,
+    ref_count: u32,
+    valid: bool,
+}
+
+struct BufState {
+    map: FxHashMap<u32, MapEntry>,
+    /// slot → node id or -1.
+    reverse: Vec<i64>,
+    /// Zero-reference slots, LRU order (free slots enter via `release`).
+    standby: Lru<u32>,
+    hits: u64,
+    shared: u64,
+    steals: u64,
+    loads: u64,
+}
+
+/// The baseline's extraction plan (same shape as the paper's Algorithm 1
+/// output; no wait tickets — the baseline re-locks to wait).
+#[derive(Debug)]
+pub struct SmBatchPlan {
+    pub aliases: Vec<i32>,
+    pub to_load: Vec<(u32, u32)>,
+    pub wait_list: Vec<u32>,
+}
+
+pub struct SingleMutexFeatureBuffer {
+    pub n_slots: usize,
+    pub dim: usize,
+    state: Mutex<BufState>,
+    /// Signalled when slots enter the standby list.
+    slot_freed: Condvar,
+    /// Signalled when any node's valid bit is set.
+    valid_set: Condvar,
+    /// Slot payload, one mutex per row.
+    data: Vec<Mutex<Box<[f32]>>>,
+    _home: Home,
+}
+
+impl SingleMutexFeatureBuffer {
+    pub fn in_device(
+        dev: &DeviceMemory,
+        n_slots: usize,
+        dim: usize,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        let bytes = (n_slots * dim * 4) as u64;
+        let res = dev.reserve("feature buffer (baseline)", bytes)?;
+        Ok(Self::build(n_slots, dim, Home::Device(res)))
+    }
+
+    pub fn in_host(
+        host: &HostMemory,
+        n_slots: usize,
+        dim: usize,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        let bytes = (n_slots * dim * 4) as u64;
+        let res = host.reserve("feature buffer (baseline, cpu)", bytes)?;
+        Ok(Self::build(n_slots, dim, Home::Host(res)))
+    }
+
+    fn build(n_slots: usize, dim: usize, home: Home) -> Self {
+        let mut standby = Lru::with_capacity(n_slots);
+        for s in 0..n_slots as u32 {
+            standby.insert(s);
+        }
+        let data = (0..n_slots)
+            .map(|_| Mutex::new(vec![0f32; dim].into_boxed_slice()))
+            .collect();
+        SingleMutexFeatureBuffer {
+            n_slots,
+            dim,
+            state: Mutex::new(BufState {
+                map: FxHashMap::default(),
+                reverse: vec![-1; n_slots],
+                standby,
+                hits: 0,
+                shared: 0,
+                steals: 0,
+                loads: 0,
+            }),
+            slot_freed: Condvar::new(),
+            valid_set: Condvar::new(),
+            data,
+            _home: home,
+        }
+    }
+
+    pub fn begin_batch(&self, node_ids: &[u32]) -> SmBatchPlan {
+        let mut st = self.state.lock().unwrap();
+        let mut aliases = vec![-1i32; node_ids.len()];
+        let mut to_load = Vec::new();
+        let mut wait_list = Vec::new();
+
+        for (i, &id) in node_ids.iter().enumerate() {
+            if let Some(e) = st.map.get(&id).copied() {
+                if e.valid {
+                    if e.ref_count == 0 {
+                        st.standby.remove(&(e.slot as u32));
+                    }
+                    st.hits += 1;
+                    aliases[i] = e.slot;
+                } else {
+                    debug_assert!(e.ref_count > 0, "invalid zero-ref entry leaked");
+                    st.shared += 1;
+                    aliases[i] = e.slot;
+                    wait_list.push(id);
+                }
+                st.map.get_mut(&id).unwrap().ref_count += 1;
+            } else {
+                let slot = loop {
+                    if let Some(s) = st.standby.pop_lru() {
+                        break s;
+                    }
+                    st = self.slot_freed.wait(st).unwrap();
+                };
+                let prev = st.reverse[slot as usize];
+                if prev >= 0 {
+                    st.map.remove(&(prev as u32));
+                    st.steals += 1;
+                }
+                st.reverse[slot as usize] = id as i64;
+                st.map.insert(id, MapEntry { slot: slot as i32, ref_count: 1, valid: false });
+                st.loads += 1;
+                aliases[i] = slot as i32;
+                to_load.push((id, slot));
+            }
+        }
+        SmBatchPlan { aliases, to_load, wait_list }
+    }
+
+    pub fn publish(&self, node: u32, slot: u32, row: &[f32]) {
+        {
+            let mut dst = self.data[slot as usize].lock().unwrap();
+            let n = dst.len().min(row.len());
+            dst[..n].copy_from_slice(&row[..n]);
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.map.get_mut(&node) {
+            debug_assert_eq!(e.slot, slot as i32);
+            e.valid = true;
+        }
+        drop(st);
+        self.valid_set.notify_all();
+    }
+
+    pub fn wait_valid(&self, nodes: &[u32]) {
+        let mut st = self.state.lock().unwrap();
+        for &id in nodes {
+            loop {
+                match st.map.get(&id) {
+                    Some(e) if e.valid => break,
+                    Some(_) => {
+                        st = self.valid_set.wait(st).unwrap();
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    pub fn release(&self, node_ids: &[u32]) {
+        let mut st = self.state.lock().unwrap();
+        let mut freed = false;
+        for &id in node_ids {
+            let e = st.map.get_mut(&id).expect("release of unmapped node");
+            assert!(e.ref_count > 0, "refcount underflow for node {id}");
+            e.ref_count -= 1;
+            if e.ref_count == 0 {
+                let slot = e.slot as u32;
+                st.standby.insert(slot);
+                freed = true;
+            }
+        }
+        drop(st);
+        if freed {
+            self.slot_freed.notify_all();
+        }
+    }
+
+    pub fn gather(&self, aliases: &[i32], out: &mut [f32]) {
+        assert!(out.len() >= aliases.len() * self.dim);
+        for (i, &a) in aliases.iter().enumerate() {
+            let dst = &mut out[i * self.dim..(i + 1) * self.dim];
+            if a < 0 {
+                dst.fill(0.0);
+            } else {
+                let row = self.data[a as usize].lock().unwrap();
+                dst.copy_from_slice(&row);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.hits, st.shared, st.steals, st.loads)
+    }
+
+    pub fn standby_len(&self) -> usize {
+        self.state.lock().unwrap().standby.len()
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let st = self.state.lock().unwrap();
+        let mut slot_owner: HashMap<i32, u32> = HashMap::new();
+        for (&node, e) in &st.map {
+            if e.slot < 0 || e.slot as usize >= self.n_slots {
+                return Err(format!("node {node} has bad slot {}", e.slot));
+            }
+            if let Some(prev) = slot_owner.insert(e.slot, node) {
+                return Err(format!("slot {} owned by {prev} and {node}", e.slot));
+            }
+            if st.reverse[e.slot as usize] != node as i64 {
+                return Err(format!(
+                    "reverse[{}]={} but node {node} maps there",
+                    e.slot, st.reverse[e.slot as usize]
+                ));
+            }
+            if e.ref_count == 0 && !st.standby.contains(&(e.slot as u32)) {
+                return Err(format!("zero-ref node {node} slot {} not standby", e.slot));
+            }
+            if e.ref_count > 0 && st.standby.contains(&(e.slot as u32)) {
+                return Err(format!("referenced slot {} in standby", e.slot));
+            }
+        }
+        for (slot, &node) in st.reverse.iter().enumerate() {
+            if node >= 0 {
+                match st.map.get(&(node as u32)) {
+                    Some(e) if e.slot == slot as i32 => {}
+                    _ => return Err(format!("reverse[{slot}]={node} dangling")),
+                }
+            } else if !st.standby.contains(&(slot as u32)) {
+                return Err(format!("empty slot {slot} missing from standby"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DeviceMemory;
+
+    #[test]
+    fn baseline_smoke_begin_publish_release() {
+        let dev = DeviceMemory::new(1 << 20);
+        let fb = SingleMutexFeatureBuffer::in_device(&dev, 8, 4).unwrap();
+        let plan = fb.begin_batch(&[10, 11, 12]);
+        assert_eq!(plan.to_load.len(), 3);
+        for &(node, slot) in &plan.to_load {
+            fb.publish(node, slot, &[node as f32; 4]);
+        }
+        let mut out = vec![0f32; 3 * 4];
+        fb.gather(&plan.aliases, &mut out);
+        assert_eq!(out[0], 10.0);
+        fb.release(&[10, 11, 12]);
+        fb.check_invariants().unwrap();
+        assert_eq!(fb.standby_len(), 8);
+        let p2 = fb.begin_batch(&[11, 13]);
+        assert_eq!(p2.to_load.len(), 1);
+        let (hits, _, _, loads) = fb.stats();
+        assert_eq!((hits, loads), (1, 4));
+        fb.release(&[11, 13]);
+        fb.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,153 @@
+//! Packed per-slot atomic state for the sharded feature buffer.
+//!
+//! One `AtomicU64` per slot encodes the triple the coordinator used to keep
+//! behind the global mutex:
+//!
+//! ```text
+//!   bits  0..=31   generation (wraps; bumped every time the slot is stolen)
+//!   bit   32       valid (the row's data is published)
+//!   bits 33..=52   reference count (how many in-flight batches alias it)
+//! ```
+//!
+//! `publish` becomes a single release `fetch_or` of the valid bit, and
+//! `wait_valid`/`gather` read one word instead of taking a lock. Reference
+//! counts are only mutated under the owning node's shard lock (they must stay
+//! coherent with the shard's mapping table), but living in the packed word
+//! lets the lock-free readers and `check_invariants` observe a consistent
+//! snapshot. The generation lets a waiter detect that "its" slot was stolen
+//! and reassigned (stale handle) without consulting the mapping table.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Valid bit: the slot's row has been published.
+pub const VALID: u64 = 1 << 32;
+/// One reference in the packed refcount field.
+pub const REF_ONE: u64 = 1 << 33;
+
+const GEN_MASK: u64 = u32::MAX as u64;
+const REF_SHIFT: u32 = 33;
+const REF_FIELD_BITS: u32 = 20;
+const REF_MASK: u64 = ((1u64 << REF_FIELD_BITS) - 1) << REF_SHIFT;
+
+/// Maximum representable reference count (engine batch sizing keeps real
+/// counts orders of magnitude below this).
+pub const MAX_REFS: u32 = (1 << REF_FIELD_BITS) - 1;
+
+#[inline]
+pub fn pack(refs: u32, valid: bool, generation: u32) -> u64 {
+    debug_assert!(refs <= MAX_REFS);
+    (generation as u64) | if valid { VALID } else { 0 } | ((refs as u64) << REF_SHIFT)
+}
+
+#[inline]
+pub fn generation(word: u64) -> u32 {
+    (word & GEN_MASK) as u32
+}
+
+#[inline]
+pub fn is_valid(word: u64) -> bool {
+    word & VALID != 0
+}
+
+#[inline]
+pub fn refs(word: u64) -> u32 {
+    ((word & REF_MASK) >> REF_SHIFT) as u32
+}
+
+/// The flat array of packed slot words.
+pub struct SlotStates {
+    words: Vec<AtomicU64>,
+}
+
+impl SlotStates {
+    pub fn new(n_slots: usize) -> Self {
+        SlotStates { words: (0..n_slots).map(|_| AtomicU64::new(pack(0, false, 0))).collect() }
+    }
+
+    #[inline]
+    pub fn load(&self, slot: u32) -> u64 {
+        self.words[slot as usize].load(Ordering::SeqCst)
+    }
+
+    /// Acquire-load for the gather hot path: establishes the happens-before
+    /// edge with the publisher's release of the valid bit before the row
+    /// bytes are read out of the arena.
+    #[inline]
+    pub fn load_acquire(&self, slot: u32) -> u64 {
+        self.words[slot as usize].load(Ordering::Acquire)
+    }
+
+    /// Publish: set the valid bit; returns the previous word.
+    #[inline]
+    pub fn set_valid(&self, slot: u32) -> u64 {
+        self.words[slot as usize].fetch_or(VALID, Ordering::SeqCst)
+    }
+
+    /// Add one reference (caller holds the tenant node's shard lock).
+    #[inline]
+    pub fn add_ref(&self, slot: u32) -> u64 {
+        self.words[slot as usize].fetch_add(REF_ONE, Ordering::SeqCst)
+    }
+
+    /// Drop one reference (caller holds the tenant node's shard lock and has
+    /// checked `refs > 0`); returns the previous word.
+    #[inline]
+    pub fn sub_ref(&self, slot: u32) -> u64 {
+        self.words[slot as usize].fetch_sub(REF_ONE, Ordering::SeqCst)
+    }
+
+    /// Reassign the slot outright (steal / adopt paths; the caller owns the
+    /// slot exclusively, so a plain store is race-free).
+    #[inline]
+    pub fn reset(&self, slot: u32, refs: u32, valid: bool, generation: u32) {
+        self.words[slot as usize].store(pack(refs, valid, generation), Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrip() {
+        for &(r, v, g) in &[(0u32, false, 0u32), (1, true, 7), (MAX_REFS, true, u32::MAX)] {
+            let w = pack(r, v, g);
+            assert_eq!(refs(w), r);
+            assert_eq!(is_valid(w), v);
+            assert_eq!(generation(w), g);
+        }
+    }
+
+    #[test]
+    fn fields_are_independent() {
+        let s = SlotStates::new(4);
+        s.reset(2, 0, false, 41);
+        s.add_ref(2);
+        s.add_ref(2);
+        let w = s.set_valid(2);
+        assert_eq!(refs(w), 2);
+        assert!(!is_valid(w));
+        let w = s.load(2);
+        assert!(is_valid(w));
+        assert_eq!(refs(w), 2);
+        assert_eq!(generation(w), 41);
+        let w = s.sub_ref(2);
+        assert_eq!(refs(w), 2, "fetch_sub returns the prior word");
+        assert_eq!(refs(s.load(2)), 1);
+        // Untouched neighbors stay at the initial word.
+        assert_eq!(s.load(1), pack(0, false, 0));
+    }
+
+    #[test]
+    fn generation_wraps_without_touching_flags() {
+        let s = SlotStates::new(1);
+        s.reset(0, 3, true, u32::MAX);
+        let w = s.load(0);
+        assert_eq!(generation(w), u32::MAX);
+        s.reset(0, 3, true, generation(w).wrapping_add(1));
+        let w = s.load(0);
+        assert_eq!(generation(w), 0);
+        assert_eq!(refs(w), 3);
+        assert!(is_valid(w));
+    }
+}

@@ -473,16 +473,38 @@ impl<'a> GnnDrive<'a> {
 }
 
 /// Inversions in the trainer's observed batch order (0 = fully in-order).
+/// Merge-sort count, O(n log n) — with thousands of batches per epoch the
+/// old double loop was measurable epoch-stats overhead.
 fn count_inversions(order: &[u64]) -> usize {
-    let mut inv = 0;
-    for i in 0..order.len() {
-        for j in i + 1..order.len() {
-            if order[i] > order[j] {
-                inv += 1;
+    fn merge_count(xs: &mut [u64], scratch: &mut Vec<u64>) -> usize {
+        let n = xs.len();
+        if n < 2 {
+            return 0;
+        }
+        let mid = n / 2;
+        let (lo, hi) = xs.split_at_mut(mid);
+        let mut inv = merge_count(lo, scratch) + merge_count(hi, scratch);
+        scratch.clear();
+        let (mut i, mut j) = (0, 0);
+        while i < lo.len() && j < hi.len() {
+            if lo[i] <= hi[j] {
+                scratch.push(lo[i]);
+                i += 1;
+            } else {
+                // hi[j] jumps ahead of every remaining left element.
+                inv += lo.len() - i;
+                scratch.push(hi[j]);
+                j += 1;
             }
         }
+        scratch.extend_from_slice(&lo[i..]);
+        scratch.extend_from_slice(&hi[j..]);
+        xs.copy_from_slice(scratch);
+        inv
     }
-    inv
+    let mut xs = order.to_vec();
+    let mut scratch = Vec::with_capacity(xs.len());
+    merge_count(&mut xs, &mut scratch)
 }
 
 #[cfg(test)]
@@ -608,5 +630,30 @@ mod tests {
         assert_eq!(count_inversions(&[0, 1, 2, 3]), 0);
         assert_eq!(count_inversions(&[1, 0, 2, 3]), 1);
         assert_eq!(count_inversions(&[3, 2, 1, 0]), 6);
+        assert_eq!(count_inversions(&[]), 0);
+        assert_eq!(count_inversions(&[5]), 0);
+        assert_eq!(count_inversions(&[2, 2, 2]), 0, "ties are not inversions");
+    }
+
+    #[test]
+    fn inversion_count_matches_naive_on_random_orders() {
+        fn naive(order: &[u64]) -> usize {
+            let mut inv = 0;
+            for i in 0..order.len() {
+                for j in i + 1..order.len() {
+                    if order[i] > order[j] {
+                        inv += 1;
+                    }
+                }
+            }
+            inv
+        }
+        let mut rng = crate::util::rng::Pcg::new(42);
+        for len in [2usize, 3, 7, 64, 257] {
+            for _ in 0..8 {
+                let xs: Vec<u64> = (0..len).map(|_| rng.next_u64() % 50).collect();
+                assert_eq!(count_inversions(&xs), naive(&xs), "len {len}: {xs:?}");
+            }
+        }
     }
 }

@@ -12,6 +12,7 @@ use crate::graph::Dataset;
 use crate::storage::Storage;
 use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Pcg;
+use std::cell::RefCell;
 
 /// Sampling policy. Uniform is the paper's default; `Full` takes every
 /// neighbor up to the fanout cap deterministically (tests, ablations).
@@ -19,6 +20,21 @@ use crate::util::rng::Pcg;
 pub enum SamplePolicy {
     Uniform,
     Full,
+}
+
+/// Per-sampler scratch reused across `sample_batch` calls: the dedup map,
+/// neighbor list, and disk-read byte buffer were reallocated per batch (at
+/// thousands of batches per epoch), and the dedup map dominates. Vectors
+/// that are moved into the returned subgraph (`nodes`, per-level `idx`)
+/// can't be reused, but their initial capacity follows the high-water mark
+/// of previous batches so they allocate once instead of growing.
+#[derive(Clone, Default)]
+struct SampleScratch {
+    pos: FxHashMap<u32, i32>,
+    nbrs: Vec<u32>,
+    bytes: Vec<u8>,
+    /// Largest node count any batch produced (capacity hint).
+    nodes_hint: usize,
 }
 
 #[derive(Clone)]
@@ -29,11 +45,20 @@ pub struct Sampler {
     /// Nodes whose adjacency lists are held in an in-memory neighbor cache
     /// (Ginex §2): reading them charges no device time.
     pub topo_cache: Option<std::sync::Arc<std::collections::HashSet<u32>>>,
+    /// Interior mutability keeps `sample_batch(&self)` — samplers are
+    /// per-thread (moved into their worker), never shared by reference.
+    scratch: RefCell<SampleScratch>,
 }
 
 impl Sampler {
     pub fn new(fanouts: Vec<usize>, seed: u64) -> Self {
-        Sampler { fanouts, policy: SamplePolicy::Uniform, seed, topo_cache: None }
+        Sampler {
+            fanouts,
+            policy: SamplePolicy::Uniform,
+            seed,
+            topo_cache: None,
+            scratch: RefCell::new(SampleScratch::default()),
+        }
     }
 
     pub fn with_topo_cache(
@@ -55,9 +80,11 @@ impl Sampler {
     ) -> SampledSubgraph {
         let _busy = crate::metrics::state::enter(crate::metrics::state::State::Busy);
         let mut rng = Pcg::with_stream(self.seed ^ 0x5A17, batch_id);
-        let mut nodes: Vec<u32> = Vec::with_capacity(seeds.len() * 8);
-        let mut pos: FxHashMap<u32, i32> = FxHashMap::default();
-        pos.reserve(seeds.len() * 8);
+        let mut scr = self.scratch.borrow_mut();
+        let SampleScratch { pos, nbrs, bytes: scratch, nodes_hint } = &mut *scr;
+        pos.clear();
+        pos.reserve(seeds.len() * 8); // no-op once warm
+        let mut nodes: Vec<u32> = Vec::with_capacity((*nodes_hint).max(seeds.len() * 8));
         for &s in seeds {
             if pos.insert(s, nodes.len() as i32).is_none() {
                 nodes.push(s);
@@ -65,8 +92,6 @@ impl Sampler {
         }
         let mut cum = vec![nodes.len()];
         let mut adjs = Vec::with_capacity(self.fanouts.len());
-        let mut nbrs: Vec<u32> = Vec::new();
-        let mut scratch: Vec<u8> = Vec::new();
 
         for &fanout in &self.fanouts {
             let dst_count = *cum.last().unwrap();
@@ -76,9 +101,9 @@ impl Sampler {
                 nbrs.clear();
                 match &self.topo_cache {
                     Some(cache) if cache.contains(&v) => {
-                        ds.graph.neighbors_into_nocharge(v, &mut nbrs)
+                        ds.graph.neighbors_into_nocharge(v, nbrs)
                     }
-                    _ => ds.graph.neighbors_into_scratch(storage, v, &mut nbrs, &mut scratch),
+                    _ => ds.graph.neighbors_into_scratch(storage, v, nbrs, scratch),
                 }
                 let deg = nbrs.len();
                 if deg == 0 {
@@ -109,6 +134,7 @@ impl Sampler {
             cum.push(nodes.len());
         }
 
+        *nodes_hint = (*nodes_hint).max(nodes.len());
         let labels = seeds.iter().map(|&s| ds.labels[s as usize]).collect();
         SampledSubgraph { batch_id, nodes, cum, adjs, labels }
     }

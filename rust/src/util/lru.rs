@@ -35,6 +35,18 @@ impl<K: Eq + Hash + Clone> Lru<K> {
         Self::default()
     }
 
+    /// Preallocate for `cap` keys (the feature-buffer shards know their slot
+    /// population up front; this avoids rehash/regrow churn on the hot path).
+    pub fn with_capacity(cap: usize) -> Self {
+        Lru {
+            map: HashMap::with_capacity(cap),
+            nodes: Vec::with_capacity(cap),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -157,6 +169,17 @@ mod tests {
     use crate::util::prop;
     use crate::util::rng::Pcg;
     use std::collections::VecDeque;
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut l = Lru::with_capacity(16);
+        assert!(l.is_empty());
+        for i in 0..32 {
+            l.insert(i); // growing past the preallocation is fine
+        }
+        assert_eq!(l.len(), 32);
+        assert_eq!(l.pop_lru(), Some(0));
+    }
 
     #[test]
     fn basic_lru_order() {

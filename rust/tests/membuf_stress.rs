@@ -1,0 +1,163 @@
+//! Concurrency stress for the sharded feature buffer: ≥8 threads hammer
+//! begin_batch / publish / wait_plan / gather / release on a small,
+//! high-steal buffer with overlapping node sets, checking data integrity on
+//! every gather and the full structural invariants at quiesce points.
+//! Refcount underflow panics inside `release` (the buffer asserts) would
+//! fail the test via the panicking thread's join.
+
+use gnndrive::membuf::FeatureBuffer;
+use gnndrive::storage::DeviceMemory;
+use gnndrive::util::rng::Pcg;
+use std::sync::{Arc, Barrier};
+
+const THREADS: usize = 8;
+const BATCH: usize = 24;
+const ITERS: u64 = 200;
+const QUIESCE_EVERY: u64 = 50;
+const DIM: usize = 4;
+/// Small enough for heavy stealing, large enough that total live references
+/// (THREADS × BATCH = 192) plus in-transit stolen slots always fit — the
+/// engine's sizing rule, so blocking allocations terminate.
+const SLOTS: usize = 256;
+/// Node universe ~8× the slot count: heavy steal + cross-thread sharing.
+const ID_SPACE: u32 = 2000;
+
+fn batch_for(thread: usize, iter: u64) -> Vec<u32> {
+    let mut rng = Pcg::with_stream(0x57E55 + thread as u64, iter);
+    let mut ids: Vec<u32> = (0..BATCH).map(|_| rng.below(ID_SPACE)).collect();
+    // Unique ids per batch, like the sampler's deduped node list.
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+#[test]
+fn concurrent_begin_publish_release_stress() {
+    let dev = DeviceMemory::new(64 << 20);
+    let fb = Arc::new(FeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap());
+    assert!(fb.shard_count() > 1, "stress should exercise the sharded paths");
+    let quiesce = Barrier::new(THREADS);
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let fb = fb.clone();
+            let quiesce = &quiesce;
+            s.spawn(move || {
+                let mut out = vec![0f32; BATCH * DIM];
+                for i in 0..ITERS {
+                    let batch = batch_for(t, i);
+                    let plan = fb.begin_batch(&batch);
+                    for &(node, slot) in &plan.to_load {
+                        let row: Vec<f32> =
+                            (0..DIM).map(|j| (node * 10 + j as u32) as f32).collect();
+                        fb.publish(node, slot, &row);
+                    }
+                    // Rows planned by peers: wait on the pre-resolved
+                    // tickets (we hold references, so they cannot be
+                    // stolen out from under us).
+                    fb.wait_plan(&plan);
+                    fb.gather(&plan.aliases, &mut out[..batch.len() * DIM]);
+                    for (k, &node) in batch.iter().enumerate() {
+                        assert_eq!(
+                            out[k * DIM],
+                            (node * 10) as f32,
+                            "thread {t} iter {i}: node {node} row corrupted"
+                        );
+                        assert_eq!(
+                            out[k * DIM + DIM - 1],
+                            (node * 10 + DIM as u32 - 1) as f32,
+                            "thread {t} iter {i}: node {node} row tail corrupted"
+                        );
+                    }
+                    fb.release(&batch);
+                    // Quiesce: everyone between release and next begin, one
+                    // thread validates the cross-shard invariants.
+                    if (i + 1) % QUIESCE_EVERY == 0 {
+                        quiesce.wait();
+                        if t == 0 {
+                            fb.check_invariants().unwrap_or_else(|e| {
+                                panic!("invariants broken at iter {i}: {e}")
+                            });
+                            // All batches released → zero refs everywhere.
+                            assert_eq!(
+                                fb.standby_len(),
+                                SLOTS,
+                                "refcount leak at quiesce (iter {i})"
+                            );
+                        }
+                        quiesce.wait();
+                    }
+                }
+            });
+        }
+    });
+
+    fb.check_invariants().unwrap();
+    assert_eq!(fb.standby_len(), SLOTS, "all slots zero-ref after join");
+    let (hits, _shared, steals, loads) = fb.stats();
+    assert!(loads > 0, "stress never loaded anything");
+    assert!(steals > 0, "a {SLOTS}-slot buffer over {ID_SPACE} ids must steal");
+    assert!(hits > 0, "overlapping batches should produce hits");
+}
+
+#[test]
+fn concurrent_extractors_agree_on_aliases_under_steal_pressure() {
+    // All threads extract the same node sets concurrently; every shared node
+    // must resolve to one slot (single load) per round, like the paper's
+    // shared-extraction guarantee — but under a buffer small enough that
+    // earlier rounds' tenants get stolen.
+    let dev = DeviceMemory::new(64 << 20);
+    let fb = Arc::new(FeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap());
+    for round in 0..20u64 {
+        let mut rng = Pcg::with_stream(0xA11A5, round);
+        let set: Vec<u32> = {
+            let mut ids: Vec<u32> =
+                (0..48).map(|_| rng.below(ID_SPACE)).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ids
+        };
+        let loads_before = fb.stats().3;
+        let aliases: Vec<Vec<i32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let fb = fb.clone();
+                    let set = set.clone();
+                    s.spawn(move || {
+                        let plan = fb.begin_batch(&set);
+                        for &(node, slot) in &plan.to_load {
+                            fb.publish(node, slot, &[node as f32; DIM]);
+                        }
+                        fb.wait_plan(&plan);
+                        plan.aliases
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for a in &aliases[1..] {
+            assert_eq!(a, &aliases[0], "round {round}: threads disagree on aliases");
+        }
+        // The sharing guarantee: a node is loaded at most once per round no
+        // matter how many extractors plan it concurrently (residents from
+        // earlier rounds load zero times).
+        let new_loads = fb.stats().3 - loads_before;
+        assert!(
+            new_loads as usize <= set.len(),
+            "round {round}: {new_loads} loads for {} distinct nodes",
+            set.len()
+        );
+        // Every alias resolves to the right row.
+        let mut out = vec![0f32; set.len() * DIM];
+        fb.gather(&aliases[0], &mut out);
+        for (k, &node) in set.iter().enumerate() {
+            assert_eq!(out[k * DIM], node as f32, "round {round}: node {node} row");
+        }
+        // Each thread's batch took one reference on every node.
+        for _ in 0..THREADS {
+            fb.release(&set);
+        }
+        fb.check_invariants().unwrap();
+        assert_eq!(fb.standby_len(), SLOTS, "round {round}: refs leaked");
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The gnndrive build runs with no network and no crates.io mirror, so this
+//! vendored stand-in implements exactly the surface the crate uses:
+//! [`Error`], [`Result`], [`anyhow!`], [`bail!`], and the [`Context`]
+//! extension trait. Error values carry a display message plus an optional
+//! boxed source; context wraps are flattened into the message chain.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `anyhow::Result<T>`: a result defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Dynamic error: a message and an optional boxed source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Wrap a concrete `std::error::Error` value.
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Self {
+        Error { msg: err.to_string(), source: Some(Box::new(err)) }
+    }
+
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display + Send + Sync + 'static>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Prepend a context line, keeping the original as the source chain.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The outermost message (chain included, flattened).
+    pub fn to_string_chain(&self) -> String {
+        self.msg.clone()
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.msg, f)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().and_then(|s| s.source());
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+/// Sealed helper so [`Context`] covers both plain `std` errors and
+/// [`Error`] itself (which deliberately does not implement `std::error::Error`
+/// to keep the blanket `From` impl coherent) — same trick as real anyhow.
+mod ext {
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::new(self)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on results.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// `anyhow!("fmt", args...)` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt", args...)` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    fn io_fail() -> Result<()> {
+        let r: std::result::Result<(), io::Error> =
+            Err(io::Error::new(io::ErrorKind::NotFound, "gone"));
+        r?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<()> = io_fail().context("reading meta");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("reading meta: "), "{msg}");
+    }
+
+    #[test]
+    fn with_context_on_anyhow_results_too() {
+        let r: Result<()> = Err(anyhow!("base {}", 7));
+        let msg = r.with_context(|| "outer").unwrap_err().to_string();
+        assert_eq!(msg, "outer: base 7");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build + tests, plus clippy when available.
+# Run from anywhere; operates on the rust/ crate (vendored deps, offline).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy --all-targets -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== clippy unavailable; skipping lint =="
+fi
+
+echo "tier-1 OK"
