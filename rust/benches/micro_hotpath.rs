@@ -3,16 +3,19 @@
 //! queues, LRU, sampler CPU, feature-row synthesis). These back the §Perf
 //! iteration log in EXPERIMENTS.md.
 //!
-//! The feature-buffer section runs the same begin+publish+release workload
-//! against the sharded [`FeatureBuffer`] and the preserved single-mutex
-//! baseline, single-threaded and with 4/8 concurrent extractor threads, and
-//! appends machine-readable results to `BENCH_hotpath.json` so future PRs
-//! can track the contention numbers.
+//! The feature-buffer sections run begin+publish+release workloads against
+//! all three coordinator generations — the lock-free-allocation
+//! [`FeatureBuffer`], the PR-1 sharded mutex-LRU baseline, and the original
+//! single-mutex design — single-threaded and with 4/8 concurrent extractor
+//! threads: a mixed reuse workload, plus an alloc/release-heavy high-steal
+//! workload that isolates the slot-allocation path. Machine-readable
+//! results append to `BENCH_hotpath.json` so future PRs can track the
+//! contention numbers.
 
 use gnndrive::bench::{measure, per_op};
 use gnndrive::config::{Machine, MachineConfig};
 use gnndrive::graph::{Dataset, DatasetSpec};
-use gnndrive::membuf::{FeatureBuffer, SingleMutexFeatureBuffer};
+use gnndrive::membuf::{FeatureBuffer, MutexLruFeatureBuffer, SingleMutexFeatureBuffer};
 use gnndrive::sample::Sampler;
 use gnndrive::sim::queue::BoundedQueue;
 use gnndrive::sim::Clock;
@@ -28,13 +31,25 @@ const DIM: usize = 16;
 const ROW: [f32; DIM] = [0.5; DIM];
 
 /// The coordinator workload: plan a batch, publish every planned load,
-/// release. Implemented for both buffer generations so the bench bodies are
-/// shared.
+/// release. Implemented for every coordinator generation so the bench
+/// bodies are shared; each generation releases through its own production
+/// path (by alias for the lock-free buffer, by node for the baselines).
 trait Coordinator: Sync {
     fn run_batch(&self, batch: &[u32]);
 }
 
 impl Coordinator for FeatureBuffer {
+    fn run_batch(&self, batch: &[u32]) {
+        let plan = self.begin_batch(batch);
+        for &(node, slot) in &plan.to_load {
+            self.publish(node, slot, &ROW);
+        }
+        // The production release path: by alias, no map lookup, no lock.
+        self.release_aliases(&plan.aliases);
+    }
+}
+
+impl Coordinator for MutexLruFeatureBuffer {
     fn run_batch(&self, batch: &[u32]) {
         let plan = self.begin_batch(batch);
         for &(node, slot) in &plan.to_load {
@@ -100,14 +115,16 @@ fn batch_for(thread: usize, iter: u64, batch_len: usize, id_space: u32) -> Vec<u
 }
 
 /// Run `iters` batches of `batch_len` on each of `threads` threads against
-/// one shared coordinator; repeat `reps` times and keep mean + best.
-fn bench_coordinator<C: Coordinator>(
+/// one shared coordinator; repeat `reps` times and keep mean + best. The
+/// per-thread workload comes from `gen_batch(thread, iter)`.
+fn bench_coordinator<C: Coordinator + ?Sized>(
     name: &str,
     fb: &C,
     threads: usize,
     iters: u64,
     batch_len: usize,
     reps: usize,
+    gen_batch: &(dyn Fn(usize, u64) -> Vec<u32> + Sync),
 ) -> Record {
     let mut samples = Vec::with_capacity(reps);
     for _ in 0..reps {
@@ -119,9 +136,8 @@ fn bench_coordinator<C: Coordinator>(
                     s.spawn(move || {
                         // Generate the workload outside the timed region so
                         // RNG/alloc cost does not dilute the measured ratio.
-                        let batches: Vec<Vec<u32>> = (0..iters)
-                            .map(|i| batch_for(t, i, batch_len, 100_000))
-                            .collect();
+                        let batches: Vec<Vec<u32>> =
+                            (0..iters).map(|i| gen_batch(t, i)).collect();
                         barrier.wait();
                         let t0 = Instant::now();
                         for batch in &batches {
@@ -157,18 +173,30 @@ fn bench_coordinator<C: Coordinator>(
     rec
 }
 
+/// Fully-unique node ids per (thread, iter): every batch is ~all misses, so
+/// once the buffer warms, every allocation is an eviction — the
+/// alloc/release-heavy, high-steal workload that isolates the slot
+/// allocation path (hits and sharing are measured by the mixed workload).
+fn fresh_batch(thread: usize, iter: u64, batch_len: usize) -> Vec<u32> {
+    (0..batch_len as u32)
+        .map(|k| ((thread as u32) << 24) | (iter as u32 * batch_len as u32 + k))
+        .collect()
+}
+
 fn main() {
     println!("# micro_hotpath — coordinator hot-path microbenchmarks\n");
     let mut records: Vec<Record> = Vec::new();
 
     // Feature-buffer begin+publish+release (Algorithm 1 bookkeeping, no
-    // I/O): sharded coordinator vs the single-mutex baseline, 1/4/8
-    // concurrent extractor threads on one shared buffer.
+    // I/O): lock-free-allocation coordinator vs the single-mutex baseline,
+    // 1/4/8 concurrent extractor threads on one shared buffer. Mixed
+    // workload: per-thread id regions with reuse (hits + steals).
     {
         const SLOTS: usize = 16 * 1024;
         const BATCH: usize = 1024;
         const ITERS: u64 = 40;
         println!("## feature buffer: sharded vs single-mutex baseline");
+        let mixed = |t: usize, i: u64| batch_for(t, i, BATCH, 100_000);
         for &threads in &[1usize, 4, 8] {
             let dev = DeviceMemory::new(1 << 30);
             let sharded = FeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
@@ -179,6 +207,7 @@ fn main() {
                 ITERS,
                 BATCH,
                 3,
+                &mixed,
             );
             let baseline = SingleMutexFeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
             let r_base = bench_coordinator(
@@ -188,6 +217,7 @@ fn main() {
                 ITERS,
                 BATCH,
                 3,
+                &mixed,
             );
             println!(
                 "  -> t{threads} speedup: {:.2}x per-op (shards={})\n",
@@ -196,6 +226,64 @@ fn main() {
             );
             records.push(r_sharded);
             records.push(r_base);
+        }
+    }
+
+    // Allocation-path shoot-out: alloc/release-heavy, high-steal workload
+    // (every batch is fresh ids → once warm, every slot comes from an
+    // eviction) across all three coordinator generations — lock-free
+    // (Treiber stack + clock), PR-1 sharded mutex-LRU, and the original
+    // single mutex. This is the workload the lock-free standby path exists
+    // for: the mutex-LRU's per-shard standby lock is its last allocation
+    // lock, and it serializes exactly here.
+    {
+        const SLOTS: usize = 16 * 1024; // ≥ threads × batch: blocking-free
+        const BATCH: usize = 1024;
+        const ITERS: u64 = 25;
+        println!("## allocation path: lock-free vs mutex-LRU vs single-mutex (high steal)");
+        let fresh = |t: usize, i: u64| fresh_batch(t, i, BATCH);
+        for &threads in &[1usize, 4, 8] {
+            let dev = DeviceMemory::new(1 << 30);
+            let lockfree = FeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
+            let r_lockfree = bench_coordinator(
+                &format!("lock-free alloc-heavy t{threads}"),
+                &lockfree,
+                threads,
+                ITERS,
+                BATCH,
+                3,
+                &fresh,
+            );
+            let mutex_lru = MutexLruFeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
+            let r_lru = bench_coordinator(
+                &format!("mutex-lru alloc-heavy t{threads}"),
+                &mutex_lru,
+                threads,
+                ITERS,
+                BATCH,
+                3,
+                &fresh,
+            );
+            let single = SingleMutexFeatureBuffer::in_device(&dev, SLOTS, DIM).unwrap();
+            let r_single = bench_coordinator(
+                &format!("single-mutex alloc-heavy t{threads}"),
+                &single,
+                threads,
+                ITERS,
+                BATCH,
+                3,
+                &fresh,
+            );
+            let (_, _, steals, loads) = lockfree.stats();
+            println!(
+                "  -> t{threads}: lock-free {:.2}x vs mutex-lru, {:.2}x vs single-mutex (steals/loads {:.2})\n",
+                r_lru.per_op_ns / r_lockfree.per_op_ns,
+                r_single.per_op_ns / r_lockfree.per_op_ns,
+                steals as f64 / loads.max(1) as f64,
+            );
+            records.push(r_lockfree);
+            records.push(r_lru);
+            records.push(r_single);
         }
     }
 

@@ -8,6 +8,12 @@
 //! with outstanding loads; completion publishes the node's valid bit in the
 //! feature buffer. Nodes already resident are aliased (no I/O), nodes being
 //! extracted by peers are awaited at the end (shared I/O).
+//!
+//! The returned alias list is the batch's currency downstream: the trainer
+//! gathers rows by alias, and the releaser drops the references this
+//! extraction took via [`FeatureBuffer::release_aliases`] — by slot index,
+//! never re-resolving node ids — so the whole post-extraction lifecycle
+//! stays off the coordinator's shard locks.
 
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::storage::uring::{IoMode, Sqe, Uring};
@@ -250,6 +256,32 @@ mod tests {
             0
         );
         assert_eq!(aliases.len(), 32);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alias_release_roundtrips_with_extraction() {
+        // The engine's lifecycle: extract → gather → release_aliases (the
+        // releaser never sees node ids). Slots must come back reusable and
+        // a re-extraction must still hit.
+        let (m, ds, fb) = setup();
+        let ex = extractor(&m, &ds, fb.clone(), 64);
+        let nodes: Vec<u32> = (40..72).collect();
+        let aliases = ex.extract(&nodes);
+        let mut out = vec![0f32; nodes.len() * ds.spec.dim];
+        fb.gather(&aliases, &mut out);
+        fb.release_aliases(&aliases);
+        fb.check_invariants().unwrap();
+        assert_eq!(fb.standby_len(), fb.n_slots, "all references dropped");
+        m.storage.ssd.reset_stats();
+        let again = ex.extract(&nodes);
+        assert_eq!(again, aliases, "released-by-alias rows stay resident");
+        assert_eq!(
+            m.storage.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "alias release must not evict resident rows"
+        );
+        fb.release_aliases(&again);
         fb.check_invariants().unwrap();
     }
 

@@ -1,0 +1,66 @@
+//! Flat f32 row arena shared by the feature-buffer coordinator generations.
+//!
+//! Rows are disjoint and single-writer by protocol (only the extractor that
+//! planned a slot's load publishes into it, and readers are ordered behind
+//! the slot's valid bit), so access goes through raw pointers — no per-row
+//! mutex, no `&mut` aliasing over the whole buffer. Kept in one place so
+//! the unsafe surface exists exactly once for every coordinator that uses
+//! it ([`super::feature_buffer::FeatureBuffer`] and the preserved
+//! mutex-LRU baseline).
+
+pub(crate) struct Arena {
+    base: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for Arena {}
+unsafe impl Sync for Arena {}
+
+impl Arena {
+    pub fn new(len: usize) -> Self {
+        let boxed = vec![0f32; len].into_boxed_slice();
+        Arena { base: Box::into_raw(boxed) as *mut f32, len }
+    }
+
+    /// Pointer to row `slot` of width `dim`.
+    #[inline]
+    pub fn row(&self, slot: usize, dim: usize) -> *mut f32 {
+        debug_assert!((slot + 1) * dim <= self.len);
+        // Provenance: `base` came from Box::into_raw over the whole arena.
+        unsafe { self.base.add(slot * dim) }
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.base, self.len)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_disjoint_and_zeroed() {
+        let a = Arena::new(4 * 3);
+        for slot in 0..4 {
+            let p = a.row(slot, 3);
+            unsafe {
+                for j in 0..3 {
+                    assert_eq!(*p.add(j), 0.0);
+                    *p.add(j) = (slot * 10 + j) as f32;
+                }
+            }
+        }
+        for slot in 0..4 {
+            let p = a.row(slot, 3);
+            unsafe {
+                assert_eq!(*p, (slot * 10) as f32);
+                assert_eq!(*p.add(2), (slot * 10 + 2) as f32);
+            }
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! GNNDrive's feature-buffer manager (paper §4.2, Fig 6, Algorithm 1),
-//! re-architected as a sharded, lock-minimized coordinator.
+//! re-architected as a sharded coordinator with a *lock-free* slot
+//! allocation and release path.
 //!
 //! The feature buffer lives in device memory (host memory for CPU-based
 //! training) and holds one slot per extracted node row. The paper's four
@@ -8,40 +9,54 @@
 //! * **mapping table** — node → (slot, generation); *sharded by node-id
 //!   hash* so concurrent extractors planning different batches take
 //!   different locks (`begin_batch` groups its node list per shard and takes
-//!   each shard mutex at most once on the fast path);
+//!   each shard mutex at most once on the fast path). Entries are validated
+//!   on use by a generation-checked CAS, so a stale entry (its slot was
+//!   claimed since) is detected and dropped lazily instead of being evicted
+//!   under a lock;
 //! * **reverse mapping** — slot → node (or −1), per-slot atomics;
-//! * **standby list** — LRU of zero-reference slots, one list per shard
-//!   (a freed slot parks in its tenant node's shard; a dry shard steals the
-//!   LRU slot of a peer shard — approximate global LRU, exact within a
-//!   shard, and exactly the old global order when there is one shard);
-//! * **node alias list** — per-batch slot indexes handed to the trainer.
+//! * **standby "list"** — *implicit*: any slot whose packed word shows zero
+//!   references is reusable. A [`super::shard::FreeStack`] (Treiber stack)
+//!   hands out never-tenanted slots with one CAS pop, and a
+//!   [`super::shard::ClockHand`] second-chance sweep over the packed
+//!   `AtomicU64` slot words claims tenanted zero-reference slots with a
+//!   generation-bumping CAS — approximate LRU (a slot survives one full
+//!   sweep after its last use), with **no mutex anywhere on the allocation
+//!   or release path**;
+//! * **node alias list** — per-batch slot indexes handed to the trainer,
+//!   and since the lock-free path landed also the *release* currency:
+//!   [`FeatureBuffer::release_aliases`] drops references by slot index
+//!   directly, skipping the node→slot map (and its shard locks) entirely.
 //!
 //! Row payloads live in one contiguous flat arena instead of
 //! `Vec<Mutex<Box<[f32]>>>`; a packed per-slot `AtomicU64`
-//! (`refcount | valid | generation`, see [`super::slot_state`]) carries the
-//! slot's lifecycle. `publish` is write-row + release-store of the valid bit
-//! + targeted wakeup; `gather` is an acquire load + `copy_nonoverlapping`
-//! per row — no per-row locks anywhere. The old condvar broadcasts
-//! (`notify_all` on every release and publish) are replaced by
-//! [`EventCount`]s whose signal side is one atomic load when nobody waits.
+//! (`refcount | valid | generation | clock`, see [`super::slot_state`])
+//! carries the slot's lifecycle. `publish` is write-row + release-store of
+//! the valid bit + targeted wakeup; `gather` is an acquire load +
+//! `copy_nonoverlapping` per row — no per-row locks anywhere. Condvar
+//! broadcasts are replaced by [`EventCount`]s whose signal side is one
+//! atomic load when nobody waits.
 //!
 //! State machine per entry is unchanged from the paper: `(slot=-1,
 //! valid=0)` absent → `(slot=s, valid=0, ref>0)` being extracted →
-//! `(slot=s, valid=1)` ready; a ready node with `ref=0` sits in a standby
-//! list and can be either *reused* (hit) or *stolen* (slot reassigned,
-//! generation bumped, entry invalidated). Extractors that find a node
+//! `(slot=s, valid=1)` ready; a ready node with `ref=0` is *evictable* and
+//! can be either *reused* (hit) or *claimed* (slot reassigned, generation
+//! bumped, the old entry turned stale). Extractors that find a node
 //! mid-extraction by a peer alias its slot, join the wait list, and re-check
 //! validity at the end (`wait_valid`/`wait_plan`) — sharing I/O instead of
 //! duplicating it.
 //!
-//! The pre-shard single-mutex coordinator is preserved verbatim as
-//! [`super::single_mutex::SingleMutexFeatureBuffer`] so
-//! `benches/micro_hotpath.rs` can measure the contention win against it.
+//! Earlier coordinator generations are preserved for
+//! `benches/micro_hotpath.rs`: the single-global-mutex original as
+//! [`super::single_mutex::SingleMutexFeatureBuffer`] and the PR-1 sharded
+//! mutex-LRU design as [`super::mutex_lru::MutexLruFeatureBuffer`].
 
-use super::shard::{EventCount, MapEntry, Shard, ShardState};
+use super::arena::Arena;
+use super::shard::{
+    self, ClockHand, EventCount, FreeStack, MapEntry, Shard, ShardState,
+};
 use super::slot_state::{self, SlotStates};
 use crate::storage::{DeviceMemory, HostMemory, Reservation};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Where the buffer's memory is charged.
@@ -79,40 +94,6 @@ pub struct BatchPlan {
     pub wait_handles: Vec<WaitHandle>,
 }
 
-/// Flat row arena. Rows are disjoint and single-writer by protocol (only
-/// the extractor that planned a slot's load publishes into it, and readers
-/// are ordered behind the valid bit), so access goes through raw pointers —
-/// no per-row mutex, no `&mut` aliasing over the whole buffer.
-struct Arena {
-    base: *mut f32,
-    len: usize,
-}
-
-unsafe impl Send for Arena {}
-unsafe impl Sync for Arena {}
-
-impl Arena {
-    fn new(len: usize) -> Self {
-        let boxed = vec![0f32; len].into_boxed_slice();
-        Arena { base: Box::into_raw(boxed) as *mut f32, len }
-    }
-
-    #[inline]
-    fn row(&self, slot: usize, dim: usize) -> *mut f32 {
-        debug_assert!((slot + 1) * dim <= self.len);
-        // Provenance: `base` came from Box::into_raw over the whole arena.
-        unsafe { self.base.add(slot * dim) }
-    }
-}
-
-impl Drop for Arena {
-    fn drop(&mut self) {
-        unsafe {
-            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.base, self.len)));
-        }
-    }
-}
-
 /// Outcome of resolving one node inside its shard.
 enum Resolved {
     /// Ready in the buffer (hit): alias this slot.
@@ -121,8 +102,18 @@ enum Resolved {
     Wait(u32, u32),
     /// Newly allocated: caller must load the row, then publish.
     Load(u32),
-    /// Shard has no standby slot; take the slow allocation path.
+    /// Nothing allocatable anywhere right now; take the blocking path.
     Dry,
+}
+
+/// One clock eviction's deferred bookkeeping: the old tenant's mapping
+/// entry (in the tenant's home shard) is now stale and is swept out at the
+/// end of the batch — off the allocation fast path.
+#[derive(Clone, Copy)]
+struct Evicted {
+    node: u32,
+    slot: u32,
+    generation: u32,
 }
 
 pub struct FeatureBuffer {
@@ -135,7 +126,13 @@ pub struct FeatureBuffer {
     /// slot → tenant node id or -1.
     reverse: Vec<AtomicI64>,
     arena: Arena,
-    /// Signalled when slots enter a standby list and allocators are waiting.
+    /// Treiber stack of untenanted slots: the whole arena at cold start,
+    /// plus slots handed back by raced clock claims.
+    free: FreeStack,
+    /// Second-chance eviction cursor over the slot words.
+    clock: ClockHand,
+    /// Signalled when a slot's reference count returns to zero and
+    /// allocators are waiting.
     free_event: EventCount,
     /// Publish wakeups, fanned out by `slot % WAIT_GROUPS`.
     valid_events: Vec<EventCount>,
@@ -145,22 +142,6 @@ pub struct FeatureBuffer {
     steals: AtomicU64,
     loads: AtomicU64,
     _home: BufferHome,
-}
-
-/// Largest power of two ≤ `x` (x ≥ 1).
-fn floor_pow2(x: usize) -> usize {
-    1 << (usize::BITS - 1 - x.leading_zeros())
-}
-
-/// Shard count policy: tiny buffers (unit tests, degenerate configs) get one
-/// shard — making the coordinator *exactly* the paper's global-LRU machine —
-/// while production-sized buffers get up to 16 shards with ≥64 slots each.
-fn shard_count_for(n_slots: usize) -> usize {
-    if n_slots < 256 {
-        1
-    } else {
-        floor_pow2((n_slots / 64).min(16))
-    }
 }
 
 impl FeatureBuffer {
@@ -187,16 +168,17 @@ impl FeatureBuffer {
     }
 
     fn build(n_slots: usize, dim: usize, home: BufferHome) -> Self {
-        let n_shards = shard_count_for(n_slots);
+        // Shards only partition the mapping table now — allocation is
+        // global and lock-free — so the count trades map-lock contention
+        // against per-batch grouping work.
+        let n_shards = shard::shard_count_for(n_slots);
         let shards: Vec<Shard> =
             (0..n_shards).map(|_| Shard::new(n_slots / n_shards + 1)).collect();
-        // Distribute the free slots round-robin; within a shard the insert
-        // order is ascending, so slot `s` is consumed before slot `s + n`.
-        for (sx, shard) in shards.iter().enumerate() {
-            let mut st = shard.state.lock().unwrap();
-            for s in (sx..n_slots).step_by(n_shards) {
-                st.standby.insert(s as u32);
-            }
+        let free = FreeStack::new(n_slots);
+        // Push descending so pops hand out ascending slot ids (diagnostic
+        // friendliness only; any order is correct).
+        for s in (0..n_slots as u32).rev() {
+            free.push(s);
         }
         FeatureBuffer {
             n_slots,
@@ -206,6 +188,8 @@ impl FeatureBuffer {
             states: SlotStates::new(n_slots),
             reverse: (0..n_slots).map(|_| AtomicI64::new(-1)).collect(),
             arena: Arena::new(n_slots * dim),
+            free,
+            clock: ClockHand::new(),
             free_event: EventCount::new(),
             valid_events: (0..WAIT_GROUPS.min(n_slots.max(1))).map(|_| EventCount::new()).collect(),
             hits: AtomicU64::new(0),
@@ -234,105 +218,156 @@ impl FeatureBuffer {
         &self.valid_events[slot as usize % self.valid_events.len()]
     }
 
-    /// Resolve one node against its own shard (`st` is `shard_idx`'s state,
-    /// and `node_shard(id) == shard_idx`). Increments the reference count on
-    /// every outcome except `Dry`.
+    /// Bounded second-chance sweep over the packed slot words: claim one
+    /// zero-reference tenanted slot, evicting its tenant with a single
+    /// generation-bumping CAS — no lock, and *called outside every shard
+    /// lock* (the O(n_slots) worst-case sweep must never extend a mutex
+    /// critical section). Returns
+    /// `(slot, new_generation, old_tenant, old_generation)`, or `None`
+    /// after two full passes found nothing claimable (caller blocks on the
+    /// free event).
+    fn clock_claim(&self) -> Option<(u32, u32, u32, u32)> {
+        if self.n_slots == 0 {
+            return None;
+        }
+        // Two passes: the first may do nothing but strip clock bits from
+        // recently-used slots (their second chance).
+        for _ in 0..2 * self.n_slots + 1 {
+            let s = self.clock.next(self.n_slots) as u32;
+            let word = self.states.load(s);
+            if slot_state::refs(word) != 0 {
+                continue;
+            }
+            if !slot_state::is_valid(word)
+                && self.reverse[s as usize].load(Ordering::SeqCst) < 0
+            {
+                // Free-stack slot (or one mid-activation): the stack hands
+                // those out; the claim path only evicts tenants.
+                continue;
+            }
+            if slot_state::has_clock(word) {
+                self.states.clear_clock(s);
+                continue;
+            }
+            if let Some(new_gen) = self.states.try_claim(s, word) {
+                // Exclusive owner now. The old tenant (still in `reverse`
+                // until install overwrites it) keeps a stale map entry that
+                // the deferred sweep removes.
+                let tenant = self.reverse[s as usize].load(Ordering::SeqCst);
+                debug_assert!(tenant >= 0, "claimed slot {s} had no tenant");
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                // A waiter parked on the old generation must re-check and
+                // bail (its handle is stale).
+                self.valid_event(s).signal();
+                return Some((s, new_gen, tenant as u32, slot_state::generation(word)));
+            }
+        }
+        None
+    }
+
+    /// Resolve one node against its own shard (`st` is the state of the
+    /// shard `id` hashes to). Takes one reference on every outcome except
+    /// `Dry`. The only allocation attempted here is the O(1) Treiber-stack
+    /// pop; clock eviction — whose bounded sweep can touch every slot word —
+    /// happens in `alloc_slow`, *outside* the shard mutex, so a miss storm
+    /// never stretches this critical section.
     fn resolve_in_shard(&self, st: &mut ShardState, id: u32) -> Resolved {
         if let Some(e) = st.map.get(&id).copied() {
-            let word = self.states.load(e.slot);
-            debug_assert_eq!(slot_state::generation(word), e.generation, "map/word gen skew");
-            if slot_state::is_valid(word) {
-                // Ready in the buffer: reuse. A zero-ref entry sits in this
-                // shard's standby list — pull it out so it cannot be stolen.
-                if slot_state::refs(word) == 0 {
-                    let removed = st.standby.remove(&e.slot);
-                    debug_assert!(removed, "zero-ref valid slot {} not in standby", e.slot);
+            match self.states.try_ref(e.slot, e.generation) {
+                Ok(prev) => {
+                    if slot_state::is_valid(prev) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Resolved::Alias(e.slot);
+                    }
+                    // Being extracted by a peer (ref>0, invalid): share it.
+                    debug_assert!(
+                        slot_state::refs(prev) > 0,
+                        "invalid zero-ref entry leaked"
+                    );
+                    self.shared.fetch_add(1, Ordering::Relaxed);
+                    return Resolved::Wait(e.slot, e.generation);
                 }
-                self.states.add_ref(e.slot);
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Resolved::Alias(e.slot)
-            } else {
-                // Being extracted by a peer (ref>0, invalid): share it.
-                debug_assert!(slot_state::refs(word) > 0, "invalid zero-ref entry leaked");
-                self.states.add_ref(e.slot);
-                self.shared.fetch_add(1, Ordering::Relaxed);
-                Resolved::Wait(e.slot, e.generation)
+                Err(_) => {
+                    // The slot was claimed since this entry was written:
+                    // the entry is stale. Drop it and allocate fresh.
+                    st.map.remove(&id);
+                }
             }
-        } else if let Some(slot) = st.standby.pop_lru() {
-            // Absent: allocate this shard's LRU standby slot (Algorithm 1
-            // L24-29). Steal = invalidate the previous tenant's mapping; by
-            // the parking invariant the tenant hashes to this same shard.
-            let generation = self.claim_slot(st, slot);
-            self.install(st, id, slot, generation);
-            Resolved::Load(slot)
-        } else {
-            Resolved::Dry
+        }
+        if let Some(slot) = self.free.pop() {
+            // Never-tenanted (or handed-back) slot: one CAS pop, exclusive
+            // ownership.
+            let generation = self.states.activate(slot);
+            self.reverse[slot as usize].store(id as i64, Ordering::SeqCst);
+            st.map.insert(id, MapEntry { slot, generation });
+            self.loads.fetch_add(1, Ordering::Relaxed);
+            return Resolved::Load(slot);
+        }
+        Resolved::Dry
+    }
+
+    /// Install a clock-claimed slot for `id`, re-checking the mapping under
+    /// the home shard lock (a peer may have mapped the node while the sweep
+    /// ran lock-free). On a race, the claimed slot is handed back to the
+    /// free stack as never-tenanted — references held by the raced outcome
+    /// are already correct. Either way the evicted tenant's stale entry is
+    /// recorded for the deferred sweep.
+    fn install_claimed(
+        &self,
+        home: usize,
+        id: u32,
+        claimed: (u32, u32, u32, u32),
+        evicted: &mut Vec<Evicted>,
+    ) -> Resolved {
+        let (slot, generation, old_node, old_gen) = claimed;
+        evicted.push(Evicted { node: old_node, slot, generation: old_gen });
+        {
+            let mut st = self.shards[home].state.lock().unwrap();
+            match self.resolve_in_shard(&mut st, id) {
+                Resolved::Dry => {
+                    self.reverse[slot as usize].store(id as i64, Ordering::SeqCst);
+                    st.map.insert(id, MapEntry { slot, generation });
+                    self.loads.fetch_add(1, Ordering::Relaxed);
+                    return Resolved::Load(slot);
+                }
+                r => {
+                    drop(st);
+                    // Raced: the node resolved some other way. Hand the
+                    // claimed slot back. Order matters against concurrent
+                    // clock probes: clear the tenant while the claim's
+                    // reference still parks the word (probes skip refs>0),
+                    // then zero the word, then publish it on the stack —
+                    // a probe between the last two steps sees an invalid
+                    // untenanted word and skips it.
+                    self.reverse[slot as usize].store(-1, Ordering::SeqCst);
+                    self.states.reset(slot, 0, false, generation);
+                    self.free.push(slot);
+                    self.free_event.signal();
+                    r
+                }
+            }
         }
     }
 
-    /// Evict `slot`'s previous tenant (if any) from `st`'s map and bump the
-    /// slot generation. Returns the new generation; the slot is left
-    /// unmapped, invalid, zero-ref — exclusively owned by the caller.
-    fn claim_slot(&self, st: &mut ShardState, slot: u32) -> u32 {
-        let prev = self.reverse[slot as usize].swap(-1, Ordering::SeqCst);
-        if prev >= 0 {
-            let removed = st.map.remove(&(prev as u32));
-            debug_assert!(removed.is_some(), "stolen slot {slot} had no mapping");
-            self.steals.fetch_add(1, Ordering::Relaxed);
-        }
-        let generation = slot_state::generation(self.states.load(slot)).wrapping_add(1);
-        self.states.reset(slot, 0, false, generation);
-        // A waiter parked on the old generation must re-check and bail.
-        self.valid_event(slot).signal();
-        generation
-    }
-
-    /// Map `id` to an exclusively-owned free slot inside `id`'s shard.
-    fn install(&self, st: &mut ShardState, id: u32, slot: u32, generation: u32) {
-        self.reverse[slot as usize].store(id as i64, Ordering::SeqCst);
-        self.states.reset(slot, 1, false, generation);
-        st.map.insert(id, MapEntry { slot, generation });
-        self.loads.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Stable counting sort of batch positions by shard: `order` holds the
-    /// positions `0..len` grouped per shard (original order within a
-    /// shard), `ends[s]` the exclusive end of shard `s`'s run. Two
-    /// allocations per batch instead of one `Vec` per shard.
+    /// Batch positions grouped per shard (see [`shard::group_positions`]).
     fn group_positions(&self, node_ids: &[u32]) -> (Vec<u32>, Vec<u32>) {
-        let n_shards = self.shards.len();
-        let mut cursor = vec![0u32; n_shards];
-        for &id in node_ids {
-            cursor[self.node_shard(id)] += 1;
-        }
-        let mut start = 0u32;
-        for c in cursor.iter_mut() {
-            let count = *c;
-            *c = start;
-            start += count;
-        }
-        let mut order = vec![0u32; node_ids.len()];
-        for (i, &id) in node_ids.iter().enumerate() {
-            let s = self.node_shard(id);
-            order[cursor[s] as usize] = i as u32;
-            cursor[s] += 1;
-        }
-        // After the fill, cursor[s] is exactly shard s's exclusive end.
-        (order, cursor)
+        shard::group_positions(self.shards.len(), node_ids, |id| self.node_shard(id))
     }
 
     /// Algorithm 1, planning phase: resolve every batch node to a slot,
-    /// reusing valid data, sharing in-flight extractions, and allocating LRU
-    /// standby slots for the rest (blocking if none are free anywhere — the
-    /// engine sizes the buffer ≥ (queue depth + extractors) × batch cap so
-    /// waiting always terminates). Reference counts of all batch nodes are
-    /// incremented here and dropped by `release`.
+    /// reusing valid data, sharing in-flight extractions, and allocating
+    /// free or clock-evicted slots for the rest (blocking if none are free
+    /// anywhere — the engine sizes the buffer ≥ (queue depth + extractors)
+    /// × batch cap so waiting always terminates). Reference counts of all
+    /// batch nodes are incremented here and dropped by `release` /
+    /// `release_aliases`.
     pub fn begin_batch(&self, node_ids: &[u32]) -> BatchPlan {
         let mut aliases = vec![-1i32; node_ids.len()];
         let mut to_load = Vec::new();
         let mut wait_list = Vec::new();
         let mut wait_handles = Vec::new();
         let mut deferred: Vec<usize> = Vec::new();
+        let mut evicted: Vec<Evicted> = Vec::new();
 
         let apply = |i: usize,
                          r: Resolved,
@@ -396,71 +431,90 @@ impl FeatureBuffer {
             deferred.sort_unstable(); // re-establish batch order across shards
         }
 
-        // Slow path: the node's home shard was dry — steal from a peer shard
-        // or wait for a release.
+        // Slow path: the free stack was dry — evict via the clock (outside
+        // every shard lock), blocking on the free event only when nothing
+        // anywhere is claimable.
         for i in deferred {
-            let r = self.alloc_slow(node_ids[i]);
+            let r = self.alloc_slow(node_ids[i], &mut evicted);
             let ok =
                 apply(i, r, &mut aliases, &mut to_load, &mut wait_list, &mut wait_handles);
             debug_assert!(ok, "alloc_slow cannot return Dry");
         }
+
+        self.cleanup_evicted(&mut evicted);
         BatchPlan { aliases, to_load, wait_list, wait_handles }
     }
 
-    /// Allocate a slot for `id` when its home shard has no standby slot:
-    /// retry the home shard, then steal another shard's LRU slot, then block
-    /// on the free event until a release parks something.
-    fn alloc_slow(&self, id: u32) -> Resolved {
+    /// Eviction/blocking allocation. The clock sweep runs with no lock
+    /// held; the home shard is only locked for the map re-check + install
+    /// (`install_claimed`) or the quick re-resolve between waits. The
+    /// begin_wait/re-check/wait dance keeps the free-event wakeup
+    /// race-free: a release landing after a failed sweep is observed by the
+    /// re-check made after registration.
+    fn alloc_slow(&self, id: u32, evicted: &mut Vec<Evicted>) -> Resolved {
         let home = self.node_shard(id);
         loop {
-            if let Some(r) = self.try_alloc(home, id) {
-                return r;
+            // Resolve first, claim second: a peer may have mapped the node
+            // (or handed a slot back) while this allocation was queued, and
+            // an eviction destroys a resident row irreversibly — don't pay
+            // that price when the node no longer needs a slot.
+            {
+                let mut st = self.shards[home].state.lock().unwrap();
+                match self.resolve_in_shard(&mut st, id) {
+                    Resolved::Dry => {}
+                    r => return r,
+                }
+            }
+            if let Some(claimed) = self.clock_claim() {
+                return self.install_claimed(home, id, claimed, evicted);
             }
             let seen = self.free_event.begin_wait();
-            if let Some(r) = self.try_alloc(home, id) {
+            {
+                let mut st = self.shards[home].state.lock().unwrap();
+                match self.resolve_in_shard(&mut st, id) {
+                    Resolved::Dry => {}
+                    r => {
+                        self.free_event.cancel_wait();
+                        return r;
+                    }
+                }
+            }
+            if let Some(claimed) = self.clock_claim() {
                 self.free_event.cancel_wait();
-                return r;
+                return self.install_claimed(home, id, claimed, evicted);
             }
             self.free_event.wait(seen);
         }
     }
 
-    fn try_alloc(&self, home: usize, id: u32) -> Option<Resolved> {
-        // A peer may have mapped the node (or released a slot) meanwhile.
-        {
-            let mut st = self.shards[home].state.lock().unwrap();
-            match self.resolve_in_shard(&mut st, id) {
-                Resolved::Dry => {}
-                r => return Some(r),
+    /// Deferred stale-entry sweep: after the batch is planned (all shard
+    /// locks dropped), remove the mapping entries of tenants evicted by the
+    /// clock this batch — grouped so each touched shard is locked once.
+    /// Removal is conditional on (slot, generation) still matching: the
+    /// tenant may have been re-resolved and re-installed elsewhere
+    /// meanwhile, and that live entry must survive.
+    fn cleanup_evicted(&self, evicted: &mut Vec<Evicted>) {
+        if evicted.is_empty() {
+            return;
+        }
+        if self.shards.len() > 1 {
+            evicted.sort_unstable_by_key(|ev| self.node_shard(ev.node));
+        }
+        let mut i = 0;
+        while i < evicted.len() {
+            let sx = self.node_shard(evicted[i].node);
+            let mut st = self.shards[sx].state.lock().unwrap();
+            while i < evicted.len() && self.node_shard(evicted[i].node) == sx {
+                let ev = evicted[i];
+                if let Some(e) = st.map.get(&ev.node) {
+                    if e.slot == ev.slot && e.generation == ev.generation {
+                        st.map.remove(&ev.node);
+                    }
+                }
+                i += 1;
             }
         }
-        // Steal a peer shard's LRU slot. The stolen slot's previous tenant
-        // hashes to that same shard, so eviction needs only that one lock;
-        // the slot then migrates into `home`.
-        for d in 1..self.shards.len() {
-            let sx = (home + d) & self.shard_mask;
-            let stolen = {
-                let mut st = self.shards[sx].state.lock().unwrap();
-                st.standby.pop_lru().map(|slot| (slot, self.claim_slot(&mut st, slot)))
-            };
-            let Some((slot, generation)) = stolen else { continue };
-            let mut st = self.shards[home].state.lock().unwrap();
-            match self.resolve_in_shard(&mut st, id) {
-                Resolved::Dry => {
-                    self.install(&mut st, id, slot, generation);
-                    return Some(Resolved::Load(slot));
-                }
-                r => {
-                    // Raced: the node got mapped (or home refilled) while we
-                    // were stealing. Park the stolen slot here as free.
-                    st.standby.insert(slot);
-                    drop(st);
-                    self.free_event.signal();
-                    return Some(r);
-                }
-            }
-        }
-        None
+        evicted.clear();
     }
 
     /// Write a loaded row into its slot and publish the valid bit
@@ -501,7 +555,7 @@ impl FeatureBuffer {
         self.valid_event(slot).signal();
     }
 
-    /// Wait until `slot`'s valid bit is set — or until the slot is stolen
+    /// Wait until `slot`'s valid bit is set — or until the slot is claimed
     /// out from under a stale handle (generation moved), which mirrors the
     /// old "entry vanished from the map" tolerance.
     fn wait_slot(&self, slot: u32, generation: u32) {
@@ -523,8 +577,8 @@ impl FeatureBuffer {
     }
 
     /// Block until every node in `nodes` has a set valid bit (end of
-    /// Algorithm 1: the wait-list check). Nodes no longer mapped are
-    /// skipped, as before.
+    /// Algorithm 1: the wait-list check). Nodes no longer mapped — or
+    /// mapped through a stale entry — are skipped, as before.
     pub fn wait_valid(&self, nodes: &[u32]) {
         for &id in nodes {
             let handle = {
@@ -545,15 +599,18 @@ impl FeatureBuffer {
         }
     }
 
-    /// Releaser: drop one reference per node; zero-ref slots re-enter their
-    /// shard's standby list MRU-first (retired but reusable — inter-batch
-    /// locality). Mapping entries stay valid until stolen (§4.2 "Release").
+    /// Releaser compatibility path: drop one reference per *node*, going
+    /// through the node→slot map (one shard lock per touched shard).
+    /// Prefer [`FeatureBuffer::release_aliases`] — the engine threads each
+    /// batch's alias list to the releaser so this lookup never runs on the
+    /// pipeline's critical path. Zero-reference slots become clock-evictable
+    /// in place (§4.2 "Release": mapping entries stay valid until claimed).
     pub fn release(&self, node_ids: &[u32]) {
         let mut freed = false;
         if self.shards.len() == 1 {
-            let mut st = self.shards[0].state.lock().unwrap();
+            let st = self.shards[0].state.lock().unwrap();
             for &id in node_ids {
-                freed |= self.release_one(&mut st, id);
+                freed |= self.release_one(&st, id);
             }
         } else {
             let (order, ends) = self.group_positions(node_ids);
@@ -561,9 +618,9 @@ impl FeatureBuffer {
             for (sx, &end) in ends.iter().enumerate() {
                 let end = end as usize;
                 if end > start {
-                    let mut st = self.shards[sx].state.lock().unwrap();
+                    let st = self.shards[sx].state.lock().unwrap();
                     for &pos in &order[start..end] {
-                        freed |= self.release_one(&mut st, node_ids[pos as usize]);
+                        freed |= self.release_one(&st, node_ids[pos as usize]);
                     }
                 }
                 start = end;
@@ -574,16 +631,38 @@ impl FeatureBuffer {
         }
     }
 
-    fn release_one(&self, st: &mut ShardState, id: u32) -> bool {
+    fn release_one(&self, st: &ShardState, id: u32) -> bool {
         let e = *st.map.get(&id).expect("release of unmapped node");
-        let word = self.states.load(e.slot);
-        assert!(slot_state::refs(word) > 0, "refcount underflow for node {id}");
         let prev = self.states.sub_ref(e.slot);
-        if slot_state::refs(prev) == 1 {
-            st.standby.insert(e.slot);
-            true
-        } else {
-            false
+        assert!(slot_state::refs(prev) > 0, "refcount underflow for node {id}");
+        debug_assert_eq!(
+            slot_state::generation(prev),
+            e.generation,
+            "release through a stale entry for node {id}"
+        );
+        slot_state::refs(prev) == 1
+    }
+
+    /// Batch-level release by alias (ROADMAP's "release by slot index"):
+    /// drop one reference per non-negative alias straight on the packed
+    /// slot word — no node→slot lookup, no shard lock, nothing but one
+    /// `fetch_sub` per row. The aliases must come from a `BatchPlan` whose
+    /// references are still held, exactly once per `begin_batch`.
+    pub fn release_aliases(&self, aliases: &[i32]) {
+        let mut freed = false;
+        for &a in aliases {
+            if a < 0 {
+                continue; // padding rows never took a reference
+            }
+            let slot = a as u32;
+            // Underflow guard on the fetch_sub return itself — a separate
+            // pre-load would be TOCTOU-racy against a concurrent release.
+            let prev = self.states.sub_ref(slot);
+            assert!(slot_state::refs(prev) > 0, "refcount underflow for slot {slot}");
+            freed |= slot_state::refs(prev) == 1;
+        }
+        if freed {
+            self.free_event.signal();
         }
     }
 
@@ -621,30 +700,22 @@ impl FeatureBuffer {
         )
     }
 
-    /// Number of slots currently in standby lists (tests/diagnostics).
+    /// Number of reusable (zero-reference) slots: free-stack members plus
+    /// clock-evictable residents. The standby list is implicit now, so this
+    /// counts states rather than list nodes (tests/diagnostics).
     pub fn standby_len(&self) -> usize {
-        self.shards.iter().map(|s| s.state.lock().unwrap().standby.len()).sum()
+        (0..self.n_slots as u32)
+            .filter(|&s| slot_state::refs(self.states.load(s)) == 0)
+            .count()
     }
 
     /// Validate cross-structure invariants (tests/property checks):
-    /// mapping↔reverse bijection, per-shard standby = exactly that shard's
-    /// zero-ref mapped slots plus parked free slots, packed slot words
-    /// consistent with the mapping, no two nodes sharing a slot. Takes every
-    /// shard lock; call at quiesce points.
+    /// mapping↔reverse bijection, no stale mapping entries left behind by
+    /// the deferred eviction sweep, free-stack membership exactly the
+    /// untenanted slots, packed slot words consistent with the mapping.
+    /// Takes every shard lock; call at quiesce points.
     pub fn check_invariants(&self) -> Result<(), String> {
         let guards: Vec<_> = self.shards.iter().map(|s| s.state.lock().unwrap()).collect();
-        // Standby membership: each slot in at most one shard's list.
-        let mut standby_shard: HashMap<u32, usize> = HashMap::new();
-        for (sx, st) in guards.iter().enumerate() {
-            for &slot in st.standby.iter_mru() {
-                if slot as usize >= self.n_slots {
-                    return Err(format!("standby slot {slot} out of range"));
-                }
-                if let Some(other) = standby_shard.insert(slot, sx) {
-                    return Err(format!("slot {slot} in standby of shards {other} and {sx}"));
-                }
-            }
-        }
         let mut slot_owner: HashMap<u32, u32> = HashMap::new();
         for (sx, st) in guards.iter().enumerate() {
             for (&node, e) in &st.map {
@@ -653,6 +724,15 @@ impl FeatureBuffer {
                 }
                 if e.slot as usize >= self.n_slots {
                     return Err(format!("node {node} has bad slot {}", e.slot));
+                }
+                let word = self.states.load(e.slot);
+                if slot_state::generation(word) != e.generation {
+                    return Err(format!(
+                        "stale entry at quiesce: node {node} slot {} gen {} vs word gen {}",
+                        e.slot,
+                        e.generation,
+                        slot_state::generation(word)
+                    ));
                 }
                 if let Some(prev) = slot_owner.insert(e.slot, node) {
                     return Err(format!("slot {} owned by {prev} and {node}", e.slot));
@@ -664,51 +744,28 @@ impl FeatureBuffer {
                         e.slot, rev
                     ));
                 }
-                let word = self.states.load(e.slot);
-                if slot_state::generation(word) != e.generation {
-                    return Err(format!(
-                        "node {node} slot {} generation skew: word {} vs map {}",
-                        e.slot,
-                        slot_state::generation(word),
-                        e.generation
-                    ));
-                }
-                let refs = slot_state::refs(word);
-                match standby_shard.get(&e.slot) {
-                    Some(&home) if refs == 0 => {
-                        if home != sx {
-                            return Err(format!(
-                                "zero-ref slot {} parked in shard {home}, tenant shard {sx}",
-                                e.slot
-                            ));
-                        }
-                    }
-                    Some(_) => {
-                        return Err(format!("referenced slot {} in standby", e.slot));
-                    }
-                    None if refs == 0 => {
-                        return Err(format!(
-                            "zero-ref node {node} slot {} not standby",
-                            e.slot
-                        ));
-                    }
-                    None => {}
-                }
             }
         }
+        let parked: HashSet<u32> = self.free.snapshot().into_iter().collect();
         for slot in 0..self.n_slots as u32 {
             let rev = self.reverse[slot as usize].load(Ordering::SeqCst);
+            let word = self.states.load(slot);
             if rev >= 0 {
                 if slot_owner.get(&slot) != Some(&(rev as u32)) {
                     return Err(format!("reverse[{slot}]={rev} dangling"));
                 }
-            } else {
-                if !standby_shard.contains_key(&slot) {
-                    return Err(format!("empty slot {slot} missing from standby"));
+                if parked.contains(&slot) {
+                    return Err(format!("tenanted slot {slot} parked on the free stack"));
                 }
-                let word = self.states.load(slot);
+            } else {
+                if !parked.contains(&slot) {
+                    return Err(format!("untenanted slot {slot} missing from free stack"));
+                }
                 if slot_state::refs(word) != 0 {
                     return Err(format!("free slot {slot} holds references"));
+                }
+                if slot_state::is_valid(word) {
+                    return Err(format!("free slot {slot} marked valid"));
                 }
             }
         }
@@ -772,20 +829,105 @@ mod tests {
     }
 
     #[test]
-    fn lru_steal_invalidates_previous_tenant() {
+    fn clock_claim_invalidates_previous_tenant() {
         let fb = buf(4, 2);
+        // Free-stack pops are ascending, so node k lands in slot k-1.
         let p1 = fb.begin_batch(&[1, 2, 3, 4]);
         load_all(&fb, &p1);
         fb.release(&[1, 2, 3, 4]);
-        // All four slots standby, LRU order 1,2,3,4. Two new nodes steal
-        // the two LRU slots (1's and 2's).
+        // All four slots zero-ref with fresh clock bits. Two new nodes must
+        // claim via the clock (the free stack is empty): the hand strips
+        // every clock bit on its first pass, then claims slots 0 and 1 —
+        // evicting nodes 1 and 2.
         let p2 = fb.begin_batch(&[5, 6]);
         assert_eq!(p2.to_load.len(), 2);
+        load_all(&fb, &p2);
         let (_, _, steals, _) = fb.stats();
-        assert_eq!(steals, 2);
-        // Nodes 1,2 are gone from the mapping; 3,4 still reusable.
+        assert_eq!(steals, 2, "each claim evicts one tenant");
+        fb.check_invariants().unwrap();
+        // The surviving tenants (3 and 4) are still resident and hit.
         let p3 = fb.begin_batch(&[3, 4]);
-        assert!(p3.to_load.is_empty());
+        assert!(p3.to_load.is_empty(), "survivors must hit without reloading");
+        // The evicted tenants re-resolve as fresh loads.
+        fb.release(&[5, 6]);
+        fb.release(&[3, 4]);
+        let p4 = fb.begin_batch(&[1, 2]);
+        assert_eq!(p4.to_load.len(), 2, "evicted tenants must reload");
+        load_all(&fb, &p4);
+        fb.release(&[1, 2]);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clock_gives_recently_used_slots_a_second_chance() {
+        let fb = buf(4, 2);
+        // Nodes 1..4 in slots 0..3.
+        let p1 = fb.begin_batch(&[1, 2, 3, 4]);
+        load_all(&fb, &p1);
+        fb.release(&[1, 2, 3, 4]);
+        // Node 5's claim sweeps one full pass (clearing every clock bit)
+        // and takes slot 0; slots 1..3 are left swept-but-resident.
+        let p2 = fb.begin_batch(&[5]);
+        assert_eq!(p2.to_load.len(), 1);
+        load_all(&fb, &p2);
+        // Re-reference node 2: its slot (1) gets a fresh clock bit.
+        let p3 = fb.begin_batch(&[2]);
+        assert!(p3.to_load.is_empty(), "node 2 still resident");
+        fb.release(&[2]);
+        // Node 6's claim starts at slot 1, sees the fresh clock bit, grants
+        // the second chance, and evicts slot 2 (node 3) instead.
+        let p4 = fb.begin_batch(&[6]);
+        assert_eq!(p4.to_load.len(), 1);
+        load_all(&fb, &p4);
+        let p5 = fb.begin_batch(&[2]);
+        assert!(
+            p5.to_load.is_empty(),
+            "recently-used node 2 must survive the sweep"
+        );
+        let p6 = fb.begin_batch(&[3]);
+        assert_eq!(p6.to_load.len(), 1, "swept node 3 was the eviction victim");
+        load_all(&fb, &p6);
+        fb.release(&[5, 6, 2, 3]);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_aliases_matches_release_by_node() {
+        // Determinism: identical schedules through the alias path and the
+        // node path end in identical stats and alias assignments.
+        let schedule: Vec<Vec<u32>> = vec![
+            vec![1, 2, 3, 4],
+            vec![3, 4, 5, 6],
+            vec![1, 2, 7, 8],
+            vec![5, 6, 7, 8],
+        ];
+        let by_node = buf(6, 2);
+        let by_alias = buf(6, 2);
+        for batch in &schedule {
+            let pn = by_node.begin_batch(batch);
+            let pa = by_alias.begin_batch(batch);
+            assert_eq!(pn.aliases, pa.aliases, "allocation must not depend on release path");
+            load_all(&by_node, &pn);
+            load_all(&by_alias, &pa);
+            by_node.release(batch);
+            by_alias.release_aliases(&pa.aliases);
+            by_node.check_invariants().unwrap();
+            by_alias.check_invariants().unwrap();
+        }
+        assert_eq!(by_node.stats(), by_alias.stats());
+        assert_eq!(by_node.standby_len(), by_alias.standby_len());
+    }
+
+    #[test]
+    fn release_aliases_skips_padding() {
+        let fb = buf(8, 2);
+        let plan = fb.begin_batch(&[1, 2]);
+        load_all(&fb, &plan);
+        let mut padded = plan.aliases.clone();
+        padded.push(-1);
+        padded.push(-1);
+        fb.release_aliases(&padded);
+        assert_eq!(fb.standby_len(), 8);
         fb.check_invariants().unwrap();
     }
 
@@ -845,6 +987,16 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "refcount underflow")]
+    fn double_release_aliases_panics() {
+        let fb = buf(4, 2);
+        let p = fb.begin_batch(&[1]);
+        load_all(&fb, &p);
+        fb.release_aliases(&p.aliases);
+        fb.release_aliases(&p.aliases);
+    }
+
+    #[test]
     fn device_memory_charged() {
         let dev = DeviceMemory::new(1 << 20);
         let _fb = FeatureBuffer::in_device(&dev, 100, 16).unwrap();
@@ -877,22 +1029,22 @@ mod tests {
         let p2 = fb.begin_batch(&nodes);
         assert!(p2.to_load.is_empty());
         assert_eq!(p2.aliases, plan.aliases);
-        fb.release(&nodes);
+        fb.release_aliases(&p2.aliases);
         fb.check_invariants().unwrap();
     }
 
     #[test]
-    fn dry_shard_steals_cross_shard() {
-        // Fill the whole buffer: node hashing is uneven, so at least one
-        // shard runs dry and must migrate slots from its peers. Everything
-        // still allocates exactly once without blocking.
+    fn full_buffer_allocates_each_slot_once_then_blocks() {
+        // Fill the whole buffer: every slot allocated exactly once straight
+        // off the free stack, no clock claims, no blocking.
         let fb = buf(256, 2);
         assert!(fb.shard_count() > 1);
         let nodes: Vec<u32> = (0..256).collect();
         let plan = fb.begin_batch(&nodes);
         assert_eq!(plan.to_load.len(), 256, "every slot allocated exactly once");
-        let (_, _, _, loads) = fb.stats();
+        let (_, _, steals, loads) = fb.stats();
         assert_eq!(loads, 256);
+        assert_eq!(steals, 0, "cold start allocates from the free stack");
         load_all(&fb, &plan);
         fb.check_invariants().unwrap();
         // All referenced: one more node must block until a release.
@@ -910,7 +1062,7 @@ mod tests {
     }
 
     #[test]
-    fn stale_wait_handle_returns_after_steal() {
+    fn stale_wait_handle_returns_after_claim() {
         let fb = buf(4, 2);
         let p1 = fb.begin_batch(&[1]);
         load_all(&fb, &p1);
@@ -920,12 +1072,33 @@ mod tests {
             WaitHandle { node: 1, slot, generation: slot_state::generation(fb.states.load(slot)) }
         };
         fb.release(&[1]);
-        // Steal node 1's slot: generation moves, the stale ticket must not
+        // Claim node 1's slot: generation moves, the stale ticket must not
         // hang even though valid is cleared again.
         let p2 = fb.begin_batch(&[2, 3, 4, 5]);
         assert_eq!(p2.to_load.len(), 4);
         fb.wait_slot(gen1.slot, gen1.generation); // returns: generation moved
+        load_all(&fb, &p2);
         fb.release(&[2, 3, 4, 5]);
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_entry_is_dropped_and_reinstalled_on_next_lookup() {
+        let fb = buf(4, 2);
+        let p1 = fb.begin_batch(&[1]);
+        load_all(&fb, &p1);
+        fb.release(&[1]);
+        // Exhaust the stack and claim node 1's slot.
+        let p2 = fb.begin_batch(&[2, 3, 4, 5]);
+        assert_eq!(p2.to_load.len(), 4);
+        load_all(&fb, &p2);
+        fb.check_invariants().unwrap(); // eviction sweep removed node 1's entry
+        fb.release(&[2, 3, 4, 5]);
+        // Node 1 re-resolves as a fresh load (its old slot is tenanted).
+        let p3 = fb.begin_batch(&[1]);
+        assert_eq!(p3.to_load.len(), 1);
+        load_all(&fb, &p3);
+        fb.release_aliases(&p3.aliases);
         fb.check_invariants().unwrap();
     }
 }

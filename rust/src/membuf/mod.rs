@@ -1,15 +1,21 @@
-//! Inter-stage buffer management (the paper's §4.2): the sharded,
-//! lock-minimized feature buffer (mapping-table shards + per-shard standby
-//! LRUs over a flat slot arena with packed atomic slot state), the bounded
-//! host-side staging buffer, and the preserved single-mutex coordinator used
-//! as a contention baseline by `benches/micro_hotpath.rs`.
+//! Inter-stage buffer management (the paper's §4.2): the sharded feature
+//! buffer with a lock-free slot allocation/release path (node-hash mapping
+//! shards over a flat slot arena; a Treiber free stack plus a second-chance
+//! clock sweep over packed atomic slot words replace the old per-shard
+//! standby LRUs), the bounded host-side staging buffer, and two preserved
+//! coordinator generations used as contention baselines by
+//! `benches/micro_hotpath.rs`: the original single-global-mutex design and
+//! the PR-1 sharded mutex-LRU design.
 
+mod arena;
 pub mod feature_buffer;
+pub mod mutex_lru;
 mod shard;
 pub mod single_mutex;
 pub mod slot_state;
 pub mod staging;
 
 pub use feature_buffer::{BatchPlan, FeatureBuffer, WaitHandle};
+pub use mutex_lru::{MlBatchPlan, MutexLruFeatureBuffer};
 pub use single_mutex::{SingleMutexFeatureBuffer, SmBatchPlan};
 pub use staging::StagingBuffer;

@@ -1,0 +1,391 @@
+//! The PR-1 sharded coordinator with per-shard mutex-protected standby
+//! LRUs, preserved as a benchmark baseline.
+//!
+//! This is the intermediate generation between the single-global-mutex
+//! coordinator ([`super::single_mutex::SingleMutexFeatureBuffer`]) and the
+//! current lock-free allocation path in [`super::FeatureBuffer`]: the
+//! mapping table and standby list are sharded by node-id hash, slots
+//! migrate between shards when one runs dry, and every allocation or
+//! release takes the owning shard's mutex. `benches/micro_hotpath.rs` runs
+//! the same multi-threaded begin+publish+release workloads against all
+//! three generations to quantify each step's contention win; the pipeline
+//! does not use this type.
+
+use super::arena::Arena;
+use super::shard::{self, EventCount};
+use super::slot_state::{self, SlotStates};
+use crate::storage::{DeviceMemory, Reservation};
+use crate::util::fxhash::FxHashMap;
+use crate::util::lru::Lru;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One shard's state: mapping table (node → slot; this baseline has no
+/// wait tickets, so no generation rides along) plus the mutex-protected
+/// standby LRU that the lock-free rewrite replaced.
+struct ShardState {
+    map: FxHashMap<u32, u32>,
+    /// Zero-reference slots currently parked in this shard, LRU order.
+    standby: Lru<u32>,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+}
+
+/// The baseline's extraction plan (aliases + loads + peer wait list).
+#[derive(Debug)]
+pub struct MlBatchPlan {
+    pub aliases: Vec<i32>,
+    pub to_load: Vec<(u32, u32)>,
+    pub wait_list: Vec<u32>,
+}
+
+enum Resolved {
+    Alias(u32),
+    Wait(u32),
+    Load(u32),
+    Dry,
+}
+
+pub struct MutexLruFeatureBuffer {
+    pub n_slots: usize,
+    pub dim: usize,
+    shards: Vec<Shard>,
+    shard_mask: usize,
+    states: SlotStates,
+    reverse: Vec<AtomicI64>,
+    arena: Arena,
+    free_event: EventCount,
+    hits: AtomicU64,
+    shared: AtomicU64,
+    steals: AtomicU64,
+    loads: AtomicU64,
+    _home: Reservation,
+}
+
+impl MutexLruFeatureBuffer {
+    pub fn in_device(
+        dev: &DeviceMemory,
+        n_slots: usize,
+        dim: usize,
+    ) -> Result<Self, crate::storage::OutOfMemory> {
+        let bytes = (n_slots * dim * 4) as u64;
+        let res = dev.reserve("feature buffer (mutex-lru baseline)", bytes)?;
+        let n_shards = shard::shard_count_for(n_slots);
+        let shards: Vec<Shard> = (0..n_shards)
+            .map(|_| Shard {
+                state: Mutex::new(ShardState {
+                    map: FxHashMap::default(),
+                    standby: Lru::with_capacity(n_slots / n_shards + 1),
+                }),
+            })
+            .collect();
+        for (sx, shard) in shards.iter().enumerate() {
+            let mut st = shard.state.lock().unwrap();
+            for s in (sx..n_slots).step_by(n_shards) {
+                st.standby.insert(s as u32);
+            }
+        }
+        Ok(MutexLruFeatureBuffer {
+            n_slots,
+            dim,
+            shard_mask: n_shards - 1,
+            shards,
+            states: SlotStates::new(n_slots),
+            reverse: (0..n_slots).map(|_| AtomicI64::new(-1)).collect(),
+            arena: Arena::new(n_slots * dim),
+            free_event: EventCount::new(),
+            hits: AtomicU64::new(0),
+            shared: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            loads: AtomicU64::new(0),
+            _home: res,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn node_shard(&self, node: u32) -> usize {
+        let h = (node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) & self.shard_mask
+    }
+
+    fn resolve_in_shard(&self, st: &mut ShardState, id: u32) -> Resolved {
+        if let Some(&slot) = st.map.get(&id) {
+            let word = self.states.load(slot);
+            if slot_state::is_valid(word) {
+                if slot_state::refs(word) == 0 {
+                    st.standby.remove(&slot);
+                }
+                self.states.add_ref(slot);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Resolved::Alias(slot)
+            } else {
+                self.states.add_ref(slot);
+                self.shared.fetch_add(1, Ordering::Relaxed);
+                Resolved::Wait(slot)
+            }
+        } else if let Some(slot) = st.standby.pop_lru() {
+            let generation = self.claim_slot(st, slot);
+            self.install(st, id, slot, generation);
+            Resolved::Load(slot)
+        } else {
+            Resolved::Dry
+        }
+    }
+
+    fn claim_slot(&self, st: &mut ShardState, slot: u32) -> u32 {
+        let prev = self.reverse[slot as usize].swap(-1, Ordering::SeqCst);
+        if prev >= 0 {
+            st.map.remove(&(prev as u32));
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        let generation = slot_state::generation(self.states.load(slot)).wrapping_add(1);
+        self.states.reset(slot, 0, false, generation);
+        generation
+    }
+
+    fn install(&self, st: &mut ShardState, id: u32, slot: u32, generation: u32) {
+        self.reverse[slot as usize].store(id as i64, Ordering::SeqCst);
+        self.states.reset(slot, 1, false, generation);
+        st.map.insert(id, slot);
+        self.loads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn group_positions(&self, node_ids: &[u32]) -> (Vec<u32>, Vec<u32>) {
+        shard::group_positions(self.shards.len(), node_ids, |id| self.node_shard(id))
+    }
+
+    pub fn begin_batch(&self, node_ids: &[u32]) -> MlBatchPlan {
+        let mut aliases = vec![-1i32; node_ids.len()];
+        let mut to_load = Vec::new();
+        let mut wait_list = Vec::new();
+        let mut deferred: Vec<usize> = Vec::new();
+
+        let apply = |i: usize,
+                     r: Resolved,
+                     aliases: &mut Vec<i32>,
+                     to_load: &mut Vec<(u32, u32)>,
+                     wait_list: &mut Vec<u32>|
+         -> bool {
+            let id = node_ids[i];
+            match r {
+                Resolved::Alias(slot) => aliases[i] = slot as i32,
+                Resolved::Wait(slot) => {
+                    aliases[i] = slot as i32;
+                    wait_list.push(id);
+                }
+                Resolved::Load(slot) => {
+                    aliases[i] = slot as i32;
+                    to_load.push((id, slot));
+                }
+                Resolved::Dry => return false,
+            }
+            true
+        };
+
+        if self.shards.len() == 1 {
+            let mut st = self.shards[0].state.lock().unwrap();
+            for (i, &id) in node_ids.iter().enumerate() {
+                let r = self.resolve_in_shard(&mut st, id);
+                if !apply(i, r, &mut aliases, &mut to_load, &mut wait_list) {
+                    deferred.push(i);
+                }
+            }
+        } else {
+            let (order, ends) = self.group_positions(node_ids);
+            let mut start = 0usize;
+            for (sx, &end) in ends.iter().enumerate() {
+                let end = end as usize;
+                if end > start {
+                    let mut st = self.shards[sx].state.lock().unwrap();
+                    for &pos in &order[start..end] {
+                        let i = pos as usize;
+                        let r = self.resolve_in_shard(&mut st, node_ids[i]);
+                        if !apply(i, r, &mut aliases, &mut to_load, &mut wait_list) {
+                            deferred.push(i);
+                        }
+                    }
+                }
+                start = end;
+            }
+            deferred.sort_unstable();
+        }
+
+        for i in deferred {
+            let r = self.alloc_slow(node_ids[i]);
+            let ok = apply(i, r, &mut aliases, &mut to_load, &mut wait_list);
+            debug_assert!(ok, "alloc_slow cannot return Dry");
+        }
+        MlBatchPlan { aliases, to_load, wait_list }
+    }
+
+    fn alloc_slow(&self, id: u32) -> Resolved {
+        let home = self.node_shard(id);
+        loop {
+            if let Some(r) = self.try_alloc(home, id) {
+                return r;
+            }
+            let seen = self.free_event.begin_wait();
+            if let Some(r) = self.try_alloc(home, id) {
+                self.free_event.cancel_wait();
+                return r;
+            }
+            self.free_event.wait(seen);
+        }
+    }
+
+    fn try_alloc(&self, home: usize, id: u32) -> Option<Resolved> {
+        {
+            let mut st = self.shards[home].state.lock().unwrap();
+            match self.resolve_in_shard(&mut st, id) {
+                Resolved::Dry => {}
+                r => return Some(r),
+            }
+        }
+        for d in 1..self.shards.len() {
+            let sx = (home + d) & self.shard_mask;
+            let stolen = {
+                let mut st = self.shards[sx].state.lock().unwrap();
+                st.standby.pop_lru().map(|slot| (slot, self.claim_slot(&mut st, slot)))
+            };
+            let Some((slot, generation)) = stolen else { continue };
+            let mut st = self.shards[home].state.lock().unwrap();
+            match self.resolve_in_shard(&mut st, id) {
+                Resolved::Dry => {
+                    self.install(&mut st, id, slot, generation);
+                    return Some(Resolved::Load(slot));
+                }
+                r => {
+                    st.standby.insert(slot);
+                    drop(st);
+                    self.free_event.signal();
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn publish(&self, node: u32, slot: u32, row: &[f32]) {
+        let n = self.dim.min(row.len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(row.as_ptr(), self.arena.row(slot as usize, self.dim), n);
+        }
+        debug_assert_eq!(self.reverse[slot as usize].load(Ordering::SeqCst), node as i64);
+        self.states.set_valid(slot);
+    }
+
+    pub fn release(&self, node_ids: &[u32]) {
+        let mut freed = false;
+        if self.shards.len() == 1 {
+            let mut st = self.shards[0].state.lock().unwrap();
+            for &id in node_ids {
+                freed |= self.release_one(&mut st, id);
+            }
+        } else {
+            let (order, ends) = self.group_positions(node_ids);
+            let mut start = 0usize;
+            for (sx, &end) in ends.iter().enumerate() {
+                let end = end as usize;
+                if end > start {
+                    let mut st = self.shards[sx].state.lock().unwrap();
+                    for &pos in &order[start..end] {
+                        freed |= self.release_one(&mut st, node_ids[pos as usize]);
+                    }
+                }
+                start = end;
+            }
+        }
+        if freed {
+            self.free_event.signal();
+        }
+    }
+
+    fn release_one(&self, st: &mut ShardState, id: u32) -> bool {
+        let slot = *st.map.get(&id).expect("release of unmapped node");
+        let word = self.states.load(slot);
+        assert!(slot_state::refs(word) > 0, "refcount underflow for node {id}");
+        let prev = self.states.sub_ref(slot);
+        if slot_state::refs(prev) == 1 {
+            st.standby.insert(slot);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// (hits, shared, steals, loads) counters.
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.shared.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+            self.loads.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of slots currently in standby lists.
+    pub fn standby_len(&self) -> usize {
+        self.shards.iter().map(|s| s.state.lock().unwrap().standby.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DeviceMemory;
+    use std::sync::{Arc, Barrier};
+
+    #[test]
+    fn baseline_smoke_begin_publish_release() {
+        let dev = DeviceMemory::new(1 << 20);
+        let fb = MutexLruFeatureBuffer::in_device(&dev, 8, 4).unwrap();
+        let plan = fb.begin_batch(&[10, 11, 12]);
+        assert_eq!(plan.to_load.len(), 3);
+        for &(node, slot) in &plan.to_load {
+            fb.publish(node, slot, &[node as f32; 4]);
+        }
+        fb.release(&[10, 11, 12]);
+        assert_eq!(fb.standby_len(), 8);
+        let p2 = fb.begin_batch(&[11, 13]);
+        assert_eq!(p2.to_load.len(), 1);
+        let (hits, _, _, loads) = fb.stats();
+        assert_eq!((hits, loads), (1, 4));
+        fb.release(&[11, 13]);
+    }
+
+    #[test]
+    fn baseline_steals_under_pressure_across_threads() {
+        let dev = DeviceMemory::new(64 << 20);
+        let fb = Arc::new(MutexLruFeatureBuffer::in_device(&dev, 512, 4).unwrap());
+        assert!(fb.shard_count() > 1);
+        let barrier = Barrier::new(4);
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let fb = fb.clone();
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    for round in 0..20u32 {
+                        let ids: Vec<u32> =
+                            (0..64).map(|k| t * 100_000 + round * 64 + k).collect();
+                        let plan = fb.begin_batch(&ids);
+                        for &(node, slot) in &plan.to_load {
+                            fb.publish(node, slot, &[node as f32; 4]);
+                        }
+                        fb.release(&ids);
+                    }
+                });
+            }
+        });
+        assert_eq!(fb.standby_len(), 512, "all slots zero-ref after join");
+        let (_, _, steals, loads) = fb.stats();
+        assert!(loads >= 512);
+        assert!(steals > 0, "a 512-slot buffer over 4×1280 ids must steal");
+    }
+}

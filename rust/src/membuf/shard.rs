@@ -1,13 +1,15 @@
-//! Shards of the feature-buffer coordinator, plus the eventcount used for
+//! Shards of the feature-buffer coordinator, the lock-free allocation
+//! structures ([`FreeStack`], [`ClockHand`]), and the eventcount used for
 //! targeted wakeups.
 //!
-//! The mapping table and standby list are sharded by node-id hash: one batch
-//! groups its node list per shard and takes each shard mutex at most once on
-//! the fast path, so `cfg.extractors` threads planning different batches no
-//! longer serialize on a single global lock. Slots migrate between shards:
-//! a freed slot parks in the standby list of its tenant node's shard, and a
-//! dry shard may steal the LRU slot of another shard (the stolen slot's old
-//! mapping lives in that same shard, so the steal needs exactly one lock).
+//! The mapping table is sharded by node-id hash: one batch groups its node
+//! list per shard and takes each shard mutex at most once on the fast path,
+//! so `cfg.extractors` threads planning different batches no longer
+//! serialize on a single global lock. Since the lock-free standby path
+//! landed, a shard holds *only* its slice of the mapping table — slot
+//! allocation goes through the global Treiber free stack and clock hand
+//! instead of per-shard standby LRUs, so there is no slot migration and no
+//! mutex anywhere on the allocation path.
 //!
 //! [`EventCount`] replaces the old `Condvar::notify_all` broadcasts: the
 //! signal side is a single relaxed-cost atomic load when nobody is waiting,
@@ -15,24 +17,26 @@
 //! wakeups cannot be lost.
 
 use crate::util::fxhash::FxHashMap;
-use crate::util::lru::Lru;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// Mapping-table entry: node → slot plus the slot generation observed when
-/// the entry was created (stale-handle detection for waiters).
+/// the entry was created. Entries are *validated on use*: a reference is
+/// only taken through a generation-checked CAS on the packed slot word, so
+/// an entry whose slot was clock-claimed since (generation moved) is dead
+/// weight that the next lookup removes — the lock-free claim never has to
+/// reach into another shard's map.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct MapEntry {
     pub slot: u32,
     pub generation: u32,
 }
 
-/// One shard's mutable coordinator state.
+/// One shard's mutable coordinator state: just the mapping table now — the
+/// standby LRU this struct used to carry is gone (allocation is lock-free).
 pub(crate) struct ShardState {
     /// node → (slot, generation) for nodes hashed to this shard.
     pub map: FxHashMap<u32, MapEntry>,
-    /// Zero-reference slots currently parked in this shard, LRU order.
-    pub standby: Lru<u32>,
 }
 
 pub(crate) struct Shard {
@@ -40,13 +44,160 @@ pub(crate) struct Shard {
 }
 
 impl Shard {
-    pub fn new(expected_slots: usize) -> Self {
-        Shard {
-            state: Mutex::new(ShardState {
-                map: FxHashMap::default(),
-                standby: Lru::with_capacity(expected_slots),
-            }),
+    pub fn new(expected_nodes: usize) -> Self {
+        let mut map = FxHashMap::default();
+        map.reserve(expected_nodes);
+        Shard { state: Mutex::new(ShardState { map }) }
+    }
+}
+
+/// Largest power of two ≤ `x` (x ≥ 1).
+pub(crate) fn floor_pow2(x: usize) -> usize {
+    1 << (usize::BITS - 1 - x.leading_zeros())
+}
+
+/// Shard count policy shared by the coordinator generations: tiny buffers
+/// (unit tests, degenerate configs) get one shard, production-sized buffers
+/// up to 16 shards with ≥64 slots each.
+pub(crate) fn shard_count_for(n_slots: usize) -> usize {
+    if n_slots < 256 {
+        1
+    } else {
+        floor_pow2((n_slots / 64).min(16))
+    }
+}
+
+/// Stable counting sort of batch positions by shard: `order` holds the
+/// positions `0..len` grouped per shard (original order within a shard),
+/// `ends[s]` the exclusive end of shard `s`'s run. Two allocations per
+/// batch instead of one `Vec` per shard.
+pub(crate) fn group_positions(
+    n_shards: usize,
+    node_ids: &[u32],
+    shard_of: impl Fn(u32) -> usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut cursor = vec![0u32; n_shards];
+    for &id in node_ids {
+        cursor[shard_of(id)] += 1;
+    }
+    let mut start = 0u32;
+    for c in cursor.iter_mut() {
+        let count = *c;
+        *c = start;
+        start += count;
+    }
+    let mut order = vec![0u32; node_ids.len()];
+    for (i, &id) in node_ids.iter().enumerate() {
+        let s = shard_of(id);
+        order[cursor[s] as usize] = i as u32;
+        cursor[s] += 1;
+    }
+    // After the fill, cursor[s] is exactly shard s's exclusive end.
+    (order, cursor)
+}
+
+/// Sentinel for "no slot" in [`FreeStack`] links.
+const NIL: u32 = u32::MAX;
+
+/// Treiber stack of free slot indexes — the lock-free fast path for slots
+/// that have never held a tenant (cold start) or were handed back whole.
+///
+/// Links live in a flat `next[slot]` array (a slot is in at most one stack
+/// position at a time), and the head packs `(tag << 32) | slot` so the tag
+/// increments on every successful push/pop — the classic ABA guard: a pop
+/// whose `next` read was made stale by an intervening pop+push sees a moved
+/// tag and retries instead of installing a dangling head.
+pub(crate) struct FreeStack {
+    head: AtomicU64,
+    next: Vec<AtomicU32>,
+}
+
+impl FreeStack {
+    pub fn new(n_slots: usize) -> Self {
+        FreeStack {
+            head: AtomicU64::new(Self::pack(0, NIL)),
+            next: (0..n_slots).map(|_| AtomicU32::new(NIL)).collect(),
         }
+    }
+
+    #[inline]
+    fn pack(tag: u32, slot: u32) -> u64 {
+        ((tag as u64) << 32) | slot as u64
+    }
+
+    #[inline]
+    fn slot_of(head: u64) -> u32 {
+        head as u32
+    }
+
+    #[inline]
+    fn tag_of(head: u64) -> u32 {
+        (head >> 32) as u32
+    }
+
+    /// Push a slot the caller owns exclusively.
+    pub fn push(&self, slot: u32) {
+        debug_assert!((slot as usize) < self.next.len());
+        let mut head = self.head.load(Ordering::SeqCst);
+        loop {
+            self.next[slot as usize].store(Self::slot_of(head), Ordering::SeqCst);
+            let new = Self::pack(Self::tag_of(head).wrapping_add(1), slot);
+            match self.head.compare_exchange_weak(head, new, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return,
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// Pop a slot; the winner owns it exclusively. One CAS when uncontended.
+    pub fn pop(&self) -> Option<u32> {
+        let mut head = self.head.load(Ordering::SeqCst);
+        loop {
+            let slot = Self::slot_of(head);
+            if slot == NIL {
+                return None;
+            }
+            let next = self.next[slot as usize].load(Ordering::SeqCst);
+            let new = Self::pack(Self::tag_of(head).wrapping_add(1), next);
+            match self.head.compare_exchange_weak(head, new, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return Some(slot),
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// Snapshot the parked slots (O(n) walk; quiesced callers only — the
+    /// walk is not linearizable under concurrent pushes/pops).
+    pub fn snapshot(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut s = Self::slot_of(self.head.load(Ordering::SeqCst));
+        while s != NIL {
+            out.push(s);
+            s = self.next[s as usize].load(Ordering::SeqCst);
+        }
+        out
+    }
+}
+
+/// The clock hand: a global cursor over the slot arena for the
+/// second-chance eviction sweep. Each probe advances the hand by one; the
+/// modulo keeps it in range (the `fetch_add` wraps around u64-space once
+/// per aeon, which at worst teleports the hand — an approximation the
+/// approximate LRU absorbs).
+pub(crate) struct ClockHand {
+    pos: AtomicUsize,
+}
+
+impl ClockHand {
+    pub fn new() -> Self {
+        ClockHand { pos: AtomicUsize::new(0) }
+    }
+
+    #[inline]
+    pub fn next(&self, n_slots: usize) -> usize {
+        self.pos.fetch_add(1, Ordering::Relaxed) % n_slots
     }
 }
 
@@ -116,8 +267,85 @@ impl EventCount {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
+
+    #[test]
+    fn free_stack_is_lifo_and_exact() {
+        let fs = FreeStack::new(8);
+        assert_eq!(fs.pop(), None);
+        for s in 0..8u32 {
+            fs.push(s);
+        }
+        assert_eq!(fs.snapshot().len(), 8);
+        for want in (0..8u32).rev() {
+            assert_eq!(fs.pop(), Some(want));
+        }
+        assert_eq!(fs.pop(), None);
+        assert!(fs.snapshot().is_empty());
+    }
+
+    #[test]
+    fn free_stack_concurrent_pops_never_duplicate_or_lose() {
+        const SLOTS: usize = 1024;
+        const THREADS: usize = 8;
+        let fs = Arc::new(FreeStack::new(SLOTS));
+        for s in 0..SLOTS as u32 {
+            fs.push(s);
+        }
+        let got: Vec<Vec<u32>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let fs = fs.clone();
+                    sc.spawn(move || {
+                        let mut mine = Vec::new();
+                        while let Some(s) = fs.pop() {
+                            mine.push(s);
+                            // Churn: push half of them back to exercise the
+                            // ABA-tagged head under pop/push interleaving.
+                            if mine.len() % 2 == 0 {
+                                fs.push(mine.pop().unwrap());
+                            }
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut seen = HashSet::new();
+        let mut total = 0usize;
+        for batch in &got {
+            for &s in batch {
+                assert!(seen.insert(s), "slot {s} popped twice");
+                total += 1;
+            }
+        }
+        let left = fs.snapshot();
+        for &s in &left {
+            assert!(seen.insert(s), "slot {s} both popped and parked");
+        }
+        assert_eq!(total + left.len(), SLOTS, "slots lost or invented");
+    }
+
+    #[test]
+    fn group_positions_is_a_stable_shard_sort() {
+        // 3 shards, shard = id % 3.
+        let ids = [3u32, 1, 4, 6, 2, 7, 9];
+        let (order, ends) = group_positions(3, &ids, |id| id as usize % 3);
+        assert_eq!(ends, vec![3, 6, 7]);
+        // Shard 0: positions of 3, 6, 9 in batch order; shard 1: 1, 4, 7;
+        // shard 2: 2.
+        assert_eq!(order, vec![0, 3, 6, 1, 2, 5, 4]);
+    }
+
+    #[test]
+    fn clock_hand_wraps() {
+        let c = ClockHand::new();
+        let seen: Vec<usize> = (0..10).map(|_| c.next(4)).collect();
+        assert_eq!(seen, vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1]);
+    }
 
     #[test]
     fn signal_with_no_waiters_is_cheap_and_safe() {

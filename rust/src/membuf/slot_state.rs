@@ -1,21 +1,28 @@
 //! Packed per-slot atomic state for the sharded feature buffer.
 //!
-//! One `AtomicU64` per slot encodes the triple the coordinator used to keep
-//! behind the global mutex:
+//! One `AtomicU64` per slot encodes the quadruple the coordinator used to
+//! keep behind the global mutex:
 //!
 //! ```text
 //!   bits  0..=31   generation (wraps; bumped every time the slot is stolen)
 //!   bit   32       valid (the row's data is published)
 //!   bits 33..=52   reference count (how many in-flight batches alias it)
+//!   bit   53       clock (second-chance "recently used" bit for eviction)
 //! ```
 //!
 //! `publish` becomes a single release `fetch_or` of the valid bit, and
-//! `wait_valid`/`gather` read one word instead of taking a lock. Reference
-//! counts are only mutated under the owning node's shard lock (they must stay
-//! coherent with the shard's mapping table), but living in the packed word
-//! lets the lock-free readers and `check_invariants` observe a consistent
-//! snapshot. The generation lets a waiter detect that "its" slot was stolen
-//! and reassigned (stale handle) without consulting the mapping table.
+//! `wait_valid`/`gather` read one word instead of taking a lock. The
+//! generation lets a waiter detect that "its" slot was stolen and reassigned
+//! (stale handle) without consulting the mapping table.
+//!
+//! Since the lock-free allocation path landed, the packed word is also the
+//! *authority* for slot ownership: a reference is taken with a
+//! generation-checked CAS ([`SlotStates::try_ref`]) and an eviction claims a
+//! zero-reference slot with a CAS that bumps the generation
+//! ([`SlotStates::try_claim`]), so the clock sweep, the hit path, and the
+//! release path all race safely without any mutex. The clock bit is set on
+//! every reference grab and cleared by a passing clock hand — a slot
+//! survives one sweep after its last use (second chance ≈ LRU).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -23,6 +30,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const VALID: u64 = 1 << 32;
 /// One reference in the packed refcount field.
 pub const REF_ONE: u64 = 1 << 33;
+/// Second-chance bit: the slot was referenced since the clock hand last
+/// passed it.
+pub const CLOCK: u64 = 1 << 53;
 
 const GEN_MASK: u64 = u32::MAX as u64;
 const REF_SHIFT: u32 = 33;
@@ -54,6 +64,11 @@ pub fn refs(word: u64) -> u32 {
     ((word & REF_MASK) >> REF_SHIFT) as u32
 }
 
+#[inline]
+pub fn has_clock(word: u64) -> bool {
+    word & CLOCK != 0
+}
+
 /// The flat array of packed slot words.
 pub struct SlotStates {
     words: Vec<AtomicU64>,
@@ -83,14 +98,21 @@ impl SlotStates {
         self.words[slot as usize].fetch_or(VALID, Ordering::SeqCst)
     }
 
-    /// Add one reference (caller holds the tenant node's shard lock).
+    /// Add one reference unconditionally. Used by the mutex-LRU baseline
+    /// (which serializes refcount changes under its shard lock); the
+    /// lock-free coordinator takes references through [`SlotStates::try_ref`]
+    /// instead, because an unconditional add can race a claim.
     #[inline]
     pub fn add_ref(&self, slot: u32) -> u64 {
         self.words[slot as usize].fetch_add(REF_ONE, Ordering::SeqCst)
     }
 
-    /// Drop one reference (caller holds the tenant node's shard lock and has
-    /// checked `refs > 0`); returns the previous word.
+    /// Drop one reference; returns the previous word. Called with *no lock
+    /// held* on the lock-free release path: coherence rests on the caller
+    /// actually holding a reference (the plan's aliases are released exactly
+    /// once), which also pins the generation — a slot with live references
+    /// can never be claimed. Callers must verify `refs(prev) > 0` to catch
+    /// protocol violations.
     #[inline]
     pub fn sub_ref(&self, slot: u32) -> u64 {
         self.words[slot as usize].fetch_sub(REF_ONE, Ordering::SeqCst)
@@ -101,6 +123,71 @@ impl SlotStates {
     #[inline]
     pub fn reset(&self, slot: u32, refs: u32, valid: bool, generation: u32) {
         self.words[slot as usize].store(pack(refs, valid, generation), Ordering::SeqCst);
+    }
+
+    /// Take one reference iff the slot still carries `expected_gen` — the
+    /// lock-free hit/share path. The CAS also sets the clock bit (the slot
+    /// was just used). Returns the pre-CAS word on success; on generation
+    /// mismatch (the slot was stolen out from under the mapping entry)
+    /// returns the current word so the caller can treat the entry as stale.
+    #[inline]
+    pub fn try_ref(&self, slot: u32, expected_gen: u32) -> Result<u64, u64> {
+        let w = &self.words[slot as usize];
+        let mut cur = w.load(Ordering::SeqCst);
+        loop {
+            if generation(cur) != expected_gen {
+                return Err(cur);
+            }
+            debug_assert!(refs(cur) < MAX_REFS, "refcount saturated on slot {slot}");
+            match w.compare_exchange_weak(
+                cur,
+                (cur + REF_ONE) | CLOCK,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(prev) => return Ok(prev),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Claim a zero-reference slot for a new tenant (clock eviction): CAS
+    /// the exact `expected` word to a claimed word — one reference, invalid,
+    /// generation bumped, clock set. A successful claim transfers exclusive
+    /// ownership (any surviving mapping entry for the old tenant now has a
+    /// stale generation and every `try_ref` through it fails). Returns the
+    /// new generation.
+    #[inline]
+    pub fn try_claim(&self, slot: u32, expected: u64) -> Option<u32> {
+        debug_assert_eq!(refs(expected), 0, "claim of referenced slot {slot}");
+        let next_gen = generation(expected).wrapping_add(1);
+        self.words[slot as usize]
+            .compare_exchange(
+                expected,
+                pack(1, false, next_gen) | CLOCK,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .ok()
+            .map(|_| next_gen)
+    }
+
+    /// Activate a free-list slot for its first tenant: the caller owns the
+    /// slot exclusively (it popped it off the free stack), so a plain store
+    /// of one reference / invalid / clock-set suffices. The generation is
+    /// kept — no mapping entry can reference it. Returns that generation.
+    #[inline]
+    pub fn activate(&self, slot: u32) -> u32 {
+        let g = generation(self.load(slot));
+        self.words[slot as usize].store(pack(1, false, g) | CLOCK, Ordering::SeqCst);
+        g
+    }
+
+    /// Clock-hand pass: strip the second-chance bit, leaving everything else
+    /// (a `fetch_and` composes safely with concurrent ref/claim CASes).
+    #[inline]
+    pub fn clear_clock(&self, slot: u32) -> u64 {
+        self.words[slot as usize].fetch_and(!CLOCK, Ordering::SeqCst)
     }
 }
 
@@ -136,6 +223,59 @@ mod tests {
         assert_eq!(refs(s.load(2)), 1);
         // Untouched neighbors stay at the initial word.
         assert_eq!(s.load(1), pack(0, false, 0));
+    }
+
+    #[test]
+    fn try_ref_checks_generation_and_sets_clock() {
+        let s = SlotStates::new(2);
+        s.reset(0, 0, true, 7);
+        let prev = s.try_ref(0, 7).expect("generation matches");
+        assert_eq!(refs(prev), 0);
+        assert!(is_valid(prev));
+        let w = s.load(0);
+        assert_eq!(refs(w), 1);
+        assert!(has_clock(w), "a reference grab marks the slot recently used");
+        // Stale handle: wrong generation is rejected without mutating.
+        let cur = s.try_ref(0, 6).expect_err("stale generation");
+        assert_eq!(generation(cur), 7);
+        assert_eq!(refs(s.load(0)), 1);
+    }
+
+    #[test]
+    fn try_claim_bumps_generation_and_takes_ownership() {
+        let s = SlotStates::new(1);
+        s.reset(0, 0, true, 3);
+        let word = s.load(0);
+        let new_gen = s.try_claim(0, word).expect("zero-ref slot claimable");
+        assert_eq!(new_gen, 4);
+        let w = s.load(0);
+        assert_eq!(refs(w), 1);
+        assert!(!is_valid(w));
+        assert!(has_clock(w));
+        // The old tenant's handle is now stale.
+        assert!(s.try_ref(0, 3).is_err());
+        // A second claim against the old word fails (CAS exactness).
+        assert!(s.try_claim(0, word).is_none());
+    }
+
+    #[test]
+    fn activate_and_clear_clock() {
+        let s = SlotStates::new(1);
+        let g = s.activate(0);
+        assert_eq!(g, 0);
+        let w = s.load(0);
+        assert_eq!(refs(w), 1);
+        assert!(!is_valid(w));
+        assert!(has_clock(w));
+        s.set_valid(0);
+        s.sub_ref(0);
+        let before = s.clear_clock(0);
+        assert!(has_clock(before), "clear_clock returns the pre-clear word");
+        let w = s.load(0);
+        assert!(!has_clock(w));
+        assert!(is_valid(w));
+        assert_eq!(refs(w), 0);
+        assert_eq!(generation(w), 0);
     }
 
     #[test]

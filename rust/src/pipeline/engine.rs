@@ -99,6 +99,10 @@ impl EpochStats {
     }
 }
 
+/// One extracted batch in flight between the extractors, the trainer, and
+/// the releaser. The alias list rides the whole way: the trainer gathers by
+/// it, and the releaser drops references by it (`release_aliases`), so the
+/// release path never touches the node→slot map or its shard locks.
 struct TrainItem {
     padded: Arc<PaddedSubgraph>,
     aliases: Vec<i32>,
@@ -248,7 +252,7 @@ impl<'a> GnnDrive<'a> {
         let total_batches = plan.len();
         let extract_q = BoundedQueue::<Arc<PaddedSubgraph>>::new(self.cfg.extract_queue_cap);
         let train_q = BoundedQueue::<TrainItem>::new(self.cfg.train_queue_cap);
-        let release_q = BoundedQueue::<Arc<PaddedSubgraph>>::new(64);
+        let release_q = BoundedQueue::<TrainItem>::new(64);
 
         let sample_ns = AtomicU64::new(0);
         let extract_ns = AtomicU64::new(0);
@@ -385,7 +389,7 @@ impl<'a> GnnDrive<'a> {
                         train_stats.lock().unwrap().push(&r);
                         train_order.lock().unwrap().push(item.padded.batch_id);
                         let _idle = state::enter(State::Idle);
-                        if release_q.push(item.padded).is_err() {
+                        if release_q.push(item).is_err() {
                             break;
                         }
                     }
@@ -401,14 +405,17 @@ impl<'a> GnnDrive<'a> {
                 s.spawn(move || {
                     state::register(Role::Releaser);
                     loop {
-                        let padded = {
+                        let item = {
                             let _idle = state::enter(State::Idle);
                             match release_q.pop() {
-                                Ok(p) => p,
+                                Ok(i) => i,
                                 Err(_) => break,
                             }
                         };
-                        fb.release(&padded.nodes[..padded.real_nodes]);
+                        // Release by alias (the plan's slot indexes): one
+                        // atomic decrement per row — no map lookup, no
+                        // shard lock, no contention with planning peers.
+                        fb.release_aliases(&item.aliases);
                     }
                     state::deregister();
                 });

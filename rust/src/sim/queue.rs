@@ -27,6 +27,13 @@ struct QState<T> {
 #[derive(Debug, PartialEq, Eq)]
 pub struct Closed;
 
+/// Error of a batch push interrupted by `close()`: `pushed` items made it
+/// into the queue (consumers will still drain them), the rest were dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct PartiallyPushed {
+    pub pushed: usize,
+}
+
 impl<T> BoundedQueue<T> {
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
@@ -97,12 +104,22 @@ impl<T> BoundedQueue<T> {
 
     /// Push a whole batch, blocking as needed; one lock + one wakeup per
     /// burst of space instead of per item.
-    pub fn push_all(&self, items: Vec<T>) -> Result<(), Closed> {
+    ///
+    /// An empty batch is a no-op and returns `Ok` immediately — even when
+    /// the queue is full (it used to block) or closed (there is nothing to
+    /// reject). If the queue closes mid-batch, the error reports how many
+    /// items *were* enqueued before the closure (those will still be
+    /// drained by consumers), so callers can unwind per-item accounting.
+    pub fn push_all(&self, items: Vec<T>) -> Result<(), PartiallyPushed> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let mut pushed_total = 0usize;
         let mut iter = items.into_iter();
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
-                return Err(Closed);
+                return Err(PartiallyPushed { pushed: pushed_total });
             }
             let mut pushed = false;
             while st.items.len() < self.cap {
@@ -110,6 +127,7 @@ impl<T> BoundedQueue<T> {
                     Some(item) => {
                         st.items.push_back(item);
                         pushed = true;
+                        pushed_total += 1;
                     }
                     None => {
                         drop(st);
@@ -239,6 +257,50 @@ mod tests {
         let got: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
         let want: u64 = (0..4).map(|p| (0..100).map(|i| p * 1000 + i).sum::<u64>()).sum();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn push_all_of_empty_batch_returns_immediately_even_when_full() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.push(7).unwrap();
+        // Regression: this used to block until a consumer made space.
+        assert_eq!(q.push_all(Vec::new()), Ok(()));
+        assert_eq!(q.len(), 1);
+        // Empty batch on a closed queue: nothing to reject.
+        q.close();
+        assert_eq!(q.push_all(Vec::new()), Ok(()));
+        assert_eq!(q.pop().unwrap(), 7);
+    }
+
+    #[test]
+    fn push_all_blocks_then_completes() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_all((0..6u32).collect()));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.len(), 2, "producer blocked with queue full");
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            got.push(q.pop().unwrap());
+        }
+        assert_eq!(h.join().unwrap(), Ok(()));
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn push_all_reports_partial_progress_on_close() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_all((0..5u32).collect()));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.len(), 2, "two items fit before the batch blocked");
+        q.close();
+        let err = h.join().unwrap().unwrap_err();
+        assert_eq!(err.pushed, 2, "the already-enqueued prefix is reported");
+        // The enqueued prefix still drains after close.
+        assert_eq!(q.pop().unwrap(), 0);
+        assert_eq!(q.pop().unwrap(), 1);
+        assert!(q.pop().is_err());
     }
 
     #[test]

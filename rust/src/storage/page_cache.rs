@@ -103,16 +103,24 @@ impl PageCache {
         }
         self.stats.for_kind(file.kind).misses.fetch_add(1, Ordering::Relaxed);
         let budget_pages = self.host.cache_budget() / PAGE_SIZE;
-        if budget_pages == 0 {
-            // No room to cache at all: pure pass-through.
-            return false;
-        }
-        while lru.len() as u64 >= budget_pages {
+        // Evict down to the *current* budget before deciding whether to
+        // cache — even when the budget is zero. The old early return on a
+        // zero budget skipped eviction entirely, so pages cached before a
+        // big reservation stayed resident forever and kept reporting hits
+        // against memory the cache no longer owned.
+        // Leave room for the new page when there is any budget at all.
+        let target = budget_pages.saturating_sub(1);
+        while lru.len() as u64 > target {
             if let Some((evicted, _)) = lru.pop_lru() {
                 self.stats.for_kind(evicted.kind).evictions.fetch_add(1, Ordering::Relaxed);
             } else {
                 break;
             }
+        }
+        if budget_pages == 0 {
+            // No room to cache the new page: pure pass-through (but the
+            // stale residents above are gone now).
+            return false;
         }
         lru.insert((file, page));
         false
@@ -223,6 +231,49 @@ mod tests {
         let _r = hm.reserve("staging", 24 * PAGE_SIZE).unwrap();
         pc.shrink_to_budget();
         assert!(pc.resident_bytes() <= 8 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn late_reservation_evicts_stale_residents_lazily() {
+        // Regression: pages cached *before* a big reservation used to stay
+        // resident (and report hits) forever, because the miss path
+        // returned early once the budget hit zero instead of evicting.
+        let hm = HostMemory::new(16 * PAGE_SIZE);
+        let pc = PageCache::new(hm.clone());
+        for p in 0..8 {
+            pc.access(topo(), p);
+        }
+        assert!(pc.resident_bytes() >= 8 * PAGE_SIZE);
+        // Reserve everything: the cache now owns no memory at all.
+        let _r = hm.reserve("model state", hm.cache_budget()).unwrap();
+        assert_eq!(hm.cache_budget(), 0);
+        // The stale pages still answer hits until the next miss...
+        assert!(pc.access(topo(), 0));
+        // ...but the first miss must evict down to the zero budget.
+        assert!(!pc.access(feat(), 100));
+        assert_eq!(pc.resident_bytes(), 0, "stale residents must be evicted");
+        assert!(
+            pc.stats().topology.evictions.load(Ordering::Relaxed) >= 8,
+            "evictions must be attributed"
+        );
+        // And nothing is resident afterwards: every access misses.
+        assert!(!pc.access(topo(), 0));
+        assert!(!pc.access(topo(), 0));
+    }
+
+    #[test]
+    fn partial_squeeze_evicts_down_to_remaining_budget() {
+        let hm = HostMemory::new(16 * PAGE_SIZE);
+        let pc = PageCache::new(hm.clone());
+        for p in 0..12 {
+            pc.access(topo(), p);
+        }
+        let _r = hm.reserve("staging", 12 * PAGE_SIZE).unwrap();
+        // Budget is now 4 pages; the next miss shrinks residency to fit
+        // (3 old pages + the newly cached one).
+        assert!(!pc.access(feat(), 0));
+        assert!(pc.resident_bytes() <= 4 * PAGE_SIZE);
+        assert!(pc.access(feat(), 0), "the new page itself was cached");
     }
 
     #[test]

@@ -1,6 +1,12 @@
-//! Intrusive O(1) LRU list over hashable keys — shared by the simulated OS
-//! page cache and GNNDrive's standby list (Fig 6), both of which need
-//! `touch` / `pop_lru` / `remove-by-key` in constant time.
+//! Intrusive O(1) LRU list over hashable keys, needing `touch` / `pop_lru`
+//! / `remove-by-key` in constant time.
+//!
+//! Used by the simulated OS page cache and by the preserved mutex-LRU
+//! feature-buffer baseline (`membuf/mutex_lru.rs`). The production feature
+//! buffer no longer uses this type: its standby "list" is implicit in the
+//! packed per-slot atomic words, evicted by a second-chance clock sweep
+//! (see `membuf/feature_buffer.rs`), so exact-LRU bookkeeping — and the
+//! mutex it needs — is off the allocation hot path entirely.
 
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -35,8 +41,8 @@ impl<K: Eq + Hash + Clone> Lru<K> {
         Self::default()
     }
 
-    /// Preallocate for `cap` keys (the feature-buffer shards know their slot
-    /// population up front; this avoids rehash/regrow churn on the hot path).
+    /// Preallocate for `cap` keys (callers like the mutex-LRU baseline know
+    /// their slot population up front; avoids rehash/regrow churn).
     pub fn with_capacity(cap: usize) -> Self {
         Lru {
             map: HashMap::with_capacity(cap),

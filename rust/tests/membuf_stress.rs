@@ -4,6 +4,11 @@
 //! every gather and the full structural invariants at quiesce points.
 //! Refcount underflow panics inside `release` (the buffer asserts) would
 //! fail the test via the panicking thread's join.
+//!
+//! Since the lock-free standby path landed this also covers: release by
+//! alias racing lock-free clock claims (`eviction_churn_...`), and a
+//! single-threaded determinism check that the alias and node release paths
+//! are observationally identical.
 
 use gnndrive::membuf::FeatureBuffer;
 use gnndrive::storage::DeviceMemory;
@@ -160,4 +165,116 @@ fn concurrent_extractors_agree_on_aliases_under_steal_pressure() {
         fb.check_invariants().unwrap();
         assert_eq!(fb.standby_len(), SLOTS, "round {round}: refs leaked");
     }
+}
+
+#[test]
+fn eviction_churn_with_alias_release_under_tiny_buffer() {
+    // Eviction-churn stress for the lock-free standby path: the buffer is
+    // far smaller than the working set (every batch triggers clock claims),
+    // references are dropped through `release_aliases` (the engine's path —
+    // no shard lock anywhere between publish and the next begin), and the
+    // full structural invariants are validated at quiesce points. The
+    // gather check catches any claim that stole a slot still referenced.
+    const CHURN_SLOTS: usize = 256;
+    const CHURN_IDS: u32 = 20_000; // ~80× the slot count: constant eviction
+    let dev = DeviceMemory::new(64 << 20);
+    let fb = Arc::new(FeatureBuffer::in_device(&dev, CHURN_SLOTS, DIM).unwrap());
+    let quiesce = Barrier::new(THREADS);
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let fb = fb.clone();
+            let quiesce = &quiesce;
+            s.spawn(move || {
+                let mut out = vec![0f32; BATCH * DIM];
+                for i in 0..ITERS {
+                    let mut rng = Pcg::with_stream(0xC0FFEE + t as u64, i);
+                    let mut batch: Vec<u32> =
+                        (0..BATCH).map(|_| rng.below(CHURN_IDS)).collect();
+                    batch.sort_unstable();
+                    batch.dedup();
+                    let plan = fb.begin_batch(&batch);
+                    for &(node, slot) in &plan.to_load {
+                        let row: Vec<f32> =
+                            (0..DIM).map(|j| (node * 10 + j as u32) as f32).collect();
+                        fb.publish(node, slot, &row);
+                    }
+                    fb.wait_plan(&plan);
+                    fb.gather(&plan.aliases, &mut out[..batch.len() * DIM]);
+                    for (k, &node) in batch.iter().enumerate() {
+                        assert_eq!(
+                            out[k * DIM],
+                            (node * 10) as f32,
+                            "thread {t} iter {i}: node {node} row corrupted under churn"
+                        );
+                    }
+                    fb.release_aliases(&plan.aliases);
+                    if (i + 1) % QUIESCE_EVERY == 0 {
+                        quiesce.wait();
+                        if t == 0 {
+                            fb.check_invariants().unwrap_or_else(|e| {
+                                panic!("invariants broken at iter {i}: {e}")
+                            });
+                            assert_eq!(
+                                fb.standby_len(),
+                                CHURN_SLOTS,
+                                "refcount leak at quiesce (iter {i})"
+                            );
+                        }
+                        quiesce.wait();
+                    }
+                }
+            });
+        }
+    });
+
+    fb.check_invariants().unwrap();
+    assert_eq!(fb.standby_len(), CHURN_SLOTS, "all slots zero-ref after join");
+    let (_, _, steals, loads) = fb.stats();
+    assert!(loads > 0);
+    assert!(
+        steals > loads / 4,
+        "a {CHURN_SLOTS}-slot buffer over {CHURN_IDS} ids must churn (steals {steals}, loads {loads})"
+    );
+}
+
+#[test]
+fn release_by_alias_and_by_node_are_observationally_identical() {
+    // Determinism: the same single-threaded schedule driven through
+    // `release_aliases` and through `release` must produce identical alias
+    // assignments, identical (hits, shared, steals, loads), and identical
+    // standby counts at every step — release-by-alias is a pure fast path,
+    // not a semantic change.
+    const DET_SLOTS: usize = 96;
+    const DET_IDS: u32 = 400;
+    let dev = DeviceMemory::new(64 << 20);
+    let by_alias = FeatureBuffer::in_device(&dev, DET_SLOTS, DIM).unwrap();
+    let by_node = FeatureBuffer::in_device(&dev, DET_SLOTS, DIM).unwrap();
+    for i in 0..400u64 {
+        let mut rng = Pcg::with_stream(0xDE7, i);
+        let mut batch: Vec<u32> = (0..24).map(|_| rng.below(DET_IDS)).collect();
+        batch.sort_unstable();
+        batch.dedup();
+        let pa = by_alias.begin_batch(&batch);
+        let pn = by_node.begin_batch(&batch);
+        assert_eq!(pa.aliases, pn.aliases, "iter {i}: alias divergence");
+        assert_eq!(pa.to_load, pn.to_load, "iter {i}: load-plan divergence");
+        for &(node, slot) in &pa.to_load {
+            by_alias.publish(node, slot, &[node as f32; DIM]);
+            by_node.publish(node, slot, &[node as f32; DIM]);
+        }
+        by_alias.release_aliases(&pa.aliases);
+        by_node.release(&batch);
+        assert_eq!(by_alias.stats(), by_node.stats(), "iter {i}: stats divergence");
+        assert_eq!(
+            by_alias.standby_len(),
+            by_node.standby_len(),
+            "iter {i}: standby divergence"
+        );
+    }
+    by_alias.check_invariants().unwrap();
+    by_node.check_invariants().unwrap();
+    assert_eq!(by_alias.standby_len(), DET_SLOTS);
+    let (_, _, steals, _) = by_alias.stats();
+    assert!(steals > 0, "the schedule must exercise clock claims");
 }

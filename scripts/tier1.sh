@@ -1,11 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 verification: release build + tests, plus clippy when available.
-# Run from anywhere; operates on the rust/ crate (vendored deps, offline).
+# Tier-1 verification: release build + tests + bench bit-rot check, plus
+# clippy when available. Run from anywhere; operates on the rust/ crate
+# (vendored deps, offline).
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== cargo build --benches =="
+# Benches are not compiled by plain `cargo build`/`cargo test` (autobenches
+# is off and micro_hotpath has harness = false), so build them explicitly:
+# bench bit-rot fails tier-1 instead of the next perf investigation.
+cargo build --benches
 
 echo "== cargo test -q =="
 cargo test -q
@@ -15,6 +22,11 @@ if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings
 else
   echo "== clippy unavailable; skipping lint =="
+fi
+
+if [ -f BENCH_hotpath.json ]; then
+  echo "== last BENCH_hotpath.json record =="
+  tail -n 1 BENCH_hotpath.json
 fi
 
 echo "tier-1 OK"
