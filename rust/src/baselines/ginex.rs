@@ -20,7 +20,7 @@ use crate::metrics::state::{self, Role};
 use crate::pipeline::EpochStats;
 use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
 use crate::sim::Stopwatch;
-use crate::storage::Reservation;
+use crate::storage::{IoBackend as _, Reservation};
 use crate::train::{TrainStats, TrainStep};
 use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::cmp::Reverse;
@@ -34,9 +34,9 @@ const FEATURE_CACHE_FRAC: f64 = 0.68;
 /// Threads for synchronous I/O phases (paper: > 2 × cores).
 const IO_THREADS: usize = 8;
 
-pub struct Ginex<'a> {
-    machine: &'a Machine,
-    ds: &'a Dataset,
+pub struct Ginex {
+    machine: Arc<Machine>,
+    ds: Arc<Dataset>,
     cfg: TrainConfig,
     caps: Vec<usize>,
     trainer: Mutex<Box<dyn TrainStep>>,
@@ -47,10 +47,10 @@ pub struct Ginex<'a> {
     _fc_res: Reservation,
 }
 
-impl<'a> Ginex<'a> {
+impl Ginex {
     pub fn new(
-        machine: &'a Machine,
-        ds: &'a Dataset,
+        machine: &Arc<Machine>,
+        ds: &Arc<Dataset>,
         cfg: TrainConfig,
         trainer: Box<dyn TrainStep>,
     ) -> anyhow::Result<Self> {
@@ -77,8 +77,8 @@ impl<'a> Ginex<'a> {
             cached.insert(v);
         }
         Ok(Ginex {
-            machine,
-            ds,
+            machine: machine.clone(),
+            ds: ds.clone(),
             cfg,
             caps,
             trainer: Mutex::new(trainer),
@@ -114,14 +114,15 @@ impl<'a> Ginex<'a> {
                     state::register(Role::Sampler);
                     while let Some((batch_id, seeds)) = plan.claim() {
                         let sw = Stopwatch::start(clock);
-                        let sub =
-                            sampler.sample_batch(this.ds, &this.machine.storage, batch_id, seeds);
+                        let sub = sampler.sample_batch(
+                            &this.ds,
+                            this.machine.backend.as_ref(),
+                            batch_id,
+                            seeds,
+                        );
                         // Ginex stores sampling results to SSD per
                         // superbatch (extra write I/O on the sample path).
-                        this.machine
-                            .storage
-                            .ssd
-                            .write(sub.nodes.len() * 4);
+                        this.machine.backend.charge_write(sub.nodes.len() * 4);
                         let padded = Arc::new(sub.pad(&this.caps, &this.cfg.fanouts));
                         sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         out.lock().unwrap().push((batch_id, padded));
@@ -148,7 +149,7 @@ impl<'a> Ginex<'a> {
         let mut total_ids = 0usize;
         for b in batches {
             total_ids += b.real_nodes;
-            self.machine.storage.ssd.read(b.real_nodes * 4);
+            self.machine.backend.charge_read(b.real_nodes * 4);
         }
         // ~16 B/occurrence of workspace, the OOM lever at small memory.
         let res = self
@@ -181,7 +182,7 @@ impl<'a> Ginex<'a> {
                         if i >= rows.len() {
                             break;
                         }
-                        this.machine.storage.read_direct(
+                        this.machine.backend.read_direct(
                             &this.ds.features.file,
                             this.ds.features.row_offset(rows[i] as u64),
                             &mut buf,
@@ -239,7 +240,7 @@ impl FeatureCache {
     }
 }
 
-impl TrainingSystem for Ginex<'_> {
+impl TrainingSystem for Ginex {
     fn name(&self) -> &'static str {
         "Ginex"
     }
@@ -254,7 +255,7 @@ impl TrainingSystem for Ginex<'_> {
             self.cfg.batches_per_epoch,
         );
         let watch = Stopwatch::start(clock);
-        self.machine.storage.ssd.reset_stats();
+        self.machine.backend.reset_io_stats();
 
         // Phase 1+2: superbatch sampling + inspect.
         let (batches, sample_time) = self.sample_superbatch(epoch, &plan);
@@ -327,9 +328,8 @@ impl TrainingSystem for Ginex<'_> {
             reorder_inversions: 0,
             ssd_read_bytes: self
                 .machine
-                .storage
-                .ssd
-                .counters()
+                .backend
+                .io_counters()
                 .read_bytes
                 .load(Ordering::Relaxed),
             truncated_edges: 0,

@@ -23,12 +23,12 @@ use crate::metrics::state::{self, Role};
 use crate::pipeline::EpochStats;
 use crate::sample::{EpochPlan, SampledSubgraph, LayerAdj};
 use crate::sim::Stopwatch;
-use crate::storage::Reservation;
+use crate::storage::{IoBackend as _, Reservation};
 use crate::train::{TrainStats, TrainStep};
 use crate::util::rng::Pcg;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Partition count (Marius defaults to a few dozen).
@@ -39,9 +39,9 @@ const PREP_WORKSPACE_FRAC: f64 = 0.2;
 /// Fraction of host memory available for buffered partitions.
 const BUFFER_FRAC: f64 = 0.6;
 
-pub struct MariusGnn<'a> {
-    machine: &'a Machine,
-    ds: &'a Dataset,
+pub struct MariusGnn {
+    machine: Arc<Machine>,
+    ds: Arc<Dataset>,
     cfg: TrainConfig,
     caps: Vec<usize>,
     trainer: Mutex<Box<dyn TrainStep>>,
@@ -50,10 +50,10 @@ pub struct MariusGnn<'a> {
     _buffer_res: Reservation,
 }
 
-impl<'a> MariusGnn<'a> {
+impl MariusGnn {
     pub fn new(
-        machine: &'a Machine,
-        ds: &'a Dataset,
+        machine: &Arc<Machine>,
+        ds: &Arc<Dataset>,
         cfg: TrainConfig,
         trainer: Box<dyn TrainStep>,
     ) -> anyhow::Result<Self> {
@@ -74,8 +74,8 @@ impl<'a> MariusGnn<'a> {
             .host
             .reserve("marius partition buffer", buffered_parts as u64 * part_bytes)?;
         Ok(MariusGnn {
-            machine,
-            ds,
+            machine: machine.clone(),
+            ds: ds.clone(),
             cfg,
             caps,
             trainer: Mutex::new(trainer),
@@ -119,7 +119,7 @@ impl<'a> MariusGnn<'a> {
             let mut left = part_bytes;
             while left > 0 {
                 let chunk = left.min(1 << 20) as usize;
-                self.machine.storage.ssd.read(chunk);
+                self.machine.backend.charge_read(chunk);
                 left -= chunk as u64;
             }
             // Topology slice of the partition through the page cache.
@@ -130,7 +130,7 @@ impl<'a> MariusGnn<'a> {
             let mut left = (edge_hi - edge_lo) * 4;
             while left > 0 {
                 let chunk = left.min(1 << 20) as usize;
-                self.machine.storage.ssd.read(chunk);
+                self.machine.backend.charge_read(chunk);
                 left -= chunk as u64;
             }
         }
@@ -210,7 +210,7 @@ impl<'a> MariusGnn<'a> {
     }
 }
 
-impl TrainingSystem for MariusGnn<'_> {
+impl TrainingSystem for MariusGnn {
     fn name(&self) -> &'static str {
         "MariusGNN"
     }
@@ -218,7 +218,7 @@ impl TrainingSystem for MariusGnn<'_> {
     fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats> {
         let clock = &self.machine.clock;
         let watch = Stopwatch::start(clock);
-        self.machine.storage.ssd.reset_stats();
+        self.machine.backend.reset_io_stats();
         let (first_cohort, prep_time) = self.prepare(epoch)?;
 
         // Cohort schedule: every partition must be buffered at some point
@@ -260,7 +260,7 @@ impl TrainingSystem for MariusGnn<'_> {
                     let mut left = part_bytes;
                     while left > 0 {
                         let chunk = left.min(1 << 20) as usize;
-                        self.machine.storage.ssd.read(chunk);
+                        self.machine.backend.charge_read(chunk);
                         left -= chunk as u64;
                     }
                 }
@@ -331,9 +331,8 @@ impl TrainingSystem for MariusGnn<'_> {
             reorder_inversions: 0,
             ssd_read_bytes: self
                 .machine
-                .storage
-                .ssd
-                .counters()
+                .backend
+                .io_counters()
                 .read_bytes
                 .load(Ordering::Relaxed),
             truncated_edges: 0,

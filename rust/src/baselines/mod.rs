@@ -16,15 +16,16 @@ use crate::config::{Machine, TrainConfig};
 use crate::graph::Dataset;
 use crate::pipeline::{EpochStats, GnnDrive, Variant};
 use crate::runtime::simcompute::ModelKind;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Adapter: GNNDrive's pipeline engine as a `TrainingSystem`.
-pub struct GnnDriveSystem<'a> {
-    engine: GnnDrive<'a>,
+pub struct GnnDriveSystem {
+    engine: GnnDrive,
     label: &'static str,
 }
 
-impl TrainingSystem for GnnDriveSystem<'_> {
+impl TrainingSystem for GnnDriveSystem {
     fn name(&self) -> &'static str {
         self.label
     }
@@ -40,13 +41,17 @@ impl TrainingSystem for GnnDriveSystem<'_> {
 
 /// Build any system under test with the shared simulated trainer (sweeps).
 /// Construction failures are OOMs — a reportable result, not a crash.
-pub fn build_system<'a>(
+///
+/// Systems hold their `Machine`/`Dataset` via `Arc`, so the returned box is
+/// `'static` and can be moved into spawned threads (serving loops, bench
+/// drivers) instead of being pinned to the caller's stack frame.
+pub fn build_system(
     kind: SystemKind,
-    machine: &'a Machine,
-    ds: &'a Dataset,
+    machine: &Arc<Machine>,
+    ds: &Arc<Dataset>,
     cfg: TrainConfig,
     model: ModelKind,
-) -> anyhow::Result<Box<dyn TrainingSystem + 'a>> {
+) -> anyhow::Result<Box<dyn TrainingSystem + 'static>> {
     let hidden = 256; // paper §5: hidden dimension 256
     match kind {
         SystemKind::GnnDriveGpu => {

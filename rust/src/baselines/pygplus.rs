@@ -19,14 +19,15 @@ use crate::pipeline::EpochStats;
 use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
 use crate::sim::queue::BoundedQueue;
 use crate::sim::Stopwatch;
+use crate::storage::IoBackend as _;
 use crate::train::{TrainStats, TrainStep};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-pub struct PygPlus<'a> {
-    machine: &'a Machine,
-    ds: &'a Dataset,
+pub struct PygPlus {
+    machine: Arc<Machine>,
+    ds: Arc<Dataset>,
     cfg: TrainConfig,
     caps: Vec<usize>,
     trainer: Mutex<Box<dyn TrainStep>>,
@@ -34,18 +35,18 @@ pub struct PygPlus<'a> {
     workers: usize,
 }
 
-impl<'a> PygPlus<'a> {
+impl PygPlus {
     pub fn new(
-        machine: &'a Machine,
-        ds: &'a Dataset,
+        machine: &Arc<Machine>,
+        ds: &Arc<Dataset>,
         cfg: TrainConfig,
         trainer: Box<dyn TrainStep>,
     ) -> Self {
         let caps = trainer.caps().to_vec();
         PygPlus {
             workers: cfg.samplers + cfg.extractors, // same thread budget as GNNDrive
-            machine,
-            ds,
+            machine: machine.clone(),
+            ds: ds.clone(),
             cfg,
             caps,
             trainer: Mutex::new(trainer),
@@ -59,7 +60,7 @@ impl<'a> PygPlus<'a> {
         let row_bytes = self.ds.features.row_bytes() as usize;
         let mut buf = vec![0u8; row_bytes];
         for (i, &node) in padded.nodes[..padded.real_nodes].iter().enumerate() {
-            self.machine.storage.read_buffered(
+            self.machine.backend.read_buffered(
                 &self.ds.features.file,
                 self.ds.features.row_offset(node as u64),
                 &mut buf,
@@ -77,7 +78,7 @@ struct Prepared {
     feats: Vec<f32>,
 }
 
-impl TrainingSystem for PygPlus<'_> {
+impl TrainingSystem for PygPlus {
     fn name(&self) -> &'static str {
         "PyG+"
     }
@@ -104,7 +105,7 @@ impl TrainingSystem for PygPlus<'_> {
         let cap_l = *self.caps.last().unwrap();
 
         let watch = Stopwatch::start(clock);
-        self.machine.storage.ssd.reset_stats();
+        self.machine.backend.reset_io_stats();
 
         std::thread::scope(|s| {
             for _ in 0..self.workers {
@@ -120,7 +121,7 @@ impl TrainingSystem for PygPlus<'_> {
                     while let Some((batch_id, seeds)) = plan.claim() {
                         let sw = Stopwatch::start(clock);
                         let sub =
-                            sampler.sample_batch(this.ds, &this.machine.storage, batch_id, seeds);
+                            sampler.sample_batch(&this.ds, this.machine.backend.as_ref(), batch_id, seeds);
                         let padded = Arc::new(sub.pad(&this.caps, &this.cfg.fanouts));
                         sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
@@ -183,9 +184,8 @@ impl TrainingSystem for PygPlus<'_> {
             reorder_inversions: 0, // PyG+ trains strictly in order
             ssd_read_bytes: self
                 .machine
-                .storage
-                .ssd
-                .counters()
+                .backend
+                .io_counters()
                 .read_bytes
                 .load(Ordering::Relaxed),
             truncated_edges: 0,
@@ -213,7 +213,7 @@ impl TrainingSystem for PygPlus<'_> {
                     while let Some((batch_id, seeds)) = plan.claim() {
                         let sw = Stopwatch::start(clock);
                         let sub =
-                            sampler.sample_batch(this.ds, &this.machine.storage, batch_id, seeds);
+                            sampler.sample_batch(&this.ds, this.machine.backend.as_ref(), batch_id, seeds);
                         std::hint::black_box(&sub);
                         sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }

@@ -8,7 +8,8 @@
 
 use crate::sim::Clock;
 use crate::storage::{
-    DeviceMemory, HostMemory, PageCache, Pcie, PcieConfig, SsdConfig, SsdSim, Storage,
+    BackendKind, DeviceMemory, HostMemory, IoBackend, OsFileBackend, PageCache, Pcie,
+    PcieConfig, SsdConfig, SsdSim, Storage,
 };
 use crate::util::toml::Doc;
 use crate::util::units;
@@ -80,6 +81,9 @@ pub struct MachineConfig {
     pub gpu: GpuModel,
     /// GPUs available (Fig 13 uses up to 8).
     pub gpus: usize,
+    /// Which I/O backend serves reads: the simulated SSD stack (default)
+    /// or real OS files (`--backend os`).
+    pub backend: BackendKind,
 }
 
 impl MachineConfig {
@@ -94,6 +98,7 @@ impl MachineConfig {
             pcie: PcieConfig::gen3_x16(),
             gpu: GpuModel::Rtx3090,
             gpus: 2,
+            backend: BackendKind::Sim,
         }
     }
 
@@ -107,7 +112,14 @@ impl MachineConfig {
             pcie: PcieConfig::k80(),
             gpu: GpuModel::K80,
             gpus: 8,
+            backend: BackendKind::Sim,
         }
+    }
+
+    /// Select the I/O backend (CLI `--backend sim|os`).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Override the host memory budget (Fig 9 sweeps 8–128 GB paper-scale).
@@ -158,6 +170,10 @@ impl MachineConfig {
         if let Some(v) = doc.get_i64("gpus") {
             cfg.gpus = v as usize;
         }
+        if let Some(v) = doc.get_str("backend") {
+            cfg.backend = BackendKind::by_name(v)
+                .ok_or_else(|| format!("unknown backend {v:?} (valid: {})", BackendKind::names()))?;
+        }
         if let Some(v) = doc.get_str("gpu") {
             cfg.gpu = match v {
                 "rtx3090" => GpuModel::Rtx3090,
@@ -170,8 +186,14 @@ impl MachineConfig {
     }
 }
 
-/// The instantiated shared substrate: one SSD, one page cache, one host
-/// memory budget, one PCIe link, `gpus` device memory budgets.
+/// The instantiated shared substrate: one I/O backend, one host memory
+/// budget, one PCIe link, `gpus` device memory budgets.
+///
+/// `storage` is always the concrete simulated stack (sim-only experiments
+/// poke its `ssd`/`cache` directly); `backend` is the *selected*
+/// [`IoBackend`] every consumer routes reads through. With the default
+/// `BackendKind::Sim` the two are the same object, so SSD-charge accounting
+/// is observable through either handle.
 pub struct Machine {
     pub cfg: MachineConfig,
     pub clock: Clock,
@@ -179,6 +201,7 @@ pub struct Machine {
     pub host: HostMemory,
     pub devices: Vec<DeviceMemory>,
     pub pcie: Arc<Pcie>,
+    pub backend: Arc<dyn IoBackend>,
 }
 
 impl Machine {
@@ -187,9 +210,13 @@ impl Machine {
         let host = HostMemory::new(cfg.host_mem);
         let cache = Arc::new(PageCache::new(host.clone()));
         let storage = Storage::new(ssd, cache);
+        let backend: Arc<dyn IoBackend> = match cfg.backend {
+            BackendKind::Sim => Arc::new(storage.clone()),
+            BackendKind::Os => Arc::new(OsFileBackend::new(cfg.ssd.sector)),
+        };
         let devices = (0..cfg.gpus.max(1)).map(|_| DeviceMemory::new(cfg.dev_mem)).collect();
         let pcie = Pcie::new(cfg.pcie.clone(), clock.clone());
-        Machine { cfg, clock, storage, host, devices, pcie }
+        Machine { cfg, clock, storage, host, devices, pcie, backend }
     }
 
     pub fn paper_default() -> Self {
@@ -277,6 +304,18 @@ mod tests {
         assert_eq!(m.devices.len(), 2);
         assert_eq!(m.host.capacity(), 128 << 20);
         assert_eq!(m.storage.ssd.config().sector, 512);
+    }
+
+    #[test]
+    fn backend_selection_plumbs_through() {
+        let m = Machine::new(MachineConfig::paper(), Clock::new(1.0));
+        assert_eq!(m.backend.name(), "sim");
+        let m = Machine::new(
+            MachineConfig::paper().with_backend(BackendKind::Os),
+            Clock::new(1.0),
+        );
+        assert_eq!(m.backend.name(), "os");
+        assert_eq!(m.backend.sector(), 512);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::runtime::simcompute::ModelKind;
 use crate::sim::Clock;
 use crate::util::units::{fmt_dur, fmt_rate};
 use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Duration;
 
 pub fn is_full() -> bool {
@@ -57,8 +58,8 @@ fn fig2_cfg(kind: SystemKind, quick: bool) -> TrainConfig {
 /// One measurement cell: fresh caches, one warm-up epoch (the paper
 /// averages over 10 warm epochs), then the measured epoch.
 fn run_epoch_cell(
-    machine: &Machine,
-    ds: &Dataset,
+    machine: &Arc<Machine>,
+    ds: &Arc<Dataset>,
     kind: SystemKind,
     cfg: TrainConfig,
     model: ModelKind,
@@ -88,10 +89,10 @@ pub fn fig02(quick: bool) -> String {
     )
     .unwrap();
     for &dim in dims {
-        let machine = Machine::new(MachineConfig::paper(), clock());
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
         let spec = DatasetSpec::papers100m_mini().with_dim(dim);
         let ds = match Dataset::materialize(&spec, &machine) {
-            Ok(d) => d,
+            Ok(d) => Arc::new(d),
             Err(e) => {
                 writeln!(out, "{dim}\t-\tOOM ({e})").unwrap();
                 continue;
@@ -153,8 +154,8 @@ pub fn fig03_fig11(quick: bool) -> String {
     )
     .unwrap();
     for kind in systems {
-        let machine = Machine::new(MachineConfig::paper(), clock());
-        let ds = Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine).unwrap());
         let cfg = workload(quick);
         let mut sys = match build_system(kind, &machine, &ds, cfg, ModelKind::GraphSage) {
             Ok(s) => s,
@@ -226,9 +227,9 @@ pub fn fig08(quick: bool) -> String {
     for spec0 in &datasets {
         for &model in models {
             for &dim in dims {
-                let machine = Machine::new(MachineConfig::paper(), clock());
+                let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
                 let spec = spec0.clone().with_dim(dim);
-                let ds = Dataset::materialize(&spec, &machine).unwrap();
+                let ds = Arc::new(Dataset::materialize(&spec, &machine).unwrap());
                 for kind in systems {
                     let row_head =
                         format!("{}\t{}\t{dim}\t{}", spec0.name, model.name(), kind.label());
@@ -277,11 +278,13 @@ pub fn fig09(quick: bool) -> String {
     .unwrap();
     for spec0 in &datasets {
         for &gb in gbs {
-            let machine =
-                Machine::new(MachineConfig::paper().with_paper_host_gb(gb), clock());
+            let machine = Arc::new(Machine::new(
+                MachineConfig::paper().with_paper_host_gb(gb),
+                clock(),
+            ));
             let spec = spec0.clone().with_dim(512);
             let ds = match Dataset::materialize(&spec, &machine) {
-                Ok(d) => d,
+                Ok(d) => Arc::new(d),
                 Err(e) => {
                     writeln!(out, "{}\t{gb}\t-\tOOM ({e})", spec0.name).unwrap();
                     continue;
@@ -328,8 +331,8 @@ pub fn fig10(quick: bool) -> String {
     )
     .unwrap();
     for spec in &datasets {
-        let machine = Machine::new(MachineConfig::paper(), clock());
-        let ds = Dataset::materialize(spec, &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
+        let ds = Arc::new(Dataset::materialize(spec, &machine).unwrap());
         for &b in batch_sizes {
             let mut cfg = workload(quick);
             // Hold total seeds ≈ constant so epochs are comparable.
@@ -377,8 +380,8 @@ pub fn fig12(quick: bool) -> String {
     .unwrap();
     for spec in &datasets {
         for &mult in mults {
-            let machine = Machine::new(MachineConfig::paper(), clock());
-            let ds = Dataset::materialize(spec, &machine).unwrap();
+            let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
+            let ds = Arc::new(Dataset::materialize(spec, &machine).unwrap());
             let mut cfg = workload(quick);
             cfg.feature_buffer_mult = mult;
             // The per-epoch working set must exceed the 1x buffer for the
@@ -440,8 +443,8 @@ pub fn fig13(quick: bool) -> String {
         for variant in [Variant::Gpu, Variant::Cpu] {
             let mut base = None;
             for &w in workers {
-                let machine = Machine::new(MachineConfig::k80(), clock());
-                let ds = Dataset::materialize(spec, &machine).unwrap();
+                let machine = Arc::new(Machine::new(MachineConfig::k80(), clock()));
+                let ds = Arc::new(Dataset::materialize(spec, &machine).unwrap());
                 let mut cfg = workload(quick);
                 // Fixed total work split across workers.
                 let total = cfg.batches_per_epoch.unwrap_or(4) * 2;
@@ -501,8 +504,8 @@ pub fn fig14(quick: bool) -> String {
     )
     .unwrap();
     for kind in systems {
-        let machine = Machine::new(MachineConfig::paper(), clock());
-        let ds = Dataset::materialize(&DatasetSpec::papers_tiny(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::papers_tiny(), &machine).unwrap());
         let handle = match TrainHandle::spawn(artifacts.clone(), "sage_mini".into()) {
             Ok(h) => h,
             Err(e) => {
@@ -586,9 +589,9 @@ pub fn fig14(quick: bool) -> String {
 }
 
 /// Local adapter (fig14 builds engines directly to inject the PJRT trainer).
-struct EngineAdapter<'a>(crate::pipeline::GnnDrive<'a>);
+struct EngineAdapter(crate::pipeline::GnnDrive);
 
-impl crate::baselines::TrainingSystem for EngineAdapter<'_> {
+impl crate::baselines::TrainingSystem for EngineAdapter {
     fn name(&self) -> &'static str {
         "GNNDrive(GPU)"
     }
@@ -623,9 +626,11 @@ pub fn tab02(quick: bool) -> String {
     ];
     for spec in &specs {
         for &(kind, gb) in &rows {
-            let machine =
-                Machine::new(MachineConfig::paper().with_paper_host_gb(gb), clock());
-            let ds = Dataset::materialize(spec, &machine).unwrap();
+            let machine = Arc::new(Machine::new(
+                MachineConfig::paper().with_paper_host_gb(gb),
+                clock(),
+            ));
+            let ds = Arc::new(Dataset::materialize(spec, &machine).unwrap());
             let label = if gb == 32 {
                 kind.label().to_string()
             } else {
@@ -656,10 +661,10 @@ pub fn tab02(quick: bool) -> String {
 // ---------------------------------------------------------------------------
 
 pub fn figb1(quick: bool) -> String {
+    use crate::membuf::{SlotRef, StagingArena};
     use crate::storage::uring::{IoMode, Sqe, Uring};
     use crate::storage::{DataKind, FileId, MemBacking, SimFile};
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::{Arc, Mutex};
     use std::time::Instant;
 
     let ops_per_point = if quick { 1200 } else { 6000 };
@@ -674,7 +679,7 @@ pub fn figb1(quick: bool) -> String {
     .unwrap();
 
     let make = || {
-        let machine = Machine::new(MachineConfig::paper(), clock());
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
         let bytes: Vec<u8> = vec![0u8; 8 << 20];
         let file = SimFile::new(
             FileId::new(999, DataKind::Other),
@@ -727,8 +732,11 @@ pub fn figb1(quick: bool) -> String {
         // Asynchronous reads through one ring with varying iodepth.
         for &d in depth_sweep {
             let (machine, file) = make();
-            let ring = Uring::new(machine.storage.clone(), d);
-            let dst = Arc::new(Mutex::new(vec![0u8; 512]));
+            let ring = Uring::new(Arc::new(machine.storage.clone()), d);
+            // One staging slot per possibly-in-flight request (SQ depth +
+            // worker chunks), so concurrent completions never share bytes.
+            let slots = 1024;
+            let arena = StagingArena::new(slots, 512);
             let mut rng = crate::util::rng::Pcg::new(9);
             let t0 = Instant::now();
             let sqes: Vec<Sqe> = (0..ops_per_point)
@@ -736,7 +744,7 @@ pub fn figb1(quick: bool) -> String {
                     file: file.clone(),
                     offset: (rng.below(16 * 1024) as u64) * 512,
                     len: 512,
-                    dst: dst.clone(),
+                    dst: SlotRef::new(arena.clone(), i % slots),
                     dst_off: 0,
                     user_data: i as u64,
                     mode: if buffered { IoMode::Buffered } else { IoMode::Direct },
@@ -799,8 +807,8 @@ pub fn ablation(quick: bool) -> String {
          variant\tepoch_s\tsample_s\textract_s\tvs_full"
     )
     .unwrap();
-    let machine = Machine::new(MachineConfig::paper(), clock());
-    let ds = Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), clock()));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine).unwrap());
     let variants: [(&str, fn(&mut TrainConfig)); 4] = [
         ("full", |_| {}),
         ("-async (sync extraction)", |c| c.sync_extract = true),

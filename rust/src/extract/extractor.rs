@@ -3,11 +3,19 @@
 //!
 //! One extractor handles one mini-batch end to end, never blocking per
 //! request: phase 1 submits every missing node's SSD→staging load to its
-//! io_uring (direct I/O, large depth); phase 2 launches the staging→device
-//! PCIe transfer of each node *as soon as its load completes*, overlapping
-//! with outstanding loads; completion publishes the node's valid bit in the
-//! feature buffer. Nodes already resident are aliased (no I/O), nodes being
-//! extracted by peers are awaited at the end (shared I/O).
+//! backend's async engine (direct I/O, large depth); phase 2 launches the
+//! staging→device PCIe transfer of each node *as soon as its load
+//! completes*, overlapping with outstanding loads; completion publishes the
+//! node's valid bit in the feature buffer. Nodes already resident are
+//! aliased (no I/O), nodes being extracted by peers are awaited at the end
+//! (shared I/O).
+//!
+//! The extractor is backend-agnostic: it holds an [`IoBackend`] and drives
+//! whatever [`AsyncIoEngine`] that backend mints (the sim io_uring, or the
+//! OS-file `pread` pool), so the same pipeline runs against the simulator
+//! and against real files. Completions land in lock-free staging-slot
+//! handles ([`crate::membuf::SlotRef`]) — no mutex per row anywhere between
+//! submit and publish.
 //!
 //! The returned alias list is the batch's currency downstream: the trainer
 //! gathers rows by alias, and the releaser drops the references this
@@ -15,11 +23,11 @@
 //! never re-resolving node ids — so the whole post-extraction lifecycle
 //! stays off the coordinator's shard locks.
 
-use crate::membuf::{FeatureBuffer, StagingBuffer};
-use crate::storage::uring::{IoMode, Sqe, Uring};
-use crate::storage::{Pcie, Storage};
 use crate::graph::FeatureTable;
+use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::sim::Latch;
+use crate::storage::api::{AsyncIoEngine, IoBackend, IoMode, Sqe};
+use crate::storage::Pcie;
 use std::sync::Arc;
 
 /// Where extracted rows land (§4.4 "CPU-based Training" skips the PCIe hop).
@@ -49,29 +57,29 @@ impl Default for ExtractOptions {
 }
 
 pub struct Extractor {
-    ring: Uring,
+    engine: Box<dyn AsyncIoEngine>,
     staging: StagingBuffer,
     fb: Arc<FeatureBuffer>,
     features: FeatureTable,
     target: ExtractTarget,
-    storage: Storage,
+    backend: Arc<dyn IoBackend>,
     opts: ExtractOptions,
 }
 
 impl Extractor {
     pub fn new(
-        storage: Storage,
+        backend: Arc<dyn IoBackend>,
         io_depth: usize,
         staging: StagingBuffer,
         fb: Arc<FeatureBuffer>,
         features: FeatureTable,
         target: ExtractTarget,
     ) -> Self {
-        Self::with_options(storage, io_depth, staging, fb, features, target, ExtractOptions::default())
+        Self::with_options(backend, io_depth, staging, fb, features, target, ExtractOptions::default())
     }
 
     pub fn with_options(
-        storage: Storage,
+        backend: Arc<dyn IoBackend>,
         io_depth: usize,
         staging: StagingBuffer,
         fb: Arc<FeatureBuffer>,
@@ -80,12 +88,12 @@ impl Extractor {
         opts: ExtractOptions,
     ) -> Self {
         Extractor {
-            ring: Uring::new(storage.clone(), io_depth),
+            engine: backend.clone().async_engine(io_depth),
             staging,
             fb,
             features,
             target,
-            storage,
+            backend,
             opts,
         }
     }
@@ -107,9 +115,9 @@ impl Extractor {
             for &(node, slot) in &plan.to_load {
                 let off = self.features.row_offset(node as u64);
                 if self.opts.direct {
-                    self.storage.read_direct(&self.features.file, off, &mut buf);
+                    self.backend.read_direct(&self.features.file, off, &mut buf);
                 } else {
-                    self.storage.read_buffered(&self.features.file, off, &mut buf);
+                    self.backend.read_buffered(&self.features.file, off, &mut buf);
                 }
                 if let ExtractTarget::Device(pcie) = &self.target {
                     pcie.transfer_sync(row_bytes);
@@ -123,7 +131,10 @@ impl Extractor {
         let mode = if self.opts.direct { IoMode::Direct } else { IoMode::Buffered };
         for wave in plan.to_load.chunks(self.staging.slots()) {
             let latch = Arc::new(Latch::new(wave.len()));
-            // Phase 1: submit all loads asynchronously.
+            // Phase 1: submit all loads asynchronously. Each wave request
+            // owns staging slot `i` exclusively until its CQE is harvested
+            // below (the SlotRef protocol); the wave-end latch keeps the
+            // next wave from reusing slots before transfers land.
             let sqes: Vec<Sqe> = wave
                 .iter()
                 .enumerate()
@@ -137,12 +148,12 @@ impl Extractor {
                     mode,
                 })
                 .collect();
-            self.ring.submit_batch(sqes);
+            self.engine.submit_batch(sqes);
 
             // Phase 2: as each load completes, launch its transfer without
             // waiting for the remaining loads.
             for _ in 0..wave.len() {
-                let cqe = self.ring.wait_cqe();
+                let cqe = self.engine.wait_cqe();
                 let i = cqe.user_data as usize;
                 let (node, slot) = wave[i];
                 let staged = self.staging.slot(i);
@@ -152,13 +163,14 @@ impl Extractor {
                         let latch = latch.clone();
                         pcie.transfer_async(row_bytes, move || {
                             // Decode straight from the staging bytes into
-                            // the arena row — no intermediate Vec<f32>.
-                            fb.publish_le_bytes(node, slot, &staged.lock().unwrap());
+                            // the arena row — no intermediate Vec<f32>, no
+                            // slot lock.
+                            fb.publish_le_bytes(node, slot, staged.bytes());
                             latch.count_down();
                         });
                     }
                     ExtractTarget::Host => {
-                        self.fb.publish_le_bytes(node, slot, &staged.lock().unwrap());
+                        self.fb.publish_le_bytes(node, slot, staged.bytes());
                         latch.count_down();
                     }
                 }
@@ -195,7 +207,7 @@ mod tests {
         let staging =
             StagingBuffer::new(&m.host, slots, ds.features.row_bytes() as usize).unwrap();
         Extractor::new(
-            m.storage.clone(),
+            m.backend.clone(),
             64,
             staging,
             fb,
@@ -314,7 +326,7 @@ mod tests {
         let staging =
             StagingBuffer::new(&m.host, 64, ds.features.row_bytes() as usize).unwrap();
         let ex = Extractor::with_options(
-            m.storage.clone(),
+            m.backend.clone(),
             64,
             staging,
             fb.clone(),
@@ -340,7 +352,7 @@ mod tests {
         let staging =
             StagingBuffer::new(&m.host, 64, ds.features.row_bytes() as usize).unwrap();
         let ex = Extractor::with_options(
-            m.storage.clone(),
+            m.backend.clone(),
             64,
             staging,
             fb,

@@ -6,7 +6,7 @@
 //! SSD and is accessed through the OS page cache (mmap-style), where it
 //! contends with whatever else occupies host memory.
 
-use crate::storage::{HostMemory, Reservation, SimFile, Storage};
+use crate::storage::{HostMemory, IoBackend, Reservation, SimFile};
 use std::sync::Arc;
 
 pub struct DiskGraph {
@@ -40,19 +40,19 @@ impl DiskGraph {
         self.indptr[v as usize + 1] - self.indptr[v as usize]
     }
 
-    /// Read v's in-neighbor list from SSD through the page cache (mmap
-    /// semantics), appending into `out`. This is the sampling-side I/O that
-    /// memory contention (D1) slows down.
-    pub fn neighbors_into(&self, storage: &Storage, v: u32, out: &mut Vec<u32>) {
+    /// Read v's in-neighbor list from SSD through the backend's buffered
+    /// path (mmap semantics), appending into `out`. This is the
+    /// sampling-side I/O that memory contention (D1) slows down.
+    pub fn neighbors_into(&self, io: &dyn IoBackend, v: u32, out: &mut Vec<u32>) {
         let mut scratch = Vec::new();
-        self.neighbors_into_scratch(storage, v, out, &mut scratch);
+        self.neighbors_into_scratch(io, v, out, &mut scratch);
     }
 
     /// Allocation-free variant: the caller supplies a reusable byte scratch
     /// (the sampler hot loop reads ~10⁴ lists per mini-batch).
     pub fn neighbors_into_scratch(
         &self,
-        storage: &Storage,
+        io: &dyn IoBackend,
         v: u32,
         out: &mut Vec<u32>,
         scratch: &mut Vec<u8>,
@@ -65,7 +65,7 @@ impl DiskGraph {
         }
         scratch.clear();
         scratch.resize(deg * 4, 0);
-        storage.read_buffered(&self.indices_file, start * 4, scratch);
+        io.read_buffered(&self.indices_file, start * 4, scratch);
         out.reserve(deg);
         for b in scratch.chunks_exact(4) {
             out.push(u32::from_le_bytes(b.try_into().unwrap()));
@@ -73,9 +73,9 @@ impl DiskGraph {
     }
 
     /// Convenience wrapper allocating a fresh vec.
-    pub fn neighbors(&self, storage: &Storage, v: u32) -> Vec<u32> {
+    pub fn neighbors(&self, io: &dyn IoBackend, v: u32) -> Vec<u32> {
         let mut out = Vec::new();
-        self.neighbors_into(storage, v, &mut out);
+        self.neighbors_into(io, v, &mut out);
         out
     }
 
@@ -117,7 +117,7 @@ mod tests {
     use super::*;
     use crate::sim::Clock;
     use crate::storage::{
-        DataKind, FileId, MemBacking, PageCache, SsdConfig, SsdSim,
+        DataKind, FileId, MemBacking, PageCache, SsdConfig, SsdSim, Storage,
     };
 
     fn storage() -> Storage {

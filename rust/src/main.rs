@@ -6,13 +6,20 @@
 //!   train      run epochs of one system on one dataset (sim or PJRT)
 //!   figure     regenerate a paper figure/table (2,3,8,9,10,11,12,13,14,tab2,b1)
 //!   iostat     fio-style sync/async I/O study on the SSD model (Fig B.1)
+//!
+//! The I/O stack is pluggable (`--backend`):
+//!   sim   simulated SSD + page cache (default; the paper's timing model)
+//!   os    real OS files via pread — requires an on-disk dataset, e.g.
+//!         `gnndrive gen-data --out d && gnndrive train --backend os --data d`
 
 use gnndrive::baselines::{build_system, SystemKind};
 use gnndrive::config::{Machine, MachineConfig, TrainConfig};
 use gnndrive::graph::{Dataset, DatasetSpec};
 use gnndrive::runtime::simcompute::ModelKind;
 use gnndrive::sim::Clock;
+use gnndrive::storage::{BackendKind, IoBackend as _};
 use gnndrive::util::args::Args;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::new(
@@ -20,8 +27,10 @@ fn main() {
          USAGE: gnndrive <gen-data|table1|train|figure|iostat> [options]",
     )
     .opt("dataset", "papers100m-mini", "dataset name (see table1)")
-    .opt("system", "gnndrive", "gnndrive|gnndrive-cpu|pyg+|ginex|marius")
+    .opt("system", "gnndrive", "gnndrive|gnndrive-cpu|pyg+|ginex|marius (case-insensitive)")
     .opt("model", "graphsage", "graphsage|gcn|gat")
+    .opt("backend", "sim", "I/O backend: sim (simulated SSD) | os (real files via pread)")
+    .opt("data", "", "on-disk dataset dir (gen-data output); required for --backend os")
     .opt("epochs", "1", "epochs to run")
     .opt("batches", "", "mini-batches per epoch (default: full epoch)")
     .opt("batch-size", "1000", "mini-batch size")
@@ -87,28 +96,65 @@ fn parse_fanouts(s: &str) -> Vec<usize> {
 }
 
 fn cmd_train(args: &Args) -> i32 {
-    let Some(mut spec) = DatasetSpec::by_name(args.get_or_default("dataset")) else {
-        eprintln!("unknown dataset");
+    let backend_name = args.get_or_default("backend");
+    let Some(backend) = BackendKind::by_name(backend_name) else {
+        eprintln!(
+            "unknown backend {backend_name:?}; valid backends: {}",
+            BackendKind::names()
+        );
         return 2;
     };
-    if let Some(d) = args.get("dim").and_then(|d| d.parse().ok()) {
-        spec = spec.with_dim(d);
-    }
-    let Some(kind) = SystemKind::by_name(args.get_or_default("system")) else {
-        eprintln!("unknown system");
+    let system_name = args.get_or_default("system");
+    let Some(kind) = SystemKind::by_name(system_name) else {
+        eprintln!(
+            "unknown system {system_name:?}; valid systems: {}",
+            SystemKind::names()
+        );
         return 2;
     };
-    let Some(model) = ModelKind::by_name(args.get_or_default("model")) else {
-        eprintln!("unknown model");
+    let model_name = args.get_or_default("model");
+    let Some(model) = ModelKind::by_name(model_name) else {
+        eprintln!("unknown model {model_name:?}; valid models: graphsage, gcn, gat");
         return 2;
     };
     let gb: u64 = args.get_usize("memory-gb").unwrap_or(32) as u64;
-    let machine = Machine::new(MachineConfig::paper().with_paper_host_gb(gb), Clock::from_env());
-    let ds = match Dataset::materialize(&spec, &machine) {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("dataset: {e}");
-            return 1;
+    let machine = Arc::new(Machine::new(
+        MachineConfig::paper().with_paper_host_gb(gb).with_backend(backend),
+        Clock::from_env(),
+    ));
+
+    let data_dir = args.get("data").filter(|d| !d.is_empty());
+    if backend == BackendKind::Os && data_dir.is_none() {
+        eprintln!(
+            "--backend os reads real files and needs an on-disk dataset:\n  \
+             gnndrive gen-data --dataset papers-tiny --out <dir>\n  \
+             gnndrive train --backend os --data <dir> …"
+        );
+        return 2;
+    }
+    let ds = if let Some(dir) = data_dir {
+        match Dataset::load_dir(std::path::Path::new(dir), &machine) {
+            Ok(d) => Arc::new(d),
+            Err(e) => {
+                eprintln!("dataset dir {dir:?}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let ds_name = args.get_or_default("dataset");
+        let Some(mut spec) = DatasetSpec::by_name(ds_name) else {
+            eprintln!("unknown dataset {ds_name:?} (see `gnndrive table1` for names)");
+            return 2;
+        };
+        if let Some(d) = args.get("dim").and_then(|d| d.parse().ok()) {
+            spec = spec.with_dim(d);
+        }
+        match Dataset::materialize(&spec, &machine) {
+            Ok(d) => Arc::new(d),
+            Err(e) => {
+                eprintln!("dataset: {e}");
+                return 1;
+            }
         }
     };
     let cfg = TrainConfig {
@@ -119,7 +165,7 @@ fn cmd_train(args: &Args) -> i32 {
     };
     let epochs = args.get_usize("epochs").unwrap_or(1);
     println!(
-        "{} on {} ({} nodes, dim {}), {} epochs, machine {} ({} host)",
+        "{} on {} ({} nodes, dim {}), {} epochs, machine {} ({} host, backend {})",
         kind.label(),
         ds.spec.name,
         ds.spec.nodes,
@@ -127,6 +173,7 @@ fn cmd_train(args: &Args) -> i32 {
         epochs,
         machine.cfg.name,
         gnndrive::util::units::fmt_bytes(machine.cfg.host_mem),
+        machine.backend.name(),
     );
     let mut sys = match build_system(kind, &machine, &ds, cfg, model) {
         Ok(s) => s,

@@ -6,13 +6,127 @@
 //! feature buffer, so host memory stays available for the sampling working
 //! set. Each extractor owns one [`StagingBuffer`]; slots are reused across
 //! mini-batches.
+//!
+//! Slots are handed around as [`SlotRef`]s — plain `(arena, index)` handles
+//! into one contiguous byte arena. I/O completions write through them with a
+//! raw `memcpy` and readers decode straight out of the arena: there is no
+//! mutex per row anywhere on the submit/complete path. Safety rests on the
+//! extraction protocol (one in-flight request owns a slot range exclusively;
+//! the engine's completion queue provides the happens-before edge between
+//! the completion write and the harvesting reader).
 
-use crate::storage::uring::IoBuf;
 use crate::storage::{HostMemory, Reservation};
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+/// A contiguous `slots × row_bytes` byte arena accessed through raw slot
+/// handles. The arena itself never synchronizes: callers uphold the
+/// single-owner-per-slot-range protocol described on [`SlotRef`].
+pub struct StagingArena {
+    data: Box<[UnsafeCell<u8>]>,
+    row_bytes: usize,
+}
+
+// SAFETY: the arena is a bag of bytes behind `UnsafeCell`. All mutation goes
+// through `SlotRef`, whose contract guarantees that concurrently accessed
+// byte ranges are disjoint and that cross-thread hand-off happens through a
+// synchronizing channel (the engine's completion queue / the wave latch).
+unsafe impl Sync for StagingArena {}
+unsafe impl Send for StagingArena {}
+
+impl StagingArena {
+    pub fn new(slots: usize, row_bytes: usize) -> Arc<Self> {
+        assert!(row_bytes > 0, "staging rows must be non-empty");
+        let data: Vec<UnsafeCell<u8>> =
+            (0..slots * row_bytes).map(|_| UnsafeCell::new(0)).collect();
+        Arc::new(StagingArena { data: data.into_boxed_slice(), row_bytes })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.data.len() / self.row_bytes
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+
+    fn slot_ptr(&self, slot: usize) -> *mut u8 {
+        debug_assert!(slot < self.slots(), "slot {slot} out of range");
+        // `UnsafeCell<u8>` is `repr(transparent)`, so the boxed slice is a
+        // contiguous byte buffer and in-bounds pointer arithmetic is valid.
+        self.data[slot * self.row_bytes].get()
+    }
+}
+
+/// Handle to one staging slot: the destination of an async read and the
+/// source of the subsequent decode into the feature buffer.
+///
+/// Protocol (what makes the unsynchronized byte accesses sound):
+/// * while a request is in flight, its `[dst_off, dst_off+len)` range of the
+///   slot is owned exclusively by the serving I/O worker;
+/// * concurrent requests targeting the same slot use disjoint ranges;
+/// * the reader (extractor / PCIe completion) touches the bytes only after
+///   harvesting the request's CQE, which happens-after the worker's write
+///   via the completion queue's internal lock.
+#[derive(Clone)]
+pub struct SlotRef {
+    arena: Arc<StagingArena>,
+    slot: usize,
+}
+
+impl SlotRef {
+    pub fn new(arena: Arc<StagingArena>, slot: usize) -> Self {
+        debug_assert!(slot < arena.slots());
+        SlotRef { arena, slot }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arena.row_bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy `src` into the slot at `dst_off` (completion-side write; no
+    /// lock). Caller must own `[dst_off, dst_off+src.len())` per the slot
+    /// protocol.
+    pub fn write(&self, dst_off: usize, src: &[u8]) {
+        assert!(dst_off + src.len() <= self.len(), "slot write out of range");
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr(),
+                self.arena.slot_ptr(self.slot).add(dst_off),
+                src.len(),
+            );
+        }
+    }
+
+    /// Mutable view of `[off, off+len)` for an I/O engine to read into.
+    ///
+    /// # Safety
+    /// The caller must own that byte range per the slot protocol: no other
+    /// thread may read or write it until the owning request's completion has
+    /// been published through a synchronizing channel.
+    #[allow(clippy::mut_from_ref)] // interior mutability via UnsafeCell
+    pub unsafe fn slice_mut(&self, off: usize, len: usize) -> &mut [u8] {
+        assert!(off + len <= self.len(), "slot range out of bounds");
+        std::slice::from_raw_parts_mut(self.arena.slot_ptr(self.slot).add(off), len)
+    }
+
+    /// The slot's bytes (reader side). Sound only after the writes of every
+    /// in-flight request on this slot have been synchronized to this thread
+    /// (CQE harvested / wave latch passed) — the same protocol
+    /// `FeatureBuffer::publish` already relies on.
+    pub fn bytes(&self) -> &[u8] {
+        unsafe {
+            std::slice::from_raw_parts(self.arena.slot_ptr(self.slot), self.len())
+        }
+    }
+}
 
 pub struct StagingBuffer {
-    bufs: Vec<IoBuf>,
+    arena: Arc<StagingArena>,
     pub row_bytes: usize,
     _res: Reservation,
 }
@@ -25,24 +139,21 @@ impl StagingBuffer {
         row_bytes: usize,
     ) -> Result<Self, crate::storage::OutOfMemory> {
         let res = host.reserve("staging buffer", (slots * row_bytes) as u64)?;
-        let bufs = (0..slots)
-            .map(|_| Arc::new(Mutex::new(vec![0u8; row_bytes])) as IoBuf)
-            .collect();
-        Ok(StagingBuffer { bufs, row_bytes, _res: res })
+        Ok(StagingBuffer { arena: StagingArena::new(slots, row_bytes), row_bytes, _res: res })
     }
 
     pub fn slots(&self) -> usize {
-        self.bufs.len()
+        self.arena.slots()
     }
 
-    /// Slot `i`'s buffer (cloned handle; the ring and the PCIe callback
-    /// share it).
-    pub fn slot(&self, i: usize) -> IoBuf {
-        self.bufs[i].clone()
+    /// Handle to slot `i` (cheap: an `Arc` clone + index; the ring and the
+    /// PCIe callback share the arena).
+    pub fn slot(&self, i: usize) -> SlotRef {
+        SlotRef::new(self.arena.clone(), i)
     }
 
     pub fn bytes(&self) -> u64 {
-        (self.bufs.len() * self.row_bytes) as u64
+        (self.slots() * self.row_bytes) as u64
     }
 }
 
@@ -59,9 +170,9 @@ mod tests {
         assert_eq!(host.reserved(), 16 * 512);
         {
             let b = sb.slot(3);
-            b.lock().unwrap()[0] = 42;
+            b.write(0, &[42]);
         }
-        assert_eq!(sb.slot(3).lock().unwrap()[0], 42);
+        assert_eq!(sb.slot(3).bytes()[0], 42);
         drop(sb);
         assert_eq!(host.reserved(), 0);
     }
@@ -70,5 +181,36 @@ mod tests {
     fn oom_when_host_too_small() {
         let host = HostMemory::new(1024);
         assert!(StagingBuffer::new(&host, 16, 512).is_err());
+    }
+
+    #[test]
+    fn slot_writes_are_disjoint_and_readable() {
+        let arena = StagingArena::new(4, 8);
+        let a = SlotRef::new(arena.clone(), 0);
+        let b = SlotRef::new(arena.clone(), 1);
+        a.write(0, &[1, 2, 3, 4]);
+        a.write(4, &[5, 6, 7, 8]);
+        b.write(0, &[9; 8]);
+        assert_eq!(a.bytes(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(b.bytes(), &[9; 8]);
+        // Clones address the same slot.
+        let a2 = a.clone();
+        a2.write(0, &[0xAA]);
+        assert_eq!(a.bytes()[0], 0xAA);
+    }
+
+    #[test]
+    fn cross_thread_handoff_delivers_bytes() {
+        let arena = StagingArena::new(2, 64);
+        let slot = SlotRef::new(arena, 0);
+        let writer = slot.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            writer.write(0, &[7u8; 64]);
+            tx.send(()).unwrap(); // the synchronizing channel of the protocol
+        });
+        rx.recv().unwrap();
+        assert!(slot.bytes().iter().all(|&x| x == 7));
+        h.join().unwrap();
     }
 }

@@ -80,8 +80,8 @@ fn param_bytes(dim: usize, hidden: usize, classes: usize, levels: usize) -> usiz
 /// Run one epoch with `workers` data-parallel pipelines; returns the wall
 /// epoch time (slowest worker) and total batches.
 pub fn run_parallel_epoch(
-    machine: &Machine,
-    ds: &Dataset,
+    machine: &Arc<Machine>,
+    ds: &Arc<Dataset>,
     base_cfg: &TrainConfig,
     model: ModelKind,
     variant: Variant,
@@ -162,8 +162,8 @@ mod tests {
 
     #[test]
     fn two_workers_split_batches_and_finish() {
-        let machine = Machine::new(MachineConfig::k80(), Clock::new(0.05));
-        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::k80(), Clock::new(0.05)));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
         let cfg = TrainConfig {
             batch_size: 64,
             fanouts: vec![4, 4],

@@ -17,6 +17,7 @@ use crate::metrics::state::{self, Role, State};
 use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
 use crate::sim::queue::BoundedQueue;
 use crate::sim::Stopwatch;
+use crate::storage::IoBackend as _;
 use crate::train::{TrainStats, TrainStep};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -87,12 +88,14 @@ pub struct EpochStats {
 impl EpochStats {
     pub fn summary(&self) -> String {
         format!(
-            "epoch {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  loss {:.4}  acc {:.3}",
+            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  loss {:.4}  acc {:.3}",
             crate::util::units::fmt_dur(self.epoch_time),
+            crate::util::units::fmt_dur(self.prep_time),
             crate::util::units::fmt_dur(self.sample_time),
             crate::util::units::fmt_dur(self.extract_time),
             crate::util::units::fmt_dur(self.train_time),
             self.batches,
+            crate::util::units::fmt_bytes(self.ssd_read_bytes),
             self.train.mean_loss(),
             self.train.accuracy(),
         )
@@ -109,9 +112,13 @@ struct TrainItem {
 }
 
 /// The GNNDrive engine bound to one machine + dataset + trainer.
-pub struct GnnDrive<'a> {
-    machine: &'a Machine,
-    ds: &'a Dataset,
+///
+/// Holds its machine and dataset via `Arc` (not borrows), so built engines
+/// are `'static` and can be driven from spawned threads — `build_system`
+/// returns `Box<dyn TrainingSystem>` with no leaked lifetime.
+pub struct GnnDrive {
+    machine: Arc<Machine>,
+    ds: Arc<Dataset>,
     cfg: TrainConfig,
     variant: Variant,
     /// Which GPU's memory holds the feature buffer (Fig 13 workers).
@@ -123,14 +130,14 @@ pub struct GnnDrive<'a> {
     caps: Vec<usize>,
 }
 
-impl<'a> GnnDrive<'a> {
+impl GnnDrive {
     /// Build the engine: size and reserve the feature buffer
-    /// ((queue+extractors+1) × cap_L slots), one staging buffer + io_uring
-    /// per extractor. Fails with OOM if the budgets cannot fit (which is a
-    /// *result* for the memory-sweep experiments, not a crash).
+    /// ((queue+extractors+1) × cap_L slots), one staging buffer + async
+    /// I/O engine per extractor. Fails with OOM if the budgets cannot fit
+    /// (which is a *result* for the memory-sweep experiments, not a crash).
     pub fn new(
-        machine: &'a Machine,
-        ds: &'a Dataset,
+        machine: &Arc<Machine>,
+        ds: &Arc<Dataset>,
         cfg: TrainConfig,
         variant: Variant,
         trainer: Box<dyn TrainStep>,
@@ -141,8 +148,8 @@ impl<'a> GnnDrive<'a> {
     /// Multi-GPU data parallelism (Fig 13): each worker's pipeline owns one
     /// GPU's feature buffer.
     pub fn new_on_device(
-        machine: &'a Machine,
-        ds: &'a Dataset,
+        machine: &Arc<Machine>,
+        ds: &Arc<Dataset>,
         cfg: TrainConfig,
         variant: Variant,
         device_idx: usize,
@@ -186,7 +193,7 @@ impl<'a> GnnDrive<'a> {
                 Variant::Cpu => ExtractTarget::Host,
             };
             extractors.push(Mutex::new(Extractor::with_options(
-                machine.storage.clone(),
+                machine.backend.clone(),
                 cfg.io_depth,
                 staging,
                 fb.clone(),
@@ -199,8 +206,8 @@ impl<'a> GnnDrive<'a> {
             )));
         }
         Ok(GnnDrive {
-            machine,
-            ds,
+            machine: machine.clone(),
+            ds: ds.clone(),
             cfg,
             variant,
             device_idx,
@@ -264,7 +271,7 @@ impl<'a> GnnDrive<'a> {
         let truncated = AtomicUsize::new(0);
 
         let epoch_watch = Stopwatch::start(clock);
-        self.machine.storage.ssd.reset_stats();
+        self.machine.backend.reset_io_stats();
 
         std::thread::scope(|s| {
             // ---- samplers ----
@@ -281,7 +288,12 @@ impl<'a> GnnDrive<'a> {
                     let _ = t;
                     while let Some((batch_id, seeds)) = plan.claim() {
                         let sw = Stopwatch::start(clock);
-                        let sub = sampler.sample_batch(self.ds, &self.machine.storage, batch_id, seeds);
+                        let sub = sampler.sample_batch(
+                            &self.ds,
+                            self.machine.backend.as_ref(),
+                            batch_id,
+                            seeds,
+                        );
                         let padded = sub.pad(&self.caps, &self.cfg.fanouts);
                         truncated.fetch_add(padded.truncated_edges, Ordering::Relaxed);
                         sample_ns
@@ -434,9 +446,8 @@ impl<'a> GnnDrive<'a> {
             reorder_inversions: count_inversions(&order),
             ssd_read_bytes: self
                 .machine
-                .storage
-                .ssd
-                .counters()
+                .backend
+                .io_counters()
                 .read_bytes
                 .load(Ordering::Relaxed),
             truncated_edges: truncated.into_inner(),
@@ -466,8 +477,12 @@ impl<'a> GnnDrive<'a> {
                     state::register(Role::Sampler);
                     while let Some((batch_id, seeds)) = plan.claim() {
                         let sw = Stopwatch::start(clock);
-                        let sub =
-                            sampler.sample_batch(self.ds, &self.machine.storage, batch_id, seeds);
+                        let sub = sampler.sample_batch(
+                            &self.ds,
+                            self.machine.backend.as_ref(),
+                            batch_id,
+                            seeds,
+                        );
                         std::hint::black_box(&sub);
                         sample_ns.fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }
@@ -534,12 +549,12 @@ mod tests {
         }
     }
 
-    fn build_engine<'a>(
-        machine: &'a Machine,
-        ds: &'a Dataset,
+    fn build_engine(
+        machine: &Arc<Machine>,
+        ds: &Arc<Dataset>,
         cfg: &TrainConfig,
         variant: Variant,
-    ) -> GnnDrive<'a> {
+    ) -> GnnDrive {
         let budget = match variant {
             Variant::Gpu => machine.devices[0].capacity() * 9 / 10,
             Variant::Cpu => machine.host.capacity() / 4,
@@ -577,8 +592,8 @@ mod tests {
 
     #[test]
     fn gpu_epoch_runs_and_trains_all_batches() {
-        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
         let cfg = quick_cfg();
         let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
         let stats = engine.run_epoch(0);
@@ -595,8 +610,8 @@ mod tests {
 
     #[test]
     fn cpu_variant_runs() {
-        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
         let cfg = quick_cfg();
         let engine = build_engine(&machine, &ds, &cfg, Variant::Cpu);
         let stats = engine.run_epoch(0);
@@ -606,8 +621,8 @@ mod tests {
 
     #[test]
     fn sample_only_mode_reports_time() {
-        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
         let cfg = quick_cfg();
         let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
         let t = engine.run_sample_only(0);
@@ -616,8 +631,8 @@ mod tests {
 
     #[test]
     fn second_epoch_reuses_buffer_contents() {
-        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
         let mut cfg = quick_cfg();
         cfg.batches_per_epoch = Some(2);
         let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);

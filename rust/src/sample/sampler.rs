@@ -9,7 +9,7 @@
 
 use super::subgraph::{LayerAdj, SampledSubgraph};
 use crate::graph::Dataset;
-use crate::storage::Storage;
+use crate::storage::IoBackend;
 use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Pcg;
 use std::cell::RefCell;
@@ -74,7 +74,7 @@ impl Sampler {
     pub fn sample_batch(
         &self,
         ds: &Dataset,
-        storage: &Storage,
+        io: &dyn IoBackend,
         batch_id: u64,
         seeds: &[u32],
     ) -> SampledSubgraph {
@@ -103,7 +103,7 @@ impl Sampler {
                     Some(cache) if cache.contains(&v) => {
                         ds.graph.neighbors_into_nocharge(v, nbrs)
                     }
-                    _ => ds.graph.neighbors_into_scratch(storage, v, nbrs, scratch),
+                    _ => ds.graph.neighbors_into_scratch(io, v, nbrs, scratch),
                 }
                 let deg = nbrs.len();
                 if deg == 0 {

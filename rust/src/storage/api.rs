@@ -1,0 +1,227 @@
+//! The pluggable I/O backend API: the seam between everything that *uses*
+//! storage (extractors, samplers, baselines, benches) and whatever
+//! *provides* it.
+//!
+//! Two traits define the seam:
+//!
+//! * [`IoBackend`] — the synchronous read/write contract plus the charging
+//!   and accounting rules. **The backend owns all charging**: a caller never
+//!   touches an `SsdSim` or a page cache directly; it asks the backend to
+//!   read and the backend decides what that costs (simulated device time,
+//!   real `pread` latency, nothing at all). Consumers observe costs only
+//!   through [`IoBackend::io_counters`] / [`IoBackend::direct_stats`].
+//! * [`AsyncIoEngine`] — the submit/harvest contract of an asynchronous
+//!   engine (io_uring-style). Backends mint their own engine via
+//!   [`IoBackend::async_engine`]; the sim backend returns the simulated
+//!   [`super::uring::Uring`], the OS-file backend a `pread` thread pool.
+//!
+//! What a backend must guarantee:
+//!
+//! * **Bytes are real.** Every read fills the destination with the true
+//!   bytes of the backing store at that offset (zero-filled past EOF).
+//! * **Direct reads are sector-accounted.** `read_direct*` rounds the
+//!   request out to [`IoBackend::sector`] alignment and records the
+//!   `useful`/`aligned` byte split in [`DirectIoStats`], whether or not the
+//!   backend charges device time for the redundancy (§4.4 of the paper).
+//! * **Counters balance.** `io_counters()` accumulates one `reads`
+//!   increment per charged request and the *charged* byte volume. On the
+//!   direct path the charged volume is the sector-aligned (possibly
+//!   coalesced) size on every backend, so `EpochStats::ssd_read_bytes` is
+//!   directly comparable there. Buffered accounting follows each backend's
+//!   cost model: the sim backend charges page-cache *misses* at page
+//!   granularity, while the OS backend charges the bytes requested (the
+//!   kernel's cache is opaque, so hits cannot be discounted) — buffered
+//!   volumes are backend-relative, not cross-backend comparable.
+//! * **Completions are synchronized.** An [`AsyncIoEngine`] completion
+//!   (harvested CQE) happens-after the destination slot write; the caller
+//!   may read the staging slot without any further synchronization.
+
+use super::engine::SimFile;
+use super::ssd::SsdCounters;
+use crate::membuf::SlotRef;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+/// Counters for direct-I/O alignment overhead (redundant bytes loaded when a
+/// request does not fit sector granularity — §4.4 "Access Granularity").
+#[derive(Debug, Default)]
+pub struct DirectIoStats {
+    pub requests: AtomicU64,
+    pub useful_bytes: AtomicU64,
+    pub aligned_bytes: AtomicU64,
+}
+
+/// How a request travels through the I/O stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// O_DIRECT: bypass the page cache, sector-aligned charge (GNNDrive's
+    /// feature-read mode).
+    Direct,
+    /// Through the (simulated or OS) page cache.
+    Buffered,
+}
+
+/// Submission queue entry: read `len` bytes at `offset` of `file` into the
+/// staging slot `dst` at `dst_off`, tagging the completion with `user_data`.
+///
+/// The destination is a lock-free [`SlotRef`] into a staging arena — the
+/// engine's completion path writes the slot bytes directly (no mutex per
+/// row). The submitter owns the slot for the request's lifetime and must not
+/// touch `[dst_off, dst_off + len)` until the matching CQE is harvested.
+pub struct Sqe {
+    pub file: SimFile,
+    pub offset: u64,
+    pub len: usize,
+    pub dst: SlotRef,
+    pub dst_off: usize,
+    pub user_data: u64,
+    pub mode: IoMode,
+}
+
+/// Completion queue event.
+#[derive(Debug)]
+pub struct Cqe {
+    pub user_data: u64,
+    pub bytes: usize,
+}
+
+/// An asynchronous I/O engine: bounded submission, unordered completion.
+///
+/// Contract (shared by the sim ring and the OS thread pool):
+/// * `submit`/`submit_batch` block only on submission-queue backpressure;
+///   the I/O itself proceeds on engine threads.
+/// * completions may be harvested in any order; each CQE's `user_data`
+///   matches its SQE and its slot bytes are fully written (happens-before
+///   the harvest).
+/// * `inflight() == 0 && pending_harvest() == 0` once every submitted
+///   request has been harvested.
+pub trait AsyncIoEngine: Send + Sync {
+    /// Submit one request (blocks only if the submission queue is full).
+    fn submit(&self, sqe: Sqe);
+    /// Submit a batch with amortized locking/wakeups.
+    fn submit_batch(&self, sqes: Vec<Sqe>);
+    /// Harvest one completion, blocking until available.
+    fn wait_cqe(&self) -> Cqe;
+    /// Harvest exactly `n` completions, blocking as needed.
+    fn wait_cqes(&self, n: usize) -> Vec<Cqe>;
+    /// Harvest a completion if one is ready.
+    fn peek_cqe(&self) -> Option<Cqe>;
+    /// Outstanding requests (submitted − completed).
+    fn inflight(&self) -> u64;
+    /// Completions not yet harvested by the caller.
+    fn pending_harvest(&self) -> u64;
+}
+
+/// A storage backend: synchronous reads/writes + charging + stats, and a
+/// factory for the matching asynchronous engine.
+///
+/// Implementations: [`super::engine::SimBackend`] (simulated SSD + page
+/// cache; timing charged by sleeping on a scaled clock) and
+/// [`super::osfile::OsFileBackend`] (real `pread` over file-backed stores;
+/// the OS is the device).
+pub trait IoBackend: Send + Sync {
+    /// Short CLI-facing name ("sim", "os").
+    fn name(&self) -> &'static str;
+
+    /// Direct-I/O alignment granularity in bytes.
+    fn sector(&self) -> usize;
+
+    /// Buffered read (mmap semantics): page-granular, through the backend's
+    /// cache; sequential misses may coalesce into fewer device requests.
+    fn read_buffered(&self, file: &SimFile, offset: u64, buf: &mut [u8]);
+
+    /// Direct read (O_DIRECT semantics): bypasses the cache; the
+    /// sector-aligned size is charged and recorded in `direct_stats`.
+    fn read_direct(&self, file: &SimFile, offset: u64, buf: &mut [u8]);
+
+    /// Direct-read accounting + data copy *without* the device-time charge;
+    /// returns the sector-aligned byte count. Async engines use this to
+    /// coalesce several requests into one [`IoBackend::charge_multi`].
+    fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize;
+
+    /// Charge a coalesced batch of `ops` direct reads totalling `bytes`
+    /// (pairs with `read_direct_nocharge`). A no-op when `ops == 0`.
+    fn charge_multi(&self, ops: u64, bytes: usize);
+
+    /// Buffered write: cache pages become resident; device time is charged
+    /// for the whole range.
+    fn write_buffered(&self, file: &SimFile, offset: u64, len: usize);
+
+    /// Direct write of an aligned range (charge only; data writes are not
+    /// persisted by any backend — training never reads them back).
+    fn write_direct(&self, file: &SimFile, offset: u64, len: usize);
+
+    /// Charge one sequential read of `len` bytes with no data destination
+    /// (baseline cost models: Marius partition preloads, Ginex inspect).
+    fn charge_read(&self, len: usize);
+
+    /// Charge one write of `len` bytes with no data source (Ginex's
+    /// superbatch dumps).
+    fn charge_write(&self, len: usize);
+
+    /// Alignment-overhead counters for the direct path.
+    fn direct_stats(&self) -> &DirectIoStats;
+
+    /// Charged-request counters (reads/writes, charged byte volume). On the
+    /// sim backend these are the `SsdSim` counters; on real backends an
+    /// equivalent tally.
+    fn io_counters(&self) -> &SsdCounters;
+
+    /// Zero `io_counters` (and any latency histograms) for a fresh epoch.
+    fn reset_io_stats(&self);
+
+    /// Build this backend's asynchronous engine with `depth` max outstanding
+    /// requests.
+    fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine>;
+}
+
+/// Which backend to instantiate (CLI/config selector).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Simulated SSD + simulated page cache + sim io_uring (the default:
+    /// reproduces the paper's timing model).
+    #[default]
+    Sim,
+    /// Real OS files: `pread`-based reads over `FileBacking` with a
+    /// thread-pool async engine. Requires a dataset written to disk
+    /// (`gnndrive gen-data` + `--data`).
+    Os,
+}
+
+impl BackendKind {
+    /// Case-insensitive CLI lookup.
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "simulated" => Some(BackendKind::Sim),
+            "os" | "os-file" | "osfile" => Some(BackendKind::Os),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Os => "os",
+        }
+    }
+
+    /// Valid CLI names, for error messages.
+    pub fn names() -> &'static str {
+        "sim, os"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_by_name_is_case_insensitive() {
+        assert_eq!(BackendKind::by_name("sim"), Some(BackendKind::Sim));
+        assert_eq!(BackendKind::by_name("SIM"), Some(BackendKind::Sim));
+        assert_eq!(BackendKind::by_name("Os"), Some(BackendKind::Os));
+        assert_eq!(BackendKind::by_name("OS-FILE"), Some(BackendKind::Os));
+        assert_eq!(BackendKind::by_name("nvme"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Sim);
+    }
+}

@@ -1,18 +1,22 @@
-//! Synchronous I/O engines over the simulated device: buffered (page-cache,
-//! mmap-style) and direct (O_DIRECT-style, sector-aligned, cache-bypassing).
+//! The simulated storage backend: synchronous I/O engines over the simulated
+//! device — buffered (page-cache, mmap-style) and direct (O_DIRECT-style,
+//! sector-aligned, cache-bypassing) — behind the [`IoBackend`] seam.
 //!
 //! GNNDrive reads *topology* through the buffered path (the paper mmaps the
 //! CSC index array and lets the page cache hold it) and *features* through
 //! the direct path; PyG+ reads both through the buffered path, which is what
 //! makes the two working sets contend (D1).
 
+use super::api::{AsyncIoEngine, DirectIoStats, IoBackend};
 use super::backing::BackingRef;
 use super::page_cache::{FileId, PageCache, PAGE_SIZE};
-use super::ssd::SsdSim;
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::ssd::{SsdCounters, SsdSim};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 /// A "file" on the simulated SSD: identity for the page cache + real bytes.
+/// (The OS-file backend reuses the same handle type with a `FileBacking`
+/// behind it — the `FileId` is simply unused there.)
 #[derive(Clone)]
 pub struct SimFile {
     pub id: FileId,
@@ -33,27 +37,25 @@ impl SimFile {
     }
 }
 
-/// Counters for direct-I/O alignment overhead (redundant bytes loaded when a
-/// request does not fit sector granularity — §4.4 "Access Granularity").
-#[derive(Debug, Default)]
-pub struct DirectIoStats {
-    pub requests: AtomicU64,
-    pub useful_bytes: AtomicU64,
-    pub aligned_bytes: AtomicU64,
-}
-
-/// The I/O stack: one simulated device + one page cache, shared by every
-/// training system in an experiment (as on a real machine).
+/// The simulated I/O stack: one simulated device + one page cache, shared by
+/// every training system in an experiment (as on a real machine).
+///
+/// This is the [`IoBackend`] the simulator uses; the inherent methods remain
+/// available for sim-only experiments that poke `ssd`/`cache` directly.
 #[derive(Clone)]
-pub struct Storage {
+pub struct SimBackend {
     pub ssd: SsdSim,
     pub cache: Arc<PageCache>,
     direct_stats: Arc<DirectIoStats>,
 }
 
-impl Storage {
+/// Historical name: the concrete sim stack predates the backend seam and
+/// most of the codebase knows it as `Storage`.
+pub type Storage = SimBackend;
+
+impl SimBackend {
     pub fn new(ssd: SsdSim, cache: Arc<PageCache>) -> Self {
-        Storage { ssd, cache, direct_stats: Arc::new(DirectIoStats::default()) }
+        SimBackend { ssd, cache, direct_stats: Arc::new(DirectIoStats::default()) }
     }
 
     pub fn direct_stats(&self) -> &DirectIoStats {
@@ -151,6 +153,64 @@ impl Storage {
     }
 }
 
+impl IoBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn sector(&self) -> usize {
+        self.ssd.config().sector
+    }
+
+    fn read_buffered(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
+        SimBackend::read_buffered(self, file, offset, buf)
+    }
+
+    fn read_direct(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
+        SimBackend::read_direct(self, file, offset, buf)
+    }
+
+    fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize {
+        SimBackend::read_direct_nocharge(self, file, offset, buf)
+    }
+
+    fn charge_multi(&self, ops: u64, bytes: usize) {
+        self.ssd.read_multi(ops, bytes);
+    }
+
+    fn write_buffered(&self, file: &SimFile, offset: u64, len: usize) {
+        SimBackend::write_buffered(self, file, offset, len)
+    }
+
+    fn write_direct(&self, file: &SimFile, offset: u64, len: usize) {
+        SimBackend::write_direct(self, file, offset, len)
+    }
+
+    fn charge_read(&self, len: usize) {
+        self.ssd.read(len);
+    }
+
+    fn charge_write(&self, len: usize) {
+        self.ssd.write(len);
+    }
+
+    fn direct_stats(&self) -> &DirectIoStats {
+        &self.direct_stats
+    }
+
+    fn io_counters(&self) -> &SsdCounters {
+        self.ssd.counters()
+    }
+
+    fn reset_io_stats(&self) {
+        self.ssd.reset_stats();
+    }
+
+    fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine> {
+        Box::new(super::uring::Uring::new(self, depth))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +290,24 @@ mod tests {
         let mut buf = vec![0u8; PAGE_SIZE as usize];
         st.read_buffered(&f, 0, &mut buf);
         assert_eq!(st.ssd.counters().reads.load(Ordering::Relaxed), reads_before);
+    }
+
+    #[test]
+    fn trait_surface_matches_inherent_accounting() {
+        // The IoBackend impl must charge exactly like the inherent methods
+        // (the acceptance bar for `--backend sim` reproducing old outputs).
+        let (st, f) = setup(64);
+        let io: &dyn IoBackend = &st;
+        let mut buf = vec![0u8; 100];
+        io.read_direct(&f, 700, &mut buf);
+        assert_eq!(io.direct_stats().aligned_bytes.load(Ordering::Relaxed), 512);
+        assert_eq!(io.io_counters().read_bytes.load(Ordering::Relaxed), 512);
+        io.charge_multi(3, 4096);
+        assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 4);
+        assert_eq!(io.io_counters().read_bytes.load(Ordering::Relaxed), 512 + 4096);
+        io.reset_io_stats();
+        assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 0);
+        assert_eq!(io.sector(), 512);
+        assert_eq!(io.name(), "sim");
     }
 }

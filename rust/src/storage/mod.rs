@@ -1,18 +1,50 @@
-//! Storage substrate: simulated SSD + page cache + I/O engines + memory
-//! budgets. Timing is simulated; bytes are real. See DESIGN.md §3.
+//! Storage substrate, organized around the pluggable [`IoBackend`] seam.
+//!
+//! Layering (top to bottom):
+//!
+//! * **Consumers** — extractors, samplers, the pipeline engine, every
+//!   baseline — speak only [`api::IoBackend`] / [`api::AsyncIoEngine`].
+//!   They never touch a device model or a cache directly; *the backend owns
+//!   all charging* and consumers observe costs through
+//!   [`IoBackend::io_counters`] / [`IoBackend::direct_stats`].
+//! * **Backends** —
+//!   [`engine::SimBackend`] (the default, `--backend sim`): simulated SSD
+//!   ([`ssd::SsdSim`]) + simulated page cache ([`page_cache::PageCache`]),
+//!   with the sim io_uring ([`uring::Uring`]) as its async engine; timing is
+//!   charged by sleeping on a scaled clock, bytes are real.
+//!   [`osfile::OsFileBackend`] (`--backend os`): real `pread` over
+//!   [`backing::FileBacking`], the OS page cache as the buffered path, and a
+//!   `pread` thread pool ([`osfile::PreadPool`]) as its async engine;
+//!   charges degrade to pure accounting.
+//! * **Backings** — where bytes live ([`backing`]): a real file, process
+//!   memory, or a deterministic procedural generator. Both backends read
+//!   through the same [`SimFile`] handle, so a dataset can move between
+//!   them unchanged.
+//!
+//! What a backend must guarantee (alignment accounting, counter balance,
+//! completion synchronization) is specified on [`api::IoBackend`] and
+//! enforced for both implementations by `tests/backend_conformance.rs`.
+//! Memory budgets ([`mem`]) and the PCIe link model ([`pcie`]) are
+//! backend-independent substrate.
 
+pub mod api;
 pub mod backing;
 pub mod engine;
 pub mod mem;
+pub mod osfile;
 pub mod page_cache;
 pub mod pcie;
 pub mod ssd;
 pub mod uring;
 
+pub use api::{
+    AsyncIoEngine, BackendKind, Cqe, DirectIoStats, IoBackend, IoMode, Sqe,
+};
 pub use backing::{Backing, BackingRef, FileBacking, MemBacking, ProceduralBacking};
-pub use engine::{SimFile, Storage};
+pub use engine::{SimBackend, SimFile, Storage};
 pub use mem::{DeviceMemory, HostMemory, OutOfMemory, Reservation};
+pub use osfile::{OsFileBackend, PreadPool};
 pub use page_cache::{DataKind, FileId, PageCache, PAGE_SIZE};
 pub use pcie::{Pcie, PcieConfig};
-pub use ssd::{SsdConfig, SsdSim};
-pub use uring::{Cqe, IoBuf, IoMode, Sqe, Uring};
+pub use ssd::{SsdConfig, SsdCounters, SsdSim};
+pub use uring::Uring;

@@ -3,53 +3,29 @@
 //! A [`Uring`] pairs a submission queue (SQ) with a completion queue (CQ).
 //! The submitting thread never blocks per request: it pushes SQEs (blocking
 //! only if the ring is full — backpressure, like a full SQ), and later
-//! harvests CQEs. "Kernel" service workers pull SQEs, perform the simulated
-//! device read (sleeping out the service time, so concurrency up to the ring
-//! depth overlaps request latencies) and copy the real bytes into the
-//! destination buffer. This is the substrate of GNNDrive's asynchronous
+//! harvests CQEs. "Kernel" service workers pull SQEs, perform the backend
+//! read (on the sim backend: sleeping out the service time, so concurrency
+//! up to the ring depth overlaps request latencies) and write the real bytes
+//! straight into the destination staging slot — no per-row mutex anywhere on
+//! the completion path. This is the substrate of GNNDrive's asynchronous
 //! feature extraction: one extractor thread drives hundreds of in-flight
 //! loads with no per-request context switch on its own thread.
+//!
+//! The ring is generic over [`IoBackend`]: it implements [`AsyncIoEngine`]
+//! and the sim backend mints it from [`IoBackend::async_engine`]. (The
+//! OS-file backend uses its own `pread` thread pool instead — see
+//! [`super::osfile::PreadPool`].)
 //!
 //! Service workers are capped (default 32 per ring) — enough to saturate the
 //! device model's IOPS/queue-depth ceilings, above which extra in-flight
 //! requests only queue at the device, exactly as with a real drive.
 
-use super::engine::{SimFile, Storage};
+use super::api::{AsyncIoEngine, IoBackend};
+pub use super::api::{Cqe, IoMode, Sqe};
 use crate::sim::queue::BoundedQueue;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-
-/// Destination buffer a completion writes into (a staging-buffer slot).
-pub type IoBuf = Arc<Mutex<Vec<u8>>>;
-
-/// How the request travels through the I/O stack.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum IoMode {
-    /// O_DIRECT: bypass page cache, sector-aligned charge (GNNDrive's mode).
-    Direct,
-    /// Through the page cache (used by the Appendix B comparison).
-    Buffered,
-}
-
-/// Submission queue entry: read `len` bytes at `offset` of `file` into
-/// `dst[dst_off..]`, tagging the completion with `user_data`.
-pub struct Sqe {
-    pub file: SimFile,
-    pub offset: u64,
-    pub len: usize,
-    pub dst: IoBuf,
-    pub dst_off: usize,
-    pub user_data: u64,
-    pub mode: IoMode,
-}
-
-/// Completion queue event.
-#[derive(Debug)]
-pub struct Cqe {
-    pub user_data: u64,
-    pub bytes: usize,
-}
 
 pub struct Uring {
     sq: Arc<BoundedQueue<Sqe>>,
@@ -62,7 +38,7 @@ pub struct Uring {
 
 impl Uring {
     /// `depth` is the ring size (max outstanding requests).
-    pub fn new(storage: Storage, depth: usize) -> Self {
+    pub fn new(backend: Arc<dyn IoBackend>, depth: usize) -> Self {
         let depth = depth.max(1);
         let sq = Arc::new(BoundedQueue::<Sqe>::new(depth));
         // The CQ is effectively unbounded: callers may legally submit an
@@ -74,50 +50,44 @@ impl Uring {
         let inflight = Arc::new(AtomicU64::new(0));
         let worker_count = depth.min(32);
         // Workers drain the SQ in small chunks and charge the device once
-        // per chunk (read_multi): sustained IOPS/bandwidth are identical to
-        // per-op charging, but single-core thread-coordination overhead per
-        // request drops ~chunk-fold, keeping the simulation's critical path
-        // honest on this 1-CPU testbed (see DESIGN.md §Perf).
+        // per chunk (charge_multi): sustained IOPS/bandwidth are identical
+        // to per-op charging, but single-core thread-coordination overhead
+        // per request drops ~chunk-fold, keeping the simulation's critical
+        // path honest on this 1-CPU testbed (see DESIGN.md §Perf).
         let chunk = depth.clamp(1, 8);
         let workers = (0..worker_count)
             .map(|_| {
                 let sq = sq.clone();
                 let cq = cq.clone();
-                let storage = storage.clone();
+                let backend = backend.clone();
                 let inflight = inflight.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
-                    let mut local = Vec::new();
                     while let Ok(sqes) = sq.pop_many(chunk) {
-                        // Phase 1: copy data + per-request accounting.
+                        // Phase 1: copy data + per-request accounting,
+                        // reading straight into each request's staging-slot
+                        // range (this worker owns the range until the CQE
+                        // is published — see the SlotRef protocol).
                         let mut direct_ops = 0u64;
                         let mut direct_bytes = 0usize;
                         for sqe in &sqes {
-                            local.clear();
-                            local.resize(sqe.len, 0);
+                            let dst = unsafe { sqe.dst.slice_mut(sqe.dst_off, sqe.len) };
                             match sqe.mode {
                                 IoMode::Direct => {
                                     direct_ops += 1;
-                                    direct_bytes += storage.read_direct_nocharge(
-                                        &sqe.file, sqe.offset, &mut local,
-                                    );
+                                    direct_bytes +=
+                                        backend.read_direct_nocharge(&sqe.file, sqe.offset, dst);
                                 }
                                 IoMode::Buffered => {
                                     // Page-cache semantics are per-request;
                                     // charge inline (no coalescing).
-                                    storage.read_buffered(&sqe.file, sqe.offset, &mut local);
+                                    backend.read_buffered(&sqe.file, sqe.offset, dst);
                                 }
                             }
-                            let mut dst = sqe.dst.lock().unwrap();
-                            let end = sqe.dst_off + sqe.len;
-                            if dst.len() < end {
-                                dst.resize(end, 0);
-                            }
-                            dst[sqe.dst_off..end].copy_from_slice(&local);
                         }
                         // Phase 2: one coalesced device charge for the
                         // chunk's direct requests.
-                        storage.ssd.read_multi(direct_ops, direct_bytes);
+                        backend.charge_multi(direct_ops, direct_bytes);
                         // Phase 3: publish completions.
                         for sqe in &sqes {
                             inflight.fetch_sub(1, Ordering::Relaxed);
@@ -228,6 +198,36 @@ impl Uring {
     }
 }
 
+impl AsyncIoEngine for Uring {
+    fn submit(&self, sqe: Sqe) {
+        Uring::submit(self, sqe)
+    }
+
+    fn submit_batch(&self, sqes: Vec<Sqe>) {
+        Uring::submit_batch(self, sqes)
+    }
+
+    fn wait_cqe(&self) -> Cqe {
+        Uring::wait_cqe(self)
+    }
+
+    fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
+        Uring::wait_cqes(self, n)
+    }
+
+    fn peek_cqe(&self) -> Option<Cqe> {
+        Uring::peek_cqe(self)
+    }
+
+    fn inflight(&self) -> u64 {
+        Uring::inflight(self)
+    }
+
+    fn pending_harvest(&self) -> u64 {
+        Uring::pending_harvest(self)
+    }
+}
+
 impl Drop for Uring {
     fn drop(&mut self) {
         self.sq.close();
@@ -241,8 +241,10 @@ impl Drop for Uring {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::membuf::{SlotRef, StagingArena};
     use crate::sim::Clock;
     use crate::storage::backing::MemBacking;
+    use crate::storage::engine::{SimFile, Storage};
     use crate::storage::mem::HostMemory;
     use crate::storage::page_cache::{DataKind, FileId, PageCache};
     use crate::storage::ssd::{SsdConfig, SsdSim};
@@ -264,8 +266,9 @@ mod tests {
     #[test]
     fn completions_carry_real_bytes() {
         let (storage, file) = setup();
-        let ring = Uring::new(storage, 16);
-        let dst: IoBuf = Arc::new(Mutex::new(vec![0u8; 4 * 512]));
+        let ring = Uring::new(Arc::new(storage), 16);
+        let arena = StagingArena::new(1, 4 * 512);
+        let dst = SlotRef::new(arena, 0);
         for i in 0..4u64 {
             ring.submit(Sqe {
                 file: file.clone(),
@@ -284,8 +287,7 @@ mod tests {
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3]);
         assert_eq!(ring.inflight(), 0);
-        let dst = dst.lock().unwrap();
-        for (i, &b) in dst.iter().enumerate() {
+        for (i, &b) in dst.bytes().iter().enumerate() {
             assert_eq!(b, (i % 241) as u8, "byte {i}");
         }
     }
@@ -305,8 +307,9 @@ mod tests {
 
         // Async: same requests through a depth-32 ring, batch APIs (as the
         // extractor uses them).
-        let ring = Uring::new(storage.clone(), 32);
-        let dst: IoBuf = Arc::new(Mutex::new(vec![0u8; n * 512]));
+        let ring = Uring::new(Arc::new(storage.clone()), 32);
+        let arena = StagingArena::new(1, n * 512);
+        let dst = SlotRef::new(arena, 0);
         let t0 = Instant::now();
         let sqes: Vec<Sqe> = (0..n)
             .map(|i| Sqe {
@@ -338,9 +341,12 @@ mod tests {
         // inflight` wrap to ~u64::MAX. Hammer submits/harvests while a
         // monitor thread samples the counter continuously.
         let (storage, file) = setup();
-        let ring = Arc::new(Uring::new(storage, 8));
+        let ring = Arc::new(Uring::new(Arc::new(storage), 8));
         let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
         const N: u64 = 400;
+        // Slot i % SLOTS is in flight at most once at a time: in-flight is
+        // bounded by SQ depth (8) + workers × chunk (8 × 8) ≪ SLOTS.
+        const SLOTS: usize = 128;
 
         let monitor = {
             let ring = ring.clone();
@@ -364,13 +370,13 @@ mod tests {
             let ring = ring.clone();
             let file = file.clone();
             std::thread::spawn(move || {
+                let arena = StagingArena::new(SLOTS, 512);
                 for i in 0..N {
-                    let dst: IoBuf = Arc::new(Mutex::new(vec![0u8; 512]));
                     ring.submit(Sqe {
                         file: file.clone(),
                         offset: (i % 64) * 512,
                         len: 512,
-                        dst,
+                        dst: SlotRef::new(arena.clone(), i as usize % SLOTS),
                         dst_off: 0,
                         user_data: i,
                         mode: IoMode::Direct,
@@ -398,18 +404,18 @@ mod tests {
         // Closing the ring (worker shutdown) while a batch submit races
         // must not leak `inflight`/`submitted` for the rejected items.
         let (storage, file) = setup();
-        let ring = Uring::new(storage, 4);
+        let ring = Uring::new(Arc::new(storage), 4);
         // Drop-close the inner queues by closing them directly via Drop is
         // not observable from outside, so exercise the path with a
         // pre-closed SQ: harvest everything, close, then submit.
         ring.sq.close();
-        let dst: IoBuf = Arc::new(Mutex::new(vec![0u8; 512]));
+        let arena = StagingArena::new(3, 512);
         let sqes: Vec<Sqe> = (0..3u64)
             .map(|i| Sqe {
                 file: file.clone(),
                 offset: i * 512,
                 len: 512,
-                dst: dst.clone(),
+                dst: SlotRef::new(arena.clone(), i as usize),
                 dst_off: 0,
                 user_data: i,
                 mode: IoMode::Direct,
@@ -427,13 +433,13 @@ mod tests {
     #[test]
     fn buffered_mode_populates_cache() {
         let (storage, file) = setup();
-        let ring = Uring::new(storage.clone(), 8);
-        let dst: IoBuf = Arc::new(Mutex::new(vec![0u8; 4096]));
+        let ring = Uring::new(Arc::new(storage.clone()), 8);
+        let arena = StagingArena::new(1, 4096);
         ring.submit(Sqe {
             file: file.clone(),
             offset: 0,
             len: 4096,
-            dst,
+            dst: SlotRef::new(arena, 0),
             dst_off: 0,
             user_data: 0,
             mode: IoMode::Buffered,

@@ -1,0 +1,310 @@
+//! Backend conformance suite: every `IoBackend` must serve identical bytes,
+//! account direct-I/O alignment identically, and drive the extractor's
+//! two-phase wave protocol to the same results — whether the backend is the
+//! simulated SSD stack or real OS files in a tempdir. Each check is a
+//! generic function run against both backends.
+
+use gnndrive::extract::{ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::graph::{FeatureGen, FeatureTable};
+use gnndrive::membuf::{FeatureBuffer, SlotRef, StagingArena, StagingBuffer};
+use gnndrive::sim::Clock;
+use gnndrive::storage::{
+    AsyncIoEngine as _, DataKind, FileBacking, FileId, HostMemory, IoBackend, IoMode,
+    MemBacking, OsFileBackend, PageCache, SimFile, Sqe, SsdConfig, SsdSim, Storage,
+};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+const FILE_BYTES: usize = 64 * 1024;
+
+fn pattern(i: usize) -> u8 {
+    (i % 247) as u8
+}
+
+/// Unique path per call: tests in one binary run concurrently, so a shared
+/// filename would let one test truncate a file another test's open
+/// `FileBacking` is still reading.
+fn unique_path(stem: &str) -> std::path::PathBuf {
+    use std::sync::atomic::AtomicU32;
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let dir = std::env::temp_dir().join("gnndrive_conformance");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!(
+        "{stem}_{}_{}.bin",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn sim_backend() -> Arc<dyn IoBackend> {
+    let clock = Clock::new(0.05);
+    let ssd = SsdSim::new(SsdConfig::pm883(), clock);
+    let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
+    Arc::new(Storage::new(ssd, cache))
+}
+
+fn os_backend() -> Arc<dyn IoBackend> {
+    Arc::new(OsFileBackend::new(512))
+}
+
+/// A patterned file for each backend: in-memory for sim, a real tempdir
+/// file for os — byte-for-byte identical content.
+fn file_for(kind: &str) -> SimFile {
+    let bytes: Vec<u8> = (0..FILE_BYTES).map(pattern).collect();
+    match kind {
+        "sim" => SimFile::new(
+            FileId::new(11, DataKind::Features),
+            Arc::new(MemBacking::new(bytes)),
+        ),
+        "os" => {
+            let path = unique_path("data");
+            std::fs::write(&path, &bytes).unwrap();
+            SimFile::new(
+                FileId::new(11, DataKind::Features),
+                Arc::new(FileBacking::open(&path).unwrap()),
+            )
+        }
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+fn backends() -> Vec<(Arc<dyn IoBackend>, SimFile)> {
+    vec![(sim_backend(), file_for("sim")), (os_backend(), file_for("os"))]
+}
+
+// ---------------------------------------------------------------------------
+// Read-back bytes
+// ---------------------------------------------------------------------------
+
+fn check_readback(io: &dyn IoBackend, file: &SimFile) {
+    let name = io.name();
+    for (off, len) in [(0usize, 512usize), (700, 100), (4095, 2), (1000, 4096)] {
+        let mut direct = vec![0u8; len];
+        io.read_direct(file, off as u64, &mut direct);
+        let mut buffered = vec![0xFFu8; len];
+        io.read_buffered(file, off as u64, &mut buffered);
+        for (i, &b) in direct.iter().enumerate() {
+            assert_eq!(b, pattern(off + i), "{name}: direct byte {off}+{i}");
+        }
+        assert_eq!(direct, buffered, "{name}: direct vs buffered at {off}+{len}");
+    }
+    // Past-end reads zero-fill identically.
+    let mut tail = vec![0xAAu8; 64];
+    io.read_direct(file, (FILE_BYTES - 32) as u64, &mut tail);
+    for (i, &b) in tail.iter().take(32).enumerate() {
+        assert_eq!(b, pattern(FILE_BYTES - 32 + i), "{name}: tail byte {i}");
+    }
+    assert!(tail[32..].iter().all(|&b| b == 0), "{name}: overhang must zero-fill");
+}
+
+#[test]
+fn readback_bytes_identical_across_backends() {
+    for (io, file) in backends() {
+        check_readback(io.as_ref(), &file);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Alignment + counter accounting
+// ---------------------------------------------------------------------------
+
+fn check_alignment_accounting(io: &dyn IoBackend, file: &SimFile) {
+    let name = io.name();
+    assert_eq!(io.sector(), 512, "{name}");
+    io.reset_io_stats();
+    let base_requests = io.direct_stats().requests.load(Ordering::Relaxed);
+    let base_useful = io.direct_stats().useful_bytes.load(Ordering::Relaxed);
+    let base_aligned = io.direct_stats().aligned_bytes.load(Ordering::Relaxed);
+
+    // 100 B at offset 700 fits in sector [512, 1024) → 512 aligned bytes.
+    let mut buf = vec![0u8; 100];
+    io.read_direct(file, 700, &mut buf);
+    assert_eq!(
+        io.direct_stats().requests.load(Ordering::Relaxed) - base_requests,
+        1,
+        "{name}: requests"
+    );
+    assert_eq!(
+        io.direct_stats().useful_bytes.load(Ordering::Relaxed) - base_useful,
+        100,
+        "{name}: useful bytes"
+    );
+    assert_eq!(
+        io.direct_stats().aligned_bytes.load(Ordering::Relaxed) - base_aligned,
+        512,
+        "{name}: aligned bytes"
+    );
+    assert_eq!(
+        io.io_counters().reads.load(Ordering::Relaxed),
+        1,
+        "{name}: one charged read"
+    );
+    assert_eq!(
+        io.io_counters().read_bytes.load(Ordering::Relaxed),
+        512,
+        "{name}: charged aligned volume"
+    );
+
+    // nocharge + charge_multi must land on the same totals as read_direct.
+    let aligned = io.read_direct_nocharge(file, 1530, &mut buf); // spans 2 sectors
+    assert_eq!(aligned, 1024, "{name}: 100B at 1530 spans [1024,2048)");
+    assert_eq!(
+        io.io_counters().reads.load(Ordering::Relaxed),
+        1,
+        "{name}: nocharge must not charge"
+    );
+    io.charge_multi(1, aligned);
+    assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 2, "{name}");
+    assert_eq!(
+        io.io_counters().read_bytes.load(Ordering::Relaxed),
+        512 + 1024,
+        "{name}: coalesced charge equals per-op charge"
+    );
+
+    io.reset_io_stats();
+    assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 0, "{name}: reset");
+    assert_eq!(io.io_counters().read_bytes.load(Ordering::Relaxed), 0, "{name}: reset");
+}
+
+#[test]
+fn alignment_accounting_identical_across_backends() {
+    for (io, file) in backends() {
+        check_alignment_accounting(io.as_ref(), &file);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Async engine contract
+// ---------------------------------------------------------------------------
+
+fn check_async_engine(io: Arc<dyn IoBackend>, file: &SimFile) {
+    let name = io.name();
+    io.reset_io_stats();
+    let engine = io.clone().async_engine(8);
+    const N: usize = 24;
+    let arena = StagingArena::new(N, 512);
+    let sqes: Vec<Sqe> = (0..N)
+        .map(|i| Sqe {
+            file: file.clone(),
+            offset: (i * 512) as u64,
+            len: 512,
+            dst: SlotRef::new(arena.clone(), i),
+            dst_off: 0,
+            user_data: i as u64,
+            mode: IoMode::Direct,
+        })
+        .collect();
+    engine.submit_batch(sqes);
+    let cqes = engine.wait_cqes(N);
+    assert_eq!(cqes.len(), N, "{name}");
+    let mut seen: Vec<u64> = cqes.iter().map(|c| c.user_data).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..N as u64).collect::<Vec<_>>(), "{name}: all CQEs");
+    assert_eq!(engine.inflight(), 0, "{name}");
+    assert_eq!(engine.pending_harvest(), 0, "{name}");
+    for i in 0..N {
+        let slot = SlotRef::new(arena.clone(), i);
+        for (j, &b) in slot.bytes().iter().enumerate() {
+            assert_eq!(b, pattern(i * 512 + j), "{name}: slot {i} byte {j}");
+        }
+    }
+    // Aligned 512 B requests charge exactly their own volume on every
+    // backend, coalesced or not.
+    assert_eq!(
+        io.io_counters().read_bytes.load(Ordering::Relaxed),
+        (N * 512) as u64,
+        "{name}: charged bytes"
+    );
+    assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), N as u64, "{name}");
+}
+
+#[test]
+fn async_engines_complete_identically() {
+    for (io, file) in backends() {
+        check_async_engine(io, &file);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extractor wave behavior (async + sync fallback)
+// ---------------------------------------------------------------------------
+
+const DIM: usize = 16;
+const NODES: u64 = 200;
+
+fn features_for(io_name: &str, gen: &FeatureGen) -> FeatureTable {
+    match io_name {
+        "sim" => FeatureTable::procedural(FileId::new(21, DataKind::Features), NODES, gen.clone()),
+        "os" => {
+            let path = unique_path("features");
+            FeatureTable::write_file(&path, NODES, gen).unwrap();
+            FeatureTable::from_backing(
+                FileId::new(21, DataKind::Features),
+                NODES,
+                DIM,
+                Arc::new(FileBacking::open(&path).unwrap()),
+            )
+        }
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+fn check_extractor_waves(io: Arc<dyn IoBackend>, asynchronous: bool) {
+    let name = io.name();
+    let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
+    let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
+    let features = features_for(name, &gen);
+    let host = HostMemory::new(1 << 20);
+    let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
+    // 8 staging slots against 60 nodes → the extractor must run in waves.
+    let staging = StagingBuffer::new(&host, 8, (DIM * 4) as usize).unwrap();
+    let ex = Extractor::with_options(
+        io.clone(),
+        16,
+        staging,
+        fb.clone(),
+        features,
+        ExtractTarget::Host,
+        ExtractOptions { asynchronous, direct: true },
+    );
+    io.reset_io_stats();
+    let nodes: Vec<u32> = (30..90).collect();
+    let aliases = ex.extract(&nodes);
+    assert_eq!(aliases.len(), 60, "{name}");
+    assert!(aliases.iter().all(|&a| a >= 0), "{name}");
+    let mut out = vec![0f32; DIM];
+    let mut want = vec![0u8; DIM * 4];
+    for (i, &v) in nodes.iter().enumerate() {
+        fb.gather(&aliases[i..i + 1], &mut out);
+        gen.fill_row(v as u64, &mut want);
+        assert_eq!(out, FeatureGen::decode_row(&want), "{name}: node {v}");
+    }
+    // Every row was loaded exactly once, each a 64 B read inside one 512 B
+    // sector → identical charged volume on both backends.
+    assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 60, "{name}: loads");
+    assert_eq!(
+        io.io_counters().read_bytes.load(Ordering::Relaxed),
+        60 * 512,
+        "{name}: aligned charges"
+    );
+    // Re-extraction is served from the feature buffer: zero new I/O.
+    io.reset_io_stats();
+    let again = ex.extract(&nodes);
+    assert_eq!(again, aliases, "{name}: resident rows keep their slots");
+    assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 0, "{name}: buffer hit");
+    fb.check_invariants().unwrap();
+}
+
+#[test]
+fn extractor_waves_conform_async() {
+    for (io, _) in backends() {
+        check_extractor_waves(io, true);
+    }
+}
+
+#[test]
+fn extractor_waves_conform_sync_fallback() {
+    for (io, _) in backends() {
+        check_extractor_waves(io, false);
+    }
+}

@@ -6,6 +6,7 @@ use gnndrive::config::{Machine, MachineConfig, TrainConfig};
 use gnndrive::graph::{Dataset, DatasetSpec};
 use gnndrive::runtime::simcompute::ModelKind;
 use gnndrive::sim::Clock;
+use std::sync::Arc;
 
 /// Timing-sensitive tests must not share the single CPU core: serialize.
 fn serial() -> std::sync::MutexGuard<'static, ()> {
@@ -28,8 +29,8 @@ fn quick_cfg() -> TrainConfig {
 #[test]
 fn all_systems_complete_an_epoch() {
     let _serial = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     for kind in SystemKind::all() {
         let mut sys = build_system(kind, &machine, &ds, quick_cfg(), ModelKind::GraphSage)
             .unwrap_or_else(|e| panic!("{kind:?} build: {e}"));
@@ -51,8 +52,8 @@ fn all_systems_complete_an_epoch() {
 #[test]
 fn sample_only_mode_works_for_comparables() {
     let _serial = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     for kind in [SystemKind::GnnDriveGpu, SystemKind::PygPlus, SystemKind::Ginex] {
         let mut sys =
             build_system(kind, &machine, &ds, quick_cfg(), ModelKind::GraphSage).unwrap();
@@ -66,8 +67,8 @@ fn gnndrive_direct_io_vs_pygplus_page_cache() {
     let _serial = serial();
     // The architectural distinction the paper draws: PyG+ feature reads go
     // through the page cache; GNNDrive's use direct I/O.
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
 
     let mut pyg =
         build_system(SystemKind::PygPlus, &machine, &ds, quick_cfg(), ModelKind::GraphSage)
@@ -112,14 +113,14 @@ fn marius_oom_on_large_features_small_memory() {
     let _serial = serial();
     // MAG240M-like: dim 768 at a small host budget → OOM in preparation
     // (the Table 2 rows).
-    let machine = Machine::new(
+    let machine = Arc::new(Machine::new(
         MachineConfig::paper().with_paper_host_gb(32),
         Clock::new(0.05),
-    );
+    ));
     let mut spec = DatasetSpec::unit_test();
     spec.dim = 768;
     spec.nodes = 100_000;
-    let ds = Dataset::materialize(&spec, &machine).unwrap();
+    let ds = Arc::new(Dataset::materialize(&spec, &machine).unwrap());
     // feature bytes = 100k × 3 KiB ≈ 293 MiB; prep workspace 0.2× ≈ 59 MiB;
     // plus 76.8 MiB of partition buffers — exceeds 128 MiB → OOM at build
     // or inside prepare().
@@ -139,14 +140,14 @@ fn pygplus_contention_slows_sampling() {
     // Fig 2's qualitative claim at unit-test scale: sampling within a full
     // SET epoch is slower than sampling alone, because feature pages evict
     // topology pages. Tight memory budget makes contention visible.
-    let machine = Machine::new(
+    let machine = Arc::new(Machine::new(
         MachineConfig::paper().with_host_mem(8 << 20),
         Clock::new(0.1),
-    );
+    ));
     let mut spec = DatasetSpec::unit_test();
     spec.nodes = 20_000;
     spec.dim = 512;
-    let ds = Dataset::materialize(&spec, &machine).unwrap();
+    let ds = Arc::new(Dataset::materialize(&spec, &machine).unwrap());
     // Single loader worker: on this 1-core testbed, multiple CPU-bound
     // samplers contend for the core and inflate summed sample time in the
     // `-only` condition; one worker isolates the page-cache effect, which

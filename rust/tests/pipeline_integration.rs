@@ -9,6 +9,7 @@ use gnndrive::pipeline::{GnnDrive, Variant};
 use gnndrive::runtime::simcompute::ModelKind;
 use gnndrive::sample::{EpochPlan, Sampler};
 use gnndrive::sim::Clock;
+use std::sync::Arc;
 
 fn serial() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
@@ -27,7 +28,7 @@ fn cfg() -> TrainConfig {
     }
 }
 
-fn engine<'a>(machine: &'a Machine, ds: &'a Dataset, cfg: &TrainConfig) -> GnnDrive<'a> {
+fn engine(machine: &Arc<Machine>, ds: &Arc<Dataset>, cfg: &TrainConfig) -> GnnDrive {
     let trainer = sim_trainer(machine, ds, cfg, ModelKind::GraphSage, Variant::Gpu, 64);
     GnnDrive::new(machine, ds, cfg.clone(), Variant::Gpu, trainer).unwrap()
 }
@@ -35,8 +36,8 @@ fn engine<'a>(machine: &'a Machine, ds: &'a Dataset, cfg: &TrainConfig) -> GnnDr
 #[test]
 fn pipeline_extracts_exactly_the_sampled_rows() {
     let _s = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     let cfg = cfg();
     let e = engine(&machine, &ds, &cfg);
     machine.storage.direct_stats().useful_bytes.store(0, std::sync::atomic::Ordering::Relaxed);
@@ -56,8 +57,8 @@ fn pipeline_extracts_exactly_the_sampled_rows() {
 #[test]
 fn sampling_is_deterministic_across_engines() {
     let _s = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     // Two identical samplers over the same plan produce identical batches.
     let ids = &ds.train_ids;
     let plan_a = EpochPlan::new(ids, 32, 9, 0, Some(4));
@@ -76,8 +77,8 @@ fn sampling_is_deterministic_across_engines() {
 #[test]
 fn reordering_occurs_with_parallel_stages_but_all_batches_train() {
     let _s = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     let mut c = cfg();
     c.batches_per_epoch = Some(12);
     c.samplers = 3;
@@ -95,8 +96,8 @@ fn reordering_occurs_with_parallel_stages_but_all_batches_train() {
 #[test]
 fn cpu_variant_feature_buffer_charges_host_memory() {
     let _s = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     let c = cfg();
     let before = machine.host.reserved();
     let trainer = sim_trainer(&machine, &ds, &c, ModelKind::GraphSage, Variant::Cpu, 64);
@@ -114,8 +115,8 @@ fn cpu_variant_feature_buffer_charges_host_memory() {
 #[test]
 fn multi_epoch_runs_are_stable_and_release_slots() {
     let _s = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     let c = cfg();
     let e = engine(&machine, &ds, &c);
     for epoch in 0..3 {
@@ -134,8 +135,8 @@ fn multi_epoch_runs_are_stable_and_release_slots() {
 #[test]
 fn enforce_order_trains_in_batch_id_order() {
     let _s = serial();
-    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
-    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
     let mut c = cfg();
     c.enforce_order = true;
     c.samplers = 3;
@@ -153,13 +154,13 @@ fn padded_caps_respected_under_truncation() {
     let _s = serial();
     // CPU variant with a small host budget → caps truncate below the
     // no-dedup worst case, but shapes stay exact and nothing crashes.
-    let machine = Machine::new(
+    let machine = Arc::new(Machine::new(
         MachineConfig::paper().with_host_mem(16 << 20),
         Clock::new(0.05),
-    );
+    ));
     let mut spec = DatasetSpec::unit_test();
     spec.nodes = 30_000; // big enough that sampled prefixes exceed the caps
-    let ds = Dataset::materialize(&spec, &machine).unwrap();
+    let ds = Arc::new(Dataset::materialize(&spec, &machine).unwrap());
     let mut c = cfg();
     c.batch_size = 200;
     c.fanouts = vec![10, 10];

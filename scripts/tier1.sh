@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification: release build + tests + bench bit-rot check, plus
-# clippy when available. Run from anywhere; operates on the rust/ crate
-# (vendored deps, offline).
+# fmt/clippy when available, plus a real-file (--backend os) smoke run so
+# the non-simulated I/O path cannot bit-rot. Run from anywhere; operates on
+# the rust/ crate (vendored deps, offline).
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -17,12 +18,29 @@ cargo build --benches
 echo "== cargo test -q =="
 cargo test -q
 
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --check
+else
+  echo "== rustfmt unavailable; skipping format check =="
+fi
+
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== cargo clippy --all-targets -- -D warnings =="
   cargo clippy --all-targets -- -D warnings
 else
   echo "== clippy unavailable; skipping lint =="
 fi
+
+echo "== smoke: gnndrive train --backend os (real files in a tempdir) =="
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+./target/release/gnndrive gen-data --dataset papers-tiny --out "$SMOKE_DIR/ds"
+./target/release/gnndrive train --system gnndrive --backend os \
+  --data "$SMOKE_DIR/ds" --batches 2 --epochs 1
+# The sim backend must still be the default and keep working end to end.
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1
 
 if [ -f BENCH_hotpath.json ]; then
   echo "== last BENCH_hotpath.json record =="
