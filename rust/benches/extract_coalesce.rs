@@ -1,0 +1,229 @@
+//! `cargo bench --bench extract_coalesce` — extraction-focused benchmark of
+//! the segment-coalescing I/O planner (ISSUE 4): charged request counts,
+//! useful/aligned byte accounting and wall time, with coalescing on vs off,
+//! across three node-id distributions on the paper machine (sim backend):
+//!
+//! * `graphsage` — real sampled mini-batches (papers100m-mini, batch 1000,
+//!   fanouts 10/10/10): the paper's main workload and the acceptance gate —
+//!   coalescing must cut charged read requests ≥ 2× at identical useful
+//!   bytes.
+//! * `sequential` — a contiguous node range (best case: long merged runs).
+//! * `skewed` — power-law-ish draws (hubs cluster, tail stays sparse).
+//!
+//! Machine-readable results append to `BENCH_extract.json` (one JSON array
+//! per run, JSONL) so future PRs can track the I/O trajectory;
+//! `scripts/tier1.sh` runs this bench and prints the last record.
+
+use gnndrive::config::{Machine, MachineConfig};
+use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::membuf::{FeatureBuffer, StagingBuffer};
+use gnndrive::pipeline::derive_caps;
+use gnndrive::sample::{EpochPlan, Sampler};
+use gnndrive::sim::Clock;
+use gnndrive::storage::IoBackend as _;
+use gnndrive::util::json::Json;
+use gnndrive::util::rng::Pcg;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+const BATCH: usize = 1000;
+const FANOUTS: [usize; 3] = [10, 10, 10];
+const BATCHES: usize = 4;
+
+struct Run {
+    workload: &'static str,
+    coalesce: CoalesceConfig,
+    rows: u64,
+    reads: u64,
+    read_bytes: u64,
+    useful: u64,
+    aligned: u64,
+    wall_ms: f64,
+}
+
+impl Run {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".into(), Json::Str("extract_coalesce".into()));
+        m.insert("workload".into(), Json::Str(self.workload.into()));
+        m.insert("coalesce_bytes".into(), Json::Num(self.coalesce.max_bytes as f64));
+        m.insert("coalesce_gap".into(), Json::Num(self.coalesce.gap_bytes as f64));
+        m.insert("rows".into(), Json::Num(self.rows as f64));
+        m.insert("charged_requests".into(), Json::Num(self.reads as f64));
+        m.insert("charged_bytes".into(), Json::Num(self.read_bytes as f64));
+        m.insert("useful_bytes".into(), Json::Num(self.useful as f64));
+        m.insert("aligned_bytes".into(), Json::Num(self.aligned as f64));
+        m.insert("wall_ms_sim".into(), Json::Num(self.wall_ms));
+        Json::Obj(m)
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "{:<11} coalesce={:<8} rows {:>6}  reqs {:>6}  charged {:>10}B  useful {:>10}B  aligned {:>10}B  wall {:>9.2}ms",
+            self.workload,
+            if self.coalesce.enabled() {
+                format!("{}K/{}K", self.coalesce.max_bytes >> 10, self.coalesce.gap_bytes >> 10)
+            } else {
+                "off".into()
+            },
+            self.rows,
+            self.reads,
+            self.read_bytes,
+            self.useful,
+            self.aligned,
+            self.wall_ms,
+        )
+    }
+}
+
+/// Extract every batch once on a fresh feature buffer; returns the run's
+/// charged-request/byte accounting and sim wall time.
+fn run_extraction(
+    machine: &Machine,
+    ds: &Dataset,
+    batches: &[Vec<u32>],
+    coalesce: CoalesceConfig,
+    workload: &'static str,
+) -> Run {
+    let total_nodes: usize = batches.iter().map(Vec::len).sum();
+    let fb = Arc::new(
+        FeatureBuffer::in_host(&machine.host, total_nodes + BATCH, ds.spec.dim).unwrap(),
+    );
+    let staging =
+        StagingBuffer::new(&machine.host, 4096, ds.features.row_bytes() as usize).unwrap();
+    let ex = Extractor::with_options(
+        machine.backend.clone(),
+        128,
+        staging,
+        fb.clone(),
+        ds.features.clone(),
+        ExtractTarget::Host,
+        ExtractOptions { coalesce, ..Default::default() },
+    );
+    machine.backend.reset_io_stats();
+    let dio = machine.backend.direct_stats().snapshot();
+    let t0 = Instant::now();
+    for nodes in batches {
+        let aliases = ex.extract(nodes);
+        std::hint::black_box(&aliases);
+    }
+    let wall = machine.clock.to_sim(t0.elapsed());
+    let (useful, aligned) = machine.backend.direct_stats().snapshot();
+    let (_, _, _, loads) = fb.stats();
+    Run {
+        workload,
+        coalesce,
+        rows: loads,
+        reads: machine
+            .backend
+            .io_counters()
+            .reads
+            .load(std::sync::atomic::Ordering::Relaxed),
+        read_bytes: machine
+            .backend
+            .io_counters()
+            .read_bytes
+            .load(std::sync::atomic::Ordering::Relaxed),
+        useful: useful - dio.0,
+        aligned: aligned - dio.1,
+        wall_ms: wall.as_secs_f64() * 1e3,
+    }
+}
+
+/// GraphSAGE mini-batches: the pipeline's own sampler + padding caps.
+fn graphsage_batches(machine: &Machine, ds: &Dataset) -> Vec<Vec<u32>> {
+    let caps = derive_caps(
+        BATCH,
+        &FANOUTS,
+        ds.spec.dim,
+        machine.devices[0].capacity() * 9 / 10,
+        9, // train queue 4 + extractors 4 + 1, the paper default
+        1,
+    );
+    let plan = EpochPlan::new(&ds.train_ids, BATCH, 17, 0, Some(BATCHES));
+    let sampler = Sampler::new(FANOUTS.to_vec(), 17);
+    let mut batches = Vec::new();
+    while let Some((batch_id, seeds)) = plan.claim() {
+        let sub = sampler.sample_batch(ds, machine.backend.as_ref(), batch_id, seeds);
+        let padded = sub.pad(&caps, &FANOUTS);
+        batches.push(padded.nodes[..padded.real_nodes].to_vec());
+    }
+    batches
+}
+
+/// Power-law-ish draws: hot head, long sparse tail (dedup'd per batch).
+fn skewed_batches(n_nodes: u32) -> Vec<Vec<u32>> {
+    let mut rng = Pcg::new(0xBEEF);
+    (0..BATCHES)
+        .map(|_| {
+            let mut seen = std::collections::BTreeSet::new();
+            for _ in 0..12_000 {
+                let u = (rng.next_u64() % (1 << 20)) as f64 / (1u64 << 20) as f64;
+                let id = ((n_nodes as f64) * u * u * u) as u32;
+                seen.insert(id.min(n_nodes - 1));
+            }
+            seen.into_iter().collect()
+        })
+        .collect()
+}
+
+fn main() {
+    // Compressed sim time: charged-request counts are clock-independent and
+    // wall times are reported in sim time, so the bench stays fast. The host
+    // budget is raised above paper scale only so the bench can hold every
+    // extracted batch in one host-resident buffer — the SSD model, sector
+    // size and staging bound (what coalescing interacts with) stay paper.
+    let machine =
+        Machine::new(MachineConfig::paper().with_host_mem(1 << 30), Clock::new(0.02));
+    println!("materializing papers100m-mini …");
+    let ds = Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine)
+        .expect("materialize papers100m-mini");
+
+    let workloads: Vec<(&'static str, Vec<Vec<u32>>)> = vec![
+        ("graphsage", graphsage_batches(&machine, &ds)),
+        ("sequential", vec![(0..20_000u32).collect()]),
+        ("skewed", skewed_batches(ds.spec.nodes)),
+    ];
+
+    let mut records = Vec::new();
+    let mut graphsage_ratio = None;
+    for (name, batches) in &workloads {
+        let name = *name;
+        let off = run_extraction(&machine, &ds, batches, CoalesceConfig::disabled(), name);
+        println!("{}", off.row());
+        let on = run_extraction(&machine, &ds, batches, CoalesceConfig::default(), name);
+        println!("{}", on.row());
+        let ratio = off.reads as f64 / on.reads.max(1) as f64;
+        println!("  -> {ratio:.2}x fewer charged requests, useful bytes {}",
+            if on.useful == off.useful { "unchanged" } else { "CHANGED (bug!)" });
+        assert_eq!(on.useful, off.useful, "{name}: useful bytes must not change");
+        assert_eq!(on.rows, off.rows, "{name}: loaded row count must not change");
+        if name == "graphsage" {
+            graphsage_ratio = Some(ratio);
+        }
+        records.push(off);
+        records.push(on);
+    }
+
+    // The ISSUE 4 acceptance gate: paper config, GraphSAGE batch workload,
+    // sim backend — charged read requests drop ≥ 2× vs --coalesce-bytes 0.
+    let ratio = graphsage_ratio.unwrap();
+    assert!(
+        ratio >= 2.0,
+        "acceptance: GraphSAGE charged-request reduction {ratio:.2}x < 2x"
+    );
+    println!("acceptance: GraphSAGE charged-request reduction {ratio:.2}x (>= 2x required)");
+
+    let line = Json::Arr(records.iter().map(Run::json).collect()).to_string() + "\n";
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_extract.json")
+        .and_then(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+    match appended {
+        Ok(()) => println!("appended {} records to BENCH_extract.json", records.len()),
+        Err(e) => eprintln!("could not append to BENCH_extract.json: {e}"),
+    }
+}

@@ -255,7 +255,7 @@ impl TrainingSystem for Ginex {
             self.cfg.batches_per_epoch,
         );
         let watch = Stopwatch::start(clock);
-        self.machine.backend.reset_io_stats();
+        let io_snap = crate::storage::EpochIoSnapshot::start(self.machine.backend.as_ref());
 
         // Phase 1+2: superbatch sampling + inspect.
         let (batches, sample_time) = self.sample_superbatch(epoch, &plan);
@@ -317,6 +317,7 @@ impl TrainingSystem for Ginex {
             stats.push(&r);
         }
 
+        let io = io_snap.totals(self.machine.backend.as_ref());
         Ok(EpochStats {
             epoch_time: watch.elapsed(),
             prep_time,
@@ -326,12 +327,9 @@ impl TrainingSystem for Ginex {
             batches: batches.len(),
             train: stats,
             reorder_inversions: 0,
-            ssd_read_bytes: self
-                .machine
-                .backend
-                .io_counters()
-                .read_bytes
-                .load(Ordering::Relaxed),
+            ssd_read_bytes: io.read_bytes,
+            ssd_read_requests: io.reads,
+            align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: 0,
         })
     }

@@ -27,7 +27,6 @@ use crate::storage::{IoBackend as _, Reservation};
 use crate::train::{TrainStats, TrainStep};
 use crate::util::rng::Pcg;
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -218,7 +217,7 @@ impl TrainingSystem for MariusGnn {
     fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats> {
         let clock = &self.machine.clock;
         let watch = Stopwatch::start(clock);
-        self.machine.backend.reset_io_stats();
+        let io_snap = crate::storage::EpochIoSnapshot::start(self.machine.backend.as_ref());
         let (first_cohort, prep_time) = self.prepare(epoch)?;
 
         // Cohort schedule: every partition must be buffered at some point
@@ -320,6 +319,7 @@ impl TrainingSystem for MariusGnn {
         extract_time += swap_time; // mid-epoch swaps are extraction-side I/O
         state::deregister();
 
+        let io = io_snap.totals(self.machine.backend.as_ref());
         Ok(EpochStats {
             epoch_time: watch.elapsed(),
             prep_time,
@@ -329,12 +329,9 @@ impl TrainingSystem for MariusGnn {
             batches,
             train: stats,
             reorder_inversions: 0,
-            ssd_read_bytes: self
-                .machine
-                .backend
-                .io_counters()
-                .read_bytes
-                .load(Ordering::Relaxed),
+            ssd_read_bytes: io.read_bytes,
+            ssd_read_requests: io.reads,
+            align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: 0,
         })
     }

@@ -105,7 +105,7 @@ impl TrainingSystem for PygPlus {
         let cap_l = *self.caps.last().unwrap();
 
         let watch = Stopwatch::start(clock);
-        self.machine.backend.reset_io_stats();
+        let io_snap = crate::storage::EpochIoSnapshot::start(self.machine.backend.as_ref());
 
         std::thread::scope(|s| {
             for _ in 0..self.workers {
@@ -173,6 +173,7 @@ impl TrainingSystem for PygPlus {
             }
         });
 
+        let io = io_snap.totals(self.machine.backend.as_ref());
         Ok(EpochStats {
             epoch_time: watch.elapsed(),
             prep_time: Duration::ZERO,
@@ -182,12 +183,9 @@ impl TrainingSystem for PygPlus {
             batches: batches_done.into_inner(),
             train: train_stats.into_inner().unwrap(),
             reorder_inversions: 0, // PyG+ trains strictly in order
-            ssd_read_bytes: self
-                .machine
-                .backend
-                .io_counters()
-                .read_bytes
-                .load(Ordering::Relaxed),
+            ssd_read_bytes: io.read_bytes,
+            ssd_read_requests: io.reads,
+            align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: 0,
         })
     }

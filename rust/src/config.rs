@@ -242,6 +242,12 @@ pub struct TrainConfig {
     pub feature_buffer_mult: usize,
     /// io_uring depth per extractor.
     pub io_depth: usize,
+    /// Max bytes one coalesced extraction segment may span
+    /// (`--coalesce-bytes`; 0 disables coalescing — one request per row).
+    pub coalesce_bytes: usize,
+    /// Strict upper bound on the bridged byte gap between rows merged into
+    /// one segment (`--coalesce-gap`).
+    pub coalesce_gap: usize,
     pub seed: u64,
     pub learning_rate: f32,
     /// Data-parallel segment `(worker, of_n)`: this pipeline trains the
@@ -268,6 +274,8 @@ impl Default for TrainConfig {
             train_queue_cap: 4,
             feature_buffer_mult: 1,
             io_depth: 128,
+            coalesce_bytes: crate::extract::CoalesceConfig::default().max_bytes,
+            coalesce_gap: crate::extract::CoalesceConfig::default().gap_bytes,
             seed: 17,
             learning_rate: 0.01,
             segment: None,

@@ -663,7 +663,7 @@ pub fn tab02(quick: bool) -> String {
 pub fn figb1(quick: bool) -> String {
     use crate::membuf::{SlotRef, StagingArena};
     use crate::storage::uring::{IoMode, Sqe, Uring};
-    use crate::storage::{DataKind, FileId, MemBacking, SimFile};
+    use crate::storage::{AsyncIoEngine as _, DataKind, FileId, MemBacking, SimFile};
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::time::Instant;
 
@@ -744,6 +744,7 @@ pub fn figb1(quick: bool) -> String {
                     file: file.clone(),
                     offset: (rng.below(16 * 1024) as u64) * 512,
                     len: 512,
+                    useful: 512,
                     dst: SlotRef::new(arena.clone(), i % slots),
                     dst_off: 0,
                     user_data: i as u64,

@@ -1,21 +1,32 @@
 //! Asynchronous two-phase feature extraction (paper §4.2, Fig 5,
-//! Algorithm 1).
+//! Algorithm 1) with segment-coalesced I/O (§4.4).
 //!
 //! One extractor handles one mini-batch end to end, never blocking per
-//! request: phase 1 submits every missing node's SSD→staging load to its
-//! backend's async engine (direct I/O, large depth); phase 2 launches the
-//! staging→device PCIe transfer of each node *as soon as its load
-//! completes*, overlapping with outstanding loads; completion publishes the
-//! node's valid bit in the feature buffer. Nodes already resident are
-//! aliased (no I/O), nodes being extracted by peers are awaited at the end
-//! (shared I/O).
+//! request. Phase 1 plans the batch's missing rows into coalesced
+//! *segments* ([`crate::extract::coalesce`]) — runs of rows sorted by file
+//! offset and merged into contiguous spans — and submits **one SQE per
+//! segment** to its backend's async engine (direct I/O, large depth).
+//! Phase 2 harvests completions and launches each segment's staging→device
+//! PCIe transfer *as soon as its load completes*, overlapping with
+//! outstanding loads; the transfer's completion scatters every row of the
+//! segment into the feature buffer and publishes its valid bit. Nodes
+//! already resident are aliased (no I/O), nodes being extracted by peers
+//! are awaited at the end (shared I/O).
+//!
+//! Segments are packed into *waves* bounded by the staging arena: a wave
+//! bump-allocates contiguous staging ranges ([`crate::membuf::WaveAlloc`])
+//! until the arena is full, flushes, and continues — the staging buffer is
+//! intentionally small (bounded memory footprint), so large batches simply
+//! run in more waves. With coalescing disabled (`--coalesce-bytes 0`) every
+//! segment is one row and the wave degenerates to the paper's baseline
+//! one-SQE-per-row behavior.
 //!
 //! The extractor is backend-agnostic: it holds an [`IoBackend`] and drives
 //! whatever [`AsyncIoEngine`] that backend mints (the sim io_uring, or the
 //! OS-file `pread` pool), so the same pipeline runs against the simulator
-//! and against real files. Completions land in lock-free staging-slot
-//! handles ([`crate::membuf::SlotRef`]) — no mutex per row anywhere between
-//! submit and publish.
+//! and against real files. Completions land in lock-free staging ranges
+//! ([`crate::membuf::SlotRef`]) — no mutex per row anywhere between submit
+//! and publish.
 //!
 //! The returned alias list is the batch's currency downstream: the trainer
 //! gathers rows by alias, and the releaser drops the references this
@@ -23,12 +34,13 @@
 //! never re-resolving node ids — so the whole post-extraction lifecycle
 //! stays off the coordinator's shard locks.
 
+use super::coalesce::{plan_segments, CoalesceConfig, SegRow};
 use crate::graph::FeatureTable;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::sim::Latch;
 use crate::storage::api::{AsyncIoEngine, IoBackend, IoMode, Sqe};
 use crate::storage::Pcie;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Where extracted rows land (§4.4 "CPU-based Training" skips the PCIe hop).
 pub enum ExtractTarget {
@@ -48,11 +60,20 @@ pub struct ExtractOptions {
     /// false → feature reads go through the OS page cache (the paper's D1
     /// contention mode; `-direct` ablation).
     pub direct: bool,
+    /// Segment-coalescing knobs (`--coalesce-bytes 0` disables, restoring
+    /// one request per row). Applies to the asynchronous direct path; the
+    /// buffered and synchronous ablations keep per-row requests so they
+    /// stay faithful baselines.
+    pub coalesce: CoalesceConfig,
 }
 
 impl Default for ExtractOptions {
     fn default() -> Self {
-        ExtractOptions { asynchronous: true, direct: true }
+        ExtractOptions {
+            asynchronous: true,
+            direct: true,
+            coalesce: CoalesceConfig::default(),
+        }
     }
 }
 
@@ -64,6 +85,11 @@ pub struct Extractor {
     target: ExtractTarget,
     backend: Arc<dyn IoBackend>,
     opts: ExtractOptions,
+    /// Reused read buffer of the synchronous ablation path (one row; kept
+    /// across `extract` calls instead of reallocating per invocation). The
+    /// mutex is uncontended — it only serializes the rare case of one
+    /// `Extractor` value driven from several threads.
+    sync_scratch: Mutex<Vec<u8>>,
 }
 
 impl Extractor {
@@ -95,88 +121,96 @@ impl Extractor {
             target,
             backend,
             opts,
+            sync_scratch: Mutex::new(Vec::new()),
         }
     }
 
     /// Extract the feature rows of `nodes` into the feature buffer; returns
     /// the node alias list (slot per node) for the trainer.
-    ///
-    /// Loads exceeding the staging capacity are processed in waves — the
-    /// staging buffer is intentionally small (bounded memory footprint), and
-    /// a wave still keeps `staging.slots()` requests in flight.
     pub fn extract(&self, nodes: &[u32]) -> Vec<i32> {
         let plan = self.fb.begin_batch(nodes);
-        let row_bytes = self.staging.row_bytes;
 
         if !self.opts.asynchronous {
-            // Ablation: synchronous extraction — one blocking read + one
-            // blocking transfer per row on this thread (no overlap).
-            let mut buf = vec![0u8; row_bytes];
-            for &(node, slot) in &plan.to_load {
-                let off = self.features.row_offset(node as u64);
-                if self.opts.direct {
-                    self.backend.read_direct(&self.features.file, off, &mut buf);
-                } else {
-                    self.backend.read_buffered(&self.features.file, off, &mut buf);
-                }
-                if let ExtractTarget::Device(pcie) = &self.target {
-                    pcie.transfer_sync(row_bytes);
-                }
-                self.fb.publish_le_bytes(node, slot, &buf);
-            }
+            self.extract_sync(&plan.to_load);
             self.fb.wait_plan(&plan);
             return plan.aliases;
         }
 
         let mode = if self.opts.direct { IoMode::Direct } else { IoMode::Buffered };
-        for wave in plan.to_load.chunks(self.staging.slots()) {
-            let latch = Arc::new(Latch::new(wave.len()));
-            // Phase 1: submit all loads asynchronously. Each wave request
-            // owns staging slot `i` exclusively until its CQE is harvested
-            // below (the SlotRef protocol); the wave-end latch keeps the
-            // next wave from reusing slots before transfers land.
-            let sqes: Vec<Sqe> = wave
-                .iter()
-                .enumerate()
-                .map(|(i, &(node, _slot))| Sqe {
+        // Coalescing only pays on the direct path; the buffered ablation
+        // keeps per-row requests so its page-cache accounting stays the
+        // paper's D1 baseline.
+        let coalesce =
+            if self.opts.direct { self.opts.coalesce } else { CoalesceConfig::disabled() };
+        let segments = plan_segments(
+            &plan.to_load,
+            &self.features,
+            &coalesce,
+            self.staging.capacity_bytes(),
+        );
+
+        // Waves: pack segments into the staging arena until it is full,
+        // flush, repeat. Each staging range is owned by its segment's
+        // request until the CQE is harvested (the SlotRef protocol); the
+        // wave-end latch keeps the next wave from reusing arena bytes
+        // before every transfer of this wave has landed.
+        let mut next = 0;
+        while next < segments.len() {
+            let mut wave = self.staging.wave_alloc();
+            let mut in_wave = Vec::new();
+            let mut sqes = Vec::new();
+            while next < segments.len() {
+                let seg = &segments[next];
+                let Some(dst) = wave.alloc(seg.span) else { break };
+                sqes.push(Sqe {
                     file: self.features.file.clone(),
-                    offset: self.features.row_offset(node as u64),
-                    len: row_bytes,
-                    dst: self.staging.slot(i),
+                    offset: seg.offset,
+                    len: seg.span,
+                    useful: seg.useful,
+                    dst: dst.clone(),
                     dst_off: 0,
-                    user_data: i as u64,
+                    user_data: in_wave.len() as u64,
                     mode,
-                })
-                .collect();
+                });
+                in_wave.push((seg, dst));
+                next += 1;
+            }
+            assert!(!in_wave.is_empty(), "segment exceeds staging capacity");
+
+            // Phase 1: submit every segment load asynchronously.
+            let latch = Arc::new(Latch::new(in_wave.len()));
             self.engine.submit_batch(sqes);
 
-            // Phase 2: as each load completes, launch its transfer without
-            // waiting for the remaining loads.
-            for _ in 0..wave.len() {
+            // Phase 2: as each segment completes, launch its transfer
+            // without waiting for sibling segments.
+            for _ in 0..in_wave.len() {
                 let cqe = self.engine.wait_cqe();
-                let i = cqe.user_data as usize;
-                let (node, slot) = wave[i];
-                let staged = self.staging.slot(i);
+                let (seg, staged) = &in_wave[cqe.user_data as usize];
                 match &self.target {
                     ExtractTarget::Device(pcie) => {
                         let fb = self.fb.clone();
                         let latch = latch.clone();
-                        pcie.transfer_async(row_bytes, move || {
+                        let staged = staged.clone();
+                        let rows = seg.rows.clone();
+                        let row_bytes = self.staging.row_bytes;
+                        // Only the rows cross PCIe — bridged gap bytes die
+                        // in staging.
+                        pcie.transfer_async(seg.useful, move || {
                             // Decode straight from the staging bytes into
-                            // the arena row — no intermediate Vec<f32>, no
-                            // slot lock.
-                            fb.publish_le_bytes(node, slot, staged.bytes());
+                            // the arena rows — no intermediate Vec<f32>,
+                            // no per-row lock.
+                            publish_rows(&fb, &rows, &staged, row_bytes);
                             latch.count_down();
                         });
                     }
                     ExtractTarget::Host => {
-                        self.fb.publish_le_bytes(node, slot, staged.bytes());
+                        publish_rows(&self.fb, &seg.rows, staged, self.staging.row_bytes);
                         latch.count_down();
                     }
                 }
             }
-            // All transfers of this wave must land before its staging slots
-            // are reused by the next wave.
+            // All transfers of this wave must land before its staging
+            // ranges are reused by the next wave.
             latch.wait();
         }
 
@@ -184,6 +218,42 @@ impl Extractor {
         // tickets: no shard locks on the wait path).
         self.fb.wait_plan(&plan);
         plan.aliases
+    }
+
+    /// Ablation: synchronous extraction — one blocking read + one blocking
+    /// transfer per row on this thread (no overlap, no coalescing: the
+    /// paper's D2 congestion mode must stay a faithful per-row baseline).
+    fn extract_sync(&self, to_load: &[(u32, u32)]) {
+        let row_bytes = self.staging.row_bytes;
+        let mut buf = self.sync_scratch.lock().unwrap();
+        buf.resize(row_bytes, 0);
+        for &(node, slot) in to_load {
+            let off = self.features.row_offset(node as u64);
+            if self.opts.direct {
+                self.backend.read_direct(&self.features.file, off, &mut buf);
+            } else {
+                self.backend.read_buffered(&self.features.file, off, &mut buf);
+            }
+            // Host target (CPU training) skips the PCIe hop: the row
+            // decodes straight into the host-resident buffer.
+            if let ExtractTarget::Device(pcie) = &self.target {
+                pcie.transfer_sync(row_bytes);
+            }
+            self.fb.publish_le_bytes(node, slot, &buf);
+        }
+    }
+}
+
+/// Scatter a completed segment's rows into the feature buffer.
+fn publish_rows(
+    fb: &FeatureBuffer,
+    rows: &[SegRow],
+    staged: &crate::membuf::SlotRef,
+    row_bytes: usize,
+) {
+    let bytes = staged.bytes();
+    for r in rows {
+        fb.publish_le_bytes(r.node, r.slot, &bytes[r.rel_off..r.rel_off + row_bytes]);
     }
 }
 
@@ -203,17 +273,28 @@ mod tests {
         (m, ds, fb)
     }
 
-    fn extractor(m: &Machine, ds: &Dataset, fb: Arc<FeatureBuffer>, slots: usize) -> Extractor {
+    fn extractor_with(
+        m: &Machine,
+        ds: &Dataset,
+        fb: Arc<FeatureBuffer>,
+        slots: usize,
+        opts: ExtractOptions,
+    ) -> Extractor {
         let staging =
             StagingBuffer::new(&m.host, slots, ds.features.row_bytes() as usize).unwrap();
-        Extractor::new(
+        Extractor::with_options(
             m.backend.clone(),
             64,
             staging,
             fb,
             ds.features.clone(),
             ExtractTarget::Device(m.pcie.clone()),
+            opts,
         )
+    }
+
+    fn extractor(m: &Machine, ds: &Dataset, fb: Arc<FeatureBuffer>, slots: usize) -> Extractor {
+        extractor_with(m, ds, fb, slots, ExtractOptions::default())
     }
 
     #[test]
@@ -251,6 +332,61 @@ mod tests {
             assert_eq!(out, crate::graph::FeatureGen::decode_row(&want), "node {v}");
         }
         fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coalescing_merges_requests_without_changing_rows() {
+        // Same nodes, coalescing off vs on: identical extracted rows,
+        // strictly fewer charged device requests, identical useful bytes.
+        let (m, ds, _) = setup();
+        let dev = DeviceMemory::new(8 << 20);
+        let nodes: Vec<u32> = (200..264).collect(); // dense: 64-byte rows share sectors
+
+        let fb_off = Arc::new(FeatureBuffer::in_device(&dev, 512, ds.spec.dim).unwrap());
+        let ex_off = extractor_with(
+            &m,
+            &ds,
+            fb_off.clone(),
+            64,
+            ExtractOptions { coalesce: CoalesceConfig::disabled(), ..Default::default() },
+        );
+        m.storage.ssd.reset_stats();
+        let dio0 = m.backend.direct_stats().snapshot();
+        let a_off = ex_off.extract(&nodes);
+        let reads_off = m.storage.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed);
+        let (useful_off, aligned_off) = {
+            let (u, a) = m.backend.direct_stats().snapshot();
+            (u - dio0.0, a - dio0.1)
+        };
+
+        let fb_on = Arc::new(FeatureBuffer::in_device(&dev, 512, ds.spec.dim).unwrap());
+        let ex_on = extractor(&m, &ds, fb_on.clone(), 64);
+        m.storage.ssd.reset_stats();
+        let dio1 = m.backend.direct_stats().snapshot();
+        let a_on = ex_on.extract(&nodes);
+        let reads_on = m.storage.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed);
+        let (useful_on, aligned_on) = {
+            let (u, a) = m.backend.direct_stats().snapshot();
+            (u - dio1.0, a - dio1.1)
+        };
+
+        assert_eq!(reads_off, 64, "baseline: one request per row");
+        assert!(
+            reads_on * 2 <= reads_off,
+            "coalescing must at least halve charged requests: {reads_on} vs {reads_off}"
+        );
+        assert_eq!(useful_on, useful_off, "useful bytes independent of coalescing");
+        assert!(
+            aligned_on <= aligned_off,
+            "dense rows must not amplify: {aligned_on} vs {aligned_off}"
+        );
+
+        let mut off_rows = vec![0f32; nodes.len() * ds.spec.dim];
+        let mut on_rows = vec![0f32; nodes.len() * ds.spec.dim];
+        fb_off.gather(&a_off, &mut off_rows);
+        fb_on.gather(&a_on, &mut on_rows);
+        assert_eq!(off_rows, on_rows, "extracted bytes must be identical");
+        fb_on.check_invariants().unwrap();
     }
 
     #[test]
@@ -302,7 +438,8 @@ mod tests {
         let (m, ds, fb) = setup();
         let ex = extractor(&m, &ds, fb, 64);
         ex.extract(&(0..64).collect::<Vec<u32>>());
-        // Feature extraction must not populate the page cache (D1 fix).
+        // Feature extraction must not populate the page cache (D1 fix),
+        // coalesced segments included.
         let feat_hits = m
             .storage
             .cache
@@ -332,7 +469,7 @@ mod tests {
             fb.clone(),
             ds.features.clone(),
             ExtractTarget::Device(m.pcie.clone()),
-            ExtractOptions { asynchronous: false, direct: true },
+            ExtractOptions { asynchronous: false, ..Default::default() },
         );
         let nodes: Vec<u32> = (10..42).collect();
         let aliases = ex.extract(&nodes);
@@ -343,6 +480,58 @@ mod tests {
             ds.feature_gen.fill_row(v as u64, &mut want);
             assert_eq!(out, crate::graph::FeatureGen::decode_row(&want), "node {v}");
         }
+        fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sync_mode_host_target_publishes_without_pcie() {
+        // The sync ablation must respect ExtractTarget::Host: rows publish
+        // into the host buffer and the PCIe link stays untouched.
+        let (m, ds, _) = setup();
+        let host_fb = Arc::new(FeatureBuffer::in_host(&m.host, 256, ds.spec.dim).unwrap());
+        let staging =
+            StagingBuffer::new(&m.host, 32, ds.features.row_bytes() as usize).unwrap();
+        let ex = Extractor::with_options(
+            m.backend.clone(),
+            32,
+            staging,
+            host_fb.clone(),
+            ds.features.clone(),
+            ExtractTarget::Host,
+            ExtractOptions { asynchronous: false, ..Default::default() },
+        );
+        let pcie_before = m.pcie.transfer_count();
+        let nodes: Vec<u32> = (7..23).collect();
+        let aliases = ex.extract(&nodes);
+        assert_eq!(m.pcie.transfer_count(), pcie_before, "Host target must skip PCIe");
+        let mut out = vec![0f32; ds.spec.dim];
+        let mut want = vec![0u8; ds.spec.dim * 4];
+        for (i, &v) in nodes.iter().enumerate() {
+            host_fb.gather(&aliases[i..i + 1], &mut out);
+            ds.feature_gen.fill_row(v as u64, &mut want);
+            assert_eq!(out, crate::graph::FeatureGen::decode_row(&want), "node {v}");
+        }
+        host_fb.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sync_scratch_is_reused_across_calls() {
+        let (m, ds, fb) = setup();
+        let ex = extractor_with(
+            &m,
+            &ds,
+            fb.clone(),
+            64,
+            ExtractOptions { asynchronous: false, ..Default::default() },
+        );
+        ex.extract(&(0..8).collect::<Vec<u32>>());
+        let ptr1 = ex.sync_scratch.lock().unwrap().as_ptr();
+        let cap1 = ex.sync_scratch.lock().unwrap().capacity();
+        fb.release(&(0..8).collect::<Vec<u32>>());
+        ex.extract(&(100..108).collect::<Vec<u32>>());
+        let ptr2 = ex.sync_scratch.lock().unwrap().as_ptr();
+        assert_eq!(ptr1, ptr2, "scratch buffer must not reallocate per call");
+        assert_eq!(ex.sync_scratch.lock().unwrap().capacity(), cap1);
         fb.check_invariants().unwrap();
     }
 
@@ -358,7 +547,7 @@ mod tests {
             fb,
             ds.features.clone(),
             ExtractTarget::Device(m.pcie.clone()),
-            ExtractOptions { asynchronous: true, direct: false },
+            ExtractOptions { asynchronous: true, direct: false, ..Default::default() },
         );
         m.storage.cache.stats().reset();
         ex.extract(&(0..32).collect::<Vec<u32>>());

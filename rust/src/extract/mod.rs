@@ -1,5 +1,8 @@
-//! Extract stage: asynchronous two-phase feature extraction (Algorithm 1).
+//! Extract stage: asynchronous two-phase feature extraction (Algorithm 1)
+//! over coalesced multi-row segments (§4.4).
 
+pub mod coalesce;
 pub mod extractor;
 
+pub use coalesce::{plan_segments, CoalesceConfig, SegRow, Segment};
 pub use extractor::{ExtractOptions, ExtractTarget, Extractor};

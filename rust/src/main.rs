@@ -11,6 +11,12 @@
 //!   sim   simulated SSD + page cache (default; the paper's timing model)
 //!   os    real OS files via pread — requires an on-disk dataset, e.g.
 //!         `gnndrive gen-data --out d && gnndrive train --backend os --data d`
+//!
+//! Feature extraction coalesces per-row reads into multi-row segments
+//! (`--coalesce-bytes`, max segment span; `--coalesce-gap`, strict bound on
+//! the byte gap bridged between merged rows). `--coalesce-bytes 0` restores
+//! one request per row for ablation parity with the paper; the epoch
+//! summary's `reqs` / `align+` columns show the coalescing effect.
 
 use gnndrive::baselines::{build_system, SystemKind};
 use gnndrive::config::{Machine, MachineConfig, TrainConfig};
@@ -31,6 +37,16 @@ fn main() {
     .opt("model", "graphsage", "graphsage|gcn|gat")
     .opt("backend", "sim", "I/O backend: sim (simulated SSD) | os (real files via pread)")
     .opt("data", "", "on-disk dataset dir (gen-data output); required for --backend os")
+    .opt(
+        "coalesce-bytes",
+        "256KiB",
+        "max span of one coalesced feature-read segment; 0 = one request per row (ablation)",
+    )
+    .opt(
+        "coalesce-gap",
+        "16KiB",
+        "max byte gap bridged when merging feature rows into a segment (strict bound)",
+    )
     .opt("epochs", "1", "epochs to run")
     .opt("batches", "", "mini-batches per epoch (default: full epoch)")
     .opt("batch-size", "1000", "mini-batch size")
@@ -157,10 +173,28 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     };
+    let parse_size =
+        |key: &str| match gnndrive::util::units::parse_bytes(args.get_or_default(key)) {
+            Ok(v) => Ok(v as usize),
+            Err(e) => {
+                eprintln!("--{key}: {e}");
+                Err(2)
+            }
+        };
+    let coalesce_bytes = match parse_size("coalesce-bytes") {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let coalesce_gap = match parse_size("coalesce-gap") {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     let cfg = TrainConfig {
         batch_size: args.get_usize("batch-size").unwrap_or(1000),
         fanouts: parse_fanouts(args.get_or_default("fanouts")),
         batches_per_epoch: args.get("batches").and_then(|b| b.parse().ok()),
+        coalesce_bytes,
+        coalesce_gap,
         ..TrainConfig::default()
     };
     let epochs = args.get_usize("epochs").unwrap_or(1);

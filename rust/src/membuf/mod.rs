@@ -18,4 +18,4 @@ pub mod staging;
 pub use feature_buffer::{BatchPlan, FeatureBuffer, WaitHandle};
 pub use mutex_lru::{MlBatchPlan, MutexLruFeatureBuffer};
 pub use single_mutex::{SingleMutexFeatureBuffer, SmBatchPlan};
-pub use staging::{SlotRef, StagingArena, StagingBuffer};
+pub use staging::{SlotRef, StagingArena, StagingBuffer, WaveAlloc};

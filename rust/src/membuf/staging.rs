@@ -4,24 +4,30 @@
 //! nodes per mini-batch × row bytes — it exists solely to land direct-I/O
 //! reads from SSD before the asynchronous PCIe transfer into the device
 //! feature buffer, so host memory stays available for the sampling working
-//! set. Each extractor owns one [`StagingBuffer`]; slots are reused across
-//! mini-batches.
+//! set. Each extractor owns one [`StagingBuffer`]; the arena is reused
+//! across mini-batches.
 //!
-//! Slots are handed around as [`SlotRef`]s — plain `(arena, index)` handles
-//! into one contiguous byte arena. I/O completions write through them with a
-//! raw `memcpy` and readers decode straight out of the arena: there is no
-//! mutex per row anywhere on the submit/complete path. Safety rests on the
-//! extraction protocol (one in-flight request owns a slot range exclusively;
-//! the engine's completion queue provides the happens-before edge between
-//! the completion write and the harvesting reader).
+//! The arena is **range-granular**: a [`SlotRef`] names an arbitrary
+//! contiguous byte range, not a fixed one-row slot. The extractor's
+//! coalescing layer allocates one range per multi-row *segment* (a merged
+//! run of feature rows read by a single device request) through a per-wave
+//! bump allocator ([`WaveAlloc`]); the legacy one-row constructor
+//! ([`SlotRef::new`]) remains for engines/tests that address the arena as
+//! `slots × row_bytes`. I/O completions write through ranges with a raw
+//! `memcpy` and readers decode straight out of the arena: there is no mutex
+//! per row anywhere on the submit/complete path. Safety rests on the
+//! extraction protocol (one in-flight request owns its byte range
+//! exclusively; the engine's completion queue provides the happens-before
+//! edge between the completion write and the harvesting reader; the
+//! wave-end latch quiesces the arena before ranges are reissued).
 
 use crate::storage::{HostMemory, Reservation};
 use std::cell::UnsafeCell;
 use std::sync::Arc;
 
-/// A contiguous `slots × row_bytes` byte arena accessed through raw slot
-/// handles. The arena itself never synchronizes: callers uphold the
-/// single-owner-per-slot-range protocol described on [`SlotRef`].
+/// A contiguous byte arena accessed through raw range handles. The arena
+/// itself never synchronizes: callers uphold the single-owner-per-range
+/// protocol described on [`SlotRef`].
 pub struct StagingArena {
     data: Box<[UnsafeCell<u8>]>,
     row_bytes: usize,
@@ -50,53 +56,76 @@ impl StagingArena {
         self.row_bytes
     }
 
-    fn slot_ptr(&self, slot: usize) -> *mut u8 {
-        debug_assert!(slot < self.slots(), "slot {slot} out of range");
+    /// Total arena capacity in bytes (the wave allocator's budget).
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    fn byte_ptr(&self, off: usize) -> *mut u8 {
+        debug_assert!(off < self.data.len(), "offset {off} out of range");
         // `UnsafeCell<u8>` is `repr(transparent)`, so the boxed slice is a
         // contiguous byte buffer and in-bounds pointer arithmetic is valid.
-        self.data[slot * self.row_bytes].get()
+        self.data[off].get()
     }
 }
 
-/// Handle to one staging slot: the destination of an async read and the
-/// source of the subsequent decode into the feature buffer.
+/// Handle to one staging byte range: the destination of an async read and
+/// the source of the subsequent decode into the feature buffer. A range may
+/// hold a single feature row or a whole coalesced segment of them.
 ///
 /// Protocol (what makes the unsynchronized byte accesses sound):
-/// * while a request is in flight, its `[dst_off, dst_off+len)` range of the
-///   slot is owned exclusively by the serving I/O worker;
-/// * concurrent requests targeting the same slot use disjoint ranges;
+/// * while a request is in flight, its `[dst_off, dst_off+len)` sub-range is
+///   owned exclusively by the serving I/O worker;
+/// * concurrent requests use disjoint ranges (the wave allocator hands out
+///   non-overlapping ranges; they are not reissued until the wave latch);
 /// * the reader (extractor / PCIe completion) touches the bytes only after
 ///   harvesting the request's CQE, which happens-after the worker's write
 ///   via the completion queue's internal lock.
 #[derive(Clone)]
 pub struct SlotRef {
     arena: Arc<StagingArena>,
-    slot: usize,
+    start: usize,
+    len: usize,
 }
 
 impl SlotRef {
+    /// Legacy one-row handle: slot `i` of a `slots × row_bytes` arena.
     pub fn new(arena: Arc<StagingArena>, slot: usize) -> Self {
         debug_assert!(slot < arena.slots());
-        SlotRef { arena, slot }
+        let row = arena.row_bytes;
+        SlotRef { arena, start: slot * row, len: row }
+    }
+
+    /// Arbitrary byte range `[start, start+len)` of the arena (segment
+    /// destinations; the wave allocator mints these).
+    pub fn range(arena: Arc<StagingArena>, start: usize, len: usize) -> Self {
+        assert!(start + len <= arena.capacity(), "staging range out of bounds");
+        SlotRef { arena, start, len }
+    }
+
+    /// Sub-range view `[off, off+len)` of this range (one row of a segment).
+    pub fn sub(&self, off: usize, len: usize) -> Self {
+        assert!(off + len <= self.len, "sub-range out of bounds");
+        SlotRef { arena: self.arena.clone(), start: self.start + off, len }
     }
 
     pub fn len(&self) -> usize {
-        self.arena.row_bytes
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Copy `src` into the slot at `dst_off` (completion-side write; no
-    /// lock). Caller must own `[dst_off, dst_off+src.len())` per the slot
+    /// Copy `src` into the range at `dst_off` (completion-side write; no
+    /// lock). Caller must own `[dst_off, dst_off+src.len())` per the range
     /// protocol.
     pub fn write(&self, dst_off: usize, src: &[u8]) {
-        assert!(dst_off + src.len() <= self.len(), "slot write out of range");
+        assert!(dst_off + src.len() <= self.len, "slot write out of range");
         unsafe {
             std::ptr::copy_nonoverlapping(
                 src.as_ptr(),
-                self.arena.slot_ptr(self.slot).add(dst_off),
+                self.arena.byte_ptr(self.start + dst_off),
                 src.len(),
             );
         }
@@ -105,23 +134,21 @@ impl SlotRef {
     /// Mutable view of `[off, off+len)` for an I/O engine to read into.
     ///
     /// # Safety
-    /// The caller must own that byte range per the slot protocol: no other
+    /// The caller must own that byte range per the range protocol: no other
     /// thread may read or write it until the owning request's completion has
     /// been published through a synchronizing channel.
     #[allow(clippy::mut_from_ref)] // interior mutability via UnsafeCell
     pub unsafe fn slice_mut(&self, off: usize, len: usize) -> &mut [u8] {
-        assert!(off + len <= self.len(), "slot range out of bounds");
-        std::slice::from_raw_parts_mut(self.arena.slot_ptr(self.slot).add(off), len)
+        assert!(off + len <= self.len, "slot range out of bounds");
+        std::slice::from_raw_parts_mut(self.arena.byte_ptr(self.start + off), len)
     }
 
-    /// The slot's bytes (reader side). Sound only after the writes of every
-    /// in-flight request on this slot have been synchronized to this thread
+    /// The range's bytes (reader side). Sound only after the writes of every
+    /// in-flight request on this range have been synchronized to this thread
     /// (CQE harvested / wave latch passed) — the same protocol
     /// `FeatureBuffer::publish` already relies on.
     pub fn bytes(&self) -> &[u8] {
-        unsafe {
-            std::slice::from_raw_parts(self.arena.slot_ptr(self.slot), self.len())
-        }
+        unsafe { std::slice::from_raw_parts(self.arena.byte_ptr(self.start), self.len) }
     }
 }
 
@@ -146,14 +173,59 @@ impl StagingBuffer {
         self.arena.slots()
     }
 
-    /// Handle to slot `i` (cheap: an `Arc` clone + index; the ring and the
-    /// PCIe callback share the arena).
+    /// Handle to one-row slot `i` (cheap: an `Arc` clone + offsets; the ring
+    /// and the PCIe callback share the arena).
     pub fn slot(&self, i: usize) -> SlotRef {
         SlotRef::new(self.arena.clone(), i)
     }
 
+    /// Total arena bytes available to one wave of segments.
+    pub fn capacity_bytes(&self) -> usize {
+        self.arena.capacity()
+    }
+
+    /// Fresh bump allocator for one extraction wave. The caller must
+    /// quiesce every range of the previous wave (harvest its CQEs, pass the
+    /// wave latch) before allocating a new wave from the same buffer — that
+    /// hand-off is what makes reissuing arena bytes sound.
+    pub fn wave_alloc(&self) -> WaveAlloc<'_> {
+        WaveAlloc { buf: self, cursor: 0 }
+    }
+
     pub fn bytes(&self) -> u64 {
-        (self.slots() * self.row_bytes) as u64
+        self.arena.capacity() as u64
+    }
+}
+
+/// Per-wave bump allocator over a [`StagingBuffer`]'s arena: hands out
+/// disjoint contiguous ranges (one per coalesced segment) until the arena is
+/// exhausted, at which point the extractor flushes the wave and starts a new
+/// allocator. Replaces the fixed one-row slot scheme: a wave now packs
+/// variable-size segments instead of exactly `slots()` rows.
+pub struct WaveAlloc<'a> {
+    buf: &'a StagingBuffer,
+    cursor: usize,
+}
+
+impl WaveAlloc<'_> {
+    /// Allocate a contiguous `len`-byte range, or `None` if the remaining
+    /// arena cannot hold it (wave is full).
+    pub fn alloc(&mut self, len: usize) -> Option<SlotRef> {
+        if self.cursor + len > self.buf.capacity_bytes() {
+            return None;
+        }
+        let r = SlotRef::range(self.buf.arena.clone(), self.cursor, len);
+        self.cursor += len;
+        Some(r)
+    }
+
+    /// Bytes handed out so far in this wave.
+    pub fn used(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cursor == 0
     }
 }
 
@@ -197,6 +269,41 @@ mod tests {
         let a2 = a.clone();
         a2.write(0, &[0xAA]);
         assert_eq!(a.bytes()[0], 0xAA);
+    }
+
+    #[test]
+    fn range_handles_span_rows_and_subdivide() {
+        let arena = StagingArena::new(4, 8); // 32-byte arena
+        let seg = SlotRef::range(arena.clone(), 4, 20); // crosses row bounds
+        assert_eq!(seg.len(), 20);
+        let payload: Vec<u8> = (0..20).collect();
+        seg.write(0, &payload);
+        assert_eq!(seg.bytes(), &payload[..]);
+        // Row view inside the segment.
+        let row = seg.sub(8, 8);
+        assert_eq!(row.bytes(), &payload[8..16]);
+        // The underlying arena bytes line up (range 4+8..4+16).
+        let raw = SlotRef::range(arena, 12, 8);
+        assert_eq!(raw.bytes(), &payload[8..16]);
+    }
+
+    #[test]
+    fn wave_alloc_hands_out_disjoint_ranges_until_full() {
+        let host = HostMemory::new(1 << 20);
+        let sb = StagingBuffer::new(&host, 4, 8).unwrap(); // 32 bytes
+        let mut wave = sb.wave_alloc();
+        let a = wave.alloc(20).unwrap();
+        let b = wave.alloc(12).unwrap();
+        assert!(wave.alloc(1).is_none(), "arena exhausted");
+        assert_eq!(wave.used(), 32);
+        a.write(0, &[1u8; 20]);
+        b.write(0, &[2u8; 12]);
+        assert!(a.bytes().iter().all(|&x| x == 1));
+        assert!(b.bytes().iter().all(|&x| x == 2));
+        // A fresh wave reuses the arena from the start.
+        let mut wave2 = sb.wave_alloc();
+        let c = wave2.alloc(32).unwrap();
+        assert_eq!(c.bytes()[..20], [1u8; 20]);
     }
 
     #[test]

@@ -10,14 +10,14 @@
 //! exactly the paper's: a full queue blocks its producers.
 
 use crate::config::{Machine, TrainConfig};
-use crate::extract::{ExtractOptions, ExtractTarget, Extractor};
+use crate::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
 use crate::graph::Dataset;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::metrics::state::{self, Role, State};
 use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
 use crate::sim::queue::BoundedQueue;
 use crate::sim::Stopwatch;
-use crate::storage::IoBackend as _;
+use crate::storage::{EpochIoSnapshot, IoBackend as _};
 use crate::train::{TrainStats, TrainStep};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -82,13 +82,21 @@ pub struct EpochStats {
     /// Out-of-order completions observed by the trainer (inversion count).
     pub reorder_inversions: usize,
     pub ssd_read_bytes: u64,
+    /// Charged device read requests this epoch. With segment coalescing one
+    /// request covers a whole merged run of feature rows, so this dropping
+    /// while `ssd_read_bytes` holds (roughly) steady is the coalescing win.
+    pub ssd_read_requests: u64,
+    /// Direct-I/O alignment overhead this epoch: aligned − useful bytes
+    /// (§4.4 access-granularity amplification; shrinks when coalescing
+    /// dedups shared sectors, grows when gap bridging buys ops with bytes).
+    pub align_overhead_bytes: u64,
     pub truncated_edges: usize,
 }
 
 impl EpochStats {
     pub fn summary(&self) -> String {
         format!(
-            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  loss {:.4}  acc {:.3}",
+            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  reqs {:>7}  align+ {:>9}  loss {:.4}  acc {:.3}",
             crate::util::units::fmt_dur(self.epoch_time),
             crate::util::units::fmt_dur(self.prep_time),
             crate::util::units::fmt_dur(self.sample_time),
@@ -96,6 +104,8 @@ impl EpochStats {
             crate::util::units::fmt_dur(self.train_time),
             self.batches,
             crate::util::units::fmt_bytes(self.ssd_read_bytes),
+            self.ssd_read_requests,
+            crate::util::units::fmt_bytes(self.align_overhead_bytes),
             self.train.mean_loss(),
             self.train.accuracy(),
         )
@@ -202,6 +212,10 @@ impl GnnDrive {
                 ExtractOptions {
                     asynchronous: !cfg.sync_extract,
                     direct: !cfg.buffered_features,
+                    coalesce: CoalesceConfig {
+                        max_bytes: cfg.coalesce_bytes,
+                        gap_bytes: cfg.coalesce_gap,
+                    },
                 },
             )));
         }
@@ -271,7 +285,7 @@ impl GnnDrive {
         let truncated = AtomicUsize::new(0);
 
         let epoch_watch = Stopwatch::start(clock);
-        self.machine.backend.reset_io_stats();
+        let io_snap = EpochIoSnapshot::start(self.machine.backend.as_ref());
 
         std::thread::scope(|s| {
             // ---- samplers ----
@@ -435,6 +449,7 @@ impl GnnDrive {
         });
 
         let order = train_order.into_inner().unwrap();
+        let io = io_snap.totals(self.machine.backend.as_ref());
         EpochStats {
             epoch_time: epoch_watch.elapsed(),
             prep_time: Duration::ZERO,
@@ -444,12 +459,9 @@ impl GnnDrive {
             batches: order.len(),
             train: train_stats.into_inner().unwrap(),
             reorder_inversions: count_inversions(&order),
-            ssd_read_bytes: self
-                .machine
-                .backend
-                .io_counters()
-                .read_bytes
-                .load(Ordering::Relaxed),
+            ssd_read_bytes: io.read_bytes,
+            ssd_read_requests: io.reads,
+            align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: truncated.into_inner(),
         }
     }

@@ -44,11 +44,68 @@ use std::sync::Arc;
 
 /// Counters for direct-I/O alignment overhead (redundant bytes loaded when a
 /// request does not fit sector granularity — §4.4 "Access Granularity").
+///
+/// With segment coalescing, `useful_bytes` still counts only the genuinely
+/// requested row bytes while `aligned_bytes` counts the merged device span
+/// (shared sectors once, bridged gaps included), so the amplification ratio
+/// `aligned / useful` *drops* as coalescing merges rows.
 #[derive(Debug, Default)]
 pub struct DirectIoStats {
     pub requests: AtomicU64,
     pub useful_bytes: AtomicU64,
     pub aligned_bytes: AtomicU64,
+}
+
+impl DirectIoStats {
+    /// `(useful, aligned)` snapshot for per-epoch deltas (these counters are
+    /// process-cumulative; `reset_io_stats` intentionally leaves them alone).
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.useful_bytes.load(std::sync::atomic::Ordering::Relaxed),
+            self.aligned_bytes.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    /// Alignment-overhead bytes (aligned − useful) accumulated since `snap`.
+    pub fn overhead_since(&self, snap: (u64, u64)) -> u64 {
+        let (useful0, aligned0) = snap;
+        let (useful, aligned) = self.snapshot();
+        (aligned.saturating_sub(aligned0)).saturating_sub(useful.saturating_sub(useful0))
+    }
+}
+
+/// Start-of-epoch I/O bookmark: zeroes the backend's `io_counters` and pins
+/// the process-cumulative [`DirectIoStats`], so the per-epoch charged totals
+/// every training system reports are one `start`/`totals` pair instead of a
+/// hand-rolled snapshot at each call site.
+pub struct EpochIoSnapshot {
+    dio: (u64, u64),
+}
+
+/// Per-epoch charged-I/O totals derived from an [`EpochIoSnapshot`]
+/// (feeds `EpochStats::{ssd_read_bytes, ssd_read_requests,
+/// align_overhead_bytes}`).
+pub struct EpochIoTotals {
+    pub reads: u64,
+    pub read_bytes: u64,
+    pub align_overhead_bytes: u64,
+}
+
+impl EpochIoSnapshot {
+    pub fn start(backend: &dyn IoBackend) -> Self {
+        backend.reset_io_stats();
+        EpochIoSnapshot { dio: backend.direct_stats().snapshot() }
+    }
+
+    pub fn totals(&self, backend: &dyn IoBackend) -> EpochIoTotals {
+        use std::sync::atomic::Ordering;
+        let c = backend.io_counters();
+        EpochIoTotals {
+            reads: c.reads.load(Ordering::Relaxed),
+            read_bytes: c.read_bytes.load(Ordering::Relaxed),
+            align_overhead_bytes: backend.direct_stats().overhead_since(self.dio),
+        }
+    }
 }
 
 /// How a request travels through the I/O stack.
@@ -62,16 +119,27 @@ pub enum IoMode {
 }
 
 /// Submission queue entry: read `len` bytes at `offset` of `file` into the
-/// staging slot `dst` at `dst_off`, tagging the completion with `user_data`.
+/// staging range `dst` at `dst_off`, tagging the completion with `user_data`.
+///
+/// A request may carry a single feature row or a whole coalesced *segment*
+/// (several rows merged into one contiguous device read by the extractor's
+/// planning layer). The engine never sees the segment's row table — it
+/// serves one contiguous `[offset, offset+len)` read; the submitter scatters
+/// rows out of the completed range itself. `useful` is the genuinely
+/// requested byte count inside the range (Σ row bytes; `== len` for an
+/// un-coalesced request) and feeds [`DirectIoStats::useful_bytes`], so
+/// alignment-amplification accounting stays honest across merged spans.
 ///
 /// The destination is a lock-free [`SlotRef`] into a staging arena — the
-/// engine's completion path writes the slot bytes directly (no mutex per
-/// row). The submitter owns the slot for the request's lifetime and must not
-/// touch `[dst_off, dst_off + len)` until the matching CQE is harvested.
+/// engine's completion path writes the range bytes directly (no mutex per
+/// row). The submitter owns the range for the request's lifetime and must
+/// not touch `[dst_off, dst_off + len)` until the matching CQE is harvested.
 pub struct Sqe {
     pub file: SimFile,
     pub offset: u64,
     pub len: usize,
+    /// Requested (non-padding, non-gap) bytes within the range; `≤ len`.
+    pub useful: usize,
     pub dst: SlotRef,
     pub dst_off: usize,
     pub user_data: u64,
@@ -135,12 +203,31 @@ pub trait IoBackend: Send + Sync {
     fn read_direct(&self, file: &SimFile, offset: u64, buf: &mut [u8]);
 
     /// Direct-read accounting + data copy *without* the device-time charge;
-    /// returns the sector-aligned byte count. Async engines use this to
-    /// coalesce several requests into one [`IoBackend::charge_multi`].
-    fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize;
+    /// returns the sector-aligned byte count. Sugar for
+    /// [`IoBackend::read_direct_segment_nocharge`] with every byte useful.
+    fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize {
+        let useful = buf.len();
+        self.read_direct_segment_nocharge(file, offset, useful, buf)
+    }
+
+    /// Segment-granular direct read: fill `buf` from `[offset,
+    /// offset+buf.len())` (one contiguous, possibly multi-row span), record
+    /// **one** request in `direct_stats` with `useful` useful bytes and the
+    /// sector-aligned span as aligned bytes, and return that aligned span —
+    /// *without* the device-time charge. Async engines pair this with
+    /// [`IoBackend::charge_multi`]: one charged op per segment, so merged
+    /// rows stop paying per-row IOPS and duplicate-sector redundancy.
+    fn read_direct_segment_nocharge(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+    ) -> usize;
 
     /// Charge a coalesced batch of `ops` direct reads totalling `bytes`
-    /// (pairs with `read_direct_nocharge`). A no-op when `ops == 0`.
+    /// (pairs with `read_direct_nocharge` / `read_direct_segment_nocharge`).
+    /// A no-op when `ops == 0`.
     fn charge_multi(&self, ops: u64, bytes: usize);
 
     /// Buffered write: cache pages become resident; device time is charged

@@ -14,8 +14,8 @@
 use std::fs::File;
 use std::io;
 use std::os::unix::fs::FileExt;
-use std::path::Path;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
 
 /// Byte-addressed read-only store.
 pub trait Backing: Send + Sync {
@@ -25,6 +25,14 @@ pub trait Backing: Send + Sync {
     /// device is sized by `len`, and aligned reads may overhang).
     fn read_at(&self, offset: u64, buf: &mut [u8]);
 
+    /// Like `read_at`, but bypassing the OS page cache where the store can
+    /// (`O_DIRECT`). Default: plain `read_at` — only [`FileBacking`] has a
+    /// kernel cache to bypass; in-memory and procedural stores are their own
+    /// "device".
+    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) {
+        self.read_at(offset, buf)
+    }
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -32,17 +40,165 @@ pub trait Backing: Send + Sync {
 
 pub type BackingRef = Arc<dyn Backing>;
 
-/// Real file.
+/// `O_DIRECT` flag value per Linux arch ABI (not exposed by std; no libc in
+/// the offline build). Zero on platforms where we don't attempt direct I/O.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "x86")))]
+const O_DIRECT: i32 = 0o40000;
+#[cfg(all(target_os = "linux", any(target_arch = "aarch64", target_arch = "arm")))]
+const O_DIRECT: i32 = 0o200000;
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "x86", target_arch = "aarch64", target_arch = "arm")
+)))]
+const O_DIRECT: i32 = 0;
+
+/// `O_DIRECT` alignment unit for offset, length and buffer memory: 4 KiB
+/// covers every mainstream filesystem/device combination (logical block
+/// sizes are 512 or 4096).
+const DIO_ALIGN: usize = 4096;
+
+/// Heap buffer aligned for `O_DIRECT` reads.
+struct AlignedBuf {
+    ptr: *mut u8,
+    layout: std::alloc::Layout,
+}
+
+impl AlignedBuf {
+    fn new(len: usize) -> Self {
+        let layout = std::alloc::Layout::from_size_align(len.max(DIO_ALIGN), DIO_ALIGN)
+            .expect("aligned layout");
+        // SAFETY: non-zero size; allocation failure handled below.
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        assert!(!ptr.is_null(), "aligned allocation failed");
+        AlignedBuf { ptr, layout }
+    }
+
+    fn len(&self) -> usize {
+        self.layout.size()
+    }
+
+    fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: owned allocation of `layout.size()` bytes.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.layout.size()) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        // SAFETY: allocated with this exact layout in `new`.
+        unsafe { std::alloc::dealloc(self.ptr, self.layout) }
+    }
+}
+
+// SAFETY: exclusive ownership of the raw allocation.
+unsafe impl Send for AlignedBuf {}
+
+/// Real file. Plain reads go through the kernel page cache; direct reads
+/// ([`Backing::read_direct_at`]) use a lazily opened `O_DIRECT` descriptor
+/// with an aligned bounce buffer, falling back to the cached descriptor —
+/// with a one-time process warning — on filesystems that refuse the flag
+/// (tmpfs, some network mounts).
 pub struct FileBacking {
     file: File,
     len: u64,
+    path: PathBuf,
+    /// `Some(fd)` once an `O_DIRECT` open succeeded, `None` after a refusal.
+    direct: OnceLock<Option<File>>,
+}
+
+/// One warning per process when `O_DIRECT` is unavailable and the `-direct`
+/// path silently degrades to cached reads.
+fn warn_no_odirect(path: &Path, why: &str) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "warning: O_DIRECT unavailable for {path:?} ({why}); \
+             direct reads fall back to the OS page cache \
+             (alignment accounting is unaffected)"
+        );
+    });
 }
 
 impl FileBacking {
     pub fn open(path: &Path) -> io::Result<Self> {
         let file = File::open(path)?;
         let len = file.metadata()?.len();
-        Ok(FileBacking { file, len })
+        Ok(FileBacking { file, len, path: path.to_path_buf(), direct: OnceLock::new() })
+    }
+
+    /// The `O_DIRECT` descriptor, opened on first use; `None` (with a
+    /// one-time warning) when the platform or filesystem refuses it.
+    fn direct_file(&self) -> Option<&File> {
+        self.direct
+            .get_or_init(|| {
+                if O_DIRECT == 0 {
+                    warn_no_odirect(&self.path, "unsupported platform");
+                    return None;
+                }
+                use std::os::unix::fs::OpenOptionsExt;
+                match std::fs::OpenOptions::new()
+                    .read(true)
+                    .custom_flags(O_DIRECT)
+                    .open(&self.path)
+                {
+                    Ok(f) => Some(f),
+                    Err(e) => {
+                        warn_no_odirect(&self.path, &e.to_string());
+                        None
+                    }
+                }
+            })
+            .as_ref()
+    }
+
+    /// Serve `[offset, offset+buf.len())` through the `O_DIRECT` fd: read
+    /// the covering `DIO_ALIGN`-aligned span into an aligned bounce buffer,
+    /// then copy the requested window out. Returns false if the direct read
+    /// could not be performed (caller falls back to the cached fd).
+    fn try_read_odirect(&self, offset: u64, buf: &mut [u8]) -> bool {
+        // One reusable bounce buffer per I/O thread (grown to the largest
+        // span seen): direct reads are the extractor's hot path, and a
+        // fresh aligned allocation per request would be a malloc+memset per
+        // device read.
+        thread_local! {
+            static BOUNCE: std::cell::RefCell<Option<AlignedBuf>> =
+                std::cell::RefCell::new(None);
+        }
+        let Some(fd) = self.direct_file() else { return false };
+        let lo = offset / DIO_ALIGN as u64 * DIO_ALIGN as u64;
+        let hi = (offset + buf.len() as u64).div_ceil(DIO_ALIGN as u64) * DIO_ALIGN as u64;
+        let need = (hi - lo) as usize;
+        BOUNCE.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if !slot.as_ref().is_some_and(|b| b.len() >= need) {
+                *slot = Some(AlignedBuf::new(need));
+            }
+            let bounce = slot.as_mut().expect("bounce buffer just ensured");
+            let span = &mut bounce.bytes_mut()[..need];
+            // Fill only as far as the requested window needs, and stop at
+            // EOF: a short read at an unaligned file tail must NOT be
+            // retried — the follow-up offset/buffer/length would all be
+            // unaligned and O_DIRECT rejects that with EINVAL. The unread
+            // remainder is never copied out below.
+            let want = (offset + buf.len() as u64 - lo) as usize;
+            let mut filled = 0usize;
+            while filled < want && lo + (filled as u64) < self.len {
+                match fd.read_at(&mut span[filled..], lo + filled as u64) {
+                    Ok(0) => break,
+                    Ok(n) => filled += n,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        warn_no_odirect(&self.path, &e.to_string());
+                        return false;
+                    }
+                }
+            }
+            let start = (offset - lo) as usize;
+            let have = filled.saturating_sub(start).min(buf.len());
+            buf[..have].copy_from_slice(&span[start..start + have]);
+            buf[have..].fill(0);
+            true
+        })
     }
 }
 
@@ -62,6 +218,19 @@ impl Backing for FileBacking {
         self.file
             .read_exact_at(&mut buf[..avail], offset)
             .expect("backing file read failed");
+    }
+
+    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        if offset >= self.len {
+            buf.fill(0);
+            return;
+        }
+        if !self.try_read_odirect(offset, buf) {
+            self.read_at(offset, buf);
+        }
     }
 }
 
@@ -182,6 +351,29 @@ mod tests {
         let mut buf = [0u8; 10];
         b.read_at(50, &mut buf);
         assert_eq!(buf, [50, 51, 52, 53, 54, 55, 56, 57, 58, 59]);
+    }
+
+    #[test]
+    fn file_backing_direct_reads_match_cached_reads() {
+        // O_DIRECT (or its graceful fallback) must return byte-identical
+        // data at arbitrary offsets, including the zero-filled EOF overhang.
+        let dir = std::env::temp_dir().join("gnndrive_test_backing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("direct_{}.bin", std::process::id()));
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 249) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let b = FileBacking::open(&path).unwrap();
+        for (off, len) in [(0usize, 512usize), (700, 100), (4095, 2), (9_990, 64)] {
+            let mut cached = vec![0xAAu8; len];
+            let mut direct = vec![0x55u8; len];
+            b.read_at(off as u64, &mut cached);
+            b.read_direct_at(off as u64, &mut direct);
+            assert_eq!(cached, direct, "off={off} len={len}");
+        }
+        // Fully past-EOF direct read zero-fills.
+        let mut tail = vec![0xFFu8; 16];
+        b.read_direct_at(20_000, &mut tail);
+        assert!(tail.iter().all(|&x| x == 0));
     }
 
     #[test]

@@ -112,6 +112,22 @@ impl SimBackend {
     /// returns the sector-aligned byte count. The async engine uses this to
     /// coalesce several requests into one [`SsdSim::read_multi`] charge.
     pub fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize {
+        let useful = buf.len();
+        self.read_direct_segment_nocharge(file, offset, useful, buf)
+    }
+
+    /// Segment-granular variant: one request covering a contiguous
+    /// (possibly multi-row) span of which only `useful` bytes are genuinely
+    /// requested rows — the sector-aligned *span* is what the device serves
+    /// and what `aligned_bytes` records, so coalesced runs stop
+    /// double-counting shared sectors (§4.4).
+    pub fn read_direct_segment_nocharge(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+    ) -> usize {
         if buf.is_empty() {
             return 0;
         }
@@ -120,7 +136,7 @@ impl SimBackend {
         let hi = (offset + buf.len() as u64).div_ceil(sector) * sector;
         let aligned = (hi - lo) as usize;
         self.direct_stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.direct_stats.useful_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.direct_stats.useful_bytes.fetch_add(useful as u64, Ordering::Relaxed);
         self.direct_stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
         file.backing.read_at(offset, buf);
         aligned
@@ -170,8 +186,14 @@ impl IoBackend for SimBackend {
         SimBackend::read_direct(self, file, offset, buf)
     }
 
-    fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize {
-        SimBackend::read_direct_nocharge(self, file, offset, buf)
+    fn read_direct_segment_nocharge(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+    ) -> usize {
+        SimBackend::read_direct_segment_nocharge(self, file, offset, useful, buf)
     }
 
     fn charge_multi(&self, ops: u64, bytes: usize) {

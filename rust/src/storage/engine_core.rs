@@ -1,0 +1,179 @@
+//! Shared submit/harvest core of every [`AsyncIoEngine`](super::api::AsyncIoEngine).
+//!
+//! The sim ring ([`super::uring::Uring`]) and the OS-file `pread` pool
+//! ([`super::osfile::PreadPool`]) differ only in how their workers *serve* a
+//! request (simulated device charging vs. real positional reads). Everything
+//! else — the bounded SQ, the unbounded CQ, and the
+//! `submitted`/`inflight`/`harvested` counter discipline whose ordering
+//! invariants keep `pending_harvest` from wrapping — used to be duplicated
+//! and is now this one [`EngineCore`]. Engines hold a core, spawn their own
+//! worker loops over a [`WorkerPort`], and delegate the whole
+//! `AsyncIoEngine` surface to the core.
+
+use super::api::{Cqe, Sqe};
+use crate::sim::queue::BoundedQueue;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// SQ/CQ pair + counter discipline shared by every async engine.
+pub struct EngineCore {
+    /// Engine name for panic messages ("uring", "pread pool").
+    name: &'static str,
+    pub(crate) sq: Arc<BoundedQueue<Sqe>>,
+    cq: Arc<BoundedQueue<Cqe>>,
+    inflight: Arc<AtomicU64>,
+    pub(crate) submitted: AtomicU64,
+    harvested: AtomicU64,
+}
+
+/// A worker's handle into the core: pop submissions, publish completions.
+/// Cheap to clone into each worker thread.
+#[derive(Clone)]
+pub struct WorkerPort {
+    sq: Arc<BoundedQueue<Sqe>>,
+    cq: Arc<BoundedQueue<Cqe>>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl WorkerPort {
+    /// Pull one request; `Err` once the core is closed and drained.
+    pub fn pop(&self) -> Result<Sqe, crate::sim::queue::Closed> {
+        self.sq.pop()
+    }
+
+    /// Pull up to `n` requests in one wakeup.
+    pub fn pop_many(&self, n: usize) -> Result<Vec<Sqe>, crate::sim::queue::Closed> {
+        self.sq.pop_many(n)
+    }
+
+    /// Publish a completion. The CQ is effectively unbounded (see
+    /// [`EngineCore::new`]), so this never blocks the worker.
+    pub fn complete(&self, user_data: u64, bytes: usize) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = self.cq.push(Cqe { user_data, bytes });
+    }
+}
+
+impl EngineCore {
+    /// `depth` is the submission-queue size (max outstanding requests before
+    /// submitters block on backpressure).
+    pub fn new(name: &'static str, depth: usize) -> Self {
+        let depth = depth.max(1);
+        // The CQ is effectively unbounded: callers may legally submit an
+        // entire mini-batch before harvesting a single completion
+        // (Algorithm 1 does exactly that), so a bounded CQ would deadlock —
+        // workers blocking on a full CQ stop draining the SQ, and the
+        // submitter blocks on the full SQ. CQEs are small; memory is fine.
+        EngineCore {
+            name,
+            sq: Arc::new(BoundedQueue::<Sqe>::new(depth)),
+            cq: Arc::new(BoundedQueue::<Cqe>::new(usize::MAX / 2)),
+            inflight: Arc::new(AtomicU64::new(0)),
+            submitted: AtomicU64::new(0),
+            harvested: AtomicU64::new(0),
+        }
+    }
+
+    /// Handle for a worker thread.
+    pub fn worker_port(&self) -> WorkerPort {
+        WorkerPort {
+            sq: self.sq.clone(),
+            cq: self.cq.clone(),
+            inflight: self.inflight.clone(),
+        }
+    }
+
+    /// Submit one request. Blocks only if the SQ is full (ring
+    /// backpressure); the I/O itself proceeds asynchronously.
+    ///
+    /// Counters are incremented *before* the push (`submitted` first, see
+    /// `pending_harvest`) so a worker that completes the request
+    /// immediately never observes `inflight` below its own decrement. If
+    /// the push fails (core closed) the increments are unwound before
+    /// panicking so the counters stay balanced for any drop-order observer.
+    pub fn submit(&self, sqe: Sqe) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        if self.sq.push(sqe).is_err() {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.submitted.fetch_sub(1, Ordering::SeqCst);
+            panic!("{} closed", self.name);
+        }
+    }
+
+    /// Submit a batch of requests with amortized locking/wakeups.
+    ///
+    /// On a mid-batch closure only the enqueued prefix keeps its counter
+    /// increments (those requests will still be serviced and drained); the
+    /// rejected remainder's increments are unwound.
+    pub fn submit_batch(&self, sqes: Vec<Sqe>) {
+        let n = sqes.len() as u64;
+        self.submitted.fetch_add(n, Ordering::SeqCst);
+        self.inflight.fetch_add(n, Ordering::SeqCst);
+        if let Err(partial) = self.sq.push_all(sqes) {
+            let rejected = n - partial.pushed as u64;
+            self.inflight.fetch_sub(rejected, Ordering::SeqCst);
+            self.submitted.fetch_sub(rejected, Ordering::SeqCst);
+            panic!("{} closed", self.name);
+        }
+    }
+
+    /// Harvest one completion, blocking until available.
+    pub fn wait_cqe(&self) -> Cqe {
+        let cqe = self.cq.pop().unwrap_or_else(|_| panic!("{} closed", self.name));
+        self.harvested.fetch_add(1, Ordering::Relaxed);
+        cqe
+    }
+
+    /// Harvest exactly `n` completions, blocking as needed; wakeups are
+    /// amortized across bursts of ready CQEs.
+    pub fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let got = self
+                .cq
+                .pop_many(n - out.len())
+                .unwrap_or_else(|_| panic!("{} closed", self.name));
+            self.harvested.fetch_add(got.len() as u64, Ordering::Relaxed);
+            out.extend(got);
+        }
+        out
+    }
+
+    /// Harvest a completion if one is ready.
+    pub fn peek_cqe(&self) -> Option<Cqe> {
+        let cqe = self.cq.try_pop();
+        if cqe.is_some() {
+            self.harvested.fetch_add(1, Ordering::Relaxed);
+        }
+        cqe
+    }
+
+    /// Outstanding requests (submitted − completed).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Completions not yet harvested by the caller.
+    ///
+    /// The three counters cannot be read in one shot, so the load *order*
+    /// is what keeps the difference non-negative: `harvested` and
+    /// `inflight` are read first and `submitted` last. Whatever races in
+    /// between can only grow `submitted` relative to the two snapshots
+    /// (`submitted` is incremented before `inflight` on submit, and
+    /// `inflight` is decremented before `harvested` is incremented on the
+    /// completion path), so the subtraction never wraps. The
+    /// `saturating_sub` is a belt-and-braces floor, not the fix.
+    pub fn pending_harvest(&self) -> u64 {
+        let harvested = self.harvested.load(Ordering::SeqCst);
+        let inflight = self.inflight.load(Ordering::SeqCst);
+        let submitted = self.submitted.load(Ordering::SeqCst);
+        submitted.saturating_sub(harvested + inflight)
+    }
+
+    /// Close both queues (engine shutdown; workers drain and exit).
+    pub fn close(&self) {
+        self.sq.close();
+        self.cq.close();
+    }
+}

@@ -13,23 +13,50 @@
 //!   with the sim io_uring ([`uring::Uring`]) as its async engine; timing is
 //!   charged by sleeping on a scaled clock, bytes are real.
 //!   [`osfile::OsFileBackend`] (`--backend os`): real `pread` over
-//!   [`backing::FileBacking`], the OS page cache as the buffered path, and a
-//!   `pread` thread pool ([`osfile::PreadPool`]) as its async engine;
-//!   charges degrade to pure accounting.
+//!   [`backing::FileBacking`], the OS page cache as the buffered path
+//!   (direct reads use a real `O_DIRECT` descriptor where the filesystem
+//!   grants it, with graceful cached fallback), and a `pread` thread pool
+//!   ([`osfile::PreadPool`]) as its async engine; charges degrade to pure
+//!   accounting. Both async engines share one submit/harvest core
+//!   ([`engine_core::EngineCore`]), so the SQ/CQ + counter ordering
+//!   invariants live in exactly one place.
 //! * **Backings** — where bytes live ([`backing`]): a real file, process
 //!   memory, or a deterministic procedural generator. Both backends read
 //!   through the same [`SimFile`] handle, so a dataset can move between
 //!   them unchanged.
 //!
+//! ## Segment-granular requests
+//!
+//! Async requests ([`api::Sqe`]) are **segment-granular**: one SQE names a
+//! single contiguous `[offset, offset+len)` span that may cover several
+//! feature rows merged by the extractor's coalescing planner
+//! ([`crate::extract::coalesce`]). Ownership is split deliberately:
+//!
+//! * **The submitter owns the row table.** Engines never see which rows
+//!   live inside a segment — they serve one contiguous read into one
+//!   staging range and complete it; the extractor scatters rows out of the
+//!   completed range. This keeps the engine contract minimal (and a future
+//!   real-io_uring engine trivial).
+//! * **The backend owns segment accounting.** A direct segment goes through
+//!   [`IoBackend::read_direct_segment_nocharge`], which records one
+//!   request, `Sqe::useful` useful bytes (Σ row bytes) and the
+//!   sector-aligned span as aligned bytes; the engine then pairs it with
+//!   one [`IoBackend::charge_multi`] op. So merged rows pay one IOPS and
+//!   one span — duplicate-sector redundancy disappears from both the
+//!   charges and [`api::DirectIoStats`], and bridged gap bytes show up
+//!   honestly as alignment overhead.
+//!
 //! What a backend must guarantee (alignment accounting, counter balance,
 //! completion synchronization) is specified on [`api::IoBackend`] and
-//! enforced for both implementations by `tests/backend_conformance.rs`.
-//! Memory budgets ([`mem`]) and the PCIe link model ([`pcie`]) are
-//! backend-independent substrate.
+//! enforced for both implementations by `tests/backend_conformance.rs`
+//! (including the coalescing suite: byte parity, strictly fewer charged
+//! requests, gap-boundary behavior). Memory budgets ([`mem`]) and the PCIe
+//! link model ([`pcie`]) are backend-independent substrate.
 
 pub mod api;
 pub mod backing;
 pub mod engine;
+pub mod engine_core;
 pub mod mem;
 pub mod osfile;
 pub mod page_cache;
@@ -38,10 +65,12 @@ pub mod ssd;
 pub mod uring;
 
 pub use api::{
-    AsyncIoEngine, BackendKind, Cqe, DirectIoStats, IoBackend, IoMode, Sqe,
+    AsyncIoEngine, BackendKind, Cqe, DirectIoStats, EpochIoSnapshot, EpochIoTotals, IoBackend,
+    IoMode, Sqe,
 };
 pub use backing::{Backing, BackingRef, FileBacking, MemBacking, ProceduralBacking};
 pub use engine::{SimBackend, SimFile, Storage};
+pub use engine_core::{EngineCore, WorkerPort};
 pub use mem::{DeviceMemory, HostMemory, OutOfMemory, Reservation};
 pub use osfile::{OsFileBackend, PreadPool};
 pub use page_cache::{DataKind, FileId, PageCache, PAGE_SIZE};

@@ -7,20 +7,26 @@
 //! reads go through the *real* OS page cache — there is nothing to
 //! simulate), and "charges" degrade to pure accounting so
 //! `EpochStats::ssd_read_bytes` keeps meaning the charged byte volume.
-//! Direct reads still round out to sector alignment in the stats, so the
-//! §4.4 redundancy analysis stays comparable across backends.
+//! Direct reads round out to sector alignment in the stats *and* go through
+//! the backing's `O_DIRECT` path when the filesystem grants it
+//! ([`crate::storage::backing::Backing::read_direct_at`]; graceful fallback
+//! to cached `pread` with a one-time warning otherwise), so the `-direct`
+//! ablation is real on hardware and the §4.4 redundancy analysis stays
+//! comparable across backends.
 //!
 //! Its asynchronous engine is [`PreadPool`]: a plain thread pool draining a
 //! bounded submission queue with one positional read per request — the
-//! classic libaio-emulation shape. Unlike the sim [`super::uring::Uring`]
-//! it does not coalesce device charges (there is no simulated device to
-//! keep honest); each request is accounted individually.
+//! classic libaio-emulation shape. A request may be a coalesced multi-row
+//! *segment*: the pool serves it as one contiguous `pread`, which is exactly
+//! the mostly-sequential access pattern the coalescing planner exists to
+//! produce. The SQ/CQ + counter discipline is the shared
+//! [`super::engine_core::EngineCore`].
 
 use super::api::{AsyncIoEngine, Cqe, DirectIoStats, IoBackend, IoMode, Sqe};
 use super::engine::SimFile;
+use super::engine_core::EngineCore;
 use super::ssd::SsdCounters;
-use crate::sim::queue::BoundedQueue;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -87,15 +93,23 @@ impl IoBackend for OsFileBackend {
         self.charge_multi(u64::from(aligned > 0), aligned);
     }
 
-    fn read_direct_nocharge(&self, file: &SimFile, offset: u64, buf: &mut [u8]) -> usize {
+    fn read_direct_segment_nocharge(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+    ) -> usize {
         if buf.is_empty() {
             return 0;
         }
         let aligned = self.aligned_len(offset, buf.len());
         self.direct_stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.direct_stats.useful_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.direct_stats.useful_bytes.fetch_add(useful as u64, Ordering::Relaxed);
         self.direct_stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
-        file.backing.read_at(offset, buf);
+        // Real O_DIRECT when the backing supports it (FileBacking on a
+        // filesystem that grants the flag); cached pread fallback otherwise.
+        file.backing.read_direct_at(offset, buf);
         aligned
     }
 
@@ -164,128 +178,80 @@ impl IoBackend for OsFileBackend {
 /// Thread-pool asynchronous engine over any [`IoBackend`]: N workers drain
 /// a bounded submission queue with one positional read per request and
 /// publish completions onto an unbounded completion queue. Same
-/// submit/harvest contract (and counter discipline) as the sim ring.
+/// submit/harvest contract (and shared [`EngineCore`] counter discipline)
+/// as the sim ring. Each direct request — row or coalesced segment — is one
+/// `pread` and one charged op.
 pub struct PreadPool {
-    sq: Arc<BoundedQueue<Sqe>>,
-    cq: Arc<BoundedQueue<Cqe>>,
-    inflight: Arc<AtomicU64>,
-    submitted: AtomicU64,
-    harvested: AtomicU64,
+    core: EngineCore,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl PreadPool {
     pub fn new(backend: Arc<dyn IoBackend>, depth: usize, threads: usize) -> Self {
         let depth = depth.max(1);
-        let sq = Arc::new(BoundedQueue::<Sqe>::new(depth));
-        // Unbounded CQ for the same deadlock-avoidance reason as the sim
-        // ring: a whole mini-batch may be submitted before any harvest.
-        let cq = Arc::new(BoundedQueue::<Cqe>::new(usize::MAX / 2));
-        let inflight = Arc::new(AtomicU64::new(0));
+        let core = EngineCore::new("pread pool", depth);
         let workers = (0..threads.max(1).min(depth))
             .map(|_| {
-                let sq = sq.clone();
-                let cq = cq.clone();
+                let port = core.worker_port();
                 let backend = backend.clone();
-                let inflight = inflight.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
-                    while let Ok(sqe) = sq.pop() {
+                    while let Ok(sqe) = port.pop() {
                         let dst = unsafe { sqe.dst.slice_mut(sqe.dst_off, sqe.len) };
                         match sqe.mode {
                             IoMode::Direct => {
-                                let aligned =
-                                    backend.read_direct_nocharge(&sqe.file, sqe.offset, dst);
+                                let aligned = backend.read_direct_segment_nocharge(
+                                    &sqe.file, sqe.offset, sqe.useful, dst,
+                                );
                                 backend.charge_multi(1, aligned);
                             }
                             IoMode::Buffered => {
                                 backend.read_buffered(&sqe.file, sqe.offset, dst);
                             }
                         }
-                        inflight.fetch_sub(1, Ordering::Relaxed);
-                        let _ = cq.push(Cqe { user_data: sqe.user_data, bytes: sqe.len });
+                        port.complete(sqe.user_data, sqe.len);
                     }
                     crate::metrics::state::deregister();
                 })
             })
             .collect();
-        PreadPool {
-            sq,
-            cq,
-            inflight,
-            submitted: AtomicU64::new(0),
-            harvested: AtomicU64::new(0),
-            workers,
-        }
+        PreadPool { core, workers }
     }
 }
 
 impl AsyncIoEngine for PreadPool {
-    // Counter discipline mirrors `Uring`: `submitted` then `inflight`
-    // before the push; unwound on a closed queue; `pending_harvest` loads
-    // `submitted` last so the difference cannot wrap.
     fn submit(&self, sqe: Sqe) {
-        self.submitted.fetch_add(1, Ordering::SeqCst);
-        self.inflight.fetch_add(1, Ordering::SeqCst);
-        if self.sq.push(sqe).is_err() {
-            self.inflight.fetch_sub(1, Ordering::SeqCst);
-            self.submitted.fetch_sub(1, Ordering::SeqCst);
-            panic!("pread pool closed");
-        }
+        self.core.submit(sqe)
     }
 
     fn submit_batch(&self, sqes: Vec<Sqe>) {
-        let n = sqes.len() as u64;
-        self.submitted.fetch_add(n, Ordering::SeqCst);
-        self.inflight.fetch_add(n, Ordering::SeqCst);
-        if let Err(partial) = self.sq.push_all(sqes) {
-            let rejected = n - partial.pushed as u64;
-            self.inflight.fetch_sub(rejected, Ordering::SeqCst);
-            self.submitted.fetch_sub(rejected, Ordering::SeqCst);
-            panic!("pread pool closed");
-        }
+        self.core.submit_batch(sqes)
     }
 
     fn wait_cqe(&self) -> Cqe {
-        let cqe = self.cq.pop().expect("pread pool closed");
-        self.harvested.fetch_add(1, Ordering::Relaxed);
-        cqe
+        self.core.wait_cqe()
     }
 
     fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
-        let mut out = Vec::with_capacity(n);
-        while out.len() < n {
-            let got = self.cq.pop_many(n - out.len()).expect("pread pool closed");
-            self.harvested.fetch_add(got.len() as u64, Ordering::Relaxed);
-            out.extend(got);
-        }
-        out
+        self.core.wait_cqes(n)
     }
 
     fn peek_cqe(&self) -> Option<Cqe> {
-        let cqe = self.cq.try_pop();
-        if cqe.is_some() {
-            self.harvested.fetch_add(1, Ordering::Relaxed);
-        }
-        cqe
+        self.core.peek_cqe()
     }
 
     fn inflight(&self) -> u64 {
-        self.inflight.load(Ordering::Relaxed)
+        self.core.inflight()
     }
 
     fn pending_harvest(&self) -> u64 {
-        let harvested = self.harvested.load(Ordering::SeqCst);
-        let inflight = self.inflight.load(Ordering::SeqCst);
-        let submitted = self.submitted.load(Ordering::SeqCst);
-        submitted.saturating_sub(harvested + inflight)
+        self.core.pending_harvest()
     }
 }
 
 impl Drop for PreadPool {
     fn drop(&mut self) {
-        self.sq.close();
-        self.cq.close();
+        self.core.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -342,6 +308,7 @@ mod tests {
                 file: file.clone(),
                 offset: i * 512,
                 len: 512,
+                useful: 512,
                 dst: dst.clone(),
                 dst_off: (i * 512) as usize,
                 user_data: i,
@@ -361,6 +328,44 @@ mod tests {
     }
 
     #[test]
+    fn segment_request_is_one_pread_and_one_charge() {
+        // A coalesced 6-row segment over a real file: one request, one
+        // charged op of the aligned span, useful bytes = only the rows.
+        let dir = std::env::temp_dir().join("gnndrive_osfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("seg_{}.bin", std::process::id()));
+        std::fs::write(&path, (0..16384u32).map(|i| (i % 251) as u8).collect::<Vec<u8>>())
+            .unwrap();
+        let file = SimFile::new(
+            FileId::new(8, DataKind::Features),
+            Arc::new(FileBacking::open(&path).unwrap()),
+        );
+        let be: Arc<dyn IoBackend> = Arc::new(OsFileBackend::new(512));
+        let pool = PreadPool::new(be.clone(), 4, 2);
+        let arena = StagingArena::new(1, 3072);
+        pool.submit(Sqe {
+            file,
+            offset: 1024,
+            len: 3072, // rows at [1024,1536) and [3584,4096) plus the gap
+            useful: 1024,
+            dst: SlotRef::new(arena.clone(), 0),
+            dst_off: 0,
+            user_data: 3,
+            mode: IoMode::Direct,
+        });
+        let cqe = pool.wait_cqe();
+        assert_eq!(cqe.user_data, 3);
+        let dst = SlotRef::new(arena, 0);
+        for (i, &b) in dst.bytes().iter().enumerate() {
+            assert_eq!(b, ((1024 + i) % 251) as u8, "byte {i}");
+        }
+        assert_eq!(be.io_counters().reads.load(Ordering::Relaxed), 1);
+        assert_eq!(be.io_counters().read_bytes.load(Ordering::Relaxed), 3072);
+        assert_eq!(be.direct_stats().useful_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(be.direct_stats().aligned_bytes.load(Ordering::Relaxed), 3072);
+    }
+
+    #[test]
     fn backend_factory_builds_pool_engine() {
         let be = Arc::new(OsFileBackend::new(512));
         let engine = be.clone().async_engine(8);
@@ -370,6 +375,7 @@ mod tests {
             file: f,
             offset: 100,
             len: 1024,
+            useful: 1024,
             dst: SlotRef::new(arena, 0),
             dst_off: 0,
             user_data: 42,

@@ -6,15 +6,23 @@
 //! harvests CQEs. "Kernel" service workers pull SQEs, perform the backend
 //! read (on the sim backend: sleeping out the service time, so concurrency
 //! up to the ring depth overlaps request latencies) and write the real bytes
-//! straight into the destination staging slot — no per-row mutex anywhere on
-//! the completion path. This is the substrate of GNNDrive's asynchronous
+//! straight into the destination staging range — no per-row mutex anywhere
+//! on the completion path. This is the substrate of GNNDrive's asynchronous
 //! feature extraction: one extractor thread drives hundreds of in-flight
 //! loads with no per-request context switch on its own thread.
+//!
+//! An SQE may be a coalesced *segment* (several feature rows merged into one
+//! contiguous span by the extractor's planner): the worker serves it as one
+//! device read via [`IoBackend::read_direct_segment_nocharge`], so a merged
+//! run of rows costs one IOPS charge and one aligned span instead of per-row
+//! sector redundancy. The row table stays with the submitter; the ring only
+//! ever sees contiguous reads.
 //!
 //! The ring is generic over [`IoBackend`]: it implements [`AsyncIoEngine`]
 //! and the sim backend mints it from [`IoBackend::async_engine`]. (The
 //! OS-file backend uses its own `pread` thread pool instead — see
-//! [`super::osfile::PreadPool`].)
+//! [`super::osfile::PreadPool`].) The SQ/CQ + counter discipline both
+//! engines share lives in [`super::engine_core::EngineCore`].
 //!
 //! Service workers are capped (default 32 per ring) — enough to saturate the
 //! device model's IOPS/queue-depth ceilings, above which extra in-flight
@@ -22,17 +30,12 @@
 
 use super::api::{AsyncIoEngine, IoBackend};
 pub use super::api::{Cqe, IoMode, Sqe};
-use crate::sim::queue::BoundedQueue;
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::engine_core::EngineCore;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 pub struct Uring {
-    sq: Arc<BoundedQueue<Sqe>>,
-    cq: Arc<BoundedQueue<Cqe>>,
-    inflight: Arc<AtomicU64>,
-    submitted: AtomicU64,
-    harvested: AtomicU64,
+    core: EngineCore,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -40,14 +43,7 @@ impl Uring {
     /// `depth` is the ring size (max outstanding requests).
     pub fn new(backend: Arc<dyn IoBackend>, depth: usize) -> Self {
         let depth = depth.max(1);
-        let sq = Arc::new(BoundedQueue::<Sqe>::new(depth));
-        // The CQ is effectively unbounded: callers may legally submit an
-        // entire mini-batch before harvesting a single completion
-        // (Algorithm 1 does exactly that), so a bounded CQ would deadlock —
-        // workers blocking on a full CQ stop draining the SQ, and the
-        // submitter blocks on the full SQ. CQEs are small; memory is fine.
-        let cq = Arc::new(BoundedQueue::<Cqe>::new(usize::MAX / 2));
-        let inflight = Arc::new(AtomicU64::new(0));
+        let core = EngineCore::new("uring", depth);
         let worker_count = depth.min(32);
         // Workers drain the SQ in small chunks and charge the device once
         // per chunk (charge_multi): sustained IOPS/bandwidth are identical
@@ -57,15 +53,13 @@ impl Uring {
         let chunk = depth.clamp(1, 8);
         let workers = (0..worker_count)
             .map(|_| {
-                let sq = sq.clone();
-                let cq = cq.clone();
+                let port = core.worker_port();
                 let backend = backend.clone();
-                let inflight = inflight.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
-                    while let Ok(sqes) = sq.pop_many(chunk) {
+                    while let Ok(sqes) = port.pop_many(chunk) {
                         // Phase 1: copy data + per-request accounting,
-                        // reading straight into each request's staging-slot
+                        // reading straight into each request's staging
                         // range (this worker owns the range until the CQE
                         // is published — see the SlotRef protocol).
                         let mut direct_ops = 0u64;
@@ -75,8 +69,9 @@ impl Uring {
                             match sqe.mode {
                                 IoMode::Direct => {
                                     direct_ops += 1;
-                                    direct_bytes +=
-                                        backend.read_direct_nocharge(&sqe.file, sqe.offset, dst);
+                                    direct_bytes += backend.read_direct_segment_nocharge(
+                                        &sqe.file, sqe.offset, sqe.useful, dst,
+                                    );
                                 }
                                 IoMode::Buffered => {
                                     // Page-cache semantics are per-request;
@@ -86,152 +81,54 @@ impl Uring {
                             }
                         }
                         // Phase 2: one coalesced device charge for the
-                        // chunk's direct requests.
+                        // chunk's direct requests (one op per segment).
                         backend.charge_multi(direct_ops, direct_bytes);
                         // Phase 3: publish completions.
                         for sqe in &sqes {
-                            inflight.fetch_sub(1, Ordering::Relaxed);
-                            // CQ is unbounded; push never blocks (see new()).
-                            let _ = cq.push(Cqe { user_data: sqe.user_data, bytes: sqe.len });
+                            port.complete(sqe.user_data, sqe.len);
                         }
                     }
                     crate::metrics::state::deregister();
                 })
             })
             .collect();
-        Uring {
-            sq,
-            cq,
-            inflight,
-            submitted: AtomicU64::new(0),
-            harvested: AtomicU64::new(0),
-            workers,
-        }
-    }
-
-    /// Submit one request. Blocks only if the SQ is full (ring backpressure);
-    /// the I/O itself proceeds asynchronously.
-    ///
-    /// Counters are incremented *before* the push (`submitted` first, see
-    /// `pending_harvest`) so a worker that completes the request
-    /// immediately never observes `inflight` below its own decrement. If
-    /// the push fails (ring closed) the increments are unwound before
-    /// panicking so the counters stay balanced for any drop-order observer.
-    pub fn submit(&self, sqe: Sqe) {
-        self.submitted.fetch_add(1, Ordering::SeqCst);
-        self.inflight.fetch_add(1, Ordering::SeqCst);
-        if self.sq.push(sqe).is_err() {
-            self.inflight.fetch_sub(1, Ordering::SeqCst);
-            self.submitted.fetch_sub(1, Ordering::SeqCst);
-            panic!("uring closed");
-        }
-    }
-
-    /// Submit a batch of requests with amortized locking/wakeups.
-    ///
-    /// On a mid-batch closure only the enqueued prefix keeps its counter
-    /// increments (those requests will still be serviced and drained); the
-    /// rejected remainder's increments are unwound — the pre-fix code
-    /// leaked the whole batch into `inflight`/`submitted` whenever
-    /// `push_all` failed on a closed queue.
-    pub fn submit_batch(&self, sqes: Vec<Sqe>) {
-        let n = sqes.len() as u64;
-        self.submitted.fetch_add(n, Ordering::SeqCst);
-        self.inflight.fetch_add(n, Ordering::SeqCst);
-        if let Err(partial) = self.sq.push_all(sqes) {
-            let rejected = n - partial.pushed as u64;
-            self.inflight.fetch_sub(rejected, Ordering::SeqCst);
-            self.submitted.fetch_sub(rejected, Ordering::SeqCst);
-            panic!("uring closed");
-        }
-    }
-
-    /// Harvest one completion, blocking until available.
-    pub fn wait_cqe(&self) -> Cqe {
-        let cqe = self.cq.pop().expect("uring closed");
-        self.harvested.fetch_add(1, Ordering::Relaxed);
-        cqe
-    }
-
-    /// Harvest exactly `n` completions, blocking as needed; wakeups are
-    /// amortized across bursts of ready CQEs.
-    pub fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
-        let mut out = Vec::with_capacity(n);
-        while out.len() < n {
-            let got = self.cq.pop_many(n - out.len()).expect("uring closed");
-            self.harvested.fetch_add(got.len() as u64, Ordering::Relaxed);
-            out.extend(got);
-        }
-        out
-    }
-
-    /// Harvest a completion if one is ready.
-    pub fn peek_cqe(&self) -> Option<Cqe> {
-        let cqe = self.cq.try_pop();
-        if cqe.is_some() {
-            self.harvested.fetch_add(1, Ordering::Relaxed);
-        }
-        cqe
-    }
-
-    /// Outstanding requests (submitted − completed).
-    pub fn inflight(&self) -> u64 {
-        self.inflight.load(Ordering::Relaxed)
-    }
-
-    /// Completions not yet harvested by the caller.
-    ///
-    /// The three counters cannot be read in one shot, so the load *order*
-    /// is what keeps the difference non-negative: `harvested` and
-    /// `inflight` are read first and `submitted` last. Whatever races in
-    /// between can only grow `submitted` relative to the two snapshots
-    /// (`submitted` is incremented before `inflight` on submit, and
-    /// `inflight` is decremented before `harvested` is incremented on the
-    /// completion path), so the subtraction never wraps — the pre-fix code
-    /// read `submitted` first and could transiently report ~u64::MAX. The
-    /// `saturating_sub` is a belt-and-braces floor, not the fix.
-    pub fn pending_harvest(&self) -> u64 {
-        let harvested = self.harvested.load(Ordering::SeqCst);
-        let inflight = self.inflight.load(Ordering::SeqCst);
-        let submitted = self.submitted.load(Ordering::SeqCst);
-        submitted.saturating_sub(harvested + inflight)
+        Uring { core, workers }
     }
 }
 
 impl AsyncIoEngine for Uring {
     fn submit(&self, sqe: Sqe) {
-        Uring::submit(self, sqe)
+        self.core.submit(sqe)
     }
 
     fn submit_batch(&self, sqes: Vec<Sqe>) {
-        Uring::submit_batch(self, sqes)
+        self.core.submit_batch(sqes)
     }
 
     fn wait_cqe(&self) -> Cqe {
-        Uring::wait_cqe(self)
+        self.core.wait_cqe()
     }
 
     fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
-        Uring::wait_cqes(self, n)
+        self.core.wait_cqes(n)
     }
 
     fn peek_cqe(&self) -> Option<Cqe> {
-        Uring::peek_cqe(self)
+        self.core.peek_cqe()
     }
 
     fn inflight(&self) -> u64 {
-        Uring::inflight(self)
+        self.core.inflight()
     }
 
     fn pending_harvest(&self) -> u64 {
-        Uring::pending_harvest(self)
+        self.core.pending_harvest()
     }
 }
 
 impl Drop for Uring {
     fn drop(&mut self) {
-        self.sq.close();
-        self.cq.close();
+        self.core.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -248,6 +145,7 @@ mod tests {
     use crate::storage::mem::HostMemory;
     use crate::storage::page_cache::{DataKind, FileId, PageCache};
     use crate::storage::ssd::{SsdConfig, SsdSim};
+    use std::sync::atomic::Ordering;
     use std::time::Instant;
 
     fn setup() -> (Storage, SimFile) {
@@ -263,6 +161,19 @@ mod tests {
         (storage, file)
     }
 
+    fn row_sqe(file: &SimFile, dst: SlotRef, i: u64) -> Sqe {
+        Sqe {
+            file: file.clone(),
+            offset: i * 512,
+            len: 512,
+            useful: 512,
+            dst,
+            dst_off: (i * 512) as usize,
+            user_data: i,
+            mode: IoMode::Direct,
+        }
+    }
+
     #[test]
     fn completions_carry_real_bytes() {
         let (storage, file) = setup();
@@ -270,15 +181,7 @@ mod tests {
         let arena = StagingArena::new(1, 4 * 512);
         let dst = SlotRef::new(arena, 0);
         for i in 0..4u64 {
-            ring.submit(Sqe {
-                file: file.clone(),
-                offset: i * 512,
-                len: 512,
-                dst: dst.clone(),
-                dst_off: (i * 512) as usize,
-                user_data: i,
-                mode: IoMode::Direct,
-            });
+            ring.submit(row_sqe(&file, dst.clone(), i));
         }
         let mut seen = Vec::new();
         for _ in 0..4 {
@@ -290,6 +193,40 @@ mod tests {
         for (i, &b) in dst.bytes().iter().enumerate() {
             assert_eq!(b, (i % 241) as u8, "byte {i}");
         }
+    }
+
+    #[test]
+    fn segment_sqe_reads_span_and_charges_once() {
+        // One multi-row segment: a single SQE covering 4 rows charges one
+        // request of the merged span, with useful < aligned accounting.
+        let (storage, file) = setup();
+        let ring = Uring::new(Arc::new(storage.clone()), 8);
+        let arena = StagingArena::new(1, 4096);
+        let dst = SlotRef::new(arena, 0);
+        storage.ssd.reset_stats();
+        ring.submit(Sqe {
+            file: file.clone(),
+            offset: 256, // unaligned start: span [0, 4608) once sector-aligned
+            len: 4096,
+            useful: 2048, // pretend only half the span is requested rows
+            dst: dst.clone(),
+            dst_off: 0,
+            user_data: 7,
+            mode: IoMode::Direct,
+        });
+        let cqe = ring.wait_cqe();
+        assert_eq!(cqe.user_data, 7);
+        assert_eq!(cqe.bytes, 4096);
+        for (i, &b) in dst.bytes().iter().enumerate() {
+            assert_eq!(b, ((256 + i) % 241) as u8, "byte {i}");
+        }
+        assert_eq!(storage.ssd.counters().reads.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            storage.ssd.counters().read_bytes.load(Ordering::Relaxed),
+            4608, // [0, 4608): 256+4096 rounded out to 512
+        );
+        assert_eq!(storage.direct_stats().useful_bytes.load(Ordering::Relaxed), 2048);
+        assert_eq!(storage.direct_stats().aligned_bytes.load(Ordering::Relaxed), 4608);
     }
 
     #[test]
@@ -311,17 +248,7 @@ mod tests {
         let arena = StagingArena::new(1, n * 512);
         let dst = SlotRef::new(arena, 0);
         let t0 = Instant::now();
-        let sqes: Vec<Sqe> = (0..n)
-            .map(|i| Sqe {
-                file: file.clone(),
-                offset: (i * 512) as u64,
-                len: 512,
-                dst: dst.clone(),
-                dst_off: i * 512,
-                user_data: i as u64,
-                mode: IoMode::Direct,
-            })
-            .collect();
+        let sqes: Vec<Sqe> = (0..n).map(|i| row_sqe(&file, dst.clone(), i as u64)).collect();
         ring.submit_batch(sqes);
         let cqes = ring.wait_cqes(n);
         let async_time = t0.elapsed();
@@ -335,7 +262,7 @@ mod tests {
 
     #[test]
     fn pending_harvest_never_underflows_under_concurrency() {
-        // Regression: the old implementation read `submitted` first and
+        // Regression: an old implementation read `submitted` first and
         // subtracted `harvested`/`inflight` snapshots taken later, so a
         // submit landing between the loads made `submitted − harvested −
         // inflight` wrap to ~u64::MAX. Hammer submits/harvests while a
@@ -355,10 +282,7 @@ mod tests {
                 let mut max_seen = 0u64;
                 while !done.load(Ordering::SeqCst) {
                     let p = ring.pending_harvest();
-                    assert!(
-                        p <= 2 * N,
-                        "pending_harvest wrapped/overshot: {p}"
-                    );
+                    assert!(p <= 2 * N, "pending_harvest wrapped/overshot: {p}");
                     max_seen = max_seen.max(p);
                     std::thread::yield_now();
                 }
@@ -376,6 +300,7 @@ mod tests {
                         file: file.clone(),
                         offset: (i % 64) * 512,
                         len: 512,
+                        useful: 512,
                         dst: SlotRef::new(arena.clone(), i as usize % SLOTS),
                         dst_off: 0,
                         user_data: i,
@@ -405,16 +330,15 @@ mod tests {
         // must not leak `inflight`/`submitted` for the rejected items.
         let (storage, file) = setup();
         let ring = Uring::new(Arc::new(storage), 4);
-        // Drop-close the inner queues by closing them directly via Drop is
-        // not observable from outside, so exercise the path with a
-        // pre-closed SQ: harvest everything, close, then submit.
-        ring.sq.close();
+        // Exercise the path with a pre-closed SQ: close, then submit.
+        ring.core.sq.close();
         let arena = StagingArena::new(3, 512);
         let sqes: Vec<Sqe> = (0..3u64)
             .map(|i| Sqe {
                 file: file.clone(),
                 offset: i * 512,
                 len: 512,
+                useful: 512,
                 dst: SlotRef::new(arena.clone(), i as usize),
                 dst_off: 0,
                 user_data: i,
@@ -427,7 +351,7 @@ mod tests {
         assert!(result.is_err(), "submitting on a closed ring panics");
         assert_eq!(ring.inflight(), 0, "inflight leaked on failed batch submit");
         assert_eq!(ring.pending_harvest(), 0, "pending_harvest leaked");
-        assert_eq!(ring.submitted.load(Ordering::SeqCst), 0, "submitted leaked");
+        assert_eq!(ring.core.submitted.load(Ordering::SeqCst), 0, "submitted leaked");
     }
 
     #[test]
@@ -439,6 +363,7 @@ mod tests {
             file: file.clone(),
             offset: 0,
             len: 4096,
+            useful: 4096,
             dst: SlotRef::new(arena, 0),
             dst_off: 0,
             user_data: 0,

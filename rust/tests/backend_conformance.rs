@@ -4,7 +4,7 @@
 //! simulated SSD stack or real OS files in a tempdir. Each check is a
 //! generic function run against both backends.
 
-use gnndrive::extract::{ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
 use gnndrive::graph::{FeatureGen, FeatureTable};
 use gnndrive::membuf::{FeatureBuffer, SlotRef, StagingArena, StagingBuffer};
 use gnndrive::sim::Clock;
@@ -188,6 +188,7 @@ fn check_async_engine(io: Arc<dyn IoBackend>, file: &SimFile) {
             file: file.clone(),
             offset: (i * 512) as u64,
             len: 512,
+            useful: 512,
             dst: SlotRef::new(arena.clone(), i),
             dst_off: 0,
             user_data: i as u64,
@@ -265,7 +266,10 @@ fn check_extractor_waves(io: Arc<dyn IoBackend>, asynchronous: bool) {
         fb.clone(),
         features,
         ExtractTarget::Host,
-        ExtractOptions { asynchronous, direct: true },
+        // Coalescing disabled: this check pins the per-row wave protocol
+        // and its exact per-row charge parity across backends; the
+        // coalescing suite below covers the merged path.
+        ExtractOptions { asynchronous, coalesce: CoalesceConfig::disabled(), ..Default::default() },
     );
     io.reset_io_stats();
     let nodes: Vec<u32> = (30..90).collect();
@@ -306,5 +310,116 @@ fn extractor_waves_conform_async() {
 fn extractor_waves_conform_sync_fallback() {
     for (io, _) in backends() {
         check_extractor_waves(io, false);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Segment coalescing
+// ---------------------------------------------------------------------------
+
+/// Run one extraction of `nodes` under `coalesce` on a fresh feature buffer;
+/// returns (gathered rows, charged reads, charged bytes, useful, aligned).
+fn run_extraction(
+    io: &Arc<dyn IoBackend>,
+    nodes: &[u32],
+    staging_slots: usize,
+    coalesce: CoalesceConfig,
+) -> (Vec<f32>, u64, u64, u64, u64) {
+    let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
+    let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
+    let features = features_for(io.name(), &gen);
+    let host = HostMemory::new(1 << 20);
+    let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
+    let staging = StagingBuffer::new(&host, staging_slots, (DIM * 4) as usize).unwrap();
+    let ex = Extractor::with_options(
+        io.clone(),
+        16,
+        staging,
+        fb.clone(),
+        features,
+        ExtractTarget::Host,
+        ExtractOptions { coalesce, ..Default::default() },
+    );
+    io.reset_io_stats();
+    let dio = io.direct_stats().snapshot();
+    let aliases = ex.extract(nodes);
+    let reads = io.io_counters().reads.load(Ordering::Relaxed);
+    let bytes = io.io_counters().read_bytes.load(Ordering::Relaxed);
+    let (useful, aligned) = io.direct_stats().snapshot();
+    let mut rows = vec![0f32; nodes.len() * DIM];
+    fb.gather(&aliases, &mut rows);
+    fb.check_invariants().unwrap();
+    (rows, reads, bytes, useful - dio.0, aligned - dio.1)
+}
+
+/// Coalescing on vs off: identical read-back bytes, strictly fewer charged
+/// requests, `aligned_bytes ≤` the uncoalesced run, identical useful bytes —
+/// on both backends.
+fn check_coalescing_parity(io: Arc<dyn IoBackend>) {
+    let name = io.name();
+    let nodes: Vec<u32> = (30..94).collect(); // 64 dense 64-byte rows
+    let (rows_off, reads_off, bytes_off, useful_off, aligned_off) =
+        run_extraction(&io, &nodes, 64, CoalesceConfig::disabled());
+    let (rows_on, reads_on, bytes_on, useful_on, aligned_on) =
+        run_extraction(&io, &nodes, 64, CoalesceConfig::default());
+
+    assert_eq!(rows_on, rows_off, "{name}: extracted bytes must be identical");
+    assert_eq!(reads_off, 64, "{name}: baseline issues one request per row");
+    assert!(
+        reads_on < reads_off,
+        "{name}: coalescing must charge strictly fewer requests ({reads_on} vs {reads_off})"
+    );
+    assert!(
+        reads_on * 2 <= reads_off,
+        "{name}: dense rows must merge ≥2× ({reads_on} vs {reads_off})"
+    );
+    assert_eq!(useful_on, useful_off, "{name}: useful bytes are coalescing-independent");
+    assert_eq!(useful_on, (nodes.len() * DIM * 4) as u64, "{name}: useful = row bytes");
+    assert!(
+        aligned_on <= aligned_off,
+        "{name}: dense coalescing must not amplify ({aligned_on} vs {aligned_off})"
+    );
+    assert!(
+        bytes_on <= bytes_off,
+        "{name}: charged volume must not grow on dense rows ({bytes_on} vs {bytes_off})"
+    );
+}
+
+#[test]
+fn coalescing_parity_across_backends() {
+    for (io, _) in backends() {
+        check_coalescing_parity(io);
+    }
+}
+
+/// Gap boundary: rows exactly `coalesce-gap` apart must NOT merge (the gap
+/// bound is strict), and rows one byte closer must.
+fn check_gap_boundary(io: Arc<dyn IoBackend>) {
+    let name = io.name();
+    let row = DIM * 4; // 64
+    // Every 4th node: the gap between consecutive rows is 3 rows = 192 B.
+    let nodes: Vec<u32> = (0..20).map(|i| i * 4).collect();
+    let gap = 3 * row;
+
+    let at_gap = CoalesceConfig { max_bytes: 1 << 20, gap_bytes: gap };
+    let (_, reads, _, _, _) = run_extraction(&io, &nodes, 64, at_gap);
+    assert_eq!(
+        reads,
+        nodes.len() as u64,
+        "{name}: rows exactly coalesce-gap apart must not merge"
+    );
+
+    let over_gap = CoalesceConfig { max_bytes: 1 << 20, gap_bytes: gap + 1 };
+    let (_, reads, _, _, _) = run_extraction(&io, &nodes, 64, over_gap);
+    assert!(
+        reads < nodes.len() as u64,
+        "{name}: rows within coalesce-gap must merge ({reads} requests)"
+    );
+}
+
+#[test]
+fn gap_boundary_conforms_across_backends() {
+    for (io, _) in backends() {
+        check_gap_boundary(io);
     }
 }

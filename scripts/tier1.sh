@@ -42,6 +42,17 @@ trap 'rm -rf "$SMOKE_DIR"' EXIT
 ./target/release/gnndrive train --system gnndrive --backend sim \
   --dataset unit-test --batches 2 --epochs 1
 
+echo "== bench: extract_coalesce (coalesced segment I/O trajectory) =="
+# Runs the extraction bench (release) and appends to BENCH_extract.json; the
+# bench itself asserts the ISSUE-4 acceptance gate (>= 2x fewer charged
+# requests on the GraphSAGE workload with coalescing on).
+cargo bench --bench extract_coalesce
+
+if [ -f BENCH_extract.json ]; then
+  echo "== last BENCH_extract.json record =="
+  tail -n 1 BENCH_extract.json
+fi
+
 if [ -f BENCH_hotpath.json ]; then
   echo "== last BENCH_hotpath.json record =="
   tail -n 1 BENCH_hotpath.json
