@@ -331,6 +331,7 @@ impl TrainingSystem for MariusGnn {
             reorder_inversions: 0,
             ssd_read_bytes: io.read_bytes,
             ssd_read_requests: io.reads,
+            extract_hist: Default::default(), // per-batch tail tracked for GNNDrive only
             align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: 0,
         })

@@ -185,6 +185,7 @@ impl TrainingSystem for PygPlus {
             reorder_inversions: 0, // PyG+ trains strictly in order
             ssd_read_bytes: io.read_bytes,
             ssd_read_requests: io.reads,
+            extract_hist: Default::default(), // per-batch tail tracked for GNNDrive only
             align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: 0,
         })

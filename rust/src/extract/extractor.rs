@@ -136,6 +136,17 @@ impl Extractor {
             return plan.aliases;
         }
 
+        // Shutdown/abort ordering: a previous extraction that exited early
+        // (panicking publish, caller caught an error and reused this
+        // extractor) may have left submitted requests unharvested. Their
+        // staging ranges are exactly the bytes this call's first wave is
+        // about to reissue from cursor 0, so quiesce the engine *before*
+        // any wave allocation — a late CQE must never scatter into a
+        // recycled range. No-op on the normal path (both counters zero).
+        if self.engine.inflight() > 0 || self.engine.pending_harvest() > 0 {
+            self.engine.drain();
+        }
+
         let mode = if self.opts.direct { IoMode::Direct } else { IoMode::Buffered };
         // Coalescing only pays on the direct path; the buffered ablation
         // keeps per-row requests so its page-cache accounting stays the

@@ -15,6 +15,7 @@ pub mod parallel;
 pub mod pipeline;
 pub mod runtime;
 pub mod sample;
+pub mod serve;
 pub mod train;
 pub mod sim;
 pub mod storage;

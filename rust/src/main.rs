@@ -4,6 +4,7 @@
 //!   gen-data   materialize a dataset to a real on-disk directory
 //!   table1     print the dataset summary (paper Table 1)
 //!   train      run epochs of one system on one dataset (sim or PJRT)
+//!   serve      multi-tenant online-inference frontend over the same stack
 //!   figure     regenerate a paper figure/table (2,3,8,9,10,11,12,13,14,tab2,b1)
 //!   iostat     fio-style sync/async I/O study on the SSD model (Fig B.1)
 //!
@@ -17,11 +18,27 @@
 //! the byte gap bridged between merged rows). `--coalesce-bytes 0` restores
 //! one request per row for ablation parity with the paper; the epoch
 //! summary's `reqs` / `align+` columns show the coalescing effect.
+//!
+//! `serve` runs the long-lived serving frontend: `--tenants` request
+//! streams hit a *bounded admission queue* (`--admit-cap`; open-loop
+//! arrivals at `--rps` are shed, never queued, past the bound — closed-loop
+//! `--clients` callers block instead), a micro-batcher groups admitted
+//! requests into inference batches (`--serve-batch` size bound,
+//! `--serve-wait` linger bound), and `--serve-workers` workers drive each
+//! batch through sampling, coalesced feature extraction and a read-only
+//! forward pass. All tenants share one feature buffer (hot nodes extracted
+//! for one tenant are buffer hits for the rest); `--per-tenant-buffer`
+//! ablates that into private per-tenant buffers, and `--serve-while-train`
+//! runs a concurrent training loop over the shared buffer. Per-stage
+//! p50/p95/p99 (admission/sample/extract/compute) are reported per epoch
+//! and merged into a final summary.
 
 use gnndrive::baselines::{build_system, SystemKind};
 use gnndrive::config::{Machine, MachineConfig, TrainConfig};
+use gnndrive::extract::CoalesceConfig;
 use gnndrive::graph::{Dataset, DatasetSpec};
 use gnndrive::runtime::simcompute::ModelKind;
+use gnndrive::serve::{BatchSpec, ServeConfig, ServeEngine, ServeReport};
 use gnndrive::sim::Clock;
 use gnndrive::storage::{BackendKind, IoBackend as _};
 use gnndrive::util::args::Args;
@@ -30,7 +47,7 @@ use std::sync::Arc;
 fn main() {
     let args = Args::new(
         "gnndrive — disk-based GNN training (ICPP '24 reproduction)\n\n\
-         USAGE: gnndrive <gen-data|table1|train|figure|iostat> [options]",
+         USAGE: gnndrive <gen-data|table1|train|serve|figure|iostat> [options]",
     )
     .opt("dataset", "papers100m-mini", "dataset name (see table1)")
     .opt("system", "gnndrive", "gnndrive|gnndrive-cpu|pyg+|ginex|marius (case-insensitive)")
@@ -54,6 +71,33 @@ fn main() {
     .opt("memory-gb", "32", "host memory in paper-scale GB (divided by 256)")
     .opt("dim", "", "feature dimension override")
     .opt("out", "data/papers-tiny", "output directory for gen-data")
+    .opt("tenants", "4", "serve: independent request streams sharing the node popularity")
+    .opt("requests", "2000", "serve: total inference requests per epoch")
+    .opt("rps", "0", "serve: open-loop Poisson arrival rate (req/s, sim time); 0 = closed loop")
+    .opt("clients", "8", "serve: closed-loop callers, one outstanding request each")
+    .opt("admit-cap", "256", "serve: admission-queue bound; open-loop offers past it are SHED")
+    .opt("serve-batch", "32", "serve: max requests per inference micro-batch")
+    .opt("serve-wait", "2ms", "serve: max linger before a partial micro-batch flushes")
+    .opt("serve-workers", "2", "serve: serving worker threads")
+    .opt(
+        "serve-buffer-mult",
+        "4",
+        "serve: feature-buffer slots as a multiple of the (workers+1)×cap floor",
+    )
+    .opt(
+        "hot-nodes",
+        "0",
+        "serve: size of the popular-seed head requests concentrate on (0 = whole graph)",
+    )
+    .flag(
+        "per-tenant-buffer",
+        "serve ablation: private per-tenant feature buffers (same slots each) \
+         instead of one shared buffer",
+    )
+    .flag(
+        "serve-while-train",
+        "serve: run a concurrent training loop sharing the serving feature buffer",
+    )
     .flag("full", "full sweep grids for `figure` (default: quick)")
     .parse();
 
@@ -65,6 +109,7 @@ fn main() {
             0
         }
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "figure" => cmd_figure(&args),
         "iostat" => {
             print!("{}", gnndrive::experiments::figb1(!args.has("full")));
@@ -111,15 +156,76 @@ fn parse_fanouts(s: &str) -> Vec<usize> {
     s.split(',').filter_map(|p| p.trim().parse().ok()).collect()
 }
 
-fn cmd_train(args: &Args) -> i32 {
+/// Build the machine and load/materialize the dataset from the shared
+/// `--backend/--data/--dataset/--dim/--memory-gb` flags (used by `train`
+/// and `serve`). `Err` carries the process exit code.
+fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>), i32> {
     let backend_name = args.get_or_default("backend");
     let Some(backend) = BackendKind::by_name(backend_name) else {
         eprintln!(
             "unknown backend {backend_name:?}; valid backends: {}",
             BackendKind::names()
         );
-        return 2;
+        return Err(2);
     };
+    let gb: u64 = args.get_usize("memory-gb").unwrap_or(32) as u64;
+    let machine = Arc::new(Machine::new(
+        MachineConfig::paper().with_paper_host_gb(gb).with_backend(backend),
+        Clock::from_env(),
+    ));
+
+    let data_dir = args.get("data").filter(|d| !d.is_empty());
+    if backend == BackendKind::Os && data_dir.is_none() {
+        eprintln!(
+            "--backend os reads real files and needs an on-disk dataset:\n  \
+             gnndrive gen-data --dataset papers-tiny --out <dir>\n  \
+             gnndrive <train|serve> --backend os --data <dir> …"
+        );
+        return Err(2);
+    }
+    let ds = if let Some(dir) = data_dir {
+        match Dataset::load_dir(std::path::Path::new(dir), &machine) {
+            Ok(d) => Arc::new(d),
+            Err(e) => {
+                eprintln!("dataset dir {dir:?}: {e}");
+                return Err(1);
+            }
+        }
+    } else {
+        let ds_name = args.get_or_default("dataset");
+        let Some(mut spec) = DatasetSpec::by_name(ds_name) else {
+            eprintln!("unknown dataset {ds_name:?} (see `gnndrive table1` for names)");
+            return Err(2);
+        };
+        if let Some(d) = args.get("dim").and_then(|d| d.parse().ok()) {
+            spec = spec.with_dim(d);
+        }
+        match Dataset::materialize(&spec, &machine) {
+            Ok(d) => Arc::new(d),
+            Err(e) => {
+                eprintln!("dataset: {e}");
+                return Err(1);
+            }
+        }
+    };
+    Ok((machine, ds))
+}
+
+/// Parse `--coalesce-bytes` / `--coalesce-gap` (shared by `train` and
+/// `serve`). `Err` carries the process exit code.
+fn parse_coalesce(args: &Args) -> Result<(usize, usize), i32> {
+    let parse_size =
+        |key: &str| match gnndrive::util::units::parse_bytes(args.get_or_default(key)) {
+            Ok(v) => Ok(v as usize),
+            Err(e) => {
+                eprintln!("--{key}: {e}");
+                Err(2)
+            }
+        };
+    Ok((parse_size("coalesce-bytes")?, parse_size("coalesce-gap")?))
+}
+
+fn cmd_train(args: &Args) -> i32 {
     let system_name = args.get_or_default("system");
     let Some(kind) = SystemKind::by_name(system_name) else {
         eprintln!(
@@ -133,60 +239,12 @@ fn cmd_train(args: &Args) -> i32 {
         eprintln!("unknown model {model_name:?}; valid models: graphsage, gcn, gat");
         return 2;
     };
-    let gb: u64 = args.get_usize("memory-gb").unwrap_or(32) as u64;
-    let machine = Arc::new(Machine::new(
-        MachineConfig::paper().with_paper_host_gb(gb).with_backend(backend),
-        Clock::from_env(),
-    ));
-
-    let data_dir = args.get("data").filter(|d| !d.is_empty());
-    if backend == BackendKind::Os && data_dir.is_none() {
-        eprintln!(
-            "--backend os reads real files and needs an on-disk dataset:\n  \
-             gnndrive gen-data --dataset papers-tiny --out <dir>\n  \
-             gnndrive train --backend os --data <dir> …"
-        );
-        return 2;
-    }
-    let ds = if let Some(dir) = data_dir {
-        match Dataset::load_dir(std::path::Path::new(dir), &machine) {
-            Ok(d) => Arc::new(d),
-            Err(e) => {
-                eprintln!("dataset dir {dir:?}: {e}");
-                return 1;
-            }
-        }
-    } else {
-        let ds_name = args.get_or_default("dataset");
-        let Some(mut spec) = DatasetSpec::by_name(ds_name) else {
-            eprintln!("unknown dataset {ds_name:?} (see `gnndrive table1` for names)");
-            return 2;
-        };
-        if let Some(d) = args.get("dim").and_then(|d| d.parse().ok()) {
-            spec = spec.with_dim(d);
-        }
-        match Dataset::materialize(&spec, &machine) {
-            Ok(d) => Arc::new(d),
-            Err(e) => {
-                eprintln!("dataset: {e}");
-                return 1;
-            }
-        }
-    };
-    let parse_size =
-        |key: &str| match gnndrive::util::units::parse_bytes(args.get_or_default(key)) {
-            Ok(v) => Ok(v as usize),
-            Err(e) => {
-                eprintln!("--{key}: {e}");
-                Err(2)
-            }
-        };
-    let coalesce_bytes = match parse_size("coalesce-bytes") {
-        Ok(v) => v,
+    let (machine, ds) = match setup_machine_and_dataset(args) {
+        Ok(pair) => pair,
         Err(code) => return code,
     };
-    let coalesce_gap = match parse_size("coalesce-gap") {
-        Ok(v) => v,
+    let (coalesce_bytes, coalesce_gap) = match parse_coalesce(args) {
+        Ok(pair) => pair,
         Err(code) => return code,
     };
     let cfg = TrainConfig {
@@ -225,6 +283,97 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let model_name = args.get_or_default("model");
+    let Some(model) = ModelKind::by_name(model_name) else {
+        eprintln!("unknown model {model_name:?}; valid models: graphsage, gcn, gat");
+        return 2;
+    };
+    let (machine, ds) = match setup_machine_and_dataset(args) {
+        Ok(pair) => pair,
+        Err(code) => return code,
+    };
+    let (coalesce_bytes, coalesce_gap) = match parse_coalesce(args) {
+        Ok(pair) => pair,
+        Err(code) => return code,
+    };
+    let serve_wait = match gnndrive::util::units::parse_duration(args.get_or_default("serve-wait"))
+    {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("--serve-wait: {e}");
+            return 2;
+        }
+    };
+    let rps = args.get_f64("rps").unwrap_or(0.0);
+    let cfg = ServeConfig {
+        tenants: args.get_usize("tenants").unwrap_or(4).max(1),
+        workers: args.get_usize("serve-workers").unwrap_or(2).max(1),
+        requests: args.get_usize("requests").unwrap_or(2000) as u64,
+        rps,
+        clients: args.get_usize("clients").unwrap_or(8).max(1),
+        admit_cap: args.get_usize("admit-cap").unwrap_or(256).max(1),
+        batch: BatchSpec {
+            max_requests: args.get_usize("serve-batch").unwrap_or(32).max(1),
+            max_wait: serve_wait,
+        },
+        fanouts: parse_fanouts(args.get_or_default("fanouts")),
+        coalesce: CoalesceConfig { max_bytes: coalesce_bytes, gap_bytes: coalesce_gap },
+        buffer_mult: args.get_usize("serve-buffer-mult").unwrap_or(4).max(1),
+        per_tenant_buffer: args.has("per-tenant-buffer"),
+        serve_while_train: args.has("serve-while-train"),
+        hot_nodes: args.get_usize("hot-nodes").unwrap_or(0) as u32,
+        model,
+        hidden: 256, // paper §5 hidden dimension, same as training
+        ..ServeConfig::default()
+    };
+    let epochs = args.get_usize("epochs").unwrap_or(1).max(1);
+    println!(
+        "serving {} ({} nodes, dim {}) on backend {}: {} tenants, {} workers, {} × {} requests ({}), admit cap {}, batch ≤{} / {}{}{}",
+        ds.spec.name,
+        ds.spec.nodes,
+        ds.spec.dim,
+        machine.backend.name(),
+        cfg.tenants,
+        cfg.workers,
+        epochs,
+        cfg.requests,
+        if cfg.rps > 0.0 {
+            format!("open loop @ {} rps", cfg.rps)
+        } else {
+            format!("closed loop, {} clients", cfg.clients)
+        },
+        cfg.admit_cap,
+        cfg.batch.max_requests,
+        gnndrive::util::units::fmt_dur(cfg.batch.max_wait),
+        if cfg.per_tenant_buffer { ", per-tenant buffers" } else { ", shared buffer" },
+        if cfg.serve_while_train { ", concurrent trainer" } else { "" },
+    );
+    let engine = match ServeEngine::new(&machine, &ds, cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
+    let mut merged = ServeReport::default();
+    for e in 0..epochs {
+        match engine.run(e as u64) {
+            Ok(report) => {
+                println!("epoch {e}: {}", report.summary());
+                merged.merge(&report);
+            }
+            Err(err) => {
+                eprintln!("epoch {e}: {err}");
+                return 1;
+            }
+        }
+    }
+    println!("final: {}", merged.summary());
+    println!("{}", merged.stage_detail());
     0
 }
 

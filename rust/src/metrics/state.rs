@@ -28,6 +28,9 @@ pub enum Role {
     Trainer,
     Releaser,
     IoWorker,
+    /// Serving-frontend worker (sample → extract → forward for inference
+    /// micro-batches); counts as ordinary CPU/I-O in utilization snapshots.
+    Server,
     Other,
 }
 

@@ -52,6 +52,14 @@ impl TrainStep for SyncedTrainStep {
         r
     }
 
+    fn forward(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult {
+        // Read-only inference: no parameter update, so no barrier arrival
+        // and no all-reduce — delegating to the default (a full synced
+        // step) would mutate parameters and block on peers that are not
+        // stepping.
+        self.inner.forward(batch, features)
+    }
+
     fn is_real(&self) -> bool {
         self.inner.is_real()
     }

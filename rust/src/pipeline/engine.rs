@@ -86,6 +86,10 @@ pub struct EpochStats {
     /// request covers a whole merged run of feature rows, so this dropping
     /// while `ssd_read_bytes` holds (roughly) steady is the coalescing win.
     pub ssd_read_requests: u64,
+    /// Per-mini-batch extraction latency (the tail the serving frontend
+    /// competes with): one sample per extracted batch, mergeable across
+    /// epochs. Filled by the GNNDrive engine; baselines leave it empty.
+    pub extract_hist: crate::util::stats::LatencyHist,
     /// Direct-I/O alignment overhead this epoch: aligned − useful bytes
     /// (§4.4 access-granularity amplification; shrinks when coalescing
     /// dedups shared sectors, grows when gap bridging buys ops with bytes).
@@ -96,7 +100,7 @@ pub struct EpochStats {
 impl EpochStats {
     pub fn summary(&self) -> String {
         format!(
-            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  reqs {:>7}  align+ {:>9}  loss {:.4}  acc {:.3}",
+            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  reqs {:>7}  align+ {:>9}  x99 {:>8}  loss {:.4}  acc {:.3}",
             crate::util::units::fmt_dur(self.epoch_time),
             crate::util::units::fmt_dur(self.prep_time),
             crate::util::units::fmt_dur(self.sample_time),
@@ -106,6 +110,10 @@ impl EpochStats {
             crate::util::units::fmt_bytes(self.ssd_read_bytes),
             self.ssd_read_requests,
             crate::util::units::fmt_bytes(self.align_overhead_bytes),
+            // p99 per-batch extract latency — the tail the serving
+            // frontend competes with (zero for baselines, which don't
+            // track the histogram).
+            crate::util::units::fmt_dur(self.extract_hist.p99()),
             self.train.mean_loss(),
             self.train.accuracy(),
         )
@@ -277,6 +285,7 @@ impl GnnDrive {
 
         let sample_ns = AtomicU64::new(0);
         let extract_ns = AtomicU64::new(0);
+        let extract_hist = Mutex::new(crate::util::stats::LatencyHist::default());
         let train_ns = AtomicU64::new(0);
         let samplers_left = AtomicUsize::new(self.cfg.samplers);
         let extractors_left = AtomicUsize::new(self.cfg.extractors);
@@ -329,6 +338,7 @@ impl GnnDrive {
                 let extract_q = &extract_q;
                 let train_q = &train_q;
                 let extract_ns = &extract_ns;
+                let extract_hist = &extract_hist;
                 let extractors_left = &extractors_left;
                 s.spawn(move || {
                     state::register(Role::Extractor);
@@ -343,8 +353,9 @@ impl GnnDrive {
                         };
                         let sw = Stopwatch::start(clock);
                         let aliases = ex.extract(&padded.nodes[..padded.real_nodes]);
-                        extract_ns
-                            .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        let took = sw.elapsed();
+                        extract_ns.fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
+                        extract_hist.lock().unwrap().record(took);
                         let _idle = state::enter(State::Idle);
                         if train_q.push(TrainItem { padded, aliases }).is_err() {
                             break;
@@ -461,6 +472,7 @@ impl GnnDrive {
             reorder_inversions: count_inversions(&order),
             ssd_read_bytes: io.read_bytes,
             ssd_read_requests: io.reads,
+            extract_hist: extract_hist.into_inner().unwrap(),
             align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: truncated.into_inner(),
         }
@@ -613,6 +625,8 @@ mod tests {
         assert_eq!(stats.train.steps, 4);
         assert!(stats.epoch_time > Duration::ZERO);
         assert!(stats.extract_time > Duration::ZERO);
+        assert_eq!(stats.extract_hist.count(), 4, "one latency sample per batch");
+        assert!(stats.extract_hist.p99() >= stats.extract_hist.p50());
         assert!(stats.ssd_read_bytes > 0);
         engine.feature_buffer().check_invariants().unwrap();
         // After release, every slot with zero refs: standby holds them all.

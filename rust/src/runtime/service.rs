@@ -107,6 +107,15 @@ impl TrainStep for TrainHandle {
         rx.recv().expect("train service died")
     }
 
+    /// Serving-path inference: routed through `Req::Eval`, which executes
+    /// the `_eval` artifact — a pure forward pass that never touches the
+    /// service's resident parameters. Requires the eval artifact to have
+    /// been compiled alongside the train artifact (`aot.py` emits both).
+    fn forward(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult {
+        self.evaluate(Arc::new(batch.clone()), features.to_vec())
+            .expect("train service eval failed (is the _eval artifact present?)")
+    }
+
     fn is_real(&self) -> bool {
         true
     }

@@ -97,6 +97,10 @@ pub struct SimTrainStep {
     fanouts: Vec<usize>,
     dim: usize,
     step_time: Duration,
+    /// Inference-only cost: the model charges forward+backward+SGD as 3×
+    /// forward, so a read-only forward pass (serving) pays one third of the
+    /// roofline term plus the same launch overhead.
+    forward_time: Duration,
 }
 
 impl SimTrainStep {
@@ -118,11 +122,29 @@ impl SimTrainStep {
             .max(cost.bytes / gpu.mem_bw())
             .max(0.0);
         let step_time = gpu.launch_overhead() + Duration::from_secs_f64(t);
-        SimTrainStep { gpu, clock, caps, fanouts, dim, step_time }
+        let forward_time = gpu.launch_overhead() + Duration::from_secs_f64(t / 3.0);
+        SimTrainStep { gpu, clock, caps, fanouts, dim, step_time, forward_time }
     }
 
     pub fn step_time(&self) -> Duration {
         self.step_time
+    }
+
+    pub fn forward_time(&self) -> Duration {
+        self.forward_time
+    }
+
+    /// Charge `dur` on the right resource (CPU-busy for CPU training, GPU
+    /// occupancy otherwise) — shared by `step` and `forward`.
+    fn charge(&self, dur: Duration) {
+        if self.gpu == GpuModel::CpuOnly {
+            let _busy = crate::metrics::state::enter(crate::metrics::state::State::Busy);
+            self.clock.sleep(dur);
+        } else {
+            let _idle = crate::metrics::state::enter(crate::metrics::state::State::Idle);
+            let _gpu = crate::metrics::state::gpu_enter();
+            self.clock.sleep(dur);
+        }
     }
 }
 
@@ -142,15 +164,13 @@ impl TrainStep for SimTrainStep {
     fn step(&mut self, _batch: &PaddedSubgraph, _features: &[f32]) -> StepResult {
         // The GPU is busy; the trainer thread itself just waits (it is not
         // CPU-busy, it is not I/O) — unless this is CPU training.
-        if self.gpu == GpuModel::CpuOnly {
-            let _busy = crate::metrics::state::enter(crate::metrics::state::State::Busy);
-            self.clock.sleep(self.step_time);
-        } else {
-            let _idle = crate::metrics::state::enter(crate::metrics::state::State::Idle);
-            let _gpu = crate::metrics::state::gpu_enter();
-            self.clock.sleep(self.step_time);
-        }
+        self.charge(self.step_time);
         StepResult { loss: f32::NAN, correct: 0, examples: _batch.real_seeds }
+    }
+
+    fn forward(&mut self, batch: &PaddedSubgraph, _features: &[f32]) -> StepResult {
+        self.charge(self.forward_time);
+        StepResult { loss: f32::NAN, correct: 0, examples: batch.real_seeds }
     }
 
     fn is_real(&self) -> bool {
@@ -223,5 +243,13 @@ mod tests {
         assert!(r.loss.is_nan());
         assert_eq!(r.examples, 2);
         assert!(!step.is_real());
+        let f = step.forward(&padded, &[]);
+        assert_eq!(f.examples, 2);
+        // `<=` not `<`: both collapse to the bare launch overhead when the
+        // roofline term rounds to zero nanoseconds.
+        assert!(
+            step.forward_time() <= step.step_time(),
+            "inference must not cost more than a training step"
+        );
     }
 }

@@ -1,0 +1,207 @@
+//! Micro-batcher: groups admitted requests into inference batches.
+//!
+//! Admitted requests are pulled off the bounded admission queue and packed
+//! into [`InferBatch`]es under two bounds: a batch closes as soon as it holds
+//! `--serve-batch` requests (size bound) **or** as soon as its oldest member
+//! has lingered `--serve-wait` in the batcher (latency bound) — the classic
+//! size-or-deadline micro-batching contract. Batching is what turns N
+//! single-seed requests into one sampled subgraph whose feature reads the
+//! extractor's planner can coalesce into multi-row segments, so batch fill
+//! directly buys I/O efficiency.
+//!
+//! Batches are keyed by *buffer group*: with one shared feature buffer all
+//! tenants mix into the same batch (cross-tenant segment coalescing and
+//! buffer reuse — the shared-tenancy win); under the per-tenant-buffer
+//! ablation each tenant forms its own batches, because a batch can only
+//! extract into one buffer. Ownership split with the admission layer: the
+//! admission queue decides *whether* a request gets in (shed vs admit); the
+//! batcher only decides *when* admitted requests execute.
+
+use super::request::{Admission, InferRequest};
+use crate::sim::queue::BoundedQueue;
+use std::time::{Duration, Instant};
+
+/// Size/linger bounds of one micro-batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSpec {
+    /// Max requests per batch (`--serve-batch`).
+    pub max_requests: usize,
+    /// Max linger of the oldest member before a partial batch flushes
+    /// (`--serve-wait`). `run_batcher` compares it against wall-clock
+    /// `Instant`s; the serving engine converts its sim-unit config value to
+    /// real time before handing the spec over, so linger behavior does not
+    /// change under clock compression.
+    pub max_wait: Duration,
+}
+
+/// One formed inference batch, bound to a buffer group.
+pub struct InferBatch {
+    /// Index into the serving engine's buffer list (0 when shared).
+    pub group: usize,
+    pub requests: Vec<InferRequest>,
+}
+
+struct Bucket {
+    requests: Vec<InferRequest>,
+    /// When the oldest member entered the batcher (linger clock).
+    opened: Instant,
+}
+
+/// Drive the batcher until the admission queue is closed and drained, then
+/// flush every partial bucket and close `out`. `group_of` maps a tenant to
+/// its buffer group (identity under the per-tenant ablation, constant 0 when
+/// shared). Returns the number of batches formed.
+pub fn run_batcher(
+    adm: &Admission,
+    out: &BoundedQueue<InferBatch>,
+    spec: BatchSpec,
+    groups: usize,
+    group_of: impl Fn(usize) -> usize,
+) -> u64 {
+    let max_requests = spec.max_requests.max(1);
+    let mut buckets: Vec<Option<Bucket>> = (0..groups.max(1)).map(|_| None).collect();
+    let mut formed = 0u64;
+
+    let flush = |buckets: &mut Vec<Option<Bucket>>, g: usize, formed: &mut u64| {
+        if let Some(b) = buckets[g].take() {
+            *formed += 1;
+            // Blocking push: a full batch queue is backpressure from the
+            // serving workers, exactly like the pipeline's bounded queues.
+            let _ = out.push(InferBatch { group: g, requests: b.requests });
+        }
+    };
+
+    loop {
+        // Nearest linger deadline across open buckets decides how long the
+        // next pop may block.
+        let deadline =
+            buckets.iter().flatten().map(|b| b.opened + spec.max_wait).min();
+        let popped = match deadline {
+            None => match adm.pop() {
+                Ok(r) => Some(r),
+                Err(_) => break,
+            },
+            Some(dl) => {
+                let now = Instant::now();
+                if now >= dl {
+                    None
+                } else {
+                    match adm.pop_timeout(dl - now) {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    }
+                }
+            }
+        };
+        match popped {
+            Some(r) => {
+                let g = group_of(r.tenant).min(buckets.len() - 1);
+                let b = buckets[g].get_or_insert_with(|| Bucket {
+                    requests: Vec::with_capacity(max_requests),
+                    opened: Instant::now(),
+                });
+                b.requests.push(r);
+                if b.requests.len() >= max_requests {
+                    flush(&mut buckets, g, &mut formed);
+                }
+            }
+            None => {
+                // Linger expired somewhere: flush every overdue bucket.
+                let now = Instant::now();
+                for g in 0..buckets.len() {
+                    if buckets[g]
+                        .as_ref()
+                        .is_some_and(|b| now >= b.opened + spec.max_wait)
+                    {
+                        flush(&mut buckets, g, &mut formed);
+                    }
+                }
+            }
+        }
+    }
+    // Admission closed and drained: flush the stragglers and end the stream.
+    for g in 0..buckets.len() {
+        flush(&mut buckets, g, &mut formed);
+    }
+    out.close();
+    formed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(tenant: usize, seed: u32) -> InferRequest {
+        InferRequest { tenant, seed, arrival: Instant::now(), done: None }
+    }
+
+    fn spec(n: usize, wait_ms: u64) -> BatchSpec {
+        BatchSpec { max_requests: n, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn size_bound_flushes_full_batches() {
+        let adm = Admission::new(64);
+        let out = Arc::new(BoundedQueue::<InferBatch>::new(16));
+        for i in 0..10 {
+            adm.submit(req(0, i)).unwrap();
+        }
+        adm.close();
+        let formed = run_batcher(&adm, &out, spec(4, 1000), 1, |_| 0);
+        assert_eq!(formed, 3, "10 requests at batch 4 → 4+4+2");
+        let sizes: Vec<usize> = std::iter::from_fn(|| out.pop().ok())
+            .map(|b| b.requests.len())
+            .collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn linger_bound_flushes_partial_batches() {
+        let adm = Arc::new(Admission::new(64));
+        let out = Arc::new(BoundedQueue::<InferBatch>::new(16));
+        let batcher = {
+            let adm = adm.clone();
+            let out = out.clone();
+            std::thread::spawn(move || run_batcher(&adm, &out, spec(100, 10), 1, |_| 0))
+        };
+        adm.submit(req(0, 1)).unwrap();
+        adm.submit(req(0, 2)).unwrap();
+        // Far below the size bound: the linger deadline must flush.
+        let b = out.pop().unwrap();
+        assert_eq!(b.requests.len(), 2);
+        adm.close();
+        batcher.join().unwrap();
+        assert!(out.pop().is_err(), "batcher closes its output");
+    }
+
+    #[test]
+    fn groups_partition_batches_per_tenant() {
+        let adm = Admission::new(64);
+        let out = Arc::new(BoundedQueue::<InferBatch>::new(16));
+        for i in 0..6 {
+            adm.submit(req(i % 2, i as u32)).unwrap();
+        }
+        adm.close();
+        // Per-tenant grouping: tenants 0 and 1 never share a batch.
+        run_batcher(&adm, &out, spec(100, 1000), 2, |t| t);
+        let mut batches: Vec<InferBatch> = std::iter::from_fn(|| out.pop().ok()).collect();
+        batches.sort_by_key(|b| b.group);
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert_eq!(b.requests.len(), 3);
+            assert!(b.requests.iter().all(|r| r.tenant == b.group));
+        }
+    }
+
+    #[test]
+    fn drain_flushes_all_open_buckets() {
+        let adm = Admission::new(64);
+        let out = Arc::new(BoundedQueue::<InferBatch>::new(16));
+        adm.submit(req(0, 1)).unwrap();
+        adm.submit(req(3, 2)).unwrap();
+        adm.close();
+        let formed = run_batcher(&adm, &out, spec(100, 10_000), 4, |t| t);
+        assert_eq!(formed, 2, "close must flush partial buckets, not drop them");
+    }
+}

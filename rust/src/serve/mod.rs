@@ -1,0 +1,34 @@
+//! `serve` — the multi-tenant online-inference frontend (CLI `serve`).
+//!
+//! Layering, top to bottom:
+//!
+//! * [`request`] — per-tenant request streams, the **bounded admission
+//!   queue** (open-loop offers shed on overload instead of queueing;
+//!   closed-loop submits block), and the load generators (Poisson arrivals
+//!   at `--rps`, or `--clients` synchronous callers).
+//! * [`batcher`] — the **micro-batcher**: size-or-linger grouping
+//!   (`--serve-batch` / `--serve-wait`) of admitted requests into inference
+//!   batches, keyed by feature-buffer group so a batch always extracts into
+//!   exactly one buffer.
+//! * [`engine`] — the **serving engine**: workers drive each batch through
+//!   the training stack's own sample → coalesced-extract → feature-buffer
+//!   path and a read-only forward pass, all tenants sharing one
+//!   [`crate::membuf::FeatureBuffer`] (the `--per-tenant-buffer` ablation
+//!   splits them), optionally alongside a concurrent trainer
+//!   (`--serve-while-train`). Per-stage latency lands in mergeable
+//!   log-bucketed histograms ([`crate::util::stats::LatencyHist`]);
+//!   [`ServeReport`] carries p50/p95/p99 per stage plus charged-I/O and
+//!   buffer-reuse accounting.
+//!
+//! The subsystem is backend-agnostic (`--backend sim|os`): it only speaks
+//! [`crate::storage::IoBackend`] through the sampler and extractor, exactly
+//! like training. `benches/serve_latency.rs` tracks throughput/tail latency
+//! and the shared-vs-per-tenant ablation in `BENCH_serve.json`.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+
+pub use batcher::{BatchSpec, InferBatch};
+pub use engine::{ServeConfig, ServeEngine, ServeReport, StageHists};
+pub use request::{Admission, AdmissionCounts, InferRequest, SeedSkew};

@@ -1,0 +1,316 @@
+//! Request layer of the serving frontend: per-tenant inference request
+//! streams, the bounded admission queue, and the open-/closed-loop load
+//! generators.
+//!
+//! The admission contract is the load-shedding one: the queue is *bounded*
+//! and the open-loop entry point never blocks — when the queue is full the
+//! request is **shed** (counted, dropped) instead of parked, so overload
+//! degrades goodput rather than stretching every admitted request's queueing
+//! delay unboundedly. Closed-loop clients use the blocking entry point: they
+//! self-throttle by construction (one outstanding request per client), which
+//! is how the generator models a fixed concurrency rather than a fixed rate.
+//!
+//! Seed-node popularity is shared across tenants ([`SeedSkew`]): every
+//! tenant draws from the same skewed distribution over the node space, the
+//! online-serving regime where cross-tenant reuse of hot embeddings is the
+//! shared-buffer win the `serve` acceptance gate measures.
+
+use crate::sim::queue::{BoundedQueue, Closed};
+use crate::sim::Clock;
+use crate::util::rng::Pcg;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One online inference request: classify a single seed node on behalf of a
+/// tenant's request stream.
+pub struct InferRequest {
+    pub tenant: usize,
+    pub seed: u32,
+    /// Arrival instant (real time; reports convert to sim units).
+    pub arrival: Instant,
+    /// Closed-loop completion signal carrying the completion instant;
+    /// open-loop requests carry `None` (nobody waits on them).
+    pub done: Option<mpsc::Sender<Instant>>,
+}
+
+/// Shared seed-node popularity: a cubic-skew draw over the hot prefix
+/// `[0, hot)` of the node space — a hot head around node 0 with a long cold
+/// tail (the same shape the extraction bench's skewed workload uses; low
+/// ids are also the generator's hub/community head, so hot seeds pull hot
+/// neighborhoods). All tenants share one distribution — the online-serving
+/// regime where popular entities are popular for everyone.
+#[derive(Clone, Copy, Debug)]
+pub struct SeedSkew {
+    /// Node-space size (seeds never exceed it).
+    pub nodes: u32,
+    /// Prefix the draw concentrates on (`nodes` = skew over everything).
+    pub hot: u32,
+}
+
+impl SeedSkew {
+    /// Skew over the whole node space.
+    pub fn over(nodes: u32) -> Self {
+        SeedSkew { nodes, hot: nodes }
+    }
+
+    pub fn draw(&self, rng: &mut Pcg) -> u32 {
+        let span = self.hot.clamp(1, self.nodes.max(1));
+        let u = rng.f64();
+        (((span as f64) * u * u * u) as u32).min(self.nodes - 1)
+    }
+}
+
+/// Bounded admission queue with shed accounting. `offer` (open loop) never
+/// blocks; `submit` (closed loop) does. Consumers are the micro-batcher.
+pub struct Admission {
+    queue: BoundedQueue<InferRequest>,
+    offered: AtomicU64,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// Offered / admitted / shed counts at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionCounts {
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+}
+
+impl Admission {
+    pub fn new(cap: usize) -> Self {
+        Admission {
+            queue: BoundedQueue::new(cap.max(1)),
+            offered: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.queue.cap()
+    }
+
+    /// Open-loop entry: admit or shed, never block. Returns whether the
+    /// request was admitted. Requests offered after `close` are shed too
+    /// (a draining server refuses new work).
+    pub fn offer(&self, req: InferRequest) -> bool {
+        self.offered.fetch_add(1, Ordering::Relaxed);
+        match self.queue.try_push(req) {
+            Ok(()) => {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Closed-loop entry: block on backpressure (the client self-throttles).
+    /// `Err(Closed)` once the server is draining — counted as shed so
+    /// `offered == admitted + shed` holds on every path.
+    pub fn submit(&self, req: InferRequest) -> Result<(), Closed> {
+        self.offered.fetch_add(1, Ordering::Relaxed);
+        match self.queue.push(req) {
+            Ok(()) => {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(closed) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(closed)
+            }
+        }
+    }
+
+    /// Batcher side: blocking pop (drains the remainder after close).
+    pub fn pop(&self) -> Result<InferRequest, Closed> {
+        self.queue.pop()
+    }
+
+    /// Batcher side: pop with a linger deadline (see
+    /// [`BoundedQueue::pop_timeout`]).
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<InferRequest>, Closed> {
+        self.queue.pop_timeout(timeout)
+    }
+
+    /// Stop admitting; queued requests still drain to the batcher.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    pub fn counts(&self) -> AdmissionCounts {
+        AdmissionCounts {
+            offered: self.offered.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Open-loop generator: Poisson arrivals at `rps` (in *sim* time — the rate
+/// the simulated device timings are calibrated against) for `total`
+/// requests, round-robin across `tenants` streams with per-tenant seed
+/// draws. Runs on the calling thread; returns when every arrival has been
+/// offered (admitted or shed).
+pub fn run_open_loop(
+    adm: &Admission,
+    clock: &Clock,
+    skew: SeedSkew,
+    tenants: usize,
+    total: u64,
+    rps: f64,
+    seed: u64,
+) {
+    assert!(rps > 0.0, "open loop needs a positive --rps");
+    let tenants = tenants.max(1);
+    let mut rng = Pcg::with_stream(seed ^ 0x0BE2, 0x10AD);
+    for i in 0..total {
+        // Exponential inter-arrival: -ln(1-u)/λ, slept in sim units so the
+        // offered rate and the device model share one clock.
+        let u = rng.f64();
+        let gap = -(1.0 - u).ln() / rps;
+        clock.sleep(Duration::from_secs_f64(gap));
+        let tenant = (i % tenants as u64) as usize;
+        adm.offer(InferRequest {
+            tenant,
+            seed: skew.draw(&mut rng),
+            arrival: Instant::now(),
+            done: None,
+        });
+    }
+}
+
+/// One closed-loop client: a tenant's synchronous caller that keeps exactly
+/// one request outstanding — submit, wait for completion, repeat — until the
+/// shared budget runs out or the server drains. Returns the number of
+/// requests this client completed.
+pub fn run_closed_loop_client(
+    adm: &Admission,
+    skew: SeedSkew,
+    tenant: usize,
+    budget: &AtomicU64,
+    seed: u64,
+) -> u64 {
+    let mut rng = Pcg::with_stream(seed ^ 0xC10_5ED, tenant as u64);
+    let mut completed = 0u64;
+    loop {
+        // Claim one unit of the shared request budget.
+        if budget
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1))
+            .is_err()
+        {
+            return completed;
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest {
+            tenant,
+            seed: skew.draw(&mut rng),
+            arrival: Instant::now(),
+            done: Some(tx),
+        };
+        if adm.submit(req).is_err() {
+            return completed; // server draining
+        }
+        if rx.recv().is_err() {
+            return completed; // server dropped the request mid-drain
+        }
+        completed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tenant: usize) -> InferRequest {
+        InferRequest { tenant, seed: 0, arrival: Instant::now(), done: None }
+    }
+
+    #[test]
+    fn offer_sheds_when_full_and_counts_balance() {
+        let adm = Admission::new(2);
+        assert!(adm.offer(req(0)));
+        assert!(adm.offer(req(1)));
+        assert!(!adm.offer(req(2)), "third offer must shed, not block");
+        let c = adm.counts();
+        assert_eq!(c, AdmissionCounts { offered: 3, admitted: 2, shed: 1 });
+        // Draining makes room; offers admit again.
+        assert_eq!(adm.pop().unwrap().tenant, 0);
+        assert!(adm.offer(req(3)));
+        assert_eq!(adm.counts().shed, 1);
+        // Post-close offers shed.
+        adm.close();
+        assert!(!adm.offer(req(4)));
+        assert_eq!(adm.counts().shed, 2);
+        // The admitted remainder still drains.
+        assert_eq!(adm.pop().unwrap().tenant, 1);
+        assert_eq!(adm.pop().unwrap().tenant, 3);
+        assert!(adm.pop().is_err());
+    }
+
+    #[test]
+    fn submit_blocks_instead_of_shedding() {
+        let adm = std::sync::Arc::new(Admission::new(1));
+        adm.submit(req(0)).unwrap();
+        let adm2 = adm.clone();
+        let h = std::thread::spawn(move || adm2.submit(req(1)));
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(!h.is_finished(), "closed-loop submit must block, not shed");
+        adm.pop().unwrap();
+        h.join().unwrap().unwrap();
+        assert_eq!(adm.counts().shed, 0);
+    }
+
+    #[test]
+    fn seed_skew_is_hot_headed_and_in_range() {
+        let skew = SeedSkew::over(10_000);
+        let mut rng = Pcg::new(7);
+        let draws: Vec<u32> = (0..4000).map(|_| skew.draw(&mut rng)).collect();
+        assert!(draws.iter().all(|&d| d < 10_000));
+        let hot = draws.iter().filter(|&&d| d < 1250).count(); // hottest eighth
+        assert!(
+            hot > draws.len() / 3,
+            "cubic skew should concentrate mass at the head ({hot}/{})",
+            draws.len()
+        );
+        // A hot prefix confines every draw while keeping the head hot.
+        let confined = SeedSkew { nodes: 10_000, hot: 500 };
+        let mut rng = Pcg::new(9);
+        let draws: Vec<u32> = (0..1000).map(|_| confined.draw(&mut rng)).collect();
+        assert!(draws.iter().all(|&d| d < 500), "draws must stay in the hot prefix");
+    }
+
+    #[test]
+    fn closed_loop_budget_is_exact() {
+        let adm = std::sync::Arc::new(Admission::new(16));
+        let budget = std::sync::Arc::new(AtomicU64::new(10));
+        let skew = SeedSkew::over(100);
+        // A trivial in-line "server" completing everything.
+        let server = {
+            let adm = adm.clone();
+            std::thread::spawn(move || {
+                while let Ok(r) = adm.pop() {
+                    if let Some(done) = r.done {
+                        let _ = done.send(Instant::now());
+                    }
+                }
+            })
+        };
+        let clients: Vec<_> = (0..3)
+            .map(|t| {
+                let adm = adm.clone();
+                let budget = budget.clone();
+                std::thread::spawn(move || run_closed_loop_client(&adm, skew, t, &budget, 5))
+            })
+            .collect();
+        let total: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 10, "exactly the shared budget completes");
+        assert_eq!(adm.counts().admitted, 10);
+        adm.close();
+        server.join().unwrap();
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 #[derive(Debug)]
 pub struct BoundedQueue<T> {
@@ -162,6 +163,31 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Pop with a deadline: blocks up to `timeout` for an item, then returns
+    /// `Ok(None)`. `Err(Closed)` only when closed *and* drained — a closed
+    /// queue still hands out its remaining items first, like `pop`. Used by
+    /// the serving micro-batcher, whose linger bound (`--serve-wait`) must
+    /// flush a partial batch instead of waiting for it to fill.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, Closed> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed {
+                return Err(Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            st = self.not_empty.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
@@ -301,6 +327,28 @@ mod tests {
         assert_eq!(q.pop().unwrap(), 0);
         assert_eq!(q.pop().unwrap(), 1);
         assert!(q.pop().is_err());
+    }
+
+    #[test]
+    fn pop_timeout_times_out_then_delivers() {
+        let q = Arc::new(BoundedQueue::new(4));
+        // Empty queue: the deadline elapses with Ok(None).
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)).unwrap(), None::<u32>);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        // An item arriving before the deadline is delivered promptly.
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.push(9u32).unwrap();
+        });
+        assert_eq!(q.pop_timeout(Duration::from_secs(5)).unwrap(), Some(9));
+        h.join().unwrap();
+        // Closed + drained reports Closed, but remaining items drain first.
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)).unwrap(), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Err(Closed));
     }
 
     #[test]

@@ -178,6 +178,14 @@ pub trait AsyncIoEngine: Send + Sync {
     fn inflight(&self) -> u64;
     /// Completions not yet harvested by the caller.
     fn pending_harvest(&self) -> u64;
+    /// Quiesce after an aborted submit/harvest cycle: block until every
+    /// submitted request has completed, then discard all unharvested CQEs.
+    /// On return `inflight() == 0 && pending_harvest() == 0`, so the staging
+    /// ranges of the abandoned requests are safe to reset or reissue — a
+    /// late completion can no longer scatter into recycled arena bytes.
+    /// Callers that harvested every CQE they submitted (the normal wave
+    /// protocol) never need this; it exists for early-exit/abort paths.
+    fn drain(&self);
 }
 
 /// A storage backend: synchronous reads/writes + charging + stats, and a

@@ -171,6 +171,32 @@ impl EngineCore {
         submitted.saturating_sub(harvested + inflight)
     }
 
+    /// Quiesce the core after an aborted cycle: wait out every in-flight
+    /// request and swallow every unharvested completion, leaving
+    /// `inflight() == pending_harvest() == 0`.
+    ///
+    /// Loop shape: ready CQEs are consumed non-blockingly first; only when
+    /// none are ready *and* requests are still in flight does the call
+    /// block on the CQ — each such in-flight request is guaranteed to push
+    /// a CQE (workers complete even requests popped from a closed SQ), so
+    /// the blocking pop always terminates. The exit check re-reads both
+    /// counters after the CQ is observed empty, closing the race where a
+    /// completion lands between the peek and the check (`inflight` is
+    /// decremented *before* the CQE push, so `inflight == 0 &&
+    /// pending_harvest == 0` proves both the writes and the bookkeeping of
+    /// every submitted request have finished).
+    pub fn drain(&self) {
+        loop {
+            if self.peek_cqe().is_some() {
+                continue;
+            }
+            if self.inflight() == 0 && self.pending_harvest() == 0 {
+                return;
+            }
+            self.wait_cqe();
+        }
+    }
+
     /// Close both queues (engine shutdown; workers drain and exit).
     pub fn close(&self) {
         self.sq.close();

@@ -247,6 +247,10 @@ impl AsyncIoEngine for PreadPool {
     fn pending_harvest(&self) -> u64 {
         self.core.pending_harvest()
     }
+
+    fn drain(&self) {
+        self.core.drain()
+    }
 }
 
 impl Drop for PreadPool {

@@ -124,6 +124,10 @@ impl AsyncIoEngine for Uring {
     fn pending_harvest(&self) -> u64 {
         self.core.pending_harvest()
     }
+
+    fn drain(&self) {
+        self.core.drain()
+    }
 }
 
 impl Drop for Uring {

@@ -34,6 +34,14 @@ pub trait TrainStep: Send {
     /// Execute one step. `features` is row-major `[caps.last(), dim]`,
     /// gathered from the feature buffer by node alias.
     fn step(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult;
+    /// Read-only forward pass (the serving frontend's inference path): same
+    /// shape contract as `step`, but parameters MUST NOT change. The default
+    /// falls back to `step`, which is only correct for stateless cost
+    /// models; real trainers override it (`TrainHandle` routes to its
+    /// eval-only artifact, `SimTrainStep` charges forward-only time).
+    fn forward(&mut self, batch: &PaddedSubgraph, features: &[f32]) -> StepResult {
+        self.step(batch, features)
+    }
     /// True when `loss`/`correct` are real numerics (PJRT path).
     fn is_real(&self) -> bool;
 }

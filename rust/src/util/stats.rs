@@ -54,18 +54,26 @@ impl Online {
 
 /// Log-bucketed latency histogram (~4 % resolution) with percentile queries.
 /// Fixed memory, lock-free-friendly (callers own it or shard it).
+///
+/// The histogram is **mergeable**: `merge` is a commutative, associative
+/// bucket-wise sum, so per-worker histograms recorded independently and
+/// merged at the end report exactly the same quantiles as one histogram fed
+/// every sample — the contract the serving frontend's per-worker stage
+/// recording relies on. The true maximum is tracked exactly (not bucketed)
+/// so the extreme tail is never under-reported.
 #[derive(Clone, Debug)]
 pub struct LatencyHist {
     buckets: Vec<u64>,
     count: u64,
     sum_ns: u128,
+    max_ns: u64,
 }
 
 const HIST_BUCKETS: usize = 512;
 
 impl Default for LatencyHist {
     fn default() -> Self {
-        LatencyHist { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0 }
+        LatencyHist { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
     }
 }
 
@@ -95,6 +103,7 @@ impl LatencyHist {
         self.buckets[Self::index(ns)] += 1;
         self.count += 1;
         self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
     }
 
     pub fn merge(&mut self, other: &LatencyHist) {
@@ -103,10 +112,15 @@ impl LatencyHist {
         }
         self.count += other.count;
         self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
     }
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
     }
 
     pub fn mean(&self) -> Duration {
@@ -114,6 +128,11 @@ impl LatencyHist {
             return Duration::ZERO;
         }
         Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
+    }
+
+    /// Largest recorded value, exact (not bucket-quantized).
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
     }
 
     pub fn percentile(&self, p: f64) -> Duration {
@@ -125,10 +144,41 @@ impl LatencyHist {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return Duration::from_nanos(Self::bucket_value(i));
+                // The top bucket's representative value can undershoot an
+                // extreme outlier; the exact max caps the answer honestly.
+                return Duration::from_nanos(Self::bucket_value(i).min(self.max_ns));
             }
         }
-        Duration::from_nanos(Self::bucket_value(HIST_BUCKETS - 1))
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// `percentile` over a `[0, 1]` quantile (the serving layer speaks
+    /// quantiles; figures speak percentiles — same histogram walk).
+    pub fn quantile(&self, q: f64) -> Duration {
+        self.percentile(q * 100.0)
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(99.0)
+    }
+
+    /// One-line tail summary: `p50 1.2ms  p95 3.4ms  p99 5.6ms (n=100)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {:>8}  p95 {:>8}  p99 {:>8} (n={})",
+            crate::util::units::fmt_dur(self.p50()),
+            crate::util::units::fmt_dur(self.p95()),
+            crate::util::units::fmt_dur(self.p99()),
+            self.count
+        )
     }
 }
 
@@ -196,6 +246,89 @@ mod tests {
         b.record(Duration::from_micros(1000));
         a.merge(&b);
         assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), Duration::from_micros(1000));
+    }
+
+    /// Deterministic pseudo-random latency stream for the merge/quantile
+    /// properties (spans ns..ms so many distinct buckets are hit).
+    fn stream(seed: u64, n: u64) -> impl Iterator<Item = Duration> {
+        (0..n).map(move |i| {
+            let h = crate::util::rng::hash2(seed, i);
+            Duration::from_nanos(64 + h % 5_000_000)
+        })
+    }
+
+    fn quantile_grid(h: &LatencyHist) -> Vec<Duration> {
+        (0..=100).map(|p| h.percentile(p as f64)).collect()
+    }
+
+    #[test]
+    fn hist_merge_is_associative_and_commutative() {
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) == one histogram fed every sample —
+        // identical counts, mean, max and the full quantile grid. This is
+        // the contract that lets per-worker serving histograms merge into
+        // one honest tail report.
+        let mut parts: Vec<LatencyHist> = Vec::new();
+        let mut whole = LatencyHist::default();
+        for s in 0..3u64 {
+            let mut h = LatencyHist::default();
+            for d in stream(s * 7 + 1, 500) {
+                h.record(d);
+                whole.record(d);
+            }
+            parts.push(h);
+        }
+        let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+
+        let mut left = a.clone(); // (a ⊕ b) ⊕ c
+        left.merge(b);
+        left.merge(c);
+        let mut right = a.clone(); // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(c);
+        right.merge(&bc);
+        let mut swapped = c.clone(); // c ⊕ b ⊕ a (commutativity)
+        swapped.merge(b);
+        swapped.merge(a);
+
+        for m in [&left, &right, &swapped] {
+            assert_eq!(m.count(), whole.count());
+            assert_eq!(m.mean(), whole.mean());
+            assert_eq!(m.max(), whole.max());
+            assert_eq!(quantile_grid(m), quantile_grid(&whole));
+        }
+        // Merging an empty histogram is the identity.
+        let mut id = whole.clone();
+        id.merge(&LatencyHist::default());
+        assert_eq!(quantile_grid(&id), quantile_grid(&whole));
+    }
+
+    #[test]
+    fn hist_quantiles_are_monotone_and_bounded() {
+        let mut h = LatencyHist::default();
+        let mut lo = Duration::MAX;
+        for d in stream(42, 2000) {
+            h.record(d);
+            lo = lo.min(d);
+        }
+        let grid = quantile_grid(&h);
+        for w in grid.windows(2) {
+            assert!(w[0] <= w[1], "quantiles must be monotone: {w:?}");
+        }
+        // q ∈ [0,1] sugar agrees with the percentile walk.
+        assert_eq!(h.quantile(0.5), h.p50());
+        assert_eq!(h.quantile(0.95), h.p95());
+        assert_eq!(h.quantile(0.99), h.p99());
+        // Bounds: the whole grid sits inside [~min bucket edge, exact max].
+        assert!(*grid.last().unwrap() <= h.max());
+        assert!(grid[0] <= lo, "p0 must not exceed the smallest sample");
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99());
+        assert!(h.summary().contains("n=2000"));
+        // Empty histogram degenerates to zeros.
+        let e = LatencyHist::default();
+        assert!(e.is_empty());
+        assert_eq!(e.p99(), Duration::ZERO);
+        assert_eq!(e.max(), Duration::ZERO);
     }
 
     #[test]

@@ -10,8 +10,12 @@
 //! single-threaded determinism check that the alias and node release paths
 //! are observationally identical.
 
-use gnndrive::membuf::FeatureBuffer;
-use gnndrive::storage::DeviceMemory;
+use gnndrive::config::{Machine, MachineConfig};
+use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::membuf::{FeatureBuffer, StagingBuffer};
+use gnndrive::sim::Clock;
+use gnndrive::storage::{DeviceMemory, IoBackend as _};
 use gnndrive::util::rng::Pcg;
 use std::sync::{Arc, Barrier};
 
@@ -236,6 +240,119 @@ fn eviction_churn_with_alias_release_under_tiny_buffer() {
         steals > loads / 4,
         "a {CHURN_SLOTS}-slot buffer over {CHURN_IDS} ids must churn (steals {steals}, loads {loads})"
     );
+}
+
+#[test]
+fn multi_tenant_serving_workers_share_one_buffer_with_balanced_io() {
+    // The serving frontend's tenancy contract at the membuf layer: N
+    // serving workers plus one trainer hammer ONE feature buffer through
+    // real extractors (async direct I/O, full submit→publish→release
+    // lifecycle) with overlapping skewed node sets. After shutdown there
+    // must be zero leaked references or slots, and the backend's charged
+    // I/O must balance exactly against the buffer's load count — every
+    // loaded row charged exactly once (shared in-flight extractions and
+    // cross-tenant hits charge nothing), nothing in flight left behind.
+    const SERVERS: usize = 4; // + 1 trainer below
+    const SLOTS: usize = 256;
+    const ROUNDS: u64 = 60;
+    const BATCH: usize = 24;
+
+    let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+    let ds = Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap();
+    let dim = ds.spec.dim; // 16 → 64 B rows, 8 per 512 B sector
+    let row_bytes = ds.features.row_bytes() as usize;
+    let fb = Arc::new(FeatureBuffer::in_host(&machine.host, SLOTS, dim).unwrap());
+    // Hot head shared by every tenant: heavy cross-thread reuse + stealing.
+    let hot_ids: u32 = 600;
+
+    machine.backend.reset_io_stats();
+    let dio0 = machine.backend.direct_stats().snapshot();
+
+    std::thread::scope(|s| {
+        for t in 0..SERVERS + 1 {
+            let fb = fb.clone();
+            let machine = &machine;
+            let ds = &ds;
+            s.spawn(move || {
+                // Per-row requests (coalescing off) so the charge balance
+                // below is exact: one charged request per loaded row.
+                let staging =
+                    StagingBuffer::new(&machine.host, 64, row_bytes).unwrap();
+                let ex = Extractor::with_options(
+                    machine.backend.clone(),
+                    32,
+                    staging,
+                    fb.clone(),
+                    ds.features.clone(),
+                    ExtractTarget::Host,
+                    ExtractOptions {
+                        coalesce: CoalesceConfig::disabled(),
+                        ..Default::default()
+                    },
+                );
+                let mut out = vec![0f32; BATCH * dim];
+                let mut want = vec![0u8; row_bytes];
+                for i in 0..ROUNDS {
+                    let mut rng = Pcg::with_stream(0x7E4A17 + t as u64, i);
+                    let mut batch: Vec<u32> = (0..BATCH)
+                        .map(|_| {
+                            if t == SERVERS {
+                                // The "trainer" walks a colder range too.
+                                rng.below(ds.spec.nodes)
+                            } else {
+                                rng.below(hot_ids)
+                            }
+                        })
+                        .collect();
+                    batch.sort_unstable();
+                    batch.dedup();
+                    let aliases = ex.extract(&batch);
+                    fb.gather(&aliases, &mut out[..batch.len() * dim]);
+                    for (k, &node) in batch.iter().enumerate() {
+                        ds.feature_gen.fill_row(node as u64, &mut want);
+                        let exp = gnndrive::graph::FeatureGen::decode_row(&want);
+                        assert_eq!(
+                            &out[k * dim..k * dim + dim],
+                            &exp[..],
+                            "tenant {t} round {i}: node {node} row corrupted"
+                        );
+                    }
+                    fb.release_aliases(&aliases);
+                }
+            });
+        }
+    });
+
+    // Zero leaked references or slots.
+    fb.check_invariants().unwrap();
+    assert_eq!(fb.standby_len(), SLOTS, "slot references leaked after shutdown");
+    let (hits, _shared, steals, loads) = fb.stats();
+    assert!(hits > 0, "hot head must produce cross-tenant hits");
+    assert!(steals > 0, "cold trainer traffic must churn the buffer");
+    assert!(loads > 0);
+
+    // Balanced I/O accounting: per-row direct extraction charges exactly
+    // one request per loaded row, each one sector (64 B rows never straddle
+    // 512 B sectors), and useful bytes are exactly the row bytes. Nothing
+    // else touched the device.
+    let reads = machine
+        .backend
+        .io_counters()
+        .reads
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let read_bytes = machine
+        .backend
+        .io_counters()
+        .read_bytes
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let (useful, aligned) = {
+        let (u, a) = machine.backend.direct_stats().snapshot();
+        (u - dio0.0, a - dio0.1)
+    };
+    assert_eq!(reads, loads, "charged requests must balance loaded rows");
+    assert_eq!(read_bytes, loads * 512, "one sector charged per loaded row");
+    assert_eq!(useful, loads * row_bytes as u64, "useful bytes = row bytes");
+    assert_eq!(aligned, loads * 512, "aligned bytes = one sector per row");
 }
 
 #[test]

@@ -1,0 +1,215 @@
+//! End-to-end tests of the `serve` subsystem: closed- and open-loop runs on
+//! the sim backend, load shedding past the admission bound, the shared- vs
+//! per-tenant-buffer ablation, concurrent serve+train tenancy, and an
+//! os-backend smoke over a real tempdir dataset.
+
+use gnndrive::config::{Machine, MachineConfig};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::serve::{BatchSpec, ServeConfig, ServeEngine};
+use gnndrive::sim::Clock;
+use gnndrive::storage::{BackendKind, IoBackend as _};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sim_setup() -> (Arc<Machine>, Arc<Dataset>) {
+    let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
+    (machine, ds)
+}
+
+fn quick_cfg() -> ServeConfig {
+    ServeConfig {
+        tenants: 2,
+        workers: 2,
+        requests: 60,
+        clients: 3,
+        admit_cap: 64,
+        batch: BatchSpec { max_requests: 8, max_wait: Duration::from_millis(2) },
+        fanouts: vec![4, 4],
+        io_depth: 32,
+        seed: 11,
+        ..ServeConfig::default()
+    }
+}
+
+/// After a run every buffer must be fully quiesced: zero leaked references
+/// (all slots standby) and internally consistent.
+fn assert_buffers_quiesced(engine: &ServeEngine) {
+    for fb in engine.buffers() {
+        fb.check_invariants().unwrap();
+        assert_eq!(fb.standby_len(), fb.n_slots, "slot references leaked");
+    }
+}
+
+#[test]
+fn closed_loop_completes_every_request() {
+    let (machine, ds) = sim_setup();
+    let engine = ServeEngine::new(&machine, &ds, quick_cfg()).unwrap();
+    let report = engine.run(0).unwrap();
+    assert_eq!(report.completed, 60, "closed loop must complete its whole budget");
+    assert_eq!(report.counts.offered, 60);
+    assert_eq!(report.counts.admitted, 60);
+    assert_eq!(report.counts.shed, 0, "closed-loop submits block, never shed");
+    assert!(report.batches > 0 && report.batches <= 60);
+    assert!(report.mean_batch_fill() >= 1.0);
+    // Every stage histogram saw one sample per request.
+    for hist in [
+        &report.stages.admission,
+        &report.stages.sample,
+        &report.stages.extract,
+        &report.stages.compute,
+        &report.stages.total,
+    ] {
+        assert_eq!(hist.count(), 60);
+    }
+    // End-to-end latency dominates each stage and quantiles are ordered.
+    assert!(report.stages.total.p99() >= report.stages.extract.p50());
+    assert!(report.stages.total.p50() <= report.stages.total.p99());
+    assert!(report.wall > Duration::ZERO);
+    assert!(report.throughput_rps() > 0.0);
+    assert!(report.ssd_read_requests > 0, "inference must touch the SSD");
+    assert!(report.buffer_loads > 0);
+    assert_eq!(report.train_steps, 0);
+    assert_buffers_quiesced(&engine);
+}
+
+#[test]
+fn shared_buffer_turns_hot_nodes_into_cross_tenant_hits() {
+    let (machine, ds) = sim_setup();
+    let mut cfg = quick_cfg();
+    cfg.requests = 200;
+    cfg.tenants = 4;
+    cfg.clients = 4;
+    let engine = ServeEngine::new(&machine, &ds, cfg).unwrap();
+    assert_eq!(engine.buffers().len(), 1, "default tenancy is one shared buffer");
+    let report = engine.run(0).unwrap();
+    assert_eq!(report.completed, 200);
+    // The skewed seed distribution repeats hot nodes across tenants: the
+    // shared buffer must serve a healthy share of them without I/O.
+    assert!(
+        report.buffer_hits > 0,
+        "no cross-tenant reuse: hits {} loads {}",
+        report.buffer_hits,
+        report.buffer_loads
+    );
+    assert_buffers_quiesced(&engine);
+
+    // A second epoch on the warm engine reuses resident rows.
+    let again = engine.run(1).unwrap();
+    assert!(
+        again.buffer_hits > 0,
+        "warm serving process must hit its resident rows"
+    );
+    assert_buffers_quiesced(&engine);
+}
+
+#[test]
+fn open_loop_sheds_past_saturation_instead_of_queueing() {
+    let (machine, ds) = sim_setup();
+    let mut cfg = quick_cfg();
+    // Arrivals far beyond service capacity against a tiny admission bound:
+    // the overload must convert to shed requests, not an unbounded queue.
+    cfg.requests = 300;
+    cfg.rps = 200_000.0;
+    cfg.admit_cap = 4;
+    cfg.workers = 1;
+    let engine = ServeEngine::new(&machine, &ds, cfg).unwrap();
+    let report = engine.run(0).unwrap();
+    assert_eq!(report.counts.offered, 300);
+    assert!(report.counts.shed > 0, "past saturation the bounded queue must shed");
+    assert_eq!(
+        report.counts.admitted + report.counts.shed,
+        report.counts.offered,
+        "every offer either admits or sheds"
+    );
+    assert_eq!(
+        report.completed, report.counts.admitted,
+        "admitted requests are never dropped"
+    );
+    // Shedding bounds queueing: an admitted request waited at most
+    // ~(cap + in-flight batches) service times, far below the whole run.
+    assert!(report.stages.admission.p99() < report.wall);
+    assert_buffers_quiesced(&engine);
+}
+
+#[test]
+fn per_tenant_ablation_isolates_buffers_and_pays_more_io() {
+    let (machine_shared, ds_shared) = sim_setup();
+    let (machine_split, ds_split) = sim_setup();
+    let mk = |per_tenant: bool| ServeConfig {
+        requests: 240,
+        tenants: 4,
+        clients: 4,
+        per_tenant_buffer: per_tenant,
+        ..quick_cfg()
+    };
+    let shared = ServeEngine::new(&machine_shared, &ds_shared, mk(false)).unwrap();
+    let split = ServeEngine::new(&machine_split, &ds_split, mk(true)).unwrap();
+    assert_eq!(split.buffers().len(), 4, "one buffer per tenant under the ablation");
+    assert_eq!(
+        shared.caps(),
+        split.caps(),
+        "ablation must compare identical per-request work"
+    );
+    let r_shared = shared.run(0).unwrap();
+    let r_split = split.run(0).unwrap();
+    assert_eq!(r_shared.completed, 240);
+    assert_eq!(r_split.completed, 240);
+    // Hot rows are loaded once shared, once *per tenant* split: the shared
+    // configuration must not load (or charge) more.
+    assert!(
+        r_shared.buffer_loads <= r_split.buffer_loads,
+        "shared tenancy must not increase row loads ({} vs {})",
+        r_shared.buffer_loads,
+        r_split.buffer_loads
+    );
+    assert!(
+        r_shared.ssd_read_requests <= r_split.ssd_read_requests,
+        "shared tenancy must not charge more SSD requests ({} vs {})",
+        r_shared.ssd_read_requests,
+        r_split.ssd_read_requests
+    );
+    assert_buffers_quiesced(&shared);
+    assert_buffers_quiesced(&split);
+}
+
+#[test]
+fn serve_while_train_shares_one_buffer() {
+    let (machine, ds) = sim_setup();
+    let mut cfg = quick_cfg();
+    cfg.requests = 80;
+    cfg.serve_while_train = true;
+    let engine = ServeEngine::new(&machine, &ds, cfg).unwrap();
+    let report = engine.run(0).unwrap();
+    assert_eq!(report.completed, 80, "training must not starve serving");
+    assert!(
+        report.train_steps > 0,
+        "the concurrent trainer must make progress while serving"
+    );
+    // Trainer and servers shared one buffer and both released everything.
+    assert_eq!(engine.buffers().len(), 1);
+    assert_buffers_quiesced(&engine);
+}
+
+#[test]
+fn os_backend_serves_from_real_files() {
+    let dir = std::env::temp_dir().join(format!("gnndrive_serve_os_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = DatasetSpec::unit_test();
+    Dataset::write_dir(&spec, &dir).unwrap();
+    let machine = Arc::new(Machine::new(
+        MachineConfig::paper().with_backend(BackendKind::Os),
+        Clock::new(1.0),
+    ));
+    assert_eq!(machine.backend.name(), "os");
+    let ds = Arc::new(Dataset::load_dir(&dir, &machine).unwrap());
+    let mut cfg = quick_cfg();
+    cfg.requests = 30;
+    let engine = ServeEngine::new(&machine, &ds, cfg).unwrap();
+    let report = engine.run(0).unwrap();
+    assert_eq!(report.completed, 30);
+    assert_eq!(report.counts.shed, 0);
+    assert!(report.ssd_read_requests > 0, "os backend must charge real reads");
+    assert_buffers_quiesced(&engine);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -42,15 +42,37 @@ trap 'rm -rf "$SMOKE_DIR"' EXIT
 ./target/release/gnndrive train --system gnndrive --backend sim \
   --dataset unit-test --batches 2 --epochs 1
 
+echo "== smoke: gnndrive serve (sim + os backends) =="
+# Serving frontend end to end: closed-loop inference on the sim backend …
+./target/release/gnndrive serve --backend sim --dataset unit-test \
+  --requests 60 --clients 3 --tenants 2 --serve-workers 2 \
+  --serve-batch 8 --fanouts 4,4
+# … and over real files in the tempdir (same dataset the os train smoke used).
+./target/release/gnndrive serve --backend os --data "$SMOKE_DIR/ds" \
+  --requests 30 --clients 2 --tenants 2 --serve-workers 1 \
+  --serve-batch 4 --fanouts 4,4
+
 echo "== bench: extract_coalesce (coalesced segment I/O trajectory) =="
 # Runs the extraction bench (release) and appends to BENCH_extract.json; the
 # bench itself asserts the ISSUE-4 acceptance gate (>= 2x fewer charged
 # requests on the GraphSAGE workload with coalescing on).
 cargo bench --bench extract_coalesce
 
+echo "== bench: serve_latency (serving throughput + tail latency) =="
+# Runs the serving bench and appends to BENCH_serve.json; the bench asserts
+# the ISSUE-5 acceptance gates (shared buffer beats the per-tenant ablation
+# on p99 extract latency and charged SSD requests at the same offered load;
+# the bounded admission queue sheds rather than queues past saturation).
+cargo bench --bench serve_latency
+
 if [ -f BENCH_extract.json ]; then
   echo "== last BENCH_extract.json record =="
   tail -n 1 BENCH_extract.json
+fi
+
+if [ -f BENCH_serve.json ]; then
+  echo "== last BENCH_serve.json record =="
+  tail -n 1 BENCH_serve.json
 fi
 
 if [ -f BENCH_hotpath.json ]; then
