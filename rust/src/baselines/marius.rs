@@ -334,6 +334,10 @@ impl TrainingSystem for MariusGnn {
             extract_hist: Default::default(), // per-batch tail tracked for GNNDrive only
             align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: 0,
+            io_retries: io.io_retries,
+            io_failures: io.io_failures,
+            direct_fallbacks: io.direct_fallbacks,
+            dropped_rows: 0,
         })
     }
 

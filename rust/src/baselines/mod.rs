@@ -31,7 +31,7 @@ impl TrainingSystem for GnnDriveSystem {
     }
 
     fn run_epoch(&mut self, epoch: u64) -> anyhow::Result<EpochStats> {
-        Ok(self.engine.run_epoch(epoch))
+        self.engine.try_run_epoch(epoch)
     }
 
     fn run_sample_only(&mut self, epoch: u64) -> Duration {

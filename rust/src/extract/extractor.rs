@@ -38,9 +38,43 @@ use super::coalesce::{plan_segments, CoalesceConfig, SegRow};
 use crate::graph::FeatureTable;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::sim::Latch;
-use crate::storage::api::{AsyncIoEngine, IoBackend, IoMode, Sqe};
+use crate::storage::api::{AsyncIoEngine, Cqe, IoBackend, IoError, IoMode, Sqe};
 use crate::storage::Pcie;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A batch extraction that completed *degraded*: every row of the batch is
+/// present and the wave protocol fully resolved (aliases are valid, staging
+/// ranges were recycled, references balance), but `failed_nodes` hold zeroed
+/// placeholder rows because their I/O exhausted the retry policy. The caller
+/// owns policy: gather-and-train anyway (`drop-rows`), release + evict +
+/// re-extract (`retry`), or abort (`fail`). Either way the aliases **must**
+/// still be released through the normal lifecycle.
+#[derive(Debug)]
+pub struct ExtractError {
+    /// Alias list of the whole batch — valid for gather/release like a
+    /// successful extraction's return value.
+    pub aliases: Vec<i32>,
+    /// Nodes whose rows hold zeroed placeholders. Pair with
+    /// [`FeatureBuffer::evict_if_idle`] before a retry so the reload is
+    /// served by storage, not by the stale placeholder.
+    pub failed_nodes: Vec<u32>,
+    /// Representative (first-seen) error.
+    pub error: IoError,
+}
+
+impl std::fmt::Display for ExtractError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "feature extraction degraded: {} row(s) failed ({})",
+            self.failed_nodes.len(),
+            self.error
+        )
+    }
+}
+
+impl std::error::Error for ExtractError {}
 
 /// Where extracted rows land (§4.4 "CPU-based Training" skips the PCIe hop).
 pub enum ExtractTarget {
@@ -126,14 +160,34 @@ impl Extractor {
     }
 
     /// Extract the feature rows of `nodes` into the feature buffer; returns
-    /// the node alias list (slot per node) for the trainer.
+    /// the node alias list (slot per node) for the trainer. Infallible
+    /// facade over [`Extractor::try_extract`] for callers with no error
+    /// policy: an exhausted-retry I/O failure panics here (the pipeline and
+    /// serve engines use `try_extract` and decide policy instead).
     pub fn extract(&self, nodes: &[u32]) -> Vec<i32> {
+        match self.try_extract(nodes) {
+            Ok(aliases) => aliases,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible extraction with graceful degradation: on I/O failure every
+    /// failed row is published as a zeroed placeholder (so the wave/wait
+    /// protocol fully resolves and no staging range or reference leaks) and
+    /// the batch returns [`ExtractError`] carrying the still-valid alias
+    /// list plus the failed node ids.
+    pub fn try_extract(&self, nodes: &[u32]) -> Result<Vec<i32>, ExtractError> {
         let plan = self.fb.begin_batch(nodes);
 
         if !self.opts.asynchronous {
-            self.extract_sync(&plan.to_load);
+            let (failed_nodes, first_err) = self.try_extract_sync(&plan.to_load);
             self.fb.wait_plan(&plan);
-            return plan.aliases;
+            return match first_err {
+                None => Ok(plan.aliases),
+                Some(error) => {
+                    Err(ExtractError { aliases: plan.aliases, failed_nodes, error })
+                }
+            };
         }
 
         // Shutdown/abort ordering: a previous extraction that exited early
@@ -165,8 +219,11 @@ impl Extractor {
         // request until the CQE is harvested (the SlotRef protocol); the
         // wave-end latch keeps the next wave from reusing arena bytes
         // before every transfer of this wave has landed.
+        let mut failed_nodes: Vec<u32> = Vec::new();
+        let mut first_err: Option<IoError> = None;
+        let mut poisoned = false;
         let mut next = 0;
-        while next < segments.len() {
+        while next < segments.len() && !poisoned {
             let mut wave = self.staging.wave_alloc();
             let mut in_wave = Vec::new();
             let mut sqes = Vec::new();
@@ -193,31 +250,61 @@ impl Extractor {
             self.engine.submit_batch(sqes);
 
             // Phase 2: as each segment completes, launch its transfer
-            // without waiting for sibling segments.
+            // without waiting for sibling segments. A segment that
+            // completes with an error degrades in place: its rows publish
+            // as zeroed placeholders (keeping the latch/wait protocol
+            // balanced) and are reported to the caller.
+            let mut done = vec![false; in_wave.len()];
             for _ in 0..in_wave.len() {
                 let cqe = self.engine.wait_cqe();
-                let (seg, staged) = &in_wave[cqe.user_data as usize];
-                match &self.target {
-                    ExtractTarget::Device(pcie) => {
-                        let fb = self.fb.clone();
-                        let latch = latch.clone();
-                        let staged = staged.clone();
-                        let rows = seg.rows.clone();
-                        let row_bytes = self.staging.row_bytes;
-                        // Only the rows cross PCIe — bridged gap bytes die
-                        // in staging.
-                        pcie.transfer_async(seg.useful, move || {
-                            // Decode straight from the staging bytes into
-                            // the arena rows — no intermediate Vec<f32>,
-                            // no per-row lock.
-                            publish_rows(&fb, &rows, &staged, row_bytes);
+                if cqe.user_data == Cqe::POISON_USER_DATA {
+                    // The engine died with this wave outstanding: every
+                    // unharvested segment is failed; the core has already
+                    // reconciled its counters and a late completion can no
+                    // longer scatter (workers are gone).
+                    for (harvested, (seg, _)) in done.iter().zip(&in_wave) {
+                        if !harvested {
+                            fail_rows(&self.fb, &seg.rows, self.staging.row_bytes);
+                            failed_nodes.extend(seg.rows.iter().map(|r| r.node));
                             latch.count_down();
-                        });
+                        }
                     }
-                    ExtractTarget::Host => {
-                        publish_rows(&self.fb, &seg.rows, staged, self.staging.row_bytes);
+                    first_err.get_or_insert(IoError::EnginePoisoned);
+                    poisoned = true;
+                    break;
+                }
+                done[cqe.user_data as usize] = true;
+                let (seg, staged) = &in_wave[cqe.user_data as usize];
+                match &cqe.status {
+                    Err(e) => {
+                        // Staging bytes are undefined: never decode them.
+                        fail_rows(&self.fb, &seg.rows, self.staging.row_bytes);
+                        failed_nodes.extend(seg.rows.iter().map(|r| r.node));
+                        first_err.get_or_insert(e.clone());
                         latch.count_down();
                     }
+                    Ok(_) => match &self.target {
+                        ExtractTarget::Device(pcie) => {
+                            let fb = self.fb.clone();
+                            let latch = latch.clone();
+                            let staged = staged.clone();
+                            let rows = seg.rows.clone();
+                            let row_bytes = self.staging.row_bytes;
+                            // Only the rows cross PCIe — bridged gap bytes
+                            // die in staging.
+                            pcie.transfer_async(seg.useful, move || {
+                                // Decode straight from the staging bytes
+                                // into the arena rows — no intermediate
+                                // Vec<f32>, no per-row lock.
+                                publish_rows(&fb, &rows, &staged, row_bytes);
+                                latch.count_down();
+                            });
+                        }
+                        ExtractTarget::Host => {
+                            publish_rows(&self.fb, &seg.rows, staged, self.staging.row_bytes);
+                            latch.count_down();
+                        }
+                    },
                 }
             }
             // All transfers of this wave must land before its staging
@@ -225,33 +312,94 @@ impl Extractor {
             latch.wait();
         }
 
+        // A poisoned engine cannot serve the remaining waves (submitting
+        // would abort): their rows degrade to placeholders too, so the
+        // plan's loading slots all resolve and `wait_plan` cannot hang.
+        if poisoned {
+            for seg in &segments[next..] {
+                fail_rows(&self.fb, &seg.rows, self.staging.row_bytes);
+                failed_nodes.extend(seg.rows.iter().map(|r| r.node));
+            }
+        }
+
         // Wait for nodes being extracted by peer extractors (pre-resolved
         // tickets: no shard locks on the wait path).
         self.fb.wait_plan(&plan);
-        plan.aliases
+        match first_err {
+            None => Ok(plan.aliases),
+            Some(error) => Err(ExtractError { aliases: plan.aliases, failed_nodes, error }),
+        }
     }
 
     /// Ablation: synchronous extraction — one blocking read + one blocking
     /// transfer per row on this thread (no overlap, no coalescing: the
     /// paper's D2 congestion mode must stay a faithful per-row baseline).
-    fn extract_sync(&self, to_load: &[(u32, u32)]) {
+    /// Applies the backend's retry policy per row; rows that exhaust it
+    /// publish zeroed placeholders and are returned as failed.
+    fn try_extract_sync(&self, to_load: &[(u32, u32)]) -> (Vec<u32>, Option<IoError>) {
         let row_bytes = self.staging.row_bytes;
-        let mut buf = self.sync_scratch.lock().unwrap();
+        let policy = self.backend.retry_policy();
+        // Poison-tolerant lock: a panic in an unrelated caller must not
+        // wedge every future extraction on this shared scratch buffer (the
+        // Vec itself is always left in a valid state — worst case it holds
+        // stale bytes that the next read overwrites).
+        let mut buf = self.sync_scratch.lock().unwrap_or_else(|e| e.into_inner());
         buf.resize(row_bytes, 0);
+        let mut failed_nodes = Vec::new();
+        let mut first_err: Option<IoError> = None;
         for &(node, slot) in to_load {
             let off = self.features.row_offset(node as u64);
-            if self.opts.direct {
-                self.backend.read_direct(&self.features.file, off, &mut buf);
-            } else {
-                self.backend.read_buffered(&self.features.file, off, &mut buf);
+            let mut attempt = 0u32;
+            let outcome = loop {
+                let r = if self.opts.direct {
+                    self.backend.try_read_direct(&self.features.file, off, &mut buf, attempt)
+                } else {
+                    self.backend.try_read_buffered(&self.features.file, off, &mut buf, attempt)
+                };
+                match r {
+                    Ok(()) => break Ok(()),
+                    Err(e) if e.retryable() && attempt < policy.max_retries => {
+                        attempt += 1;
+                        self.backend.direct_stats().count_retry();
+                        std::thread::sleep(Duration::from_micros(
+                            policy.backoff_us(off, attempt),
+                        ));
+                    }
+                    Err(e) => {
+                        self.backend.direct_stats().count_failure();
+                        break Err(e);
+                    }
+                }
+            };
+            match outcome {
+                Ok(()) => {
+                    // Host target (CPU training) skips the PCIe hop: the
+                    // row decodes straight into the host-resident buffer.
+                    if let ExtractTarget::Device(pcie) = &self.target {
+                        pcie.transfer_sync(row_bytes);
+                    }
+                    self.fb.publish_le_bytes(node, slot, &buf);
+                }
+                Err(e) => {
+                    buf.fill(0);
+                    self.fb.publish_le_bytes(node, slot, &buf);
+                    failed_nodes.push(node);
+                    first_err.get_or_insert(e);
+                }
             }
-            // Host target (CPU training) skips the PCIe hop: the row
-            // decodes straight into the host-resident buffer.
-            if let ExtractTarget::Device(pcie) = &self.target {
-                pcie.transfer_sync(row_bytes);
-            }
-            self.fb.publish_le_bytes(node, slot, &buf);
         }
+        (failed_nodes, first_err)
+    }
+}
+
+/// Publish zeroed placeholder rows for a failed segment: the wave protocol
+/// (latch, wait_plan, reference balance) requires *something* in every
+/// loading slot, and zeros are the only bytes we may legally write when the
+/// staging range contents are undefined.
+fn fail_rows(fb: &FeatureBuffer, rows: &[SegRow], row_bytes: usize) {
+    let zeros = vec![0u8; row_bytes];
+    for r in rows {
+        fb.publish_le_bytes(r.node, r.slot, &zeros);
     }
 }
 

@@ -5,4 +5,4 @@ pub mod coalesce;
 pub mod extractor;
 
 pub use coalesce::{plan_segments, CoalesceConfig, SegRow, Segment};
-pub use extractor::{ExtractOptions, ExtractTarget, Extractor};
+pub use extractor::{ExtractError, ExtractOptions, ExtractTarget, Extractor};

@@ -32,15 +32,22 @@
 //! runs a concurrent training loop over the shared buffer. Per-stage
 //! p50/p95/p99 (admission/sample/extract/compute) are reported per epoch
 //! and merged into a final summary.
+//!
+//! Fault tolerance: `--fault-rate/--fault-short/--fault-stall/
+//! --fault-bad-range` wrap the selected backend in deterministic seeded
+//! fault injection (`--fault-seed`); engines retry per `--io-retries`, and
+//! `--on-io-error {fail,retry,drop-rows}` picks the batch-level policy when
+//! retries are exhausted (serving always degrades to per-request error
+//! responses instead).
 
 use gnndrive::baselines::{build_system, SystemKind};
-use gnndrive::config::{Machine, MachineConfig, TrainConfig};
+use gnndrive::config::{FaultProfile, Machine, MachineConfig, OnIoError, TrainConfig};
 use gnndrive::extract::CoalesceConfig;
 use gnndrive::graph::{Dataset, DatasetSpec};
 use gnndrive::runtime::simcompute::ModelKind;
 use gnndrive::serve::{BatchSpec, ServeConfig, ServeEngine, ServeReport};
 use gnndrive::sim::Clock;
-use gnndrive::storage::{BackendKind, IoBackend as _};
+use gnndrive::storage::{BackendKind, FaultPlan, IoBackend as _, RetryPolicy};
 use gnndrive::util::args::Args;
 use std::sync::Arc;
 
@@ -88,6 +95,22 @@ fn main() {
         "hot-nodes",
         "0",
         "serve: size of the popular-seed head requests concentrate on (0 = whole graph)",
+    )
+    .opt("fault-seed", "1024023", "fault injection: root seed of the deterministic fault plan")
+    .opt("fault-rate", "0", "fault injection: transient-error probability per read try")
+    .opt("fault-short", "0", "fault injection: short-read probability per read try")
+    .opt("fault-stall", "0", "fault injection: stall probability per read try")
+    .opt("fault-stall-us", "200", "fault injection: stall duration (sim microseconds)")
+    .opt(
+        "fault-bad-range",
+        "",
+        "fault injection: permanently unreadable byte range START:LEN (sizes accept KiB/MiB)",
+    )
+    .opt("io-retries", "3", "engine retry policy: max re-issues per failed request")
+    .opt(
+        "on-io-error",
+        "fail",
+        "train: batch policy once retries are exhausted (fail | retry | drop-rows)",
     )
     .flag(
         "per-tenant-buffer",
@@ -156,9 +179,58 @@ fn parse_fanouts(s: &str) -> Vec<usize> {
     s.split(',').filter_map(|p| p.trim().parse().ok()).collect()
 }
 
+/// Parse the `--fault-*` / `--io-retries` flags into a fault profile;
+/// `Ok(None)` when no fault knob is active (the backend stays unwrapped).
+/// `Err` carries the process exit code.
+fn parse_fault(args: &Args) -> Result<Option<FaultProfile>, i32> {
+    let rate = |key: &str| -> Result<f64, i32> {
+        let v = args.get_f64(key).unwrap_or(0.0);
+        if !(0.0..=1.0).contains(&v) {
+            eprintln!("--{key}: probability must be in [0, 1], got {v}");
+            return Err(2);
+        }
+        Ok(v)
+    };
+    let mut plan = FaultPlan {
+        seed: args.get_usize("fault-seed").unwrap_or(0xFA017) as u64,
+        transient_rate: rate("fault-rate")?,
+        short_rate: rate("fault-short")?,
+        stall_rate: rate("fault-stall")?,
+        stall_us: args.get_usize("fault-stall-us").unwrap_or(200) as u64,
+        bad_ranges: Vec::new(),
+    };
+    if let Some(spec) = args.get("fault-bad-range").filter(|s| !s.is_empty()) {
+        let parts: Vec<&str> = spec.splitn(2, ':').collect();
+        let parsed = match parts.as_slice() {
+            [start, len] => gnndrive::util::units::parse_bytes(start)
+                .and_then(|s| gnndrive::util::units::parse_bytes(len).map(|l| (s, l))),
+            _ => Err("expected START:LEN".to_string()),
+        };
+        match parsed {
+            Ok((start, len)) if len > 0 => plan.bad_ranges.push((start, len)),
+            Ok(_) => {
+                eprintln!("--fault-bad-range: LEN must be > 0");
+                return Err(2);
+            }
+            Err(e) => {
+                eprintln!("--fault-bad-range: {e} (format: START:LEN, e.g. 4096:64KiB)");
+                return Err(2);
+            }
+        }
+    }
+    if !plan.is_active() {
+        return Ok(None);
+    }
+    let policy = RetryPolicy {
+        max_retries: args.get_usize("io-retries").unwrap_or(3) as u32,
+        ..RetryPolicy::default()
+    };
+    Ok(Some(FaultProfile { plan, policy }))
+}
+
 /// Build the machine and load/materialize the dataset from the shared
-/// `--backend/--data/--dataset/--dim/--memory-gb` flags (used by `train`
-/// and `serve`). `Err` carries the process exit code.
+/// `--backend/--data/--dataset/--dim/--memory-gb/--fault-*` flags (used by
+/// `train` and `serve`). `Err` carries the process exit code.
 fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>), i32> {
     let backend_name = args.get_or_default("backend");
     let Some(backend) = BackendKind::by_name(backend_name) else {
@@ -169,10 +241,11 @@ fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>)
         return Err(2);
     };
     let gb: u64 = args.get_usize("memory-gb").unwrap_or(32) as u64;
-    let machine = Arc::new(Machine::new(
-        MachineConfig::paper().with_paper_host_gb(gb).with_backend(backend),
-        Clock::from_env(),
-    ));
+    let mut mcfg = MachineConfig::paper().with_paper_host_gb(gb).with_backend(backend);
+    if let Some(profile) = parse_fault(args)? {
+        mcfg = mcfg.with_fault(profile);
+    }
+    let machine = Arc::new(Machine::new(mcfg, Clock::from_env()));
 
     let data_dir = args.get("data").filter(|d| !d.is_empty());
     if backend == BackendKind::Os && data_dir.is_none() {
@@ -247,12 +320,21 @@ fn cmd_train(args: &Args) -> i32 {
         Ok(pair) => pair,
         Err(code) => return code,
     };
+    let on_io_error_name = args.get_or_default("on-io-error");
+    let Some(on_io_error) = OnIoError::by_name(on_io_error_name) else {
+        eprintln!(
+            "unknown --on-io-error {on_io_error_name:?}; valid policies: {}",
+            OnIoError::names()
+        );
+        return 2;
+    };
     let cfg = TrainConfig {
         batch_size: args.get_usize("batch-size").unwrap_or(1000),
         fanouts: parse_fanouts(args.get_or_default("fanouts")),
         batches_per_epoch: args.get("batches").and_then(|b| b.parse().ok()),
         coalesce_bytes,
         coalesce_gap,
+        on_io_error,
         ..TrainConfig::default()
     };
     let epochs = args.get_usize("epochs").unwrap_or(1);

@@ -666,6 +666,47 @@ impl FeatureBuffer {
         }
     }
 
+    /// Degradation support: evict those of `node_ids` whose rows are
+    /// resident (including zero-published placeholders from a failed
+    /// extraction) and currently unreferenced, so a batch retry reloads
+    /// them from storage instead of aliasing stale placeholder bytes.
+    /// Nodes still referenced by peer batches are left alone (those peers
+    /// already own the degraded rows); unmapped nodes are skipped. Returns
+    /// the number of slots actually evicted.
+    pub fn evict_if_idle(&self, node_ids: &[u32]) -> usize {
+        let mut evicted = 0usize;
+        for &id in node_ids {
+            let shard = self.node_shard(id);
+            let mut st =
+                self.shards[shard].state.lock().unwrap_or_else(|e| e.into_inner());
+            let Some(e) = st.map.get(&id).copied() else { continue };
+            let word = self.states.load(e.slot);
+            if slot_state::generation(word) != e.generation {
+                // Stale entry (the slot was claimed since): just drop it.
+                st.map.remove(&id);
+                continue;
+            }
+            if slot_state::refs(word) != 0 {
+                continue;
+            }
+            let Some(new_gen) = self.states.try_claim(e.slot, word) else {
+                continue; // raced with a clock claim or a fresh reference
+            };
+            st.map.remove(&id);
+            // Same hand-back ordering as a raced clock claim: untenant
+            // while the claim's reference parks the word, zero the word,
+            // then publish the slot on the free stack.
+            self.reverse[e.slot as usize].store(-1, Ordering::SeqCst);
+            self.states.reset(e.slot, 0, false, new_gen);
+            self.free.push(e.slot);
+            drop(st);
+            self.valid_event(e.slot).signal();
+            self.free_event.signal();
+            evicted += 1;
+        }
+        evicted
+    }
+
     /// Trainer-side gather: copy each alias's row into `out` (row-major).
     /// Negative aliases (padding) produce zero rows. Lock-free: one acquire
     /// load per row orders the copy behind the publisher's valid store.

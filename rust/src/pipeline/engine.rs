@@ -9,8 +9,8 @@
 //! naturally out-of-order (mini-batch reordering, §4.3) and backpressure is
 //! exactly the paper's: a full queue blocks its producers.
 
-use crate::config::{Machine, TrainConfig};
-use crate::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
+use crate::config::{Machine, OnIoError, TrainConfig};
+use crate::extract::{CoalesceConfig, ExtractError, ExtractOptions, ExtractTarget, Extractor};
 use crate::graph::Dataset;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::metrics::state::{self, Role, State};
@@ -95,12 +95,22 @@ pub struct EpochStats {
     /// dedups shared sectors, grows when gap bridging buys ops with bytes).
     pub align_overhead_bytes: u64,
     pub truncated_edges: usize,
+    /// Requests re-issued by the engine retry policy this epoch.
+    pub io_retries: u64,
+    /// Requests that completed with an error after the policy gave up.
+    pub io_failures: u64,
+    /// Direct reads served by the `O_DIRECT`→cached bounce-buffer fallback
+    /// (OS backend on filesystems that refuse the flag).
+    pub direct_fallbacks: u64,
+    /// Feature rows trained as zeroed placeholders under
+    /// `--on-io-error drop-rows`.
+    pub dropped_rows: usize,
 }
 
 impl EpochStats {
     pub fn summary(&self) -> String {
         format!(
-            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  reqs {:>7}  align+ {:>9}  x99 {:>8}  loss {:.4}  acc {:.3}",
+            "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  reqs {:>7}  align+ {:>9}  x99 {:>8}  retry {:>4}  iofail {:>3}  fallbk {:>4}  drop {:>4}  loss {:.4}  acc {:.3}",
             crate::util::units::fmt_dur(self.epoch_time),
             crate::util::units::fmt_dur(self.prep_time),
             crate::util::units::fmt_dur(self.sample_time),
@@ -114,6 +124,10 @@ impl EpochStats {
             // frontend competes with (zero for baselines, which don't
             // track the histogram).
             crate::util::units::fmt_dur(self.extract_hist.p99()),
+            self.io_retries,
+            self.io_failures,
+            self.direct_fallbacks,
+            self.dropped_rows,
             self.train.mean_loss(),
             self.train.accuracy(),
         )
@@ -267,8 +281,29 @@ impl GnnDrive {
         }
     }
 
-    /// Run one full SET epoch; returns per-stage stats.
+    /// Run one full SET epoch; returns per-stage stats. Infallible facade
+    /// over [`GnnDrive::try_run_epoch`] — panics if the epoch aborts on an
+    /// I/O error under `--on-io-error fail` (tests and legacy callers that
+    /// never inject faults keep the simple signature).
     pub fn run_epoch(&self, epoch: u64) -> EpochStats {
+        self.try_run_epoch(epoch)
+            .unwrap_or_else(|e| panic!("epoch {epoch} aborted: {e}"))
+    }
+
+    /// Run one full SET epoch, surfacing unrecoverable I/O errors as a typed
+    /// `Err` instead of a panic or a hang.
+    ///
+    /// The per-batch policy is `cfg.on_io_error`:
+    /// * `Fail` — first degraded batch aborts the epoch: the error is
+    ///   recorded, both queues close so every stage drains and joins, and
+    ///   the typed error is returned.
+    /// * `Retry` — the degraded batch's rows are released, the failed rows'
+    ///   zeroed placeholders are evicted (so the retry re-reads the backing
+    ///   store instead of aliasing stale zeros), and the batch is extracted
+    ///   once more; a second failure escalates to `Fail` semantics.
+    /// * `DropRows` — the batch trains with the failed rows zeroed; the row
+    ///   count lands in [`EpochStats::dropped_rows`].
+    pub fn try_run_epoch(&self, epoch: u64) -> anyhow::Result<EpochStats> {
         let clock = &self.machine.clock;
         let ids = self.segment_ids();
         let plan = EpochPlan::new(
@@ -292,6 +327,11 @@ impl GnnDrive {
         let train_stats = Mutex::new(TrainStats::default());
         let train_order = Mutex::new(Vec::<u64>::with_capacity(total_batches));
         let truncated = AtomicUsize::new(0);
+        let dropped = AtomicUsize::new(0);
+        // First unrecoverable extraction error (under `fail`, or `retry`
+        // exhausted). Setting it closes both queues, so every stage drains
+        // and the scope joins — the epoch *terminates* with a typed error.
+        let epoch_err = Mutex::new(None::<ExtractError>);
 
         let epoch_watch = Stopwatch::start(clock);
         let io_snap = EpochIoSnapshot::start(self.machine.backend.as_ref());
@@ -340,9 +380,13 @@ impl GnnDrive {
                 let extract_ns = &extract_ns;
                 let extract_hist = &extract_hist;
                 let extractors_left = &extractors_left;
+                let dropped = &dropped;
+                let epoch_err = &epoch_err;
+                let fb = &self.fb;
+                let on_io_error = self.cfg.on_io_error;
                 s.spawn(move || {
                     state::register(Role::Extractor);
-                    let ex = ex.lock().unwrap();
+                    let ex = ex.lock().unwrap_or_else(|e| e.into_inner());
                     loop {
                         let padded = {
                             let _idle = state::enter(State::Idle);
@@ -352,12 +396,48 @@ impl GnnDrive {
                             }
                         };
                         let sw = Stopwatch::start(clock);
-                        let aliases = ex.extract(&padded.nodes[..padded.real_nodes]);
+                        let nodes = &padded.nodes[..padded.real_nodes];
+                        let mut result = ex.try_extract(nodes);
+                        if let (Err(e), OnIoError::Retry) = (&result, on_io_error) {
+                            // One bounded re-extract: drop the degraded
+                            // batch's refs, evict the failed rows' zeroed
+                            // placeholders (else the retry would alias
+                            // them as cached hits), read again.
+                            fb.release_aliases(&e.aliases);
+                            fb.evict_if_idle(&e.failed_nodes);
+                            result = ex.try_extract(nodes);
+                        }
+                        let aliases = match result {
+                            Ok(a) => a,
+                            Err(e) if on_io_error == OnIoError::DropRows => {
+                                dropped.fetch_add(e.failed_nodes.len(), Ordering::Relaxed);
+                                e.aliases
+                            }
+                            Err(e) => {
+                                // `fail`, or `retry` exhausted: abort the
+                                // epoch. Refs are dropped here because
+                                // this item never reaches the releaser.
+                                fb.release_aliases(&e.aliases);
+                                let mut slot =
+                                    epoch_err.lock().unwrap_or_else(|p| p.into_inner());
+                                slot.get_or_insert(e);
+                                drop(slot);
+                                extract_q.close();
+                                train_q.close();
+                                break;
+                            }
+                        };
                         let took = sw.elapsed();
                         extract_ns.fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
                         extract_hist.lock().unwrap().record(took);
                         let _idle = state::enter(State::Idle);
+                        // The push consumes the item even on a closed
+                        // queue, so keep the alias list recoverable: a
+                        // batch that never reaches the releaser (peer
+                        // aborted the epoch) must drop its refs here.
+                        let recover = aliases.clone();
                         if train_q.push(TrainItem { padded, aliases }).is_err() {
+                            fb.release_aliases(&recover);
                             break;
                         }
                     }
@@ -459,9 +539,15 @@ impl GnnDrive {
             }
         });
 
+        if let Some(e) = epoch_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            return Err(anyhow::Error::new(e).context(format!(
+                "epoch {epoch} aborted by I/O error (policy: {:?})",
+                self.cfg.on_io_error
+            )));
+        }
         let order = train_order.into_inner().unwrap();
         let io = io_snap.totals(self.machine.backend.as_ref());
-        EpochStats {
+        Ok(EpochStats {
             epoch_time: epoch_watch.elapsed(),
             prep_time: Duration::ZERO,
             sample_time: Duration::from_nanos(sample_ns.into_inner()),
@@ -475,7 +561,11 @@ impl GnnDrive {
             extract_hist: extract_hist.into_inner().unwrap(),
             align_overhead_bytes: io.align_overhead_bytes,
             truncated_edges: truncated.into_inner(),
-        }
+            io_retries: io.io_retries,
+            io_failures: io.io_failures,
+            direct_fallbacks: io.direct_fallbacks,
+            dropped_rows: dropped.into_inner(),
+        })
     }
 
     /// Sample-only epoch (Fig 2's `-only` condition): run the samplers over

@@ -154,6 +154,11 @@ pub struct ServeReport {
     pub wall: Duration,
     pub counts: AdmissionCounts,
     pub completed: u64,
+    /// Requests answered with a typed I/O error after the engine retry
+    /// policy gave up on their batch's extraction. Disjoint from both
+    /// `completed` (useful responses) and `counts.shed` (refused at
+    /// admission): shed ≠ error ≠ ok.
+    pub errors: u64,
     pub batches: u64,
     pub stages: StageHists,
     /// Charged device reads / bytes / alignment overhead over the run
@@ -191,10 +196,11 @@ impl ServeReport {
     /// One-line run summary (the per-epoch report line).
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} (shed {})  batches {} (fill {:.1})  wall {}  {:.0} rps  e2e {}  extract p99 {}  ssd reqs {} ({})  fb hits {} loads {}{}",
+            "req {}/{} (shed {} err {})  batches {} (fill {:.1})  wall {}  {:.0} rps  e2e {}  extract p99 {}  ssd reqs {} ({})  fb hits {} loads {}{}",
             self.completed,
             self.counts.offered,
             self.counts.shed,
+            self.errors,
             self.batches,
             self.mean_batch_fill(),
             crate::util::units::fmt_dur(self.wall),
@@ -232,6 +238,7 @@ impl ServeReport {
         self.counts.admitted += other.counts.admitted;
         self.counts.shed += other.counts.shed;
         self.completed += other.completed;
+        self.errors += other.errors;
         self.batches += other.batches;
         self.stages.merge(&other.stages);
         self.ssd_read_requests += other.ssd_read_requests;
@@ -248,6 +255,7 @@ impl ServeReport {
 struct WorkerOutcome {
     hists: StageHists,
     completed: u64,
+    errors: u64,
     batches: u64,
 }
 
@@ -500,14 +508,17 @@ impl ServeEngine {
         let io = io_snap.totals(self.machine.backend.as_ref());
         let mut stages = StageHists::default();
         let mut completed = 0u64;
+        let mut errors = 0u64;
         for o in &outcomes {
             stages.merge(&o.hists);
             completed += o.completed;
+            errors += o.errors;
         }
         let mut report = ServeReport {
             wall,
             counts: adm.counts(),
             completed,
+            errors,
             batches,
             stages,
             ssd_read_requests: io.reads,
@@ -546,6 +557,7 @@ impl ServeEngine {
         let mut seeds: Vec<u32> = Vec::with_capacity(self.cfg.batch.max_requests);
         let mut hists = StageHists::default();
         let mut completed = 0u64;
+        let mut errors = 0u64;
         let mut batches = 0u64;
 
         while let Ok(batch) = batch_q.pop() {
@@ -570,7 +582,28 @@ impl ServeEngine {
             let t1 = Instant::now();
 
             let ex = &extractors[batch.group.min(extractors.len() - 1)];
-            let aliases = ex.extract(&padded.nodes[..padded.real_nodes]);
+            let aliases = match ex.try_extract(&padded.nodes[..padded.real_nodes]) {
+                Ok(a) => a,
+                Err(e) => {
+                    // Graceful degradation: the engine retry policy already
+                    // gave up on this batch's reads, so convert the batch
+                    // into per-request typed error responses and keep
+                    // serving — one bad sector must not take the frontend
+                    // down. The degraded rows' refs are dropped here (the
+                    // batch never reaches gather/release below).
+                    let fb = &self.buffers[batch.group.min(self.buffers.len() - 1)];
+                    fb.release_aliases(&e.aliases);
+                    fb.evict_if_idle(&e.failed_nodes);
+                    for r in batch.requests {
+                        errors += 1;
+                        if let Some(done) = r.done {
+                            let _ = done.send(Err(e.error.clone()));
+                        }
+                    }
+                    batches += 1;
+                    continue;
+                }
+            };
             let t2 = Instant::now();
 
             let fb = &self.buffers[batch.group.min(self.buffers.len() - 1)];
@@ -596,13 +629,13 @@ impl ServeEngine {
                 hists.total.record(clock.to_sim(t_end.saturating_duration_since(r.arrival)));
                 completed += 1;
                 if let Some(done) = r.done {
-                    let _ = done.send(t_end);
+                    let _ = done.send(Ok(t_end));
                 }
             }
             batches += 1;
         }
         state::deregister();
-        WorkerOutcome { hists, completed, batches }
+        WorkerOutcome { hists, completed, errors, batches }
     }
 
     /// Concurrent trainer (`--serve-while-train`): a single-threaded
@@ -641,10 +674,20 @@ impl ServeEngine {
                     seeds,
                 );
                 let padded = sub.pad(&self.caps, &self.cfg.fanouts);
-                let aliases = extractor.extract(&padded.nodes[..padded.real_nodes]);
-                let _ = stepper.step(&padded, &[]);
-                fb.release_aliases(&aliases);
-                steps.fetch_add(1, Ordering::Relaxed);
+                // The contention generator degrades like `--on-io-error
+                // drop-rows`: a failed extraction releases its refs and
+                // skips the step instead of killing the serving run.
+                match extractor.try_extract(&padded.nodes[..padded.real_nodes]) {
+                    Ok(aliases) => {
+                        let _ = stepper.step(&padded, &[]);
+                        fb.release_aliases(&aliases);
+                        steps.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        fb.release_aliases(&e.aliases);
+                        fb.evict_if_idle(&e.failed_nodes);
+                    }
+                }
             }
             inner_epoch += 1;
         }

@@ -31,4 +31,4 @@ pub mod request;
 
 pub use batcher::{BatchSpec, InferBatch};
 pub use engine::{ServeConfig, ServeEngine, ServeReport, StageHists};
-pub use request::{Admission, AdmissionCounts, InferRequest, SeedSkew};
+pub use request::{Admission, AdmissionCounts, InferRequest, InferResponse, SeedSkew};

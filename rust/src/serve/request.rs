@@ -17,10 +17,16 @@
 
 use crate::sim::queue::{BoundedQueue, Closed};
 use crate::sim::Clock;
+use crate::storage::IoError;
 use crate::util::rng::Pcg;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Per-request response: completion instant, or the typed I/O error that
+/// degraded the batch. An `Err` response is still a *response* — the request
+/// was admitted and served; it is distinct from being shed at admission.
+pub type InferResponse = Result<Instant, IoError>;
 
 /// One online inference request: classify a single seed node on behalf of a
 /// tenant's request stream.
@@ -29,9 +35,10 @@ pub struct InferRequest {
     pub seed: u32,
     /// Arrival instant (real time; reports convert to sim units).
     pub arrival: Instant,
-    /// Closed-loop completion signal carrying the completion instant;
-    /// open-loop requests carry `None` (nobody waits on them).
-    pub done: Option<mpsc::Sender<Instant>>,
+    /// Closed-loop completion signal carrying the response (completion
+    /// instant or typed I/O error); open-loop requests carry `None` (nobody
+    /// waits on them).
+    pub done: Option<mpsc::Sender<InferResponse>>,
 }
 
 /// Shared seed-node popularity: a cubic-skew draw over the hot prefix
@@ -187,7 +194,9 @@ pub fn run_open_loop(
 /// One closed-loop client: a tenant's synchronous caller that keeps exactly
 /// one request outstanding — submit, wait for completion, repeat — until the
 /// shared budget runs out or the server drains. Returns the number of
-/// requests this client completed.
+/// requests this client completed. An `Err` response (I/O-degraded request)
+/// still completes the call — the client got an answer, just not a useful
+/// one — so the budget accounting is identical under fault storms.
 pub fn run_closed_loop_client(
     adm: &Admission,
     skew: SeedSkew,
@@ -295,7 +304,7 @@ mod tests {
             std::thread::spawn(move || {
                 while let Ok(r) = adm.pop() {
                     if let Some(done) = r.done {
-                        let _ = done.send(Instant::now());
+                        let _ = done.send(Ok(Instant::now()));
                     }
                 }
             })

@@ -42,6 +42,116 @@ use crate::membuf::SlotRef;
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 
+/// Typed I/O failure. This is what a [`Cqe`] carries instead of a panic when
+/// a request cannot be served: consumers decide policy (retry the batch,
+/// drop the rows, abort the epoch) — the storage layer only classifies.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IoError {
+    /// Transient device error (injected or real `EIO`-class failure); a
+    /// retry of the same request may succeed.
+    Transient,
+    /// The request touches a permanently bad device range; retries cannot
+    /// succeed.
+    BadRange { offset: u64 },
+    /// The device returned fewer bytes than requested; `got < want`.
+    ShortRead { got: usize, want: usize },
+    /// The retry/deadline policy gave up on the request before it was
+    /// served (per-request deadline exceeded mid-backoff).
+    Deadline,
+    /// The serving worker panicked while handling this request; the panic
+    /// was contained and converted into this completion.
+    Internal,
+    /// The engine was closed or lost a worker with this request
+    /// outstanding; its fate is unknown and its staging bytes must not be
+    /// trusted.
+    EnginePoisoned,
+    /// Real OS read error with the raw errno (when available).
+    Os { code: i32 },
+}
+
+impl IoError {
+    /// Whether a bounded retry of the same request is worth attempting.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            IoError::Transient | IoError::ShortRead { .. } | IoError::Os { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Transient => write!(f, "transient device error"),
+            IoError::BadRange { offset } => write!(f, "bad device range at offset {offset}"),
+            IoError::ShortRead { got, want } => write!(f, "short read ({got}/{want} bytes)"),
+            IoError::Deadline => write!(f, "request deadline exceeded"),
+            IoError::Internal => write!(f, "engine worker panicked serving the request"),
+            IoError::EnginePoisoned => write!(f, "engine poisoned/closed with request outstanding"),
+            IoError::Os { code } => write!(f, "os read error (errno {code})"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+/// Bounded-retry policy the async engines apply per request at the
+/// submission/service layer. Retries happen on the engine worker serving
+/// the request: each attempt goes back through the backend's read path, so
+/// a retried read is **re-charged honestly** in `io_counters` (device ops
+/// and bytes accrue per attempt) and counted in [`DirectIoStats::retries`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (`0` = fail fast).
+    pub max_retries: u32,
+    /// First backoff, microseconds (doubles per attempt, jittered).
+    pub backoff_base_us: u64,
+    /// Backoff ceiling, microseconds.
+    pub backoff_cap_us: u64,
+    /// Per-request service deadline, microseconds of wall time across all
+    /// attempts and backoffs; `None` = unbounded. When the deadline passes
+    /// mid-policy the request completes with [`IoError::Deadline`].
+    pub deadline_us: Option<u64>,
+    /// Seed for deterministic backoff jitter.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff_base_us: 50,
+            backoff_cap_us: 5_000,
+            deadline_us: None,
+            jitter_seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast policy: no retries, no deadline (`--on-io-error fail`).
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, ..RetryPolicy::default() }
+    }
+
+    /// Backoff before retry number `attempt` (1-based) of the request
+    /// identified by `key`: exponential with full jitter, capped.
+    /// Deterministic in `(jitter_seed, key, attempt)`.
+    pub fn backoff_us(&self, key: u64, attempt: u32) -> u64 {
+        let exp = self
+            .backoff_base_us
+            .saturating_mul(1u64 << attempt.saturating_sub(1).min(20))
+            .min(self.backoff_cap_us);
+        if exp == 0 {
+            return 0;
+        }
+        // Full jitter in [exp/2, exp]: keeps retries spread without
+        // collapsing the backoff floor.
+        let h = crate::util::rng::hash3(self.jitter_seed, key, attempt as u64);
+        exp / 2 + h % (exp / 2 + 1)
+    }
+}
+
 /// Counters for direct-I/O alignment overhead (redundant bytes loaded when a
 /// request does not fit sector granularity — §4.4 "Access Granularity").
 ///
@@ -54,6 +164,14 @@ pub struct DirectIoStats {
     pub requests: AtomicU64,
     pub useful_bytes: AtomicU64,
     pub aligned_bytes: AtomicU64,
+    /// Requests re-issued by the engine retry policy (per retry attempt).
+    pub retries: AtomicU64,
+    /// Requests that completed with an error after the policy gave up.
+    pub failures: AtomicU64,
+    /// Direct reads served through the cached-`pread` bounce-buffer
+    /// fallback instead of a real `O_DIRECT` descriptor (OS backend on
+    /// filesystems that refuse `O_DIRECT`, or memory-backed files).
+    pub direct_fallbacks: AtomicU64,
 }
 
 impl DirectIoStats {
@@ -72,6 +190,29 @@ impl DirectIoStats {
         let (useful, aligned) = self.snapshot();
         (aligned.saturating_sub(aligned0)).saturating_sub(useful.saturating_sub(useful0))
     }
+
+    /// `(retries, failures, direct_fallbacks)` snapshot — like `snapshot`,
+    /// these are process-cumulative and consumed as per-epoch deltas.
+    pub fn fault_snapshot(&self) -> (u64, u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (
+            self.retries.load(Relaxed),
+            self.failures.load(Relaxed),
+            self.direct_fallbacks.load(Relaxed),
+        )
+    }
+
+    pub fn count_retry(&self) {
+        self.retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn count_failure(&self) {
+        self.failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn count_fallback(&self) {
+        self.direct_fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
 }
 
 /// Start-of-epoch I/O bookmark: zeroes the backend's `io_counters` and pins
@@ -80,30 +221,42 @@ impl DirectIoStats {
 /// hand-rolled snapshot at each call site.
 pub struct EpochIoSnapshot {
     dio: (u64, u64),
+    faults: (u64, u64, u64),
 }
 
 /// Per-epoch charged-I/O totals derived from an [`EpochIoSnapshot`]
 /// (feeds `EpochStats::{ssd_read_bytes, ssd_read_requests,
-/// align_overhead_bytes}`).
+/// align_overhead_bytes, io_retries, io_failures, direct_fallbacks}`).
 pub struct EpochIoTotals {
     pub reads: u64,
     pub read_bytes: u64,
     pub align_overhead_bytes: u64,
+    pub io_retries: u64,
+    pub io_failures: u64,
+    pub direct_fallbacks: u64,
 }
 
 impl EpochIoSnapshot {
     pub fn start(backend: &dyn IoBackend) -> Self {
         backend.reset_io_stats();
-        EpochIoSnapshot { dio: backend.direct_stats().snapshot() }
+        EpochIoSnapshot {
+            dio: backend.direct_stats().snapshot(),
+            faults: backend.direct_stats().fault_snapshot(),
+        }
     }
 
     pub fn totals(&self, backend: &dyn IoBackend) -> EpochIoTotals {
         use std::sync::atomic::Ordering;
         let c = backend.io_counters();
+        let (retries0, failures0, fallbacks0) = self.faults;
+        let (retries, failures, fallbacks) = backend.direct_stats().fault_snapshot();
         EpochIoTotals {
             reads: c.reads.load(Ordering::Relaxed),
             read_bytes: c.read_bytes.load(Ordering::Relaxed),
             align_overhead_bytes: backend.direct_stats().overhead_since(self.dio),
+            io_retries: retries.saturating_sub(retries0),
+            io_failures: failures.saturating_sub(failures0),
+            direct_fallbacks: fallbacks.saturating_sub(fallbacks0),
         }
     }
 }
@@ -134,6 +287,7 @@ pub enum IoMode {
 /// engine's completion path writes the range bytes directly (no mutex per
 /// row). The submitter owns the range for the request's lifetime and must
 /// not touch `[dst_off, dst_off + len)` until the matching CQE is harvested.
+#[derive(Clone)]
 pub struct Sqe {
     pub file: SimFile,
     pub offset: u64,
@@ -147,10 +301,37 @@ pub struct Sqe {
 }
 
 /// Completion queue event.
-#[derive(Debug)]
+///
+/// `status` is the error contract of the whole async stack: `Ok(bytes)`
+/// means the request's staging range holds the true backing bytes;
+/// `Err(e)` means the range contents are **undefined** and the submitter
+/// must not decode them (it still owns the range and must release/reuse it
+/// through the normal wave protocol). `bytes` mirrors `Ok` (and is `0` on
+/// error) so accounting-only readers keep working.
+#[derive(Clone, Debug)]
 pub struct Cqe {
     pub user_data: u64,
     pub bytes: usize,
+    pub status: Result<usize, IoError>,
+}
+
+impl Cqe {
+    /// `user_data` of synthetic completions minted by a poisoned/closed
+    /// engine core: they correspond to no specific SQE, so harvesters must
+    /// treat the *whole* outstanding wave as failed.
+    pub const POISON_USER_DATA: u64 = u64::MAX;
+
+    pub fn ok(user_data: u64, bytes: usize) -> Self {
+        Cqe { user_data, bytes, status: Ok(bytes) }
+    }
+
+    pub fn err(user_data: u64, err: IoError) -> Self {
+        Cqe { user_data, bytes: 0, status: Err(err) }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status.is_ok()
+    }
 }
 
 /// An asynchronous I/O engine: bounded submission, unordered completion.
@@ -232,6 +413,65 @@ pub trait IoBackend: Send + Sync {
         useful: usize,
         buf: &mut [u8],
     ) -> usize;
+
+    /// Fallible segment-granular direct read (same accounting contract as
+    /// [`IoBackend::read_direct_segment_nocharge`], same no-charge pairing
+    /// with [`IoBackend::charge_multi`]). `attempt` is the 0-based service
+    /// attempt of this request: fault-injecting backends key their
+    /// deterministic fault plan on `(offset, attempt)`, so a transient
+    /// fault on attempt 0 can deterministically succeed on attempt 1 and a
+    /// fixed seed replays exactly. Plain backends ignore it and never fail.
+    ///
+    /// On `Err` the destination bytes are undefined and **nothing** was
+    /// recorded in `direct_stats` alignment counters (device-time charges
+    /// for the failed attempt, if any, are the backend's own business).
+    fn try_read_direct_segment(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+        attempt: u32,
+    ) -> Result<usize, IoError> {
+        let _ = attempt;
+        Ok(self.read_direct_segment_nocharge(file, offset, useful, buf))
+    }
+
+    /// Fallible fully-charged direct read (sync extraction path). Default:
+    /// the infallible [`IoBackend::read_direct`], which never fails.
+    fn try_read_direct(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        buf: &mut [u8],
+        attempt: u32,
+    ) -> Result<(), IoError> {
+        let _ = attempt;
+        self.read_direct(file, offset, buf);
+        Ok(())
+    }
+
+    /// Fallible buffered read. Default: the infallible
+    /// [`IoBackend::read_buffered`], which never fails.
+    fn try_read_buffered(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        buf: &mut [u8],
+        attempt: u32,
+    ) -> Result<(), IoError> {
+        let _ = attempt;
+        self.read_buffered(file, offset, buf);
+        Ok(())
+    }
+
+    /// The bounded-retry policy this backend's engines apply per request.
+    /// Plain backends use the default policy (errors only arise from real
+    /// OS faults there); the fault-injecting wrapper carries whatever the
+    /// `--on-io-error` / `--io-retries` knobs configured.
+    fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy::default()
+    }
 
     /// Charge a coalesced batch of `ops` direct reads totalling `bytes`
     /// (pairs with `read_direct_nocharge` / `read_direct_segment_nocharge`).

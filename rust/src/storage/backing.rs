@@ -11,11 +11,17 @@
 //!   from `(region offset)` by a generator function; used for large feature
 //!   tables so 100 GB-scale analogs need no disk space (DESIGN.md §3).
 
+use super::api::IoError;
 use std::fs::File;
 use std::io;
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock};
+
+/// Map a real OS read error to the typed I/O error surface.
+fn os_err(e: &io::Error) -> IoError {
+    IoError::Os { code: e.raw_os_error().unwrap_or(-1) }
+}
 
 /// Byte-addressed read-only store.
 pub trait Backing: Send + Sync {
@@ -25,12 +31,30 @@ pub trait Backing: Send + Sync {
     /// device is sized by `len`, and aligned reads may overhang).
     fn read_at(&self, offset: u64, buf: &mut [u8]);
 
+    /// Fallible `read_at`: surfaces real OS read errors as typed
+    /// [`IoError`]s instead of panicking. Default: in-memory and procedural
+    /// stores cannot fail.
+    fn try_read_at(&self, offset: u64, buf: &mut [u8]) -> Result<(), IoError> {
+        self.read_at(offset, buf);
+        Ok(())
+    }
+
     /// Like `read_at`, but bypassing the OS page cache where the store can
-    /// (`O_DIRECT`). Default: plain `read_at` — only [`FileBacking`] has a
-    /// kernel cache to bypass; in-memory and procedural stores are their own
-    /// "device".
-    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) {
-        self.read_at(offset, buf)
+    /// (`O_DIRECT`). Returns `true` when the bytes were genuinely served
+    /// through a direct descriptor, `false` when the cached path served them
+    /// (the bounce-buffer fallback the backend surfaces as
+    /// `DirectIoStats::direct_fallbacks`). Default: plain `read_at` — only
+    /// [`FileBacking`] has a kernel cache to bypass; in-memory and
+    /// procedural stores are their own "device".
+    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) -> bool {
+        self.read_at(offset, buf);
+        false
+    }
+
+    /// Fallible [`Backing::read_direct_at`] with the same `true` = really
+    /// direct / `false` = cached-fallback result.
+    fn try_read_direct_at(&self, offset: u64, buf: &mut [u8]) -> Result<bool, IoError> {
+        Ok(self.read_direct_at(offset, buf))
     }
 
     fn is_empty(&self) -> bool {
@@ -208,29 +232,38 @@ impl Backing for FileBacking {
     }
 
     fn read_at(&self, offset: u64, buf: &mut [u8]) {
-        buf.fill(0);
-        if offset >= self.len {
-            return;
-        }
-        let avail = (self.len - offset).min(buf.len() as u64) as usize;
-        // read_exact_at on a read-only snapshot; IO errors on a file we just
-        // opened indicate an unusable environment — surface loudly.
-        self.file
-            .read_exact_at(&mut buf[..avail], offset)
-            .expect("backing file read failed");
+        // Infallible entry point for callers with no error channel; the
+        // fallible path is `try_read_at`.
+        self.try_read_at(offset, buf).expect("backing file read failed");
     }
 
-    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) {
+    fn try_read_at(&self, offset: u64, buf: &mut [u8]) -> Result<(), IoError> {
+        buf.fill(0);
+        if offset >= self.len {
+            return Ok(());
+        }
+        let avail = (self.len - offset).min(buf.len() as u64) as usize;
+        // read_exact_at on a read-only snapshot; a real OS error becomes a
+        // typed completion error so the retry/degradation policy can act.
+        self.file.read_exact_at(&mut buf[..avail], offset).map_err(|e| os_err(&e))
+    }
+
+    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) -> bool {
+        self.try_read_direct_at(offset, buf).expect("backing file direct read failed")
+    }
+
+    fn try_read_direct_at(&self, offset: u64, buf: &mut [u8]) -> Result<bool, IoError> {
         if buf.is_empty() {
-            return;
+            return Ok(true);
         }
         if offset >= self.len {
             buf.fill(0);
-            return;
+            return Ok(true);
         }
-        if !self.try_read_odirect(offset, buf) {
-            self.read_at(offset, buf);
+        if self.try_read_odirect(offset, buf) {
+            return Ok(true);
         }
+        self.try_read_at(offset, buf).map(|()| false)
     }
 }
 

@@ -10,10 +10,77 @@
 //! worker loops over a [`WorkerPort`], and delegate the whole
 //! `AsyncIoEngine` surface to the core.
 
-use super::api::{Cqe, Sqe};
+use super::api::{Cqe, IoBackend, IoError, IoMode, RetryPolicy, Sqe};
 use crate::sim::queue::BoundedQueue;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Serve one request through the backend's fallible read path, applying the
+/// engine's bounded-retry policy. This is the one place the retry loop
+/// lives for both engines (`Uring`, `PreadPool`):
+///
+/// * each attempt goes back through the backend, so a retried read is
+///   re-charged honestly (device ops/bytes accrue per attempt that reached
+///   the device) and deterministic fault plans see the attempt number;
+/// * retries/failures are counted in the backend's [`DirectIoStats`];
+/// * a panic inside the backend read is contained and classified as
+///   [`IoError::Internal`] (not retried — a deterministic panic would loop);
+/// * when `RetryPolicy::deadline_us` elapses mid-policy, the request gives
+///   up with [`IoError::Deadline`].
+///
+/// Returns `(status, charged_aligned_bytes)`: the aligned byte count of the
+/// *successful* direct attempt (0 for buffered or failed requests), which
+/// engines batch into one [`IoBackend::charge_multi`] call per chunk.
+pub(crate) fn serve_sqe(
+    backend: &dyn IoBackend,
+    policy: &RetryPolicy,
+    sqe: &Sqe,
+) -> (Result<usize, IoError>, usize) {
+    let start = std::time::Instant::now();
+    let mut attempt: u32 = 0;
+    loop {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: this worker owns the request's staging sub-range until
+            // its CQE is published (the SlotRef range protocol).
+            let dst = unsafe { sqe.dst.slice_mut(sqe.dst_off, sqe.len) };
+            match sqe.mode {
+                IoMode::Direct => {
+                    backend.try_read_direct_segment(&sqe.file, sqe.offset, sqe.useful, dst, attempt)
+                }
+                IoMode::Buffered => {
+                    backend.try_read_buffered(&sqe.file, sqe.offset, dst, attempt).map(|()| 0)
+                }
+            }
+        }))
+        .unwrap_or(Err(IoError::Internal));
+        match res {
+            Ok(aligned) => return (Ok(sqe.len), aligned),
+            Err(e) => {
+                let over_deadline = policy
+                    .deadline_us
+                    .is_some_and(|d| start.elapsed().as_micros() as u64 >= d);
+                if !e.retryable() || attempt >= policy.max_retries || over_deadline {
+                    backend.direct_stats().count_failure();
+                    let e = if over_deadline && e.retryable() { IoError::Deadline } else { e };
+                    return (Err(e), 0);
+                }
+                attempt += 1;
+                backend.direct_stats().count_retry();
+                let backoff = policy.backoff_us(sqe.offset ^ sqe.user_data, attempt);
+                if backoff > 0 {
+                    std::thread::sleep(Duration::from_micros(backoff));
+                }
+            }
+        }
+    }
+}
+
+/// How long a blocked harvester waits on the CQ before re-checking whether
+/// the engine died underneath it (poisoned worker / closed core). Purely a
+/// liveness bound — on a healthy engine a pushed CQE wakes the waiter
+/// immediately and the timeout never matters.
+const HARVEST_POLL: Duration = Duration::from_millis(25);
 
 /// SQ/CQ pair + counter discipline shared by every async engine.
 pub struct EngineCore {
@@ -24,6 +91,11 @@ pub struct EngineCore {
     inflight: Arc<AtomicU64>,
     pub(crate) submitted: AtomicU64,
     harvested: AtomicU64,
+    /// Set when a worker thread died outside its per-request panic guard:
+    /// the counters may never balance again, so harvesters stop trusting
+    /// them and synthesize [`IoError::EnginePoisoned`] completions instead
+    /// of blocking forever.
+    poisoned: Arc<AtomicBool>,
 }
 
 /// A worker's handle into the core: pop submissions, publish completions.
@@ -33,6 +105,7 @@ pub struct WorkerPort {
     sq: Arc<BoundedQueue<Sqe>>,
     cq: Arc<BoundedQueue<Cqe>>,
     inflight: Arc<AtomicU64>,
+    poisoned: Arc<AtomicBool>,
 }
 
 impl WorkerPort {
@@ -46,11 +119,55 @@ impl WorkerPort {
         self.sq.pop_many(n)
     }
 
-    /// Publish a completion. The CQ is effectively unbounded (see
-    /// [`EngineCore::new`]), so this never blocks the worker.
+    /// Publish a successful completion. The CQ is effectively unbounded
+    /// (see [`EngineCore::new`]), so this never blocks the worker.
     pub fn complete(&self, user_data: u64, bytes: usize) {
-        self.inflight.fetch_sub(1, Ordering::Relaxed);
-        let _ = self.cq.push(Cqe { user_data, bytes });
+        self.dec_inflight();
+        let _ = self.cq.push(Cqe::ok(user_data, bytes));
+    }
+
+    /// Publish a failed completion: counters drain exactly as on success,
+    /// only the status differs — an I/O error must never strand `inflight`.
+    pub fn complete_err(&self, user_data: u64, err: IoError) {
+        self.dec_inflight();
+        let _ = self.cq.push(Cqe::err(user_data, err));
+    }
+
+    /// Mark the engine dead (worker lost outside its per-request guard).
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        // Wake blocked harvesters so they observe the poisoning: closing
+        // the CQ is the only broadcast we have, and a poisoned engine is
+        // done publishing real completions anyway.
+        self.cq.close();
+    }
+
+    /// RAII guard a worker holds for its whole loop: if the thread unwinds
+    /// past it (a panic the per-request guard did not contain), the core is
+    /// poisoned so harvesters fail fast instead of hanging.
+    pub fn poison_guard(&self) -> PoisonGuard {
+        PoisonGuard { port: self.clone() }
+    }
+
+    fn dec_inflight(&self) {
+        // Saturating: a late completion racing a dead-engine counter
+        // reconcile (`EngineCore::drain`) must not wrap the counter.
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+}
+
+/// See [`WorkerPort::poison_guard`].
+pub struct PoisonGuard {
+    port: WorkerPort,
+}
+
+impl Drop for PoisonGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.port.poison();
+        }
     }
 }
 
@@ -71,6 +188,7 @@ impl EngineCore {
             inflight: Arc::new(AtomicU64::new(0)),
             submitted: AtomicU64::new(0),
             harvested: AtomicU64::new(0),
+            poisoned: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -80,7 +198,28 @@ impl EngineCore {
             sq: self.sq.clone(),
             cq: self.cq.clone(),
             inflight: self.inflight.clone(),
+            poisoned: self.poisoned.clone(),
         }
+    }
+
+    /// Whether a worker died outside its panic guard (see [`WorkerPort::poison`]).
+    pub fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    /// The engine can no longer produce completions for outstanding work:
+    /// poisoned, or shut down with the SQ closed.
+    fn dead(&self) -> bool {
+        self.poisoned() || self.sq.is_closed()
+    }
+
+    /// Synthetic completion minted when the engine is dead with requests
+    /// outstanding: harvesters get a typed [`IoError::EnginePoisoned`]
+    /// instead of a hang or a panic. Tagged [`Cqe::POISON_USER_DATA`]
+    /// because it stands in for *some* lost request, not a specific one.
+    fn poisoned_cqe(&self) -> Cqe {
+        self.harvested.fetch_add(1, Ordering::Relaxed);
+        Cqe::err(Cqe::POISON_USER_DATA, IoError::EnginePoisoned)
     }
 
     /// Submit one request. Blocks only if the SQ is full (ring
@@ -119,23 +258,46 @@ impl EngineCore {
     }
 
     /// Harvest one completion, blocking until available.
+    ///
+    /// Never hangs and never panics on a dead engine: if the core is
+    /// poisoned or closed while completions are still owed, a synthetic
+    /// [`IoError::EnginePoisoned`] CQE is returned instead — the caller
+    /// learns its request is lost through the same typed channel as any
+    /// other I/O failure.
     pub fn wait_cqe(&self) -> Cqe {
-        let cqe = self.cq.pop().unwrap_or_else(|_| panic!("{} closed", self.name));
-        self.harvested.fetch_add(1, Ordering::Relaxed);
-        cqe
+        loop {
+            match self.cq.pop_timeout(HARVEST_POLL) {
+                Ok(Some(cqe)) => {
+                    self.harvested.fetch_add(1, Ordering::Relaxed);
+                    return cqe;
+                }
+                // Timed out with the engine still alive: keep waiting (a
+                // healthy engine will push and wake us).
+                Ok(None) => {
+                    if self.dead() {
+                        return self.poisoned_cqe();
+                    }
+                }
+                // CQ closed and drained: no real completion is coming.
+                Err(_) => return self.poisoned_cqe(),
+            }
+        }
     }
 
-    /// Harvest exactly `n` completions, blocking as needed; wakeups are
-    /// amortized across bursts of ready CQEs.
+    /// Harvest exactly `n` completions, blocking as needed; ready bursts
+    /// are drained non-blockingly between waits. On a dead engine the
+    /// remainder is filled with synthetic poisoned CQEs (see
+    /// [`EngineCore::wait_cqe`]) so the call always returns `n` entries.
     pub fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
-            let got = self
-                .cq
-                .pop_many(n - out.len())
-                .unwrap_or_else(|_| panic!("{} closed", self.name));
-            self.harvested.fetch_add(got.len() as u64, Ordering::Relaxed);
-            out.extend(got);
+            out.push(self.wait_cqe());
+            while out.len() < n {
+                match self.peek_cqe() {
+                    Some(cqe) => out.push(cqe),
+                    None => break,
+                }
+            }
         }
         out
     }
@@ -193,7 +355,24 @@ impl EngineCore {
             if self.inflight() == 0 && self.pending_harvest() == 0 {
                 return;
             }
-            self.wait_cqe();
+            if self.dead() {
+                // Poisoned or closed with requests outstanding: no further
+                // CQEs can arrive. Reconcile the counters to "quiesced" so
+                // callers (e.g. the extractor's drain-on-entry guard) stop
+                // re-entering, and return instead of hanging. Late
+                // completions from a surviving worker are tolerated: the
+                // inflight decrement saturates and stray CQEs are swallowed
+                // by the next drain.
+                self.inflight.store(0, Ordering::SeqCst);
+                self.harvested.store(self.submitted.load(Ordering::SeqCst), Ordering::SeqCst);
+                return;
+            }
+            // Block briefly for the next completion, then re-check liveness
+            // — this is what turns the old "hang forever on a dead engine"
+            // failure mode into a bounded wait.
+            if let Ok(Some(_)) = self.cq.pop_timeout(HARVEST_POLL) {
+                self.harvested.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 

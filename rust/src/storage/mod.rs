@@ -46,17 +46,59 @@
 //!   charges and [`api::DirectIoStats`], and bridged gap bytes show up
 //!   honestly as alignment overhead.
 //!
+//! ## Error contract
+//!
+//! I/O failure is a *typed completion*, never a panic and never a hang.
+//! The contract, layer by layer:
+//!
+//! * **A [`api::Cqe`] error means "bytes undefined, ownership unchanged".**
+//!   `Cqe::status` is `Ok(bytes)` (the staging range holds the true backing
+//!   bytes) or `Err(`[`api::IoError`]`)` (the range contents must not be
+//!   decoded). Either way the submitter still owns the staging range and
+//!   must release/recycle it through the normal wave protocol — an error
+//!   frees no resources by itself.
+//! * **Engines own retries.** The shared service loop
+//!   (`engine_core::serve_sqe`) re-issues failed attempts per the backend's
+//!   [`api::RetryPolicy`] (bounded retries, exponential backoff with
+//!   deterministic jitter, optional per-request deadline). Only the *final*
+//!   verdict reaches the CQE; consumers never retry individual SQEs — they
+//!   decide batch-level policy (retry the batch, drop the rows, abort) via
+//!   `--on-io-error`.
+//! * **Retried I/O is re-charged honestly.** Each attempt goes back through
+//!   the backend's read path, so device ops/bytes in
+//!   [`IoBackend::io_counters`] accrue *per attempt* (the fault wrapper
+//!   charges failed attempts itself). [`api::DirectIoStats`] alignment
+//!   counters record only *delivered* data; `retries`/`failures`/
+//!   `direct_fallbacks` on the same struct count policy re-issues, given-up
+//!   requests and `O_DIRECT`→cached fallbacks, and flow per-epoch into
+//!   `EpochStats`.
+//! * **Worker panics are contained.** A panic while serving one SQE becomes
+//!   [`api::IoError::Internal`] on that completion and the engine keeps
+//!   serving. A worker unwinding past its loop *poisons* the engine:
+//!   harvesters and [`api::AsyncIoEngine::drain`] then return synthetic
+//!   [`api::IoError::EnginePoisoned`] completions (tagged
+//!   [`api::Cqe::POISON_USER_DATA`]) instead of hanging, and counters
+//!   reconcile so `drain` always quiesces.
+//! * **Faults are injectable and deterministic.** [`fault::FaultInjectBackend`]
+//!   wraps either backend with a seeded [`fault::FaultPlan`] (transient
+//!   errors, bad ranges, short reads, stalls) keyed on `(offset, cumulative
+//!   try#)` — engine retries and batch-level re-extracts continue an
+//!   offset's draw sequence — so chaos tests replay exactly; `--fault-*`
+//!   CLI flags construct it.
+//!
 //! What a backend must guarantee (alignment accounting, counter balance,
 //! completion synchronization) is specified on [`api::IoBackend`] and
 //! enforced for both implementations by `tests/backend_conformance.rs`
 //! (including the coalescing suite: byte parity, strictly fewer charged
-//! requests, gap-boundary behavior). Memory budgets ([`mem`]) and the PCIe
-//! link model ([`pcie`]) are backend-independent substrate.
+//! requests, gap-boundary behavior) and `tests/fault_injection.rs` (the
+//! chaos suite: seeded fault storms end-to-end). Memory budgets ([`mem`])
+//! and the PCIe link model ([`pcie`]) are backend-independent substrate.
 
 pub mod api;
 pub mod backing;
 pub mod engine;
 pub mod engine_core;
+pub mod fault;
 pub mod mem;
 pub mod osfile;
 pub mod page_cache;
@@ -66,8 +108,9 @@ pub mod uring;
 
 pub use api::{
     AsyncIoEngine, BackendKind, Cqe, DirectIoStats, EpochIoSnapshot, EpochIoTotals, IoBackend,
-    IoMode, Sqe,
+    IoError, IoMode, RetryPolicy, Sqe,
 };
+pub use fault::{FaultInjectBackend, FaultInjectEngine, FaultPlan};
 pub use backing::{Backing, BackingRef, FileBacking, MemBacking, ProceduralBacking};
 pub use engine::{SimBackend, SimFile, Storage};
 pub use engine_core::{EngineCore, WorkerPort};

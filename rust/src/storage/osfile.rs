@@ -100,17 +100,63 @@ impl IoBackend for OsFileBackend {
         useful: usize,
         buf: &mut [u8],
     ) -> usize {
+        self.try_read_direct_segment(file, offset, useful, buf, 0)
+            .expect("os direct read failed")
+    }
+
+    fn try_read_direct_segment(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+        _attempt: u32,
+    ) -> Result<usize, super::api::IoError> {
         if buf.is_empty() {
-            return 0;
+            return Ok(0);
         }
         let aligned = self.aligned_len(offset, buf.len());
+        // Real O_DIRECT when the backing supports it (FileBacking on a
+        // filesystem that grants the flag); cached pread fallback otherwise
+        // — surfaced in `direct_stats.direct_fallbacks`, not just a one-time
+        // stderr warning. Real read errors propagate typed; nothing is
+        // recorded for a failed request.
+        let odirect = file.backing.try_read_direct_at(offset, buf)?;
+        if !odirect {
+            self.direct_stats.count_fallback();
+        }
         self.direct_stats.requests.fetch_add(1, Ordering::Relaxed);
         self.direct_stats.useful_bytes.fetch_add(useful as u64, Ordering::Relaxed);
         self.direct_stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
-        // Real O_DIRECT when the backing supports it (FileBacking on a
-        // filesystem that grants the flag); cached pread fallback otherwise.
-        file.backing.read_direct_at(offset, buf);
-        aligned
+        Ok(aligned)
+    }
+
+    fn try_read_direct(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        buf: &mut [u8],
+        attempt: u32,
+    ) -> Result<(), super::api::IoError> {
+        let useful = buf.len();
+        let aligned = self.try_read_direct_segment(file, offset, useful, buf, attempt)?;
+        self.charge_multi(u64::from(aligned > 0), aligned);
+        Ok(())
+    }
+
+    fn try_read_buffered(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        buf: &mut [u8],
+        _attempt: u32,
+    ) -> Result<(), super::api::IoError> {
+        if buf.is_empty() {
+            return Ok(());
+        }
+        self.counters.reads.fetch_add(1, Ordering::Relaxed);
+        self.counters.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        file.backing.try_read_at(offset, buf)
     }
 
     fn charge_multi(&self, ops: u64, bytes: usize) {
@@ -190,27 +236,31 @@ impl PreadPool {
     pub fn new(backend: Arc<dyn IoBackend>, depth: usize, threads: usize) -> Self {
         let depth = depth.max(1);
         let core = EngineCore::new("pread pool", depth);
+        let policy = backend.retry_policy();
         let workers = (0..threads.max(1).min(depth))
             .map(|_| {
                 let port = core.worker_port();
                 let backend = backend.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
+                    // Poison the core if this loop unwinds past the
+                    // per-request containment in serve_sqe, so harvesters
+                    // fail typed instead of hanging on stranded counters.
+                    let guard = port.poison_guard();
                     while let Ok(sqe) = port.pop() {
-                        let dst = unsafe { sqe.dst.slice_mut(sqe.dst_off, sqe.len) };
-                        match sqe.mode {
-                            IoMode::Direct => {
-                                let aligned = backend.read_direct_segment_nocharge(
-                                    &sqe.file, sqe.offset, sqe.useful, dst,
-                                );
-                                backend.charge_multi(1, aligned);
+                        let (status, aligned) =
+                            super::engine_core::serve_sqe(backend.as_ref(), &policy, &sqe);
+                        match status {
+                            Ok(bytes) => {
+                                if sqe.mode == IoMode::Direct {
+                                    backend.charge_multi(1, aligned);
+                                }
+                                port.complete(sqe.user_data, bytes);
                             }
-                            IoMode::Buffered => {
-                                backend.read_buffered(&sqe.file, sqe.offset, dst);
-                            }
+                            Err(e) => port.complete_err(sqe.user_data, e),
                         }
-                        port.complete(sqe.user_data, sqe.len);
                     }
+                    drop(guard);
                     crate::metrics::state::deregister();
                 })
             })

@@ -51,43 +51,50 @@ impl Uring {
         // per request drops ~chunk-fold, keeping the simulation's critical
         // path honest on this 1-CPU testbed (see DESIGN.md §Perf).
         let chunk = depth.clamp(1, 8);
+        let policy = backend.retry_policy();
         let workers = (0..worker_count)
             .map(|_| {
                 let port = core.worker_port();
                 let backend = backend.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
+                    // If this loop itself unwinds (a panic the per-request
+                    // guard in serve_sqe did not contain), poison the core
+                    // so harvesters fail typed instead of hanging.
+                    let guard = port.poison_guard();
                     while let Ok(sqes) = port.pop_many(chunk) {
-                        // Phase 1: copy data + per-request accounting,
-                        // reading straight into each request's staging
-                        // range (this worker owns the range until the CQE
-                        // is published — see the SlotRef protocol).
+                        // Phase 1: serve each request (retry policy + panic
+                        // containment live in serve_sqe), reading straight
+                        // into each request's staging range (this worker
+                        // owns the range until the CQE is published — see
+                        // the SlotRef protocol).
                         let mut direct_ops = 0u64;
                         let mut direct_bytes = 0usize;
+                        let mut statuses = Vec::with_capacity(sqes.len());
                         for sqe in &sqes {
-                            let dst = unsafe { sqe.dst.slice_mut(sqe.dst_off, sqe.len) };
-                            match sqe.mode {
-                                IoMode::Direct => {
-                                    direct_ops += 1;
-                                    direct_bytes += backend.read_direct_segment_nocharge(
-                                        &sqe.file, sqe.offset, sqe.useful, dst,
-                                    );
-                                }
-                                IoMode::Buffered => {
-                                    // Page-cache semantics are per-request;
-                                    // charge inline (no coalescing).
-                                    backend.read_buffered(&sqe.file, sqe.offset, dst);
-                                }
+                            let (status, aligned) =
+                                super::engine_core::serve_sqe(backend.as_ref(), &policy, sqe);
+                            if status.is_ok() && sqe.mode == IoMode::Direct {
+                                direct_ops += 1;
+                                direct_bytes += aligned;
                             }
+                            statuses.push(status);
                         }
                         // Phase 2: one coalesced device charge for the
-                        // chunk's direct requests (one op per segment).
+                        // chunk's successful direct requests (one op per
+                        // segment; failed attempts were charged by the
+                        // backend that failed them).
                         backend.charge_multi(direct_ops, direct_bytes);
-                        // Phase 3: publish completions.
-                        for sqe in &sqes {
-                            port.complete(sqe.user_data, sqe.len);
+                        // Phase 3: publish completions — errors drain the
+                        // counters exactly like successes.
+                        for (sqe, status) in sqes.iter().zip(statuses) {
+                            match status {
+                                Ok(bytes) => port.complete(sqe.user_data, bytes),
+                                Err(e) => port.complete_err(sqe.user_data, e),
+                            }
                         }
                     }
+                    drop(guard);
                     crate::metrics::state::deregister();
                 })
             })

@@ -1,0 +1,582 @@
+//! Chaos suite: injected I/O faults end to end. Storms are *seeded* — every
+//! verdict is a pure function of `(plan.seed, offset, cumulative try#)` — so
+//! tests either self-select seeds with known fault/recovery shapes (via
+//! `FaultPlan::transient_verdict`) or assert properties that hold for any
+//! draw sequence (typed errors, exact retry accounting, zero leaked refs,
+//! deterministic replay). Covers both I/O backends, the engine-core panic
+//! containment + poison path, the training pipeline's `--on-io-error`
+//! policies, and the serving frontend's per-request error responses.
+
+use gnndrive::baselines::sim_trainer;
+use gnndrive::config::{FaultProfile, Machine, MachineConfig, OnIoError, TrainConfig};
+use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::graph::{Dataset, DatasetSpec, FeatureGen, FeatureTable};
+use gnndrive::membuf::{FeatureBuffer, SlotRef, StagingArena, StagingBuffer};
+use gnndrive::pipeline::{GnnDrive, Variant};
+use gnndrive::runtime::simcompute::ModelKind;
+use gnndrive::serve::{BatchSpec, ServeConfig, ServeEngine};
+use gnndrive::sim::Clock;
+use gnndrive::storage::{
+    AsyncIoEngine, BackendKind, DataKind, DirectIoStats, FaultInjectBackend, FaultPlan,
+    FileBacking, FileId, HostMemory, IoBackend, IoError, IoMode, MemBacking, OsFileBackend,
+    PageCache, RetryPolicy, SimFile, Sqe, SsdConfig, SsdCounters, SsdSim, Storage, Uring,
+};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 16;
+const NODES: u64 = 200;
+const ROW: u64 = (DIM * 4) as u64;
+
+/// Unique tempdir path per call (tests run concurrently in one binary).
+fn unique_path(stem: &str) -> std::path::PathBuf {
+    use std::sync::atomic::AtomicU32;
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let dir = std::env::temp_dir().join("gnndrive_faults");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!(
+        "{stem}_{}_{}.bin",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Extractor-level rig: any backend wrapped in a fault plan
+// ---------------------------------------------------------------------------
+
+struct Rig {
+    io: Arc<dyn IoBackend>,
+    fb: Arc<FeatureBuffer>,
+    ex: Extractor,
+    gen: FeatureGen,
+}
+
+/// Extraction rig over `kind` wrapped in `plan`/`policy`. Coalescing is
+/// disabled so request offsets are exactly `node × ROW` — the property the
+/// seed-self-selection helpers rely on.
+fn rig(kind: BackendKind, plan: FaultPlan, policy: RetryPolicy) -> Rig {
+    let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
+    let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
+    let (inner, features): (Arc<dyn IoBackend>, FeatureTable) = match kind {
+        BackendKind::Sim => {
+            let clock = Clock::new(0.05);
+            let ssd = SsdSim::new(SsdConfig::pm883(), clock);
+            let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
+            (
+                Arc::new(Storage::new(ssd, cache)),
+                FeatureTable::procedural(FileId::new(21, DataKind::Features), NODES, gen.clone()),
+            )
+        }
+        BackendKind::Os => {
+            let path = unique_path("features");
+            FeatureTable::write_file(&path, NODES, &gen).unwrap();
+            (
+                Arc::new(OsFileBackend::new(512)),
+                FeatureTable::from_backing(
+                    FileId::new(21, DataKind::Features),
+                    NODES,
+                    DIM,
+                    Arc::new(FileBacking::open(&path).unwrap()),
+                ),
+            )
+        }
+    };
+    let io: Arc<dyn IoBackend> =
+        Arc::new(FaultInjectBackend::new(inner, kind, plan, policy, Clock::new(0.05)));
+    let host = HostMemory::new(1 << 20);
+    let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
+    let staging = StagingBuffer::new(&host, 16, DIM * 4).unwrap();
+    let ex = Extractor::with_options(
+        io.clone(),
+        16,
+        staging,
+        fb.clone(),
+        features,
+        ExtractTarget::Host,
+        ExtractOptions { coalesce: CoalesceConfig::disabled(), ..Default::default() },
+    );
+    Rig { io, fb, ex, gen }
+}
+
+fn verify_rows(rig: &Rig, nodes: &[u32], aliases: &[i32]) {
+    let mut out = vec![0f32; DIM];
+    let mut want = vec![0u8; DIM * 4];
+    for (i, &v) in nodes.iter().enumerate() {
+        rig.fb.gather(&aliases[i..i + 1], &mut out);
+        rig.gen.fill_row(v as u64, &mut want);
+        assert_eq!(out, FeatureGen::decode_row(&want), "node {v}");
+    }
+}
+
+fn fault_delta(io: &dyn IoBackend, base: (u64, u64, u64)) -> (u64, u64, u64) {
+    let (r, f, d) = io.direct_stats().fault_snapshot();
+    (r - base.0, f - base.1, d - base.2)
+}
+
+/// First seed whose transient storm at `rate` (a) faults at least one
+/// offset's first try and (b) never faults any offset four tries in a row —
+/// i.e. a storm the default 3-retry policy deterministically rides out.
+fn pick_recoverable_seed(rate: f64, offsets: &[u64]) -> u64 {
+    'seed: for seed in 0..20_000u64 {
+        let plan = FaultPlan::transient(seed, rate);
+        let mut any_first = false;
+        for &off in offsets {
+            if (0..4).all(|t| plan.transient_verdict(off, t)) {
+                continue 'seed;
+            }
+            any_first |= plan.transient_verdict(off, 0);
+        }
+        if any_first {
+            return seed;
+        }
+    }
+    panic!("no recoverable seed in the search space");
+}
+
+#[test]
+fn transient_storm_recovers_with_correct_bytes_on_both_backends() {
+    let nodes: Vec<u32> = (30..90).collect();
+    let offsets: Vec<u64> = nodes.iter().map(|&v| v as u64 * ROW).collect();
+    let seed = pick_recoverable_seed(0.3, &offsets);
+    for kind in [BackendKind::Sim, BackendKind::Os] {
+        let mut plan = FaultPlan::transient(seed, 0.3);
+        // Exercise the stall path too: 50 µs hiccups change timing only.
+        plan.stall_rate = 0.2;
+        plan.stall_us = 50;
+        let rig = rig(kind, plan, RetryPolicy::default());
+        let base = rig.io.direct_stats().fault_snapshot();
+        let aliases =
+            rig.ex.try_extract(&nodes).expect("storm within the retry budget must recover");
+        verify_rows(&rig, &nodes, &aliases);
+        let (retries, failures, _) = fault_delta(rig.io.as_ref(), base);
+        assert!(retries > 0, "{kind:?}: the selected seed faults at least one first try");
+        assert_eq!(failures, 0, "{kind:?}: every fault must recover within the policy");
+        rig.fb.release_aliases(&aliases);
+        rig.fb.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn bad_range_rows_fail_typed_and_extractor_stays_usable() {
+    let plan = FaultPlan { bad_ranges: vec![(0u64, 32 * ROW)], ..FaultPlan::default() };
+    let rig = rig(BackendKind::Sim, plan, RetryPolicy::default());
+    let base = rig.io.direct_stats().fault_snapshot();
+    let nodes: Vec<u32> = (0..40).collect();
+    let err = rig.ex.try_extract(&nodes).expect_err("rows in a bad range cannot extract");
+    assert!(matches!(err.error, IoError::BadRange { .. }), "got {:?}", err.error);
+    let mut failed = err.failed_nodes.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, (0..32).collect::<Vec<u32>>(), "exactly the bad-range rows fail");
+    assert_eq!(err.aliases.len(), nodes.len(), "alias list stays full-length for release");
+    let (retries, failures, _) = fault_delta(rig.io.as_ref(), base);
+    assert_eq!(retries, 0, "permanent errors must not be retried");
+    assert_eq!(failures, 32);
+    rig.fb.release_aliases(&err.aliases);
+
+    // The same extractor keeps serving rows outside the bad range.
+    let good: Vec<u32> = (100..120).collect();
+    let aliases = rig.ex.try_extract(&good).expect("rows outside the bad range still extract");
+    verify_rows(&rig, &good, &aliases);
+    rig.fb.release_aliases(&aliases);
+    rig.fb.check_invariants().unwrap();
+}
+
+#[test]
+fn short_read_retries_are_counted_exactly_then_fail_typed() {
+    // Rate 1.0 → every try short-reads: each request burns the full retry
+    // budget, so the counters are exact, not probabilistic.
+    let plan = FaultPlan { short_rate: 1.0, ..FaultPlan::default() };
+    let policy = RetryPolicy { max_retries: 2, ..RetryPolicy::default() };
+    let rig = rig(BackendKind::Sim, plan, policy);
+    let base = rig.io.direct_stats().fault_snapshot();
+    let nodes: Vec<u32> = (10..26).collect();
+    let err = rig.ex.try_extract(&nodes).expect_err("rate-1.0 short reads exhaust the policy");
+    assert!(matches!(err.error, IoError::ShortRead { .. }), "got {:?}", err.error);
+    assert_eq!(err.failed_nodes.len(), nodes.len());
+    let (retries, failures, _) = fault_delta(rig.io.as_ref(), base);
+    assert_eq!(retries, 2 * nodes.len() as u64, "two re-attempts per request");
+    assert_eq!(failures, nodes.len() as u64, "one failure per exhausted request");
+    rig.fb.release_aliases(&err.aliases);
+    rig.fb.check_invariants().unwrap();
+}
+
+#[test]
+fn deadline_gives_up_with_typed_error_before_retrying() {
+    let plan = FaultPlan { short_rate: 1.0, ..FaultPlan::default() };
+    let policy =
+        RetryPolicy { max_retries: 10, deadline_us: Some(0), ..RetryPolicy::default() };
+    let rig = rig(BackendKind::Sim, plan, policy);
+    let base = rig.io.direct_stats().fault_snapshot();
+    let nodes: Vec<u32> = (0..8).collect();
+    let err = rig.ex.try_extract(&nodes).expect_err("a zero deadline fails every request");
+    assert!(matches!(err.error, IoError::Deadline), "got {:?}", err.error);
+    let (retries, failures, _) = fault_delta(rig.io.as_ref(), base);
+    assert_eq!(retries, 0, "an expired deadline must not re-attempt");
+    assert_eq!(failures, nodes.len() as u64);
+    rig.fb.release_aliases(&err.aliases);
+    rig.fb.check_invariants().unwrap();
+}
+
+#[test]
+fn fault_storms_replay_deterministically() {
+    let run = || {
+        let plan = FaultPlan::transient(0x00D5_0001, 0.45);
+        let policy = RetryPolicy { max_retries: 1, ..RetryPolicy::default() };
+        let rig = rig(BackendKind::Sim, plan, policy);
+        let nodes: Vec<u32> = (0..120).collect();
+        let failed = match rig.ex.try_extract(&nodes) {
+            Ok(aliases) => {
+                rig.fb.release_aliases(&aliases);
+                Vec::new()
+            }
+            Err(e) => {
+                let mut f = e.failed_nodes.clone();
+                f.sort_unstable();
+                rig.fb.release_aliases(&e.aliases);
+                f
+            }
+        };
+        rig.fb.check_invariants().unwrap();
+        let (r, f, _) = rig.io.direct_stats().fault_snapshot();
+        (failed, r, f)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same plan + same request sequence must replay identically");
+    assert!(a.1 > 0, "a 45% storm over 120 rows must produce retries");
+}
+
+#[test]
+fn batch_level_re_extract_continues_the_draw_sequence() {
+    // With no engine retries, try #0 of each offset is drawn by the first
+    // extract and try #1 by the re-extract. A seed where some offset faults
+    // try #0 but none fault both tries proves the cumulative counter: a
+    // (offset, attempt)-keyed plan would replay try #0 and fail forever.
+    let nodes: Vec<u32> = (40..56).collect();
+    let offsets: Vec<u64> = nodes.iter().map(|&v| v as u64 * ROW).collect();
+    let seed = (0..20_000u64)
+        .find(|&s| {
+            let plan = FaultPlan::transient(s, 0.08);
+            offsets.iter().all(|&o| !(plan.transient_verdict(o, 0) && plan.transient_verdict(o, 1)))
+                && offsets.iter().any(|&o| plan.transient_verdict(o, 0))
+        })
+        .expect("no suitable seed in the search space");
+    let rig = rig(BackendKind::Sim, FaultPlan::transient(seed, 0.08), RetryPolicy::none());
+    let err =
+        rig.ex.try_extract(&nodes).expect_err("first-try faults with no retries fail the batch");
+    assert!(matches!(err.error, IoError::Transient));
+    // The degradation protocol: release the batch refs, evict the failed
+    // rows' placeholders, re-extract (what `--on-io-error retry` does).
+    rig.fb.release_aliases(&err.aliases);
+    rig.fb.evict_if_idle(&err.failed_nodes);
+    let aliases = rig.ex.try_extract(&nodes).expect("the re-extract must see fresh draws");
+    verify_rows(&rig, &nodes, &aliases);
+    rig.fb.release_aliases(&aliases);
+    rig.fb.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Engine-core panic containment (per-request guard + worker-loss poisoning)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum ChaosMode {
+    /// Panic inside the backend read of one offset — contained per request
+    /// by `serve_sqe` and classified as `IoError::Internal`.
+    PanicOnRead { offset: u64 },
+    /// Panic in the worker loop *outside* the per-request guard (the
+    /// chunk-charge call) — kills the worker; the poison guard must convert
+    /// the hang into typed `EnginePoisoned` completions.
+    PanicOnCharge,
+}
+
+struct ChaosBackend {
+    inner: Arc<dyn IoBackend>,
+    mode: ChaosMode,
+}
+
+impl IoBackend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn sector(&self) -> usize {
+        self.inner.sector()
+    }
+
+    fn read_buffered(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
+        self.inner.read_buffered(file, offset, buf)
+    }
+
+    fn read_direct(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
+        self.inner.read_direct(file, offset, buf)
+    }
+
+    fn read_direct_segment_nocharge(
+        &self,
+        file: &SimFile,
+        offset: u64,
+        useful: usize,
+        buf: &mut [u8],
+    ) -> usize {
+        if matches!(self.mode, ChaosMode::PanicOnRead { offset: bad } if bad == offset) {
+            panic!("chaos: injected read panic at offset {offset}");
+        }
+        self.inner.read_direct_segment_nocharge(file, offset, useful, buf)
+    }
+
+    fn charge_multi(&self, ops: u64, bytes: usize) {
+        if ops > 0 && matches!(self.mode, ChaosMode::PanicOnCharge) {
+            panic!("chaos: injected worker-loop panic");
+        }
+        self.inner.charge_multi(ops, bytes)
+    }
+
+    fn write_buffered(&self, file: &SimFile, offset: u64, len: usize) {
+        self.inner.write_buffered(file, offset, len)
+    }
+
+    fn write_direct(&self, file: &SimFile, offset: u64, len: usize) {
+        self.inner.write_direct(file, offset, len)
+    }
+
+    fn charge_read(&self, len: usize) {
+        self.inner.charge_read(len)
+    }
+
+    fn charge_write(&self, len: usize) {
+        self.inner.charge_write(len)
+    }
+
+    fn direct_stats(&self) -> &DirectIoStats {
+        self.inner.direct_stats()
+    }
+
+    fn io_counters(&self) -> &SsdCounters {
+        self.inner.io_counters()
+    }
+
+    fn reset_io_stats(&self) {
+        self.inner.reset_io_stats()
+    }
+
+    fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine> {
+        Box::new(Uring::new(self, depth))
+    }
+}
+
+fn chaos_rig(mode: ChaosMode) -> (Arc<dyn IoBackend>, SimFile) {
+    let clock = Clock::new(0.05);
+    let ssd = SsdSim::new(SsdConfig::pm883(), clock);
+    let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
+    let inner: Arc<dyn IoBackend> = Arc::new(Storage::new(ssd, cache));
+    let bytes: Vec<u8> = (0..(64usize << 10)).map(|i| (i % 241) as u8).collect();
+    let file =
+        SimFile::new(FileId::new(33, DataKind::Features), Arc::new(MemBacking::new(bytes)));
+    (Arc::new(ChaosBackend { inner, mode }), file)
+}
+
+fn chaos_sqes(file: &SimFile, arena: &StagingArena, n: usize, base_row: usize) -> Vec<Sqe> {
+    (0..n)
+        .map(|i| Sqe {
+            file: file.clone(),
+            offset: ((base_row + i) * 512) as u64,
+            len: 512,
+            useful: 512,
+            dst: SlotRef::new(arena.clone(), i),
+            dst_off: 0,
+            user_data: (base_row + i) as u64,
+            mode: IoMode::Direct,
+        })
+        .collect()
+}
+
+#[test]
+fn backend_panic_becomes_typed_internal_error() {
+    let (io, file) = chaos_rig(ChaosMode::PanicOnRead { offset: 2 * 512 });
+    let engine = io.clone().async_engine(16);
+    const N: usize = 8;
+    let arena = StagingArena::new(N, 512);
+    engine.submit_batch(chaos_sqes(&file, &arena, N, 0));
+    let cqes = engine.wait_cqes(N);
+    let (mut ok, mut internal) = (0, 0);
+    for c in &cqes {
+        match &c.status {
+            Ok(_) => ok += 1,
+            Err(IoError::Internal) => {
+                internal += 1;
+                assert_eq!(c.user_data, 2, "the panicking request fails, nothing else");
+            }
+            Err(e) => panic!("unexpected error {e:?}"),
+        }
+    }
+    assert_eq!((ok, internal), (N - 1, 1));
+    assert_eq!(engine.inflight(), 0);
+    assert_eq!(engine.pending_harvest(), 0);
+    // The engine survives: a fresh batch on clean offsets completes fully.
+    engine.submit_batch(chaos_sqes(&file, &arena, N, N));
+    assert!(engine.wait_cqes(N).iter().all(|c| c.status.is_ok()));
+    assert_eq!(engine.inflight(), 0);
+}
+
+#[test]
+fn lost_workers_poison_the_engine_instead_of_hanging() {
+    let (io, file) = chaos_rig(ChaosMode::PanicOnCharge);
+    let engine = io.clone().async_engine(16);
+    const N: usize = 8;
+    let arena = StagingArena::new(N, 512);
+    engine.submit_batch(chaos_sqes(&file, &arena, N, 0));
+    // Every worker that serves a chunk dies before publishing its CQEs, so
+    // the harvest must come back as synthetic typed errors — the old
+    // behavior was an unbounded hang right here.
+    let cqes = engine.wait_cqes(N);
+    assert_eq!(cqes.len(), N);
+    assert!(
+        cqes.iter().all(|c| c.status.is_err()),
+        "no completion may claim success after worker loss"
+    );
+    assert!(
+        cqes.iter().any(|c| matches!(c.status, Err(IoError::EnginePoisoned))),
+        "worker loss must surface as EnginePoisoned"
+    );
+    // Drain reconciles the counters instead of waiting forever.
+    engine.drain();
+    assert_eq!(engine.inflight(), 0);
+    assert_eq!(engine.pending_harvest(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Training pipeline: --on-io-error policies end to end
+// ---------------------------------------------------------------------------
+
+fn machine_with(profile: FaultProfile) -> (Arc<Machine>, Arc<Dataset>) {
+    let machine =
+        Arc::new(Machine::new(MachineConfig::paper().with_fault(profile), Clock::new(0.05)));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
+    (machine, ds)
+}
+
+fn quick_cfg(on_io_error: OnIoError) -> TrainConfig {
+    TrainConfig {
+        batch_size: 64,
+        fanouts: vec![4, 4],
+        batches_per_epoch: Some(4),
+        samplers: 2,
+        extractors: 2,
+        io_depth: 32,
+        on_io_error,
+        ..TrainConfig::default()
+    }
+}
+
+fn train_engine(machine: &Arc<Machine>, ds: &Arc<Dataset>, cfg: TrainConfig) -> GnnDrive {
+    let trainer = sim_trainer(machine, ds, &cfg, ModelKind::GraphSage, Variant::Gpu, 64);
+    GnnDrive::new(machine, ds, cfg, Variant::Gpu, trainer).unwrap()
+}
+
+#[test]
+fn training_storm_completes_with_retries_and_zero_failures() {
+    // 5% transient faults against a 6-deep retry budget: the epoch must ride
+    // out the storm on engine retries alone (failure would need 7 faulted
+    // draws in a row on one offset).
+    let profile = FaultProfile {
+        plan: FaultPlan::transient(0x0057_0311, 0.05),
+        policy: RetryPolicy { max_retries: 6, ..RetryPolicy::default() },
+    };
+    let (machine, ds) = machine_with(profile);
+    let engine = train_engine(&machine, &ds, quick_cfg(OnIoError::Fail));
+    let stats = engine.try_run_epoch(0).expect("a 5% storm must ride out on retries");
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.train.steps, 4);
+    assert!(stats.io_retries > 0, "the storm must surface in the epoch counters");
+    assert_eq!(stats.io_failures, 0, "no request may exhaust a 6-deep retry budget");
+    assert_eq!(stats.dropped_rows, 0);
+    engine.feature_buffer().check_invariants().unwrap();
+}
+
+#[test]
+fn fail_policy_aborts_with_typed_error_not_hang() {
+    let profile =
+        FaultProfile { plan: FaultPlan::transient(7, 1.0), policy: RetryPolicy::none() };
+    let (machine, ds) = machine_with(profile);
+    let engine = train_engine(&machine, &ds, quick_cfg(OnIoError::Fail));
+    let err = engine.try_run_epoch(0).expect_err("rate-1.0 faults with no retries must abort");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("aborted by I/O error"), "unexpected error chain: {msg}");
+    assert!(msg.contains("transient"), "the root cause must surface in the chain: {msg}");
+    // The abort released every batch's refs on the way out.
+    engine.feature_buffer().check_invariants().unwrap();
+}
+
+#[test]
+fn drop_rows_degrades_gracefully_under_permanent_faults() {
+    // Whole device permanently bad: every feature load fails, every batch
+    // still trains (on zeroed placeholders) and the epoch completes.
+    let profile = FaultProfile {
+        plan: FaultPlan { bad_ranges: vec![(0u64, u64::MAX)], ..FaultPlan::default() },
+        policy: RetryPolicy::default(),
+    };
+    let (machine, ds) = machine_with(profile);
+    let engine = train_engine(&machine, &ds, quick_cfg(OnIoError::DropRows));
+    let stats = engine.try_run_epoch(0).expect("drop-rows must complete under permanent faults");
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.train.steps, 4);
+    assert!(stats.dropped_rows > 0, "failed rows must be counted as dropped");
+    assert!(stats.io_failures > 0);
+    assert_eq!(stats.io_retries, 0, "BadRange is not retryable");
+    engine.feature_buffer().check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Serving frontend: shed ≠ error ≠ ok under fault storms
+// ---------------------------------------------------------------------------
+
+fn serve_cfg(requests: u64) -> ServeConfig {
+    ServeConfig {
+        tenants: 2,
+        workers: 1,
+        requests,
+        rps: 0.0,
+        clients: 2,
+        admit_cap: 64,
+        batch: BatchSpec { max_requests: 8, max_wait: Duration::from_millis(1) },
+        fanouts: vec![4, 4],
+        io_depth: 32,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn serve_converts_permanent_faults_into_error_responses() {
+    let profile = FaultProfile {
+        plan: FaultPlan { bad_ranges: vec![(0u64, u64::MAX)], ..FaultPlan::default() },
+        policy: RetryPolicy::default(),
+    };
+    let (machine, ds) = machine_with(profile);
+    let report = ServeEngine::new(&machine, &ds, serve_cfg(40)).unwrap().run(0).unwrap();
+    // Closed-loop clients block, so nothing is shed; every admitted request
+    // is answered — with a typed error, which still completes the client's
+    // call (the run terminating at all is the liveness assertion).
+    assert_eq!(report.counts.admitted, 40);
+    assert_eq!(report.counts.shed, 0);
+    assert_eq!(report.errors, 40, "every request must get a typed error response");
+    assert_eq!(report.completed, 0);
+}
+
+#[test]
+fn serve_rides_out_transient_storm_without_error_responses() {
+    let profile = FaultProfile {
+        plan: FaultPlan::transient(0x5E6E, 0.10),
+        policy: RetryPolicy { max_retries: 8, ..RetryPolicy::default() },
+    };
+    let (machine, ds) = machine_with(profile);
+    let report = ServeEngine::new(&machine, &ds, serve_cfg(40)).unwrap().run(0).unwrap();
+    assert_eq!(report.completed, 40, "the retry policy must absorb a 10% storm");
+    assert_eq!(report.errors, 0);
+    assert!(
+        machine.backend.direct_stats().retries.load(Ordering::Relaxed) > 0,
+        "the storm must surface as engine retries"
+    );
+}

@@ -52,6 +52,37 @@ echo "== smoke: gnndrive serve (sim + os backends) =="
   --requests 30 --clients 2 --tenants 2 --serve-workers 1 \
   --serve-batch 4 --fanouts 4,4
 
+echo "== smoke: fault injection (typed errors, retries, graceful degradation) =="
+# A 1% transient storm must ride on the engine retry policy and complete on
+# both backends (io_failures stays 0 — the ISSUE-6 chaos gate) …
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1 \
+  --fault-rate 0.01 --io-retries 3 --on-io-error retry
+./target/release/gnndrive train --system gnndrive --backend os \
+  --data "$SMOKE_DIR/ds" --batches 2 --epochs 1 \
+  --fault-rate 0.01 --io-retries 3 --on-io-error retry
+# … drop-rows degrades gracefully under a permanent bad range …
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1 \
+  --fault-bad-range 0:1MiB --on-io-error drop-rows
+# … and fail-fast must terminate with a typed error — promptly, never a
+# hang. Exit 1 is the typed-error abort; 0 means the storm was silently
+# swallowed and 124 means it hung until timeout — both fail tier-1.
+fail_rc=0
+timeout 120 ./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1 \
+  --fault-rate 1 --io-retries 0 --on-io-error fail || fail_rc=$?
+if [ "$fail_rc" -ne 1 ]; then
+  echo "fault smoke: expected typed-error abort (exit 1), got exit $fail_rc" >&2
+  exit 1
+fi
+# Serving converts exhausted-retry batches into per-request error responses
+# (shed != error != ok) instead of wedging the admission queue.
+./target/release/gnndrive serve --backend sim --dataset unit-test \
+  --requests 30 --clients 2 --tenants 2 --serve-workers 1 \
+  --serve-batch 4 --fanouts 4,4 \
+  --fault-rate 0.01 --io-retries 4
+
 echo "== bench: extract_coalesce (coalesced segment I/O trajectory) =="
 # Runs the extraction bench (release) and appends to BENCH_extract.json; the
 # bench itself asserts the ISSUE-4 acceptance gate (>= 2x fewer charged
@@ -64,6 +95,12 @@ echo "== bench: serve_latency (serving throughput + tail latency) =="
 # on p99 extract latency and charged SSD requests at the same offered load;
 # the bounded admission queue sheds rather than queues past saturation).
 cargo bench --bench serve_latency
+
+echo "== bench: fault_tolerance (fault-rate sweep, retry vs fail-fast) =="
+# Runs the fault-tolerance bench and appends to BENCH_faults.json; the bench
+# asserts the ISSUE-6 gates (retry completes 0.1%/1% storms with zero
+# surfaced failures; fail-fast aborts with a typed error, never a hang).
+cargo bench --bench fault_tolerance
 
 if [ -f BENCH_extract.json ]; then
   echo "== last BENCH_extract.json record =="
@@ -78,6 +115,11 @@ fi
 if [ -f BENCH_hotpath.json ]; then
   echo "== last BENCH_hotpath.json record =="
   tail -n 1 BENCH_hotpath.json
+fi
+
+if [ -f BENCH_faults.json ]; then
+  echo "== last BENCH_faults.json record =="
+  tail -n 1 BENCH_faults.json
 fi
 
 echo "tier-1 OK"
