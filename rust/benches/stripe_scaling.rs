@@ -1,0 +1,234 @@
+//! `cargo bench --bench stripe_scaling` — striped storage-stack scaling
+//! (ISSUE 7): the same offered load (24 000 single-row feature reads,
+//! papers100m-mini, coalescing off so the run is IOPS-bound) against sim
+//! arrays of 1 and 4 devices, plus a devices=1 charging-parity check
+//! against the pre-striping flat stack.
+//!
+//! Two acceptance gates:
+//! * **scaling** — with 4 devices the *charged epoch I/O time* (the
+//!   bottleneck device's `ops/IOPS + bytes/bandwidth` from the per-device
+//!   charge counters) must be ≥ 2.5× lower than with 1 device. Round-robin
+//!   chunk placement makes the ideal 4.0×; the gate leaves headroom for
+//!   boundary imbalance.
+//! * **parity** — a `--devices 1` machine must charge *exactly* the same
+//!   request count and byte volume as the flat (pre-refactor) machine on
+//!   the identical workload, with coalescing both off and on: striping
+//!   degenerates to a no-op, not an approximation.
+//!
+//! Charged counters are deterministic, so the gates are noise-free; sim
+//! wall time is also measured (scale 1.0, like the SSD-model tests, so real
+//! bookkeeping cost does not swamp scaled device time) but only reported.
+//! Machine-readable results append to `BENCH_stripe.json` (JSONL);
+//! `scripts/tier1.sh` runs this bench and prints the last record.
+
+use gnndrive::config::{Machine, MachineConfig};
+use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::membuf::{FeatureBuffer, StagingBuffer};
+use gnndrive::sim::Clock;
+use gnndrive::storage::{IoBackend as _, SsdConfig};
+use gnndrive::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// 64 KiB chunks: 128 rows of the 512 B papers100m-mini features per chunk,
+/// so 24 000 sequential rows round-robin ~47 chunks onto each of 4 devices.
+const STRIPE: u64 = 64 << 10;
+const ROWS: u32 = 24_000;
+const IO_DEPTH: usize = 128;
+
+struct Run {
+    label: &'static str,
+    devices: usize,
+    coalesce: bool,
+    reads: u64,
+    read_bytes: u64,
+    dev_reads: Vec<(u64, u64)>,
+    charged_io_ms: f64,
+    wall_ms: f64,
+}
+
+impl Run {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".into(), Json::Str("stripe_scaling".into()));
+        m.insert("label".into(), Json::Str(self.label.into()));
+        m.insert("devices".into(), Json::Num(self.devices as f64));
+        m.insert("coalesce".into(), Json::Num(if self.coalesce { 1.0 } else { 0.0 }));
+        m.insert("rows".into(), Json::Num(ROWS as f64));
+        m.insert("charged_requests".into(), Json::Num(self.reads as f64));
+        m.insert("charged_bytes".into(), Json::Num(self.read_bytes as f64));
+        let max_dev = self.dev_reads.iter().map(|&(r, _)| r).max().unwrap_or(0);
+        let min_dev = self.dev_reads.iter().map(|&(r, _)| r).min().unwrap_or(0);
+        m.insert("dev_reads_max".into(), Json::Num(max_dev as f64));
+        m.insert("dev_reads_min".into(), Json::Num(min_dev as f64));
+        m.insert("charged_io_ms".into(), Json::Num(self.charged_io_ms));
+        m.insert("wall_ms_sim".into(), Json::Num(self.wall_ms));
+        Json::Obj(m)
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "{:<14} devices {}  coalesce {:<3}  reqs {:>6}  charged {:>10}B  per-dev {:?}  charged_io {:>8.2}ms  wall {:>8.2}ms",
+            self.label,
+            self.devices,
+            if self.coalesce { "on" } else { "off" },
+            self.reads,
+            self.read_bytes,
+            self.dev_reads.iter().map(|&(r, _)| r).collect::<Vec<_>>(),
+            self.charged_io_ms,
+            self.wall_ms,
+        )
+    }
+}
+
+/// Charged epoch I/O time: the bottleneck device's service demand under the
+/// SSD model — requests against the IOPS ceiling plus bytes against the
+/// bandwidth ceiling. Devices run in parallel, so the max governs the epoch.
+fn charged_io_ms(dev_reads: &[(u64, u64)], cfg: &SsdConfig) -> f64 {
+    dev_reads
+        .iter()
+        .map(|&(r, b)| r as f64 / cfg.iops + b as f64 / cfg.read_bw)
+        .fold(0.0, f64::max)
+        * 1e3
+}
+
+fn machine_for(devices: Option<usize>) -> (Machine, Dataset) {
+    // Host budget above paper scale only so one buffer holds every extracted
+    // row; SSD model, sector and staging bound stay paper. `None` builds the
+    // flat pre-striping stack (no devices/stripe knobs touched at all).
+    let mut cfg = MachineConfig::paper().with_host_mem(1 << 30);
+    if let Some(d) = devices {
+        cfg = cfg.with_devices(d).with_stripe_bytes(STRIPE);
+    }
+    let machine = Machine::new(cfg, Clock::new(1.0));
+    let ds = Dataset::materialize(&DatasetSpec::papers100m_mini(), &machine)
+        .expect("materialize papers100m-mini");
+    (machine, ds)
+}
+
+/// Extract rows 0..ROWS once on a fresh feature buffer; returns the run's
+/// charged accounting (aggregate + per device) and sim wall time.
+fn run_extraction(
+    machine: &Machine,
+    ds: &Dataset,
+    coalesce: CoalesceConfig,
+    label: &'static str,
+) -> Run {
+    let fb = Arc::new(
+        FeatureBuffer::in_host(&machine.host, ROWS as usize + 64, ds.spec.dim).unwrap(),
+    );
+    let staging =
+        StagingBuffer::new(&machine.host, 4096, ds.features.row_bytes() as usize).unwrap();
+    let ex = Extractor::with_options(
+        machine.backend.clone(),
+        IO_DEPTH,
+        staging,
+        fb.clone(),
+        ds.features.clone(),
+        ExtractTarget::Host,
+        ExtractOptions { coalesce, ..Default::default() },
+    );
+    machine.backend.reset_io_stats();
+    let dev0 = machine.backend.device_io_snapshot();
+    let nodes: Vec<u32> = (0..ROWS).collect();
+    let t0 = Instant::now();
+    let aliases = ex.extract(&nodes);
+    let wall = machine.clock.to_sim(t0.elapsed());
+    std::hint::black_box(&aliases);
+    let dev_reads: Vec<(u64, u64)> = machine
+        .backend
+        .device_io_snapshot()
+        .iter()
+        .enumerate()
+        .map(|(d, &(r, b))| {
+            let (r0, b0) = dev0.get(d).copied().unwrap_or((0, 0));
+            (r - r0, b - b0)
+        })
+        .collect();
+    Run {
+        label,
+        devices: machine.backend.stripe().devices,
+        coalesce: coalesce.enabled(),
+        reads: machine
+            .backend
+            .io_counters()
+            .reads
+            .load(std::sync::atomic::Ordering::Relaxed),
+        read_bytes: machine
+            .backend
+            .io_counters()
+            .read_bytes
+            .load(std::sync::atomic::Ordering::Relaxed),
+        dev_reads: dev_reads.clone(),
+        charged_io_ms: charged_io_ms(&dev_reads, &machine.cfg.ssd),
+        wall_ms: wall.as_secs_f64() * 1e3,
+    }
+}
+
+fn main() {
+    let mut records = Vec::new();
+
+    // ---- scaling: 1 vs 4 devices, IOPS-bound offered load -----------------
+    println!("materializing papers100m-mini (flat + striped machines) …");
+    let (flat, flat_ds) = machine_for(None);
+    let (one, one_ds) = machine_for(Some(1));
+    let (four, four_ds) = machine_for(Some(4));
+
+    let r1 = run_extraction(&one, &one_ds, CoalesceConfig::disabled(), "striped-d1");
+    println!("{}", r1.row());
+    let r4 = run_extraction(&four, &four_ds, CoalesceConfig::disabled(), "striped-d4");
+    println!("{}", r4.row());
+    let ratio = r1.charged_io_ms / r4.charged_io_ms.max(1e-9);
+    println!("  -> charged epoch I/O time {ratio:.2}x lower with 4 devices (wall: {:.2}ms -> {:.2}ms)",
+        r1.wall_ms, r4.wall_ms);
+    assert_eq!(r4.dev_reads.len(), 4, "four devices must each report charges");
+    assert!(
+        r4.dev_reads.iter().all(|&(r, _)| r > 0),
+        "round-robin placement must load every device: {:?}",
+        r4.dev_reads
+    );
+    assert!(
+        ratio >= 2.5,
+        "acceptance: devices=4 charged I/O time only {ratio:.2}x lower (>= 2.5x required)"
+    );
+
+    // ---- parity: devices=1 must equal the pre-striping flat stack --------
+    let mut parity = Vec::new();
+    for (coalesce, tag_flat, tag_one) in [
+        (CoalesceConfig::disabled(), "flat-nocoal", "d1-nocoal"),
+        (CoalesceConfig::default(), "flat-coal", "d1-coal"),
+    ] {
+        let rf = run_extraction(&flat, &flat_ds, coalesce, tag_flat);
+        println!("{}", rf.row());
+        let r1 = run_extraction(&one, &one_ds, coalesce, tag_one);
+        println!("{}", r1.row());
+        assert_eq!(
+            (r1.reads, r1.read_bytes),
+            (rf.reads, rf.read_bytes),
+            "acceptance: devices=1 charging must match the flat stack exactly ({tag_one})"
+        );
+        parity.push((rf, r1));
+    }
+    println!("acceptance: devices=1 charging identical to pre-striping stack (requests + bytes)");
+    println!("acceptance: devices=4 charged I/O time {ratio:.2}x lower (>= 2.5x required)");
+
+    records.push(r1);
+    records.push(r4);
+    for (rf, r1) in parity {
+        records.push(rf);
+        records.push(r1);
+    }
+
+    let line = Json::Arr(records.iter().map(Run::json).collect()).to_string() + "\n";
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_stripe.json")
+        .and_then(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+    match appended {
+        Ok(()) => println!("appended {} records to BENCH_stripe.json", records.len()),
+        Err(e) => eprintln!("could not append to BENCH_stripe.json: {e}"),
+    }
+}

@@ -336,6 +336,7 @@ impl TrainingSystem for Ginex {
             io_failures: io.io_failures,
             direct_fallbacks: io.direct_fallbacks,
             dropped_rows: 0,
+            ..Default::default()
         })
     }
 

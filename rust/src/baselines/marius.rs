@@ -338,6 +338,7 @@ impl TrainingSystem for MariusGnn {
             io_failures: io.io_failures,
             direct_fallbacks: io.direct_fallbacks,
             dropped_rows: 0,
+            ..Default::default()
         })
     }
 

@@ -192,6 +192,7 @@ impl TrainingSystem for PygPlus {
             io_failures: io.io_failures,
             direct_fallbacks: io.direct_fallbacks,
             dropped_rows: 0,
+            ..Default::default()
         })
     }
 

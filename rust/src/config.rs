@@ -7,9 +7,11 @@
 //! from TOML-subset files and accept CLI overrides.
 
 use crate::sim::Clock;
+use crate::storage::osfile::DEFAULT_POOL_THREADS;
 use crate::storage::{
     BackendKind, DeviceMemory, FaultInjectBackend, FaultPlan, HostMemory, IoBackend,
     OsFileBackend, PageCache, Pcie, PcieConfig, RetryPolicy, SsdConfig, SsdSim, Storage,
+    StripeSpec,
 };
 use crate::util::toml::Doc;
 use crate::util::units;
@@ -130,10 +132,23 @@ pub struct MachineConfig {
     /// Which I/O backend serves reads: the simulated SSD stack (default)
     /// or real OS files (`--backend os`).
     pub backend: BackendKind,
+    /// Physical devices the storage stack stripes across (`--devices`;
+    /// 1 = the unstriped stack, byte-for-byte).
+    pub devices: usize,
+    /// RAID-0 chunk size of the stripe (`--stripe-bytes`); ignored at
+    /// `devices == 1`.
+    pub stripe_bytes: u64,
+    /// `pread`-pool threads of the OS backend (`--io-workers`); the pool
+    /// splits its workers round-robin across stripe devices.
+    pub io_workers: usize,
     /// When set, the selected backend is wrapped in a
     /// [`FaultInjectBackend`] with this profile (`--fault-*` flags).
     pub fault: Option<FaultProfile>,
 }
+
+/// Default `--stripe-bytes`: 1 MiB chunks, the common md/RAID-0 default —
+/// far wider than a feature row, so rows almost never straddle devices.
+pub const DEFAULT_STRIPE_BYTES: u64 = 1 << 20;
 
 impl MachineConfig {
     /// The paper's main testbed: 2×Xeon 6342, 2×RTX 3090 (24 GB), PM883,
@@ -148,6 +163,9 @@ impl MachineConfig {
             gpu: GpuModel::Rtx3090,
             gpus: 2,
             backend: BackendKind::Sim,
+            devices: 1,
+            stripe_bytes: DEFAULT_STRIPE_BYTES,
+            io_workers: DEFAULT_POOL_THREADS,
             fault: None,
         }
     }
@@ -163,6 +181,9 @@ impl MachineConfig {
             gpu: GpuModel::K80,
             gpus: 8,
             backend: BackendKind::Sim,
+            devices: 1,
+            stripe_bytes: DEFAULT_STRIPE_BYTES,
+            io_workers: DEFAULT_POOL_THREADS,
             fault: None,
         }
     }
@@ -171,6 +192,31 @@ impl MachineConfig {
     pub fn with_backend(mut self, backend: BackendKind) -> Self {
         self.backend = backend;
         self
+    }
+
+    /// Stripe the storage stack across `devices` physical devices
+    /// (`--devices`; clamped to ≥ 1).
+    pub fn with_devices(mut self, devices: usize) -> Self {
+        self.devices = devices.max(1);
+        self
+    }
+
+    /// RAID-0 chunk size (`--stripe-bytes`; clamped to ≥ 1 byte).
+    pub fn with_stripe_bytes(mut self, bytes: u64) -> Self {
+        self.stripe_bytes = bytes.max(1);
+        self
+    }
+
+    /// OS-backend `pread` pool width (`--io-workers`; clamped to ≥ 1).
+    pub fn with_io_workers(mut self, workers: usize) -> Self {
+        self.io_workers = workers.max(1);
+        self
+    }
+
+    /// The stripe geometry this config describes (`single()` at
+    /// `devices == 1`, where `stripe_bytes` is ignored).
+    pub fn stripe_spec(&self) -> StripeSpec {
+        StripeSpec::new(self.devices.max(1), self.stripe_bytes.max(1))
     }
 
     /// Wrap the selected backend in seeded fault injection (`--fault-*`).
@@ -227,6 +273,15 @@ impl MachineConfig {
         if let Some(v) = doc.get_i64("gpus") {
             cfg.gpus = v as usize;
         }
+        if let Some(v) = doc.get_i64("devices") {
+            cfg.devices = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_str("stripe_bytes") {
+            cfg.stripe_bytes = units::parse_bytes(v)?.max(1);
+        }
+        if let Some(v) = doc.get_i64("io_workers") {
+            cfg.io_workers = (v as usize).max(1);
+        }
         if let Some(v) = doc.get_str("backend") {
             cfg.backend = BackendKind::by_name(v)
                 .ok_or_else(|| format!("unknown backend {v:?} (valid: {})", BackendKind::names()))?;
@@ -263,22 +318,35 @@ pub struct Machine {
 
 impl Machine {
     pub fn new(cfg: MachineConfig, clock: Clock) -> Self {
-        let ssd = SsdSim::new(cfg.ssd.clone(), clock.clone());
+        let spec = cfg.stripe_spec();
         let host = HostMemory::new(cfg.host_mem);
         let cache = Arc::new(PageCache::new(host.clone()));
-        let storage = Storage::new(ssd, cache);
+        // Striped sim: one independent SsdSim per device on the shared
+        // clock, so charged latency reflects N IOPS/queue-depth ceilings.
+        let storage = if spec.is_striped() {
+            let ssds =
+                (0..spec.devices).map(|_| SsdSim::new(cfg.ssd.clone(), clock.clone())).collect();
+            Storage::new_striped(ssds, cache, cfg.stripe_bytes)
+        } else {
+            Storage::new(SsdSim::new(cfg.ssd.clone(), clock.clone()), cache)
+        };
         let mut backend: Arc<dyn IoBackend> = match cfg.backend {
             BackendKind::Sim => Arc::new(storage.clone()),
-            BackendKind::Os => Arc::new(OsFileBackend::new(cfg.ssd.sector)),
+            BackendKind::Os => {
+                Arc::new(OsFileBackend::with_stripe(cfg.ssd.sector, cfg.io_workers, spec))
+            }
         };
         if let Some(profile) = &cfg.fault {
-            backend = Arc::new(FaultInjectBackend::new(
-                backend,
-                cfg.backend,
-                profile.plan.clone(),
-                profile.policy,
-                clock.clone(),
-            ));
+            backend = Arc::new(
+                FaultInjectBackend::new(
+                    backend,
+                    cfg.backend,
+                    profile.plan.clone(),
+                    profile.policy,
+                    clock.clone(),
+                )
+                .with_io_workers(cfg.io_workers),
+            );
         }
         let devices = (0..cfg.gpus.max(1)).map(|_| DeviceMemory::new(cfg.dev_mem)).collect();
         let pcie = Pcie::new(cfg.pcie.clone(), clock.clone());
@@ -397,6 +465,37 @@ mod tests {
     }
 
     #[test]
+    fn striped_machine_builds_per_device_stack() {
+        let cfg = MachineConfig::paper().with_devices(3).with_stripe_bytes(4096);
+        let m = Machine::new(cfg, Clock::new(1.0));
+        assert_eq!(m.backend.stripe(), StripeSpec::new(3, 4096));
+        assert_eq!(m.backend.device_io_snapshot().len(), 3);
+        m.backend.charge_multi_dev(1, 1, 4096);
+        let snap = m.backend.device_io_snapshot();
+        assert_eq!(snap[0].0, 0);
+        assert_eq!(snap[1], (1, 4096));
+        assert_eq!(snap[2].0, 0);
+        // The aggregate surface mirrors per-device charges.
+        assert_eq!(
+            m.backend.io_counters().reads.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+
+        // OS backend: geometry + io-workers plumb through; the fault
+        // wrapper is transparent to both.
+        let cfg = MachineConfig::paper()
+            .with_backend(BackendKind::Os)
+            .with_devices(2)
+            .with_stripe_bytes(8192)
+            .with_io_workers(3)
+            .with_fault(FaultProfile::default());
+        let m = Machine::new(cfg, Clock::new(1.0));
+        assert_eq!(m.backend.name(), "os+fault");
+        assert_eq!(m.backend.stripe(), StripeSpec::new(2, 8192));
+        assert_eq!(m.backend.device_io_snapshot().len(), 2);
+    }
+
+    #[test]
     fn fault_profile_wraps_selected_backend() {
         let cfg = MachineConfig::paper().with_fault(FaultProfile {
             plan: FaultPlan::transient(99, 0.01),
@@ -424,7 +523,7 @@ mod tests {
         let path = dir.join("m.toml");
         std::fs::write(
             &path,
-            "base = \"paper\"\nhost_mem = \"64MiB\"\ngpus = 1\n[ssd]\nlatency = \"120us\"\niops = 50000\n",
+            "base = \"paper\"\nhost_mem = \"64MiB\"\ngpus = 1\ndevices = 3\nstripe_bytes = \"64KiB\"\nio_workers = 12\n[ssd]\nlatency = \"120us\"\niops = 50000\n",
         )
         .unwrap();
         let cfg = MachineConfig::from_file(&path).unwrap();
@@ -432,5 +531,8 @@ mod tests {
         assert_eq!(cfg.gpus, 1);
         assert_eq!(cfg.ssd.latency, Duration::from_micros(120));
         assert_eq!(cfg.ssd.iops, 50000.0);
+        assert_eq!(cfg.devices, 3);
+        assert_eq!(cfg.stripe_bytes, 64 << 10);
+        assert_eq!(cfg.io_workers, 12);
     }
 }

@@ -33,8 +33,32 @@
 //! [`crate::storage::DirectIoStats`] amplification visibly drops when
 //! sector sharing wins and visibly grows when gap bridging pays bytes for
 //! ops.
+//!
+//! ## Striping (`--devices N`)
+//!
+//! On a striped array ([`StripeSpec`]) the planner adds one rule and one
+//! reorder:
+//!
+//! * a segment never merges past [`StripeSpec::chunk_end`] of its starting
+//!   offset, so every multi-row segment maps to exactly **one** device and
+//!   the engine can pair its completion with one
+//!   `charge_multi_dev(dev, ..)`. The only segment that may span devices is
+//!   a *single row* wider than `--stripe-bytes` — unavoidable, served
+//!   through the striped backing, and charged to the device owning its
+//!   starting offset (a deliberate approximation: a row that wide is a
+//!   configuration smell, not a steady state);
+//! * the offset-sorted plan is **interleaved round-robin by owning device**
+//!   before it is returned, so a wave's submissions fill all per-device
+//!   sub-queues concurrently instead of saturating device 0 first. Safe
+//!   because the extractor keys completions by wave index
+//!   (`user_data = in_wave.len()`), never by list position.
+//!
+//! At `--devices 1` (`StripeSpec::single()`) the chunk constraint is
+//! vacuous and the single "device 0" list is returned in place — the plan
+//! is byte-for-byte identical to the unstriped planner.
 
 use crate::graph::FeatureTable;
+use crate::storage::StripeSpec;
 
 /// Tuning knobs for the segment planner.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +125,21 @@ pub fn plan_segments(
     cfg: &CoalesceConfig,
     staging_capacity: usize,
 ) -> Vec<Segment> {
+    plan_segments_striped(to_load, features, cfg, staging_capacity, StripeSpec::single())
+}
+
+/// Stripe-aware planner (see the module docs): identical to
+/// [`plan_segments`] except that segments never merge past
+/// [`StripeSpec::chunk_end`] and the result is interleaved round-robin by
+/// owning device. `StripeSpec::single()` reproduces [`plan_segments`]
+/// byte-for-byte.
+pub fn plan_segments_striped(
+    to_load: &[(u32, u32)],
+    features: &FeatureTable,
+    cfg: &CoalesceConfig,
+    staging_capacity: usize,
+    spec: StripeSpec,
+) -> Vec<Segment> {
     let row_bytes = features.row_bytes() as usize;
     debug_assert!(staging_capacity >= row_bytes, "staging cannot hold one row");
     let mut rows: Vec<(u64, u32, u32)> = to_load
@@ -125,7 +164,11 @@ pub fn plan_segments(
             let new_span = (off + row_bytes as u64 - seg.offset) as usize;
             let mergeable = cfg.enabled()
                 && (gap == 0 || gap < cfg.gap_bytes)
-                && new_span <= max_span;
+                && new_span <= max_span
+                // Never grow a segment past the stripe chunk that owns its
+                // first byte — the one-segment-one-device invariant
+                // (vacuous when unstriped: chunk_end == u64::MAX).
+                && seg.offset + new_span as u64 <= spec.chunk_end(seg.offset);
             if mergeable {
                 seg.rows.push(SegRow { node, slot, rel_off: (off - seg.offset) as usize });
                 seg.span = new_span;
@@ -140,7 +183,31 @@ pub fn plan_segments(
             rows: vec![SegRow { node, slot, rel_off: 0 }],
         });
     }
-    segments
+    interleave_by_device(segments, spec)
+}
+
+/// Round-robin the offset-sorted plan across owning devices so submission
+/// fills every per-device sub-queue concurrently. Within one device the
+/// offset order (and thus the planner's merge decisions) is preserved.
+fn interleave_by_device(segments: Vec<Segment>, spec: StripeSpec) -> Vec<Segment> {
+    if !spec.is_striped() || segments.len() < 2 {
+        return segments;
+    }
+    let mut by_dev: Vec<Vec<Segment>> = (0..spec.devices).map(|_| Vec::new()).collect();
+    for seg in segments {
+        by_dev[spec.device_of(seg.offset)].push(seg);
+    }
+    let total: usize = by_dev.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut lanes: Vec<_> = by_dev.into_iter().map(Vec::into_iter).collect();
+    while out.len() < total {
+        for lane in &mut lanes {
+            if let Some(seg) = lane.next() {
+                out.push(seg);
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -254,6 +321,83 @@ mod tests {
                 assert_eq!(r.slot, i as u32);
             }
             assert!(s.span >= s.useful);
+        }
+    }
+
+    #[test]
+    fn striped_plan_splits_segments_at_chunk_boundaries() {
+        let t = table();
+        // 64-byte rows, 256-byte chunks, 2 devices: nodes 0..8 are one
+        // contiguous 512-byte run that must split at offsets 256 and stay
+        // one-device-per-segment.
+        let spec = StripeSpec::new(2, 256);
+        let cfg = CoalesceConfig { max_bytes: 1 << 20, gap_bytes: 4096 };
+        let segs =
+            plan_segments_striped(&nodes(&[0, 1, 2, 3, 4, 5, 6, 7]), &t, &cfg, 1 << 20, spec);
+        assert_eq!(segs.len(), 2);
+        for s in &segs {
+            assert_eq!(s.span, 256);
+            assert_eq!(s.rows.len(), 4);
+            let end = s.offset + s.span as u64;
+            assert!(end <= spec.chunk_end(s.offset), "segment crosses its chunk");
+        }
+        let mut offs: Vec<u64> = segs.iter().map(|s| s.offset).collect();
+        offs.sort_unstable();
+        assert_eq!(offs, vec![0, 256]);
+    }
+
+    #[test]
+    fn striped_plan_interleaves_round_robin_by_device() {
+        let t = table();
+        // Chunks of 256 B on 2 devices. Rows 0..4 → chunk 0 (dev 0), rows
+        // 8..12 → chunk 2 (dev 0), rows 12..16 → chunk 3 (dev 1). Sorted
+        // order is dev [0, 0, 1]; round-robin must yield [0, 1, 0].
+        let spec = StripeSpec::new(2, 256);
+        let cfg = CoalesceConfig { max_bytes: 1 << 20, gap_bytes: 4096 };
+        let ids: Vec<u32> = (0..4).chain(8..16).collect();
+        let segs = plan_segments_striped(&nodes(&ids), &t, &cfg, 1 << 20, spec);
+        assert_eq!(segs.len(), 3);
+        let devs: Vec<usize> = segs.iter().map(|s| spec.device_of(s.offset)).collect();
+        assert_eq!(devs, vec![0, 1, 0]);
+        assert_eq!(
+            segs.iter().map(|s| s.offset).collect::<Vec<_>>(),
+            vec![0, 768, 512],
+            "within a device, offset order is preserved"
+        );
+        let total_rows: usize = segs.iter().map(|s| s.rows.len()).sum();
+        assert_eq!(total_rows, ids.len());
+    }
+
+    #[test]
+    fn row_wider_than_stripe_becomes_its_own_segment() {
+        let t = table();
+        // 64-byte rows, 32-byte chunks: every row necessarily crosses a
+        // chunk boundary, so nothing can merge — each row is one segment
+        // served through the striped backing.
+        let spec = StripeSpec::new(2, 32);
+        let cfg = CoalesceConfig { max_bytes: 1 << 20, gap_bytes: 4096 };
+        let segs = plan_segments_striped(&nodes(&[0, 1, 2]), &t, &cfg, 1 << 20, spec);
+        assert_eq!(segs.len(), 3);
+        for s in &segs {
+            assert_eq!(s.rows.len(), 1);
+            assert_eq!(s.span, 64);
+        }
+    }
+
+    #[test]
+    fn single_device_striped_plan_matches_unstriped() {
+        let t = table();
+        let ids: Vec<u32> = vec![3, 900, 17, 901, 40, 41, 42, 500];
+        let cfg = CoalesceConfig::default();
+        let plain = plan_segments(&nodes(&ids), &t, &cfg, 1 << 20);
+        let striped =
+            plan_segments_striped(&nodes(&ids), &t, &cfg, 1 << 20, StripeSpec::single());
+        assert_eq!(plain.len(), striped.len());
+        for (a, b) in plain.iter().zip(&striped) {
+            assert_eq!(a.offset, b.offset);
+            assert_eq!(a.span, b.span);
+            assert_eq!(a.useful, b.useful);
+            assert_eq!(a.rows, b.rows);
         }
     }
 }

@@ -34,7 +34,7 @@
 //! never re-resolving node ids — so the whole post-extraction lifecycle
 //! stays off the coordinator's shard locks.
 
-use super::coalesce::{plan_segments, CoalesceConfig, SegRow};
+use super::coalesce::{plan_segments_striped, CoalesceConfig, SegRow};
 use crate::graph::FeatureTable;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::sim::Latch;
@@ -159,6 +159,12 @@ impl Extractor {
         }
     }
 
+    /// Per-device submission-queue high-water marks of this extractor's
+    /// engine (empty when the engine predates striping observability).
+    pub fn queue_highwater(&self) -> Vec<u64> {
+        self.engine.queue_highwater()
+    }
+
     /// Extract the feature rows of `nodes` into the feature buffer; returns
     /// the node alias list (slot per node) for the trainer. Infallible
     /// facade over [`Extractor::try_extract`] for callers with no error
@@ -207,11 +213,15 @@ impl Extractor {
         // paper's D1 baseline.
         let coalesce =
             if self.opts.direct { self.opts.coalesce } else { CoalesceConfig::disabled() };
-        let segments = plan_segments(
+        // Stripe-aware plan: segments stay inside one stripe chunk (one
+        // device per request) and are interleaved round-robin across
+        // devices so every per-device sub-queue fills from SQE one.
+        let segments = plan_segments_striped(
             &plan.to_load,
             &self.features,
             &coalesce,
             self.staging.capacity_bytes(),
+            self.backend.stripe(),
         );
 
         // Waves: pack segments into the staging arena until it is full,

@@ -12,7 +12,7 @@ use super::features::{FeatureGen, FeatureTable};
 use super::gen::{generate, GraphGenSpec};
 use crate::config::Machine;
 use crate::storage::{
-    BackingRef, DataKind, FileBacking, FileId, MemBacking,
+    BackingRef, DataKind, FileBacking, FileId, MemBacking, StripeSpec, StripedBacking,
 };
 use crate::util::rng::hash2;
 use std::path::Path;
@@ -243,6 +243,24 @@ impl Dataset {
 
     /// Write a real on-disk copy (indptr/indices/labels/features/meta).
     pub fn write_dir(spec: &DatasetSpec, dir: &Path) -> anyhow::Result<()> {
+        Self::write_dir_striped(spec, dir, 1, 1 << 20)
+    }
+
+    /// Write an on-disk copy whose feature table stripes across `devices`
+    /// member files (`features.bin.0 … .N-1`) in `stripe_bytes` chunks
+    /// (`gen-data --devices N --stripe-bytes B`). The geometry is recorded
+    /// in `meta.toml` (`stripe_devices` / `stripe_bytes`) and must match
+    /// the machine flags at load time. Topology/label files stay unstriped
+    /// — only the feature table carries the random-read load the stripe
+    /// exists for. `devices == 1` is exactly [`Dataset::write_dir`].
+    pub fn write_dir_striped(
+        spec: &DatasetSpec,
+        dir: &Path,
+        devices: usize,
+        stripe_bytes: u64,
+    ) -> anyhow::Result<()> {
+        let devices = devices.max(1);
+        let stripe_bytes = stripe_bytes.max(1);
         std::fs::create_dir_all(dir)?;
         let g = generate(&spec.gen_spec());
         let labels = Arc::new(g.labels);
@@ -250,8 +268,7 @@ impl Dataset {
         write_slice_u32(&dir.join("indices.bin"), &g.indices)?;
         write_slice_u16(&dir.join("labels.bin"), &labels)?;
         let gen = FeatureGen::new(spec.seed, spec.dim, spec.classes, spec.noise, labels.clone());
-        FeatureTable::write_file(&dir.join("features.bin"), spec.nodes as u64, &gen)?;
-        let meta = format!(
+        let mut meta = format!(
             "name = \"{}\"\nnodes = {}\ndim = {}\nclasses = {}\ntrain_frac = {}\nseed = {}\n\
              avg_degree = {}\ncommunity_size = {}\nhomophily = {}\ndegree_alpha = {}\nnoise = {}\n",
             spec.name,
@@ -266,6 +283,16 @@ impl Dataset {
             spec.degree_alpha,
             spec.noise,
         );
+        if devices > 1 {
+            let paths: Vec<std::path::PathBuf> =
+                (0..devices).map(|d| dir.join(format!("features.bin.{d}"))).collect();
+            FeatureTable::write_file_striped(&paths, spec.nodes as u64, &gen, stripe_bytes)?;
+            meta.push_str(&format!(
+                "stripe_devices = {devices}\nstripe_bytes = {stripe_bytes}\n"
+            ));
+        } else {
+            FeatureTable::write_file(&dir.join("features.bin"), spec.nodes as u64, &gen)?;
+        }
         std::fs::write(dir.join("meta.toml"), meta)?;
         Ok(())
     }
@@ -298,8 +325,34 @@ impl Dataset {
             indices_backing,
         );
         let graph = DiskGraph::new(spec.nodes, indptr, indices_file, Some(&machine.host))?;
-        let feature_backing: BackingRef =
-            Arc::new(FileBacking::open(&dir.join("features.bin"))?);
+        // Stripe geometry handshake: the dataset was written with a fixed
+        // geometry; the machine's queues/charging must be configured to the
+        // same one or logical↔device translation would diverge.
+        let stripe_devices = meta.get_i64("stripe_devices").unwrap_or(1).max(1) as usize;
+        let meta_stripe_bytes = meta.get_i64("stripe_bytes").unwrap_or(1).max(1) as u64;
+        let ds_spec = StripeSpec::new(stripe_devices, meta_stripe_bytes);
+        let m_spec = machine.cfg.stripe_spec();
+        if ds_spec != m_spec {
+            anyhow::bail!(
+                "dataset stripe geometry ({} device(s), stripe {} B) does not match the \
+                 machine ({} device(s), stripe {} B); pass matching --devices/--stripe-bytes \
+                 or regenerate with `gen-data --devices …`",
+                ds_spec.devices,
+                ds_spec.stripe_bytes,
+                m_spec.devices,
+                m_spec.stripe_bytes,
+            );
+        }
+        let feature_backing: BackingRef = if stripe_devices > 1 {
+            let mut members: Vec<BackingRef> = Vec::with_capacity(stripe_devices);
+            for d in 0..stripe_devices {
+                members
+                    .push(Arc::new(FileBacking::open(&dir.join(format!("features.bin.{d}")))?));
+            }
+            Arc::new(StripedBacking::new(members, meta_stripe_bytes))
+        } else {
+            Arc::new(FileBacking::open(&dir.join("features.bin"))?)
+        };
         let features = FeatureTable::from_backing(
             FileId::new(next_file_id(), DataKind::Features),
             spec.nodes as u64,
@@ -443,5 +496,45 @@ mod tests {
         // Topology readable through the storage stack.
         let nbrs = ds.graph.neighbors(&m.storage, 0);
         assert_eq!(nbrs.len() as u64, ds.graph.degree(0));
+    }
+
+    #[test]
+    fn striped_dir_roundtrip_and_geometry_handshake() {
+        let dir = std::env::temp_dir().join("gnndrive_ds_striped_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::unit_test();
+        spec.nodes = 300;
+        spec.name = "rt-striped".into();
+        Dataset::write_dir_striped(&spec, &dir, 3, 4096).unwrap();
+        for d in 0..3 {
+            assert!(dir.join(format!("features.bin.{d}")).exists(), "member {d}");
+        }
+        assert!(!dir.join("features.bin").exists(), "striped write must not leave a flat file");
+
+        // Matching machine geometry: rows read back byte-identical.
+        let m = Machine::new(
+            MachineConfig::paper().with_devices(3).with_stripe_bytes(4096),
+            Clock::new(0.1),
+        );
+        let ds = Dataset::load_dir(&dir, &m).unwrap();
+        assert_eq!(ds.spec.nodes, 300);
+        let mut got = vec![0u8; 64];
+        let mut want = vec![0u8; 64];
+        // Rows around the 4096-byte chunk boundary (row 64 starts exactly
+        // on it) plus the last row.
+        for v in [0u64, 63, 64, 65, 299] {
+            ds.features.file.backing.read_at(ds.features.row_offset(v), &mut got);
+            ds.feature_gen.fill_row(v, &mut want);
+            assert_eq!(got, want, "row {v}");
+        }
+
+        // Mismatched machine geometry must be refused, loudly.
+        let err = Dataset::load_dir(&dir, &machine()).unwrap_err().to_string();
+        assert!(err.contains("stripe geometry"), "unexpected error: {err}");
+        let m_wrong = Machine::new(
+            MachineConfig::paper().with_devices(3).with_stripe_bytes(8192),
+            Clock::new(0.1),
+        );
+        assert!(Dataset::load_dir(&dir, &m_wrong).is_err());
     }
 }

@@ -7,7 +7,7 @@
 //! either a [`ProceduralBacking`] (zero disk, deterministic) or a real file
 //! written once (the end-to-end example).
 
-use crate::storage::backing::ProceduralBacking;
+use crate::storage::backing::{ProceduralBacking, StripeSpec};
 use crate::storage::{BackingRef, FileId, SimFile};
 use crate::util::rng::{hash2, hash_normal};
 use std::sync::Arc;
@@ -116,6 +116,42 @@ impl FeatureTable {
         w.flush()
     }
 
+    /// Materialize the table RAID-0-striped across `paths.len()` member
+    /// files in `stripe_bytes` chunks (`gen-data --devices N`). Rows stream
+    /// in logical order and each row's bytes are split at chunk boundaries
+    /// to the owning member — a device's local offsets are monotone in the
+    /// logical offset, so every member file is a pure sequential append.
+    /// One path degenerates to [`FeatureTable::write_file`] byte-for-byte.
+    pub fn write_file_striped(
+        paths: &[std::path::PathBuf],
+        nodes: u64,
+        gen: &FeatureGen,
+        stripe_bytes: u64,
+    ) -> std::io::Result<()> {
+        use std::io::Write;
+        assert!(!paths.is_empty(), "striped feature table needs at least one member file");
+        let spec = StripeSpec::new(paths.len(), stripe_bytes);
+        let mut writers = Vec::with_capacity(paths.len());
+        for p in paths {
+            writers.push(std::io::BufWriter::with_capacity(1 << 20, std::fs::File::create(p)?));
+        }
+        let mut row = vec![0u8; gen.row_bytes() as usize];
+        let mut off = 0u64;
+        for v in 0..nodes {
+            gen.fill_row(v, &mut row);
+            let mut taken = 0usize;
+            for (dev, _local, run) in spec.split(off, row.len()) {
+                writers[dev].write_all(&row[taken..taken + run])?;
+                taken += run;
+            }
+            off += row.len() as u64;
+        }
+        for mut w in writers {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
     pub fn row_bytes(&self) -> u64 {
         (self.dim * 4) as u64
     }
@@ -200,6 +236,36 @@ mod tests {
         let mut via_table = vec![0u8; 128];
         table.file.backing.read_at(table.row_offset(17), &mut via_table);
         assert_eq!(direct, via_table);
+    }
+
+    #[test]
+    fn striped_files_roundtrip_through_striped_backing() {
+        use crate::storage::backing::StripedBacking;
+        // 8 f32 → 32-byte rows; 48-byte chunks on 3 members: rows straddle
+        // chunk (and so device) boundaries regularly.
+        let gen = FeatureGen::new(31, 8, 2, 0.3, labels(40, 2));
+        let dir = std::env::temp_dir().join("gnndrive_feat_striped_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let paths: Vec<std::path::PathBuf> =
+            (0..3).map(|d| dir.join(format!("feat.bin.{d}"))).collect();
+        FeatureTable::write_file_striped(&paths, 40, &gen, 48).unwrap();
+        let members: Vec<BackingRef> = paths
+            .iter()
+            .map(|p| Arc::new(FileBacking::open(p).unwrap()) as BackingRef)
+            .collect();
+        let striped = StripedBacking::new(members, 48);
+        use crate::storage::Backing;
+        assert_eq!(striped.len(), 40 * 32, "member lengths must sum to the logical size");
+        let backing: BackingRef = Arc::new(striped);
+        let table =
+            FeatureTable::from_backing(FileId::new(5, DataKind::Features), 40, 8, backing);
+        let mut expect = vec![0u8; 32];
+        let mut got = vec![0u8; 32];
+        for v in 0..40u64 {
+            gen.fill_row(v, &mut expect);
+            table.file.backing.read_at(table.row_offset(v), &mut got);
+            assert_eq!(expect, got, "row {v}");
+        }
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //!   os    real OS files via pread — requires an on-disk dataset, e.g.
 //!         `gnndrive gen-data --out d && gnndrive train --backend os --data d`
 //!
+//! Both backends stripe across `--devices N` physical devices in
+//! `--stripe-bytes` RAID-0 chunks: per-device engine queues (the `io_depth`
+//! budget applies *per device*), per-device charging (sim: N independent
+//! SSD models), and stripe-aware coalescing (segments never straddle
+//! devices). `gen-data --devices N` writes `features.bin.0 … .N-1` and
+//! records the geometry in `meta.toml`; training must then pass matching
+//! `--devices/--stripe-bytes`. `--io-workers` sizes the OS backend's pread
+//! pool, split round-robin across devices.
+//!
 //! Feature extraction coalesces per-row reads into multi-row segments
 //! (`--coalesce-bytes`, max segment span; `--coalesce-gap`, strict bound on
 //! the byte gap bridged between merged rows). `--coalesce-bytes 0` restores
@@ -38,7 +47,8 @@
 //! fault injection (`--fault-seed`); engines retry per `--io-retries`, and
 //! `--on-io-error {fail,retry,drop-rows}` picks the batch-level policy when
 //! retries are exhausted (serving always degrades to per-request error
-//! responses instead).
+//! responses instead). On a striped array `--fault-device i` confines the
+//! storm to the stripe member `i` (a single-device brownout).
 
 use gnndrive::baselines::{build_system, SystemKind};
 use gnndrive::config::{FaultProfile, Machine, MachineConfig, OnIoError, TrainConfig};
@@ -61,6 +71,18 @@ fn main() {
     .opt("model", "graphsage", "graphsage|gcn|gat")
     .opt("backend", "sim", "I/O backend: sim (simulated SSD) | os (real files via pread)")
     .opt("data", "", "on-disk dataset dir (gen-data output); required for --backend os")
+    .opt(
+        "devices",
+        "1",
+        "stripe the storage stack across N devices; engine io-depth and sim SSD \
+         IOPS/queue-depth ceilings apply PER DEVICE",
+    )
+    .opt("stripe-bytes", "1MiB", "RAID-0 chunk size of the stripe (ignored at --devices 1)")
+    .opt(
+        "io-workers",
+        "8",
+        "os backend: pread-pool threads, bound round-robin to stripe devices",
+    )
     .opt(
         "coalesce-bytes",
         "256KiB",
@@ -105,6 +127,11 @@ fn main() {
         "fault-bad-range",
         "",
         "fault injection: permanently unreadable byte range START:LEN (sizes accept KiB/MiB)",
+    )
+    .opt(
+        "fault-device",
+        "",
+        "fault injection: confine the storm to one stripe member (device index < --devices)",
     )
     .opt("io-retries", "3", "engine retry policy: max re-issues per failed request")
     .opt(
@@ -162,10 +189,25 @@ fn cmd_gen_data(args: &Args) -> i32 {
         return 2;
     };
     let out = std::path::PathBuf::from(args.get_or_default("out"));
+    let devices = args.get_usize("devices").unwrap_or(1).max(1);
+    let stripe_bytes = match parse_stripe_bytes(args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     println!("writing {name} to {out:?} …");
-    match Dataset::write_dir(&spec, &out) {
+    match Dataset::write_dir_striped(&spec, &out, devices, stripe_bytes) {
         Ok(()) => {
-            println!("done: indptr.bin indices.bin labels.bin features.bin meta.toml");
+            if devices > 1 {
+                println!(
+                    "done: indptr.bin indices.bin labels.bin features.bin.0…{} meta.toml \
+                     ({} devices, {} chunks)",
+                    devices - 1,
+                    devices,
+                    gnndrive::util::units::fmt_bytes(stripe_bytes),
+                );
+            } else {
+                println!("done: indptr.bin indices.bin labels.bin features.bin meta.toml");
+            }
             0
         }
         Err(e) => {
@@ -177,6 +219,17 @@ fn cmd_gen_data(args: &Args) -> i32 {
 
 fn parse_fanouts(s: &str) -> Vec<usize> {
     s.split(',').filter_map(|p| p.trim().parse().ok()).collect()
+}
+
+/// Parse `--stripe-bytes`; `Err` carries the process exit code.
+fn parse_stripe_bytes(args: &Args) -> Result<u64, i32> {
+    match gnndrive::util::units::parse_bytes(args.get_or_default("stripe-bytes")) {
+        Ok(v) => Ok(v.max(1)),
+        Err(e) => {
+            eprintln!("--stripe-bytes: {e}");
+            Err(2)
+        }
+    }
 }
 
 /// Parse the `--fault-*` / `--io-retries` flags into a fault profile;
@@ -198,7 +251,17 @@ fn parse_fault(args: &Args) -> Result<Option<FaultProfile>, i32> {
         stall_rate: rate("fault-stall")?,
         stall_us: args.get_usize("fault-stall-us").unwrap_or(200) as u64,
         bad_ranges: Vec::new(),
+        device: None,
     };
+    if let Some(d) = args.get("fault-device").filter(|s| !s.is_empty()) {
+        match d.parse::<usize>() {
+            Ok(i) => plan.device = Some(i),
+            Err(_) => {
+                eprintln!("--fault-device: expected a device index, got {d:?}");
+                return Err(2);
+            }
+        }
+    }
     if let Some(spec) = args.get("fault-bad-range").filter(|s| !s.is_empty()) {
         let parts: Vec<&str> = spec.splitn(2, ':').collect();
         let parsed = match parts.as_slice() {
@@ -241,8 +304,25 @@ fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>)
         return Err(2);
     };
     let gb: u64 = args.get_usize("memory-gb").unwrap_or(32) as u64;
-    let mut mcfg = MachineConfig::paper().with_paper_host_gb(gb).with_backend(backend);
+    let devices = args.get_usize("devices").unwrap_or(1).max(1);
+    let stripe_bytes = match parse_stripe_bytes(args) {
+        Ok(v) => v,
+        Err(code) => return Err(code),
+    };
+    let io_workers = args.get_usize("io-workers").unwrap_or(8).max(1);
+    let mut mcfg = MachineConfig::paper()
+        .with_paper_host_gb(gb)
+        .with_backend(backend)
+        .with_devices(devices)
+        .with_stripe_bytes(stripe_bytes)
+        .with_io_workers(io_workers);
     if let Some(profile) = parse_fault(args)? {
+        if let Some(d) = profile.plan.device {
+            if d >= devices {
+                eprintln!("--fault-device {d} out of range for --devices {devices}");
+                return Err(2);
+            }
+        }
         mcfg = mcfg.with_fault(profile);
     }
     let machine = Arc::new(Machine::new(mcfg, Clock::from_env()));

@@ -105,11 +105,20 @@ pub struct EpochStats {
     /// Feature rows trained as zeroed placeholders under
     /// `--on-io-error drop-rows`.
     pub dropped_rows: usize,
+    /// Per-device `(reads, read_bytes)` this epoch on a striped array
+    /// (single entry — or empty for legacy backends — when unstriped).
+    pub device_reads: Vec<(u64, u64)>,
+    /// Per-device submission-queue high-water marks, max across this
+    /// engine's extractors (cumulative since engine creation — a queue
+    /// near `io_depth_per_device` was the epoch's bottleneck device).
+    pub queue_highwater: Vec<u64>,
+    /// The per-device `--io-depth` budget the high-water marks compare to.
+    pub io_depth_per_device: usize,
 }
 
 impl EpochStats {
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "epoch {:>8}  prep {:>8}  sample {:>8}  extract {:>8}  train {:>8}  batches {:>4}  ssd_read {:>9}  reqs {:>7}  align+ {:>9}  x99 {:>8}  retry {:>4}  iofail {:>3}  fallbk {:>4}  drop {:>4}  loss {:.4}  acc {:.3}",
             crate::util::units::fmt_dur(self.epoch_time),
             crate::util::units::fmt_dur(self.prep_time),
@@ -130,7 +139,23 @@ impl EpochStats {
             self.dropped_rows,
             self.train.mean_loss(),
             self.train.accuracy(),
-        )
+        );
+        // Striped arrays only: per-device read split + queue utilization
+        // (the `--devices 1` log line stays byte-identical to pre-striping).
+        if self.device_reads.len() > 1 {
+            let devs: Vec<String> = self
+                .device_reads
+                .iter()
+                .map(|(r, b)| format!("{}r/{}", r, crate::util::units::fmt_bytes(*b)))
+                .collect();
+            s.push_str(&format!("  dev[{}]", devs.join(" ")));
+            if !self.queue_highwater.is_empty() {
+                let q: Vec<String> =
+                    self.queue_highwater.iter().map(|h| h.to_string()).collect();
+                s.push_str(&format!("  q[{}]/{}", q.join(","), self.io_depth_per_device));
+            }
+        }
+        s
     }
 }
 
@@ -335,6 +360,7 @@ impl GnnDrive {
 
         let epoch_watch = Stopwatch::start(clock);
         let io_snap = EpochIoSnapshot::start(self.machine.backend.as_ref());
+        let dev_snap = self.machine.backend.device_io_snapshot();
 
         std::thread::scope(|s| {
             // ---- samplers ----
@@ -547,6 +573,33 @@ impl GnnDrive {
         }
         let order = train_order.into_inner().unwrap();
         let io = io_snap.totals(self.machine.backend.as_ref());
+        // Per-device read split this epoch (end − start, zipped by device;
+        // a legacy backend's single-entry snapshot works unchanged).
+        let device_reads: Vec<(u64, u64)> = self
+            .machine
+            .backend
+            .device_io_snapshot()
+            .iter()
+            .enumerate()
+            .map(|(d, &(reads, bytes))| {
+                let (r0, b0) = dev_snap.get(d).copied().unwrap_or((0, 0));
+                (reads.saturating_sub(r0), bytes.saturating_sub(b0))
+            })
+            .collect();
+        // Submission-queue high-water per device: max across this engine's
+        // extractors (each owns its async engine). Extractor threads joined
+        // at scope exit, so the locks are uncontended here.
+        let mut queue_highwater: Vec<u64> = Vec::new();
+        for ex in &self.extractors {
+            let hw = ex.lock().unwrap_or_else(|e| e.into_inner()).queue_highwater();
+            for (d, &v) in hw.iter().enumerate() {
+                if d < queue_highwater.len() {
+                    queue_highwater[d] = queue_highwater[d].max(v);
+                } else {
+                    queue_highwater.push(v);
+                }
+            }
+        }
         Ok(EpochStats {
             epoch_time: epoch_watch.elapsed(),
             prep_time: Duration::ZERO,
@@ -565,6 +618,9 @@ impl GnnDrive {
             io_failures: io.io_failures,
             direct_fallbacks: io.direct_fallbacks,
             dropped_rows: dropped.into_inner(),
+            device_reads,
+            queue_highwater,
+            io_depth_per_device: self.cfg.io_depth,
         })
     }
 

@@ -36,6 +36,7 @@
 //!   (harvested CQE) happens-after the destination slot write; the caller
 //!   may read the staging slot without any further synchronization.
 
+use super::backing::StripeSpec;
 use super::engine::SimFile;
 use super::ssd::SsdCounters;
 use crate::membuf::SlotRef;
@@ -367,6 +368,15 @@ pub trait AsyncIoEngine: Send + Sync {
     /// Callers that harvested every CQE they submitted (the normal wave
     /// protocol) never need this; it exists for early-exit/abort paths.
     fn drain(&self);
+    /// Per-device in-flight high-water marks since the engine was built:
+    /// entry `d` is the most requests ever simultaneously outstanding on
+    /// device `d`'s sub-queue. Empty when the engine does not track
+    /// per-device queues (wrappers delegate; plain single-queue engines
+    /// report one entry). Observability only — never part of the
+    /// completion contract.
+    fn queue_highwater(&self) -> Vec<u64> {
+        Vec::new()
+    }
 }
 
 /// A storage backend: synchronous reads/writes + charging + stats, and a
@@ -477,6 +487,36 @@ pub trait IoBackend: Send + Sync {
     /// (pairs with `read_direct_nocharge` / `read_direct_segment_nocharge`).
     /// A no-op when `ops == 0`.
     fn charge_multi(&self, ops: u64, bytes: usize);
+
+    /// The stripe geometry this backend serves. [`StripeSpec::single`] (the
+    /// default) means "one device, logical == physical"; a striped backend
+    /// returns its real geometry so engines can route SQEs to per-device
+    /// sub-queues and the planner can keep segments inside one chunk.
+    fn stripe(&self) -> StripeSpec {
+        StripeSpec::single()
+    }
+
+    /// Per-device flavor of [`IoBackend::charge_multi`]: charge `ops` reads
+    /// totalling `bytes` against device `dev` of the stripe set. Engines use
+    /// this when every request in a charged batch landed on one known
+    /// device, so a striped backend can debit that device's independent
+    /// IOPS/bandwidth budget instead of a serialized global one. Default:
+    /// ignore `dev` and fall through to `charge_multi` — which is exactly
+    /// the pre-striping behavior and keeps single-device accounting
+    /// byte-for-byte identical.
+    fn charge_multi_dev(&self, dev: usize, ops: u64, bytes: usize) {
+        let _ = dev;
+        self.charge_multi(ops, bytes);
+    }
+
+    /// Per-device `(reads, read_bytes)` breakdown of the charged counters
+    /// since the last `reset_io_stats`. Default: one entry mirroring
+    /// `io_counters` (single-device backends have nothing to break down).
+    fn device_io_snapshot(&self) -> Vec<(u64, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let c = self.io_counters();
+        vec![(c.reads.load(Relaxed), c.read_bytes.load(Relaxed))]
+    }
 
     /// Buffered write: cache pages become resident; device time is charged
     /// for the whole range.

@@ -10,6 +10,10 @@
 //! * [`ProceduralBacking`] — bytes synthesized deterministically on demand
 //!   from `(region offset)` by a generator function; used for large feature
 //!   tables so 100 GB-scale analogs need no disk space (DESIGN.md §3).
+//! * [`StripedBacking`] — RAID-0 composition of N member stores: a logical
+//!   byte range is split into `stripe_bytes` chunks laid out round-robin
+//!   across members. [`StripeSpec`] owns the offset math; everything above
+//!   the backing keeps purely logical offsets.
 
 use super::api::IoError;
 use std::fs::File;
@@ -63,6 +67,151 @@ pub trait Backing: Send + Sync {
 }
 
 pub type BackingRef = Arc<dyn Backing>;
+
+/// RAID-0 stripe geometry: `devices` members, `stripe_bytes` chunk size.
+///
+/// This is the single owner of logical↔physical offset translation for the
+/// whole storage stack: backings use it to route bytes, backends use it to
+/// route charges, engines use it to route SQEs, and the coalescing planner
+/// uses it to keep segments inside one chunk. `devices == 1` is the
+/// degenerate identity mapping (every helper collapses to "device 0, same
+/// offset"), which is what keeps single-device behavior byte-for-byte
+/// identical to the pre-striping stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeSpec {
+    pub devices: usize,
+    pub stripe_bytes: u64,
+}
+
+impl StripeSpec {
+    /// Identity geometry: one device, striping disabled.
+    pub fn single() -> Self {
+        StripeSpec { devices: 1, stripe_bytes: u64::MAX }
+    }
+
+    pub fn new(devices: usize, stripe_bytes: u64) -> Self {
+        assert!(devices >= 1, "stripe needs at least one device");
+        if devices == 1 {
+            return StripeSpec::single();
+        }
+        assert!(stripe_bytes > 0, "stripe chunk must be non-empty");
+        StripeSpec { devices, stripe_bytes }
+    }
+
+    /// Whether this spec maps anything anywhere (more than one device).
+    pub fn is_striped(&self) -> bool {
+        self.devices > 1
+    }
+
+    /// Which device serves logical `offset`.
+    pub fn device_of(&self, offset: u64) -> usize {
+        if !self.is_striped() {
+            return 0;
+        }
+        ((offset / self.stripe_bytes) % self.devices as u64) as usize
+    }
+
+    /// Device-local offset of logical `offset` on its owning device.
+    pub fn local_offset(&self, offset: u64) -> u64 {
+        if !self.is_striped() {
+            return offset;
+        }
+        let chunk = offset / self.stripe_bytes;
+        (chunk / self.devices as u64) * self.stripe_bytes + offset % self.stripe_bytes
+    }
+
+    /// First logical offset past `offset`'s chunk — the point where the next
+    /// byte lives on a different device. `u64::MAX` when unstriped, so
+    /// "stay inside the chunk" comparisons degenerate to always-true.
+    pub fn chunk_end(&self, offset: u64) -> u64 {
+        if !self.is_striped() {
+            return u64::MAX;
+        }
+        (offset / self.stripe_bytes + 1) * self.stripe_bytes
+    }
+
+    /// Split the logical range `[offset, offset+len)` into per-chunk runs of
+    /// `(device, local_offset, run_len)`, in logical order.
+    pub fn split(&self, offset: u64, len: usize) -> Vec<(usize, u64, usize)> {
+        if !self.is_striped() || len == 0 {
+            return vec![(self.device_of(offset), self.local_offset(offset), len)];
+        }
+        let mut runs = Vec::new();
+        let mut at = offset;
+        let end = offset + len as u64;
+        while at < end {
+            let run = (end - at).min(self.chunk_end(at) - at) as usize;
+            runs.push((self.device_of(at), self.local_offset(at), run));
+            at += run as u64;
+        }
+        runs
+    }
+}
+
+/// RAID-0 over N member stores: logical offsets are translated through a
+/// [`StripeSpec`] and delegated to the owning member at its local offset.
+/// Multi-chunk reads stitch member reads back together in logical order.
+pub struct StripedBacking {
+    members: Vec<BackingRef>,
+    spec: StripeSpec,
+}
+
+impl StripedBacking {
+    pub fn new(members: Vec<BackingRef>, stripe_bytes: u64) -> Self {
+        assert!(!members.is_empty(), "striped backing needs members");
+        let spec = StripeSpec::new(members.len(), stripe_bytes);
+        StripedBacking { members, spec }
+    }
+
+    pub fn spec(&self) -> StripeSpec {
+        self.spec
+    }
+}
+
+impl Backing for StripedBacking {
+    fn len(&self) -> u64 {
+        self.members.iter().map(|m| m.len()).sum()
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) {
+        let mut at = 0usize;
+        for (dev, local, run) in self.spec.split(offset, buf.len()) {
+            self.members[dev].read_at(local, &mut buf[at..at + run]);
+            at += run;
+        }
+    }
+
+    fn try_read_at(&self, offset: u64, buf: &mut [u8]) -> Result<(), IoError> {
+        let mut at = 0usize;
+        for (dev, local, run) in self.spec.split(offset, buf.len()) {
+            self.members[dev].try_read_at(local, &mut buf[at..at + run])?;
+            at += run;
+        }
+        Ok(())
+    }
+
+    fn read_direct_at(&self, offset: u64, buf: &mut [u8]) -> bool {
+        // Direct only if EVERY chunk was genuinely served O_DIRECT.
+        let mut all_direct = true;
+        let mut at = 0usize;
+        for (dev, local, run) in self.spec.split(offset, buf.len()) {
+            all_direct &= self.members[dev].read_direct_at(local, &mut buf[at..at + run]);
+            at += run;
+        }
+        all_direct
+    }
+
+    fn try_read_direct_at(&self, offset: u64, buf: &mut [u8]) -> Result<bool, IoError> {
+        let mut all_direct = true;
+        let mut at = 0usize;
+        for (dev, local, run) in self.spec.split(offset, buf.len()) {
+            all_direct &=
+                self.members[dev].try_read_direct_at(local, &mut buf[at..at + run])?;
+            at += run;
+        }
+        Ok(all_direct)
+    }
+}
 
 /// `O_DIRECT` flag value per Linux arch ABI (not exposed by std; no libc in
 /// the offline build). Zero on platforms where we don't attempt direct I/O.
@@ -424,6 +573,81 @@ mod tests {
             let end = (off + len).min(1000);
             assert_eq!(&buf[..end - off], &whole[off..end], "off={off} len={len}");
             assert!(buf[end - off..].iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn stripe_spec_translates_raid0_offsets() {
+        let s = StripeSpec::new(3, 64);
+        // Chunk k lives on device k % 3 at local chunk k / 3.
+        assert_eq!(s.device_of(0), 0);
+        assert_eq!(s.device_of(63), 0);
+        assert_eq!(s.device_of(64), 1);
+        assert_eq!(s.device_of(128), 2);
+        assert_eq!(s.device_of(192), 0);
+        assert_eq!(s.local_offset(0), 0);
+        assert_eq!(s.local_offset(70), 6);
+        assert_eq!(s.local_offset(192), 64);
+        assert_eq!(s.local_offset(200), 72);
+        assert_eq!(s.chunk_end(0), 64);
+        assert_eq!(s.chunk_end(63), 64);
+        assert_eq!(s.chunk_end(64), 128);
+        // A range crossing two boundaries splits into three runs.
+        let runs = s.split(60, 80);
+        assert_eq!(runs, vec![(0, 60, 4), (1, 0, 64), (2, 0, 12)]);
+    }
+
+    #[test]
+    fn stripe_spec_single_is_identity() {
+        let s = StripeSpec::new(1, 64);
+        assert!(!s.is_striped());
+        for off in [0u64, 17, 64, 1_000_000] {
+            assert_eq!(s.device_of(off), 0);
+            assert_eq!(s.local_offset(off), off);
+            assert_eq!(s.chunk_end(off), u64::MAX);
+        }
+        assert_eq!(s.split(123, 456), vec![(0, 123, 456)]);
+    }
+
+    #[test]
+    fn striped_backing_round_trips_logical_bytes() {
+        // 3 members × 4 chunks of 64B; logical byte i = (i % 247).
+        let devices = 3usize;
+        let stripe = 64u64;
+        let total = 3 * 4 * 64usize;
+        let logical: Vec<u8> = (0..total).map(|i| (i % 247) as u8).collect();
+        let spec = StripeSpec::new(devices, stripe);
+        let mut per_dev: Vec<Vec<u8>> = vec![Vec::new(); devices];
+        for (i, &b) in logical.iter().enumerate() {
+            per_dev[spec.device_of(i as u64)].push(b);
+        }
+        let members: Vec<BackingRef> =
+            per_dev.into_iter().map(|v| Arc::new(MemBacking::new(v)) as BackingRef).collect();
+        let sb = StripedBacking::new(members, stripe);
+        assert_eq!(sb.len(), total as u64);
+        // Whole-range, chunk-straddling, and EOF-overhang reads all match.
+        for (off, len) in [(0usize, total), (60, 80), (63, 2), (190, 5), (total - 10, 30)] {
+            let mut buf = vec![0xFFu8; len];
+            sb.read_at(off as u64, &mut buf);
+            let end = (off + len).min(total);
+            assert_eq!(&buf[..end - off], &logical[off..end], "off={off} len={len}");
+            assert!(buf[end - off..].iter().all(|&x| x == 0), "EOF zero-fill off={off}");
+        }
+    }
+
+    #[test]
+    fn striped_backing_single_member_is_byte_identical() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 253) as u8).collect();
+        let plain = MemBacking::new(data.clone());
+        let striped = StripedBacking::new(vec![Arc::new(MemBacking::new(data))], 64);
+        assert!(!striped.spec().is_striped());
+        assert_eq!(plain.len(), striped.len());
+        for (off, len) in [(0usize, 1000usize), (17, 100), (63, 2), (990, 20)] {
+            let mut a = vec![0u8; len];
+            let mut b = vec![0u8; len];
+            plain.read_at(off as u64, &mut a);
+            striped.read_at(off as u64, &mut b);
+            assert_eq!(a, b, "off={off} len={len}");
         }
     }
 

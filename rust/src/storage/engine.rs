@@ -8,7 +8,7 @@
 //! makes the two working sets contend (D1).
 
 use super::api::{AsyncIoEngine, DirectIoStats, IoBackend};
-use super::backing::BackingRef;
+use super::backing::{BackingRef, StripeSpec};
 use super::page_cache::{FileId, PageCache, PAGE_SIZE};
 use super::ssd::{SsdCounters, SsdSim};
 use std::sync::atomic::Ordering;
@@ -37,16 +37,37 @@ impl SimFile {
     }
 }
 
-/// The simulated I/O stack: one simulated device + one page cache, shared by
-/// every training system in an experiment (as on a real machine).
+/// The simulated I/O stack: one *or more* simulated devices + one page
+/// cache, shared by every training system in an experiment (as on a real
+/// machine).
+///
+/// With `--devices N > 1` the backend holds N independent [`SsdSim`]
+/// instances in a RAID-0 arrangement described by a [`StripeSpec`]: each
+/// device has its own IOPS/bandwidth token buckets and queue-depth
+/// semaphore, so charged latency reflects N ceilings that can be saturated
+/// concurrently. Charges route by the *logical* offset of the request
+/// (`StripeSpec::device_of`); per-device engines charge through
+/// [`IoBackend::charge_multi_dev`]. `io_counters` reports the aggregate
+/// across devices (`device_io_snapshot` has the per-device breakdown); with
+/// one device everything collapses to the historical single-`SsdSim` model,
+/// byte-for-byte.
 ///
 /// This is the [`IoBackend`] the simulator uses; the inherent methods remain
 /// available for sim-only experiments that poke `ssd`/`cache` directly.
 #[derive(Clone)]
 pub struct SimBackend {
+    /// Device 0 of the stripe set (the only device when unstriped — the
+    /// historical public field sim-only experiments poke directly).
     pub ssd: SsdSim,
     pub cache: Arc<PageCache>,
     direct_stats: Arc<DirectIoStats>,
+    /// Devices 1..N of the stripe set; empty when unstriped.
+    extra: Vec<SsdSim>,
+    spec: StripeSpec,
+    /// Aggregate charged counters across all devices — the `io_counters`
+    /// surface when striped (each member's own counters also accrue, for
+    /// `device_io_snapshot`). Unused when unstriped.
+    totals: Arc<SsdCounters>,
 }
 
 /// Historical name: the concrete sim stack predates the backend seam and
@@ -55,11 +76,75 @@ pub type Storage = SimBackend;
 
 impl SimBackend {
     pub fn new(ssd: SsdSim, cache: Arc<PageCache>) -> Self {
-        SimBackend { ssd, cache, direct_stats: Arc::new(DirectIoStats::default()) }
+        SimBackend {
+            ssd,
+            cache,
+            direct_stats: Arc::new(DirectIoStats::default()),
+            extra: Vec::new(),
+            spec: StripeSpec::single(),
+            totals: Arc::new(SsdCounters::default()),
+        }
+    }
+
+    /// Striped stack: `ssds[d]` serves stripe device `d` under a
+    /// `stripe_bytes` chunk layout. One device degenerates to [`Self::new`].
+    pub fn new_striped(mut ssds: Vec<SsdSim>, cache: Arc<PageCache>, stripe_bytes: u64) -> Self {
+        assert!(!ssds.is_empty(), "striped sim backend needs at least one device");
+        let spec = StripeSpec::new(ssds.len(), stripe_bytes);
+        let extra = ssds.split_off(1);
+        let ssd = ssds.pop().expect("device 0");
+        SimBackend {
+            ssd,
+            cache,
+            direct_stats: Arc::new(DirectIoStats::default()),
+            extra,
+            spec,
+            totals: Arc::new(SsdCounters::default()),
+        }
     }
 
     pub fn direct_stats(&self) -> &DirectIoStats {
         &self.direct_stats
+    }
+
+    /// Stripe member `d` (0-based).
+    pub fn device(&self, d: usize) -> &SsdSim {
+        if d == 0 {
+            &self.ssd
+        } else {
+            &self.extra[d - 1]
+        }
+    }
+
+    /// Number of stripe members.
+    pub fn device_count(&self) -> usize {
+        1 + self.extra.len()
+    }
+
+    /// Charge one read of the logical range `[offset, offset+len)`,
+    /// splitting at chunk boundaries so each touched device pays its own
+    /// op. Unstriped: exactly one `ssd.read(len)` — the historical charge.
+    fn charge_read_at(&self, offset: u64, len: usize) {
+        if !self.spec.is_striped() {
+            self.ssd.read(len);
+            return;
+        }
+        for (dev, _local, run) in self.spec.split(offset, len) {
+            self.device(dev).read(run);
+            self.totals.add_read(1, run as u64);
+        }
+    }
+
+    /// Charge one write of the logical range, split like `charge_read_at`.
+    fn charge_write_at(&self, offset: u64, len: usize) {
+        if !self.spec.is_striped() {
+            self.ssd.write(len);
+            return;
+        }
+        for (dev, _local, run) in self.spec.split(offset, len) {
+            self.device(dev).write(run);
+            self.totals.add_write(1, run as u64);
+        }
     }
 
     /// Buffered read (mmap semantics): page-granular, through the page
@@ -73,18 +158,20 @@ impl SimBackend {
         let first = offset / PAGE_SIZE;
         let last = (offset + buf.len() as u64 - 1) / PAGE_SIZE;
         let mut pending: u64 = 0; // contiguous missing pages to fetch
+        let mut run_start: u64 = first; // first page of the pending run
         for page in first..=last {
             if self.cache.access(file.id, page) {
                 if pending > 0 {
-                    self.ssd.read((pending * PAGE_SIZE) as usize);
+                    self.charge_read_at(run_start * PAGE_SIZE, (pending * PAGE_SIZE) as usize);
                     pending = 0;
                 }
+                run_start = page + 1;
             } else {
                 pending += 1;
             }
         }
         if pending > 0 {
-            self.ssd.read((pending * PAGE_SIZE) as usize);
+            self.charge_read_at(run_start * PAGE_SIZE, (pending * PAGE_SIZE) as usize);
         }
         file.backing.read_at(offset, buf);
     }
@@ -104,7 +191,7 @@ impl SimBackend {
         self.direct_stats.requests.fetch_add(1, Ordering::Relaxed);
         self.direct_stats.useful_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         self.direct_stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
-        self.ssd.read(aligned);
+        self.charge_read_at(lo, aligned);
         file.backing.read_at(offset, buf);
     }
 
@@ -155,17 +242,17 @@ impl SimBackend {
         for page in first..=last {
             self.cache.access(file.id, page);
         }
-        self.ssd.write(len);
+        self.charge_write_at(offset, len);
     }
 
     /// Direct write of an aligned range.
-    pub fn write_direct(&self, _file: &SimFile, _offset: u64, len: usize) {
+    pub fn write_direct(&self, _file: &SimFile, offset: u64, len: usize) {
         if len == 0 {
             return;
         }
         let sector = self.ssd.config().sector;
         let aligned = len.div_ceil(sector) * sector;
-        self.ssd.write(aligned);
+        self.charge_write_at(offset / sector as u64 * sector as u64, aligned);
     }
 }
 
@@ -197,7 +284,27 @@ impl IoBackend for SimBackend {
     }
 
     fn charge_multi(&self, ops: u64, bytes: usize) {
+        // No offset information: device 0 absorbs the charge (legacy
+        // callers; striped engines use `charge_multi_dev`).
         self.ssd.read_multi(ops, bytes);
+        if self.spec.is_striped() && ops > 0 {
+            self.totals.add_read(ops, bytes as u64);
+        }
+    }
+
+    fn stripe(&self) -> StripeSpec {
+        self.spec
+    }
+
+    fn charge_multi_dev(&self, dev: usize, ops: u64, bytes: usize) {
+        self.device(dev).read_multi(ops, bytes);
+        if self.spec.is_striped() && ops > 0 {
+            self.totals.add_read(ops, bytes as u64);
+        }
+    }
+
+    fn device_io_snapshot(&self) -> Vec<(u64, u64)> {
+        (0..self.device_count()).map(|d| self.device(d).counters().read_snapshot()).collect()
     }
 
     fn write_buffered(&self, file: &SimFile, offset: u64, len: usize) {
@@ -210,10 +317,16 @@ impl IoBackend for SimBackend {
 
     fn charge_read(&self, len: usize) {
         self.ssd.read(len);
+        if self.spec.is_striped() {
+            self.totals.add_read(1, len as u64);
+        }
     }
 
     fn charge_write(&self, len: usize) {
         self.ssd.write(len);
+        if self.spec.is_striped() {
+            self.totals.add_write(1, len as u64);
+        }
     }
 
     fn direct_stats(&self) -> &DirectIoStats {
@@ -221,11 +334,19 @@ impl IoBackend for SimBackend {
     }
 
     fn io_counters(&self) -> &SsdCounters {
-        self.ssd.counters()
+        if self.spec.is_striped() {
+            &self.totals
+        } else {
+            self.ssd.counters()
+        }
     }
 
     fn reset_io_stats(&self) {
         self.ssd.reset_stats();
+        for d in &self.extra {
+            d.reset_stats();
+        }
+        self.totals.reset();
     }
 
     fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine> {
@@ -312,6 +433,44 @@ mod tests {
         let mut buf = vec![0u8; PAGE_SIZE as usize];
         st.read_buffered(&f, 0, &mut buf);
         assert_eq!(st.ssd.counters().reads.load(Ordering::Relaxed), reads_before);
+    }
+
+    #[test]
+    fn striped_charges_route_to_owning_device_and_aggregate() {
+        let clock = Clock::new(0.02);
+        let ssds: Vec<SsdSim> =
+            (0..3).map(|_| SsdSim::new(SsdConfig::pm883(), clock.clone())).collect();
+        let cache = Arc::new(PageCache::new(HostMemory::new(64 * PAGE_SIZE)));
+        let st = Storage::new_striped(ssds, cache, 4096);
+        let bytes: Vec<u8> = (0..64 * 1024u32).map(|i| (i % 251) as u8).collect();
+        let f = SimFile::new(
+            FileId::new(1, DataKind::Features),
+            Arc::new(MemBacking::new(bytes)),
+        );
+        let io: &dyn IoBackend = &st;
+        assert_eq!(io.stripe(), crate::storage::backing::StripeSpec::new(3, 4096));
+        // Logical chunk 1 ([4096, 8192)) lives on device 1: a sub-sector
+        // read inside it charges device 1 only, and the aggregate mirrors.
+        let mut buf = vec![0u8; 100];
+        io.read_direct(&f, 4096 + 700, &mut buf);
+        for (i, &b) in buf.iter().enumerate() {
+            assert_eq!(b, ((4796 + i) % 251) as u8, "byte {i}");
+        }
+        assert_eq!(st.device(1).counters().reads.load(Ordering::Relaxed), 1);
+        assert_eq!(st.device(0).counters().reads.load(Ordering::Relaxed), 0);
+        assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 1);
+        assert_eq!(io.io_counters().read_bytes.load(Ordering::Relaxed), 512);
+        // Per-device engine charge routes to device 2, aggregate accrues.
+        io.charge_multi_dev(2, 3, 4096);
+        assert_eq!(st.device(2).counters().reads.load(Ordering::Relaxed), 3);
+        assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 4);
+        let snap = io.device_io_snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[1], (1, 512));
+        assert_eq!(snap[2], (3, 4096));
+        io.reset_io_stats();
+        assert_eq!(io.io_counters().reads.load(Ordering::Relaxed), 0);
+        assert_eq!(st.device(2).counters().reads.load(Ordering::Relaxed), 0);
     }
 
     #[test]

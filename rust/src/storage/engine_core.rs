@@ -11,6 +11,7 @@
 //! `AsyncIoEngine` surface to the core.
 
 use super::api::{Cqe, IoBackend, IoError, IoMode, RetryPolicy, Sqe};
+use super::backing::StripeSpec;
 use crate::sim::queue::BoundedQueue;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -83,14 +84,34 @@ pub(crate) fn serve_sqe(
 const HARVEST_POLL: Duration = Duration::from_millis(25);
 
 /// SQ/CQ pair + counter discipline shared by every async engine.
+///
+/// **Striping.** The core holds one bounded submission sub-queue *per
+/// stripe device*, each with the full `--io-depth` budget: a stalled device
+/// fills only its own sub-queue, so submissions bound for idle devices
+/// never block behind it (no head-of-line blocking across devices).
+/// Requests route to sub-queues by `StripeSpec::device_of(sqe.offset)`;
+/// workers bind to exactly one device's sub-queue
+/// ([`EngineCore::worker_port`]). The global
+/// `submitted`/`inflight`/`harvested` discipline — and therefore
+/// `pending_harvest`, `drain` and the poison contract — is unchanged and
+/// holds across all sub-queues; per-device in-flight counts ride alongside
+/// purely for the queue-utilization high-water marks. One device collapses
+/// to the historical single-queue core.
 pub struct EngineCore {
     /// Engine name for panic messages ("uring", "pread pool").
     name: &'static str,
-    pub(crate) sq: Arc<BoundedQueue<Sqe>>,
+    /// One submission sub-queue per stripe device, each `depth` deep.
+    sqs: Vec<Arc<BoundedQueue<Sqe>>>,
+    spec: StripeSpec,
     cq: Arc<BoundedQueue<Cqe>>,
     inflight: Arc<AtomicU64>,
     pub(crate) submitted: AtomicU64,
     harvested: AtomicU64,
+    /// Per-device outstanding requests (observability only; the completion
+    /// contract rides on the global `inflight`).
+    dev_inflight: Vec<Arc<AtomicU64>>,
+    /// Per-device in-flight high-water marks since construction.
+    dev_highwater: Vec<Arc<AtomicU64>>,
     /// Set when a worker thread died outside its per-request panic guard:
     /// the counters may never balance again, so harvesters stop trusting
     /// them and synthesize [`IoError::EnginePoisoned`] completions instead
@@ -98,13 +119,17 @@ pub struct EngineCore {
     poisoned: Arc<AtomicBool>,
 }
 
-/// A worker's handle into the core: pop submissions, publish completions.
-/// Cheap to clone into each worker thread.
+/// A worker's handle into the core: pop submissions from *its device's*
+/// sub-queue, publish completions to the shared CQ. Cheap to clone into
+/// each worker thread. Binding a worker to one device is what lets the
+/// completion path decrement the right per-device in-flight counter
+/// without CQEs having to carry offsets.
 #[derive(Clone)]
 pub struct WorkerPort {
     sq: Arc<BoundedQueue<Sqe>>,
     cq: Arc<BoundedQueue<Cqe>>,
     inflight: Arc<AtomicU64>,
+    dev_inflight: Arc<AtomicU64>,
     poisoned: Arc<AtomicBool>,
 }
 
@@ -155,6 +180,9 @@ impl WorkerPort {
         let _ = self
             .inflight
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+        let _ = self
+            .dev_inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
     }
 }
 
@@ -172,10 +200,18 @@ impl Drop for PoisonGuard {
 }
 
 impl EngineCore {
-    /// `depth` is the submission-queue size (max outstanding requests before
-    /// submitters block on backpressure).
+    /// Single-device core: `depth` is the submission-queue size (max
+    /// outstanding requests before submitters block on backpressure).
     pub fn new(name: &'static str, depth: usize) -> Self {
+        EngineCore::new_striped(name, depth, StripeSpec::single())
+    }
+
+    /// Core with one `depth`-deep submission sub-queue per device of
+    /// `spec`. Each device gets the *full* depth budget — `--io-depth` is
+    /// per device, so adding devices adds aggregate submission headroom.
+    pub fn new_striped(name: &'static str, depth: usize, spec: StripeSpec) -> Self {
         let depth = depth.max(1);
+        let devices = spec.devices.max(1);
         // The CQ is effectively unbounded: callers may legally submit an
         // entire mini-batch before harvesting a single completion
         // (Algorithm 1 does exactly that), so a bounded CQ would deadlock —
@@ -183,22 +219,64 @@ impl EngineCore {
         // submitter blocks on the full SQ. CQEs are small; memory is fine.
         EngineCore {
             name,
-            sq: Arc::new(BoundedQueue::<Sqe>::new(depth)),
+            sqs: (0..devices).map(|_| Arc::new(BoundedQueue::<Sqe>::new(depth))).collect(),
+            spec,
             cq: Arc::new(BoundedQueue::<Cqe>::new(usize::MAX / 2)),
             inflight: Arc::new(AtomicU64::new(0)),
             submitted: AtomicU64::new(0),
             harvested: AtomicU64::new(0),
+            dev_inflight: (0..devices).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+            dev_highwater: (0..devices).map(|_| Arc::new(AtomicU64::new(0))).collect(),
             poisoned: Arc::new(AtomicBool::new(false)),
         }
     }
 
-    /// Handle for a worker thread.
-    pub fn worker_port(&self) -> WorkerPort {
+    /// Number of per-device sub-queues.
+    pub fn device_count(&self) -> usize {
+        self.sqs.len()
+    }
+
+    /// Which sub-queue serves `sqe` (by the logical offset's stripe chunk).
+    fn route(&self, sqe: &Sqe) -> usize {
+        self.spec.device_of(sqe.offset).min(self.sqs.len() - 1)
+    }
+
+    /// Handle for a worker thread bound to device `dev`'s sub-queue.
+    pub fn worker_port(&self, dev: usize) -> WorkerPort {
         WorkerPort {
-            sq: self.sq.clone(),
+            sq: self.sqs[dev].clone(),
             cq: self.cq.clone(),
             inflight: self.inflight.clone(),
+            dev_inflight: self.dev_inflight[dev].clone(),
             poisoned: self.poisoned.clone(),
+        }
+    }
+
+    /// Per-device in-flight high-water marks since construction.
+    pub fn queue_highwater(&self) -> Vec<u64> {
+        self.dev_highwater.iter().map(|h| h.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Record `added` new in-flight requests on `dev`, updating that
+    /// device's high-water mark.
+    fn note_dev_inflight(&self, dev: usize, added: u64) {
+        let now = self.dev_inflight[dev].fetch_add(added, Ordering::Relaxed) + added;
+        let hw = &self.dev_highwater[dev];
+        let mut cur = hw.load(Ordering::Relaxed);
+        while now > cur {
+            match hw.compare_exchange_weak(cur, now, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Close every submission sub-queue (but not the CQ) — test hook for
+    /// exercising the closed-ring submit paths.
+    #[cfg(test)]
+    pub(crate) fn close_submission(&self) {
+        for sq in &self.sqs {
+            sq.close();
         }
     }
 
@@ -208,9 +286,9 @@ impl EngineCore {
     }
 
     /// The engine can no longer produce completions for outstanding work:
-    /// poisoned, or shut down with the SQ closed.
+    /// poisoned, or shut down with every submission sub-queue closed.
     fn dead(&self) -> bool {
-        self.poisoned() || self.sq.is_closed()
+        self.poisoned() || self.sqs.iter().all(|sq| sq.is_closed())
     }
 
     /// Synthetic completion minted when the engine is dead with requests
@@ -231,29 +309,70 @@ impl EngineCore {
     /// the push fails (core closed) the increments are unwound before
     /// panicking so the counters stay balanced for any drop-order observer.
     pub fn submit(&self, sqe: Sqe) {
+        let dev = self.route(&sqe);
         self.submitted.fetch_add(1, Ordering::SeqCst);
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        if self.sq.push(sqe).is_err() {
+        self.note_dev_inflight(dev, 1);
+        if self.sqs[dev].push(sqe).is_err() {
             self.inflight.fetch_sub(1, Ordering::SeqCst);
             self.submitted.fetch_sub(1, Ordering::SeqCst);
+            let _ = self.dev_inflight[dev]
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
             panic!("{} closed", self.name);
         }
     }
 
-    /// Submit a batch of requests with amortized locking/wakeups.
+    /// Submit a batch of requests with amortized locking/wakeups. With a
+    /// striped core the batch is partitioned by owning device and each
+    /// device's group is pushed to its own sub-queue — the caller's
+    /// round-robin interleave decides how evenly the groups fill.
     ///
     /// On a mid-batch closure only the enqueued prefix keeps its counter
     /// increments (those requests will still be serviced and drained); the
     /// rejected remainder's increments are unwound.
     pub fn submit_batch(&self, sqes: Vec<Sqe>) {
-        let n = sqes.len() as u64;
-        self.submitted.fetch_add(n, Ordering::SeqCst);
-        self.inflight.fetch_add(n, Ordering::SeqCst);
-        if let Err(partial) = self.sq.push_all(sqes) {
-            let rejected = n - partial.pushed as u64;
-            self.inflight.fetch_sub(rejected, Ordering::SeqCst);
-            self.submitted.fetch_sub(rejected, Ordering::SeqCst);
-            panic!("{} closed", self.name);
+        if self.sqs.len() == 1 {
+            let n = sqes.len() as u64;
+            self.submitted.fetch_add(n, Ordering::SeqCst);
+            self.inflight.fetch_add(n, Ordering::SeqCst);
+            self.note_dev_inflight(0, n);
+            if let Err(partial) = self.sqs[0].push_all(sqes) {
+                let rejected = n - partial.pushed as u64;
+                self.inflight.fetch_sub(rejected, Ordering::SeqCst);
+                self.submitted.fetch_sub(rejected, Ordering::SeqCst);
+                let _ = self.dev_inflight[0].fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |v| Some(v.saturating_sub(rejected)),
+                );
+                panic!("{} closed", self.name);
+            }
+            return;
+        }
+        let mut groups: Vec<Vec<Sqe>> = (0..self.sqs.len()).map(|_| Vec::new()).collect();
+        for sqe in sqes {
+            let dev = self.route(&sqe);
+            groups[dev].push(sqe);
+        }
+        for (dev, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let n = group.len() as u64;
+            self.submitted.fetch_add(n, Ordering::SeqCst);
+            self.inflight.fetch_add(n, Ordering::SeqCst);
+            self.note_dev_inflight(dev, n);
+            if let Err(partial) = self.sqs[dev].push_all(group) {
+                let rejected = n - partial.pushed as u64;
+                self.inflight.fetch_sub(rejected, Ordering::SeqCst);
+                self.submitted.fetch_sub(rejected, Ordering::SeqCst);
+                let _ = self.dev_inflight[dev].fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |v| Some(v.saturating_sub(rejected)),
+                );
+                panic!("{} closed", self.name);
+            }
         }
     }
 
@@ -364,6 +483,9 @@ impl EngineCore {
                 // inflight decrement saturates and stray CQEs are swallowed
                 // by the next drain.
                 self.inflight.store(0, Ordering::SeqCst);
+                for d in &self.dev_inflight {
+                    d.store(0, Ordering::SeqCst);
+                }
                 self.harvested.store(self.submitted.load(Ordering::SeqCst), Ordering::SeqCst);
                 return;
             }
@@ -376,9 +498,11 @@ impl EngineCore {
         }
     }
 
-    /// Close both queues (engine shutdown; workers drain and exit).
+    /// Close all queues (engine shutdown; workers drain and exit).
     pub fn close(&self) {
-        self.sq.close();
+        for sq in &self.sqs {
+            sq.close();
+        }
         self.cq.close();
     }
 }

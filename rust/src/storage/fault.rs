@@ -72,6 +72,12 @@ pub struct FaultPlan {
     /// Permanently unreadable `(start, len)` byte ranges: any read
     /// overlapping one fails with [`IoError::BadRange`] on every attempt.
     pub bad_ranges: Vec<(u64, u64)>,
+    /// Restrict the storm to one member of a stripe set (`--fault-device`):
+    /// only reads whose *logical* offset maps to this device are perturbed.
+    /// The filter is applied before a try draw is consumed, so off-target
+    /// offsets never advance their draw sequence — per-offset replay
+    /// determinism is exactly as without the filter. `None` = all devices.
+    pub device: Option<usize>,
 }
 
 impl Default for FaultPlan {
@@ -83,6 +89,7 @@ impl Default for FaultPlan {
             stall_rate: 0.0,
             stall_us: 200,
             bad_ranges: Vec::new(),
+            device: None,
         }
     }
 }
@@ -141,6 +148,8 @@ pub struct FaultInjectBackend {
     plan: FaultPlan,
     policy: RetryPolicy,
     clock: Clock,
+    /// `--io-workers` for the OS pread pool this wrapper mints.
+    io_workers: usize,
     /// Cumulative tries per offset — the roll key. See the module docs:
     /// engine retries and batch-level re-extracts *continue* an offset's
     /// draw sequence instead of replaying it.
@@ -157,11 +166,36 @@ impl FaultInjectBackend {
         policy: RetryPolicy,
         clock: Clock,
     ) -> Self {
-        FaultInjectBackend { inner, kind, plan, policy, clock, tries: Mutex::new(HashMap::new()) }
+        FaultInjectBackend {
+            inner,
+            kind,
+            plan,
+            policy,
+            clock,
+            io_workers: DEFAULT_POOL_THREADS,
+            tries: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Thread count for the OS `pread` pool minted by `async_engine`
+    /// (`--io-workers` must survive the fault wrapper).
+    pub fn with_io_workers(mut self, io_workers: usize) -> Self {
+        self.io_workers = io_workers.max(1);
+        self
     }
 
     pub fn plan(&self) -> &FaultPlan {
         &self.plan
+    }
+
+    /// Whether the plan's `--fault-device` filter lets a read at logical
+    /// `offset` be perturbed. Checked *before* any try draw is consumed so
+    /// the filter cannot shift other offsets' draw sequences.
+    fn device_targeted(&self, offset: u64) -> bool {
+        match self.plan.device {
+            None => true,
+            Some(d) => self.inner.stripe().device_of(offset) == d,
+        }
     }
 
     /// Consume the next draw index for `offset` (0 on first try). Poison-
@@ -189,7 +223,7 @@ impl FaultInjectBackend {
     /// inner backend here. The roll key is the cumulative per-offset try
     /// counter, not the caller's per-submission attempt number.
     fn direct_fault(&self, offset: u64, len: usize) -> Result<(), IoError> {
-        if !self.plan.is_active() {
+        if !self.plan.is_active() || !self.device_targeted(offset) {
             return Ok(());
         }
         let try_no = self.next_try(offset);
@@ -276,7 +310,7 @@ impl IoBackend for FaultInjectBackend {
         buf: &mut [u8],
         attempt: u32,
     ) -> Result<(), IoError> {
-        if self.plan.is_active() {
+        if self.plan.is_active() && self.device_targeted(offset) {
             let try_no = self.next_try(offset);
             if self.plan.roll(STREAM_STALL, offset, try_no, self.plan.stall_rate) {
                 self.clock.sleep(Duration::from_micros(self.plan.stall_us));
@@ -298,6 +332,18 @@ impl IoBackend for FaultInjectBackend {
 
     fn charge_multi(&self, ops: u64, bytes: usize) {
         self.inner.charge_multi(ops, bytes)
+    }
+
+    fn stripe(&self) -> super::backing::StripeSpec {
+        self.inner.stripe()
+    }
+
+    fn charge_multi_dev(&self, dev: usize, ops: u64, bytes: usize) {
+        self.inner.charge_multi_dev(dev, ops, bytes)
+    }
+
+    fn device_io_snapshot(&self) -> Vec<(u64, u64)> {
+        self.inner.device_io_snapshot()
     }
 
     fn write_buffered(&self, file: &SimFile, offset: u64, len: usize) {
@@ -334,7 +380,10 @@ impl IoBackend for FaultInjectBackend {
         // engine captured is `self.policy`.
         match self.kind {
             BackendKind::Sim => Box::new(Uring::new(self, depth)),
-            BackendKind::Os => Box::new(PreadPool::new(self, depth, DEFAULT_POOL_THREADS)),
+            BackendKind::Os => {
+                let threads = self.io_workers;
+                Box::new(PreadPool::new(self, depth, threads))
+            }
         }
     }
 }
@@ -400,6 +449,10 @@ impl AsyncIoEngine for FaultInjectEngine {
 
     fn drain(&self) {
         self.inner.drain()
+    }
+
+    fn queue_highwater(&self) -> Vec<u64> {
+        self.inner.queue_highwater()
     }
 }
 

@@ -25,6 +25,50 @@
 //!   through the same [`SimFile`] handle, so a dataset can move between
 //!   them unchanged.
 //!
+//! ## Striping (`--devices N`, `--stripe-bytes B`)
+//!
+//! The stack stripes a logical byte range RAID-0-style across `N` physical
+//! devices in `B`-byte chunks. [`backing::StripeSpec`] is the *single owner
+//! of offset translation* — every layer asks it, none re-derives the math:
+//!
+//! * **Backings route bytes.** [`backing::StripedBacking`] holds `N` member
+//!   backings and splits a logical read at chunk boundaries
+//!   (`StripeSpec::split`), delegating each run to the owning member at its
+//!   device-local offset. Consumers and the `SimFile` handle still see one
+//!   flat logical file.
+//! * **Backends route charges.** A backend advertises its geometry via
+//!   [`IoBackend::stripe`] and accepts device-attributed charges via
+//!   [`IoBackend::charge_multi_dev`]; `charge_multi` remains the
+//!   device-agnostic form (and the two are identical at `--devices 1`).
+//!   [`engine::SimBackend`] holds one [`ssd::SsdSim`] *per device*, so
+//!   charged latency reflects `N` independent IOPS/queue-depth ceilings;
+//!   [`osfile::OsFileBackend`] keeps per-device [`ssd::SsdCounters`]
+//!   breakdowns. Aggregate counters stay the `io_counters` surface;
+//!   [`IoBackend::device_io_snapshot`] exposes the per-device split.
+//! * **Engines route SQEs.** [`engine_core::EngineCore`] keeps one
+//!   submission sub-queue per device, each with the *full* `--io-depth`
+//!   budget, and routes each [`api::Sqe`] by `StripeSpec::device_of` on its
+//!   logical offset. Workers bind to one device's sub-queue, so a slow or
+//!   faulted device backs up only its own queue. The submit/inflight/
+//!   harvest counter discipline and poison/drain guarantees hold globally
+//!   *and* per device.
+//! * **The planner keeps segments inside one chunk.** The coalescing
+//!   planner ([`crate::extract::coalesce`]) refuses to merge rows across a
+//!   `StripeSpec::chunk_end` boundary, so a planned segment maps to exactly
+//!   one device and the engine pairs its completion with one
+//!   `charge_multi_dev(dev, ..)` on that device. The one exception is a
+//!   *single row* wider than a chunk: it becomes its own segment spanning
+//!   the minimal run of devices, served through the (striped) backing, and
+//!   its charge lands on the device owning its starting offset — an
+//!   accepted approximation, flagged in the planner docs. Per-device
+//!   segment lists are interleaved round-robin at submit so all queues fill
+//!   concurrently instead of device 0 first.
+//!
+//! `--devices 1` is the degenerate stripe (`StripeSpec::single()`): chunk
+//! boundaries vanish (`chunk_end = u64::MAX`), every offset maps to device
+//! 0, and charging/planning are byte-for-byte identical to the pre-striping
+//! stack — `benches/stripe_scaling.rs` gates on that parity.
+//!
 //! ## Segment-granular requests
 //!
 //! Async requests ([`api::Sqe`]) are **segment-granular**: one SQE names a
@@ -84,7 +128,10 @@
 //!   errors, bad ranges, short reads, stalls) keyed on `(offset, cumulative
 //!   try#)` — engine retries and batch-level re-extracts continue an
 //!   offset's draw sequence — so chaos tests replay exactly; `--fault-*`
-//!   CLI flags construct it.
+//!   CLI flags construct it. On a striped array, `--fault-device i`
+//!   restricts the storm to reads whose *logical* offset maps to device
+//!   `i`; the filter runs before a try draw is consumed, so the plan stays
+//!   keyed on logical `(offset, try#)` and replay determinism is unchanged.
 //!
 //! What a backend must guarantee (alignment accounting, counter balance,
 //! completion synchronization) is specified on [`api::IoBackend`] and
@@ -111,7 +158,9 @@ pub use api::{
     IoError, IoMode, RetryPolicy, Sqe,
 };
 pub use fault::{FaultInjectBackend, FaultInjectEngine, FaultPlan};
-pub use backing::{Backing, BackingRef, FileBacking, MemBacking, ProceduralBacking};
+pub use backing::{
+    Backing, BackingRef, FileBacking, MemBacking, ProceduralBacking, StripeSpec, StripedBacking,
+};
 pub use engine::{SimBackend, SimFile, Storage};
 pub use engine_core::{EngineCore, WorkerPort};
 pub use mem::{DeviceMemory, HostMemory, OutOfMemory, Reservation};

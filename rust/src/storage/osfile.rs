@@ -23,6 +23,7 @@
 //! [`super::engine_core::EngineCore`].
 
 use super::api::{AsyncIoEngine, Cqe, DirectIoStats, IoBackend, IoMode, Sqe};
+use super::backing::StripeSpec;
 use super::engine::SimFile;
 use super::engine_core::EngineCore;
 use super::ssd::SsdCounters;
@@ -31,7 +32,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Default `pread` worker threads per async engine (≈ the paper's ">2×
-/// cores" sizing for synchronous I/O thread pools, bounded for the CI box).
+/// cores" sizing for synchronous I/O thread pools, bounded for the CI box;
+/// override with `--io-workers`).
 pub const DEFAULT_POOL_THREADS: usize = 8;
 
 pub struct OsFileBackend {
@@ -39,6 +41,11 @@ pub struct OsFileBackend {
     pool_threads: usize,
     counters: SsdCounters,
     direct_stats: DirectIoStats,
+    spec: StripeSpec,
+    /// Per-stripe-device charged counters (`device_io_snapshot`); the
+    /// aggregate `counters` above stays the `io_counters` surface. One
+    /// entry per device; len 1 when unstriped.
+    dev_counters: Vec<SsdCounters>,
 }
 
 impl OsFileBackend {
@@ -47,12 +54,22 @@ impl OsFileBackend {
     }
 
     pub fn with_pool_threads(sector: usize, pool_threads: usize) -> Self {
+        Self::with_stripe(sector, pool_threads, StripeSpec::single())
+    }
+
+    /// Backend over a striped file set: `spec` describes the geometry the
+    /// dataset's `StripedBacking` was written with. The OS is still the
+    /// device; striping here drives per-device engine queues and the
+    /// per-device accounting breakdown.
+    pub fn with_stripe(sector: usize, pool_threads: usize, spec: StripeSpec) -> Self {
         assert!(sector > 0, "sector must be non-zero");
         OsFileBackend {
             sector,
             pool_threads: pool_threads.max(1),
             counters: SsdCounters::default(),
             direct_stats: DirectIoStats::default(),
+            spec,
+            dev_counters: (0..spec.devices.max(1)).map(|_| SsdCounters::default()).collect(),
         }
     }
 
@@ -63,7 +80,14 @@ impl OsFileBackend {
         let hi = (offset + len as u64).div_ceil(sector) * sector;
         (hi - lo) as usize
     }
-}
+
+    /// Attribute `ops`/`bytes` read charges to device `dev`'s breakdown
+    /// (aggregate accounting is the caller's job).
+    fn tally_dev_read(&self, dev: usize, ops: u64, bytes: u64) {
+        if self.spec.is_striped() {
+            self.dev_counters[dev.min(self.dev_counters.len() - 1)].add_read(ops, bytes);
+        }
+    }
 
 impl IoBackend for OsFileBackend {
     fn name(&self) -> &'static str {
@@ -85,12 +109,13 @@ impl IoBackend for OsFileBackend {
         // on `IoBackend`).
         self.counters.reads.fetch_add(1, Ordering::Relaxed);
         self.counters.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.tally_dev_read(self.spec.device_of(offset), 1, buf.len() as u64);
         file.backing.read_at(offset, buf);
     }
 
     fn read_direct(&self, file: &SimFile, offset: u64, buf: &mut [u8]) {
         let aligned = self.read_direct_nocharge(file, offset, buf);
-        self.charge_multi(u64::from(aligned > 0), aligned);
+        self.charge_multi_dev(self.spec.device_of(offset), u64::from(aligned > 0), aligned);
     }
 
     fn read_direct_segment_nocharge(
@@ -140,7 +165,7 @@ impl IoBackend for OsFileBackend {
     ) -> Result<(), super::api::IoError> {
         let useful = buf.len();
         let aligned = self.try_read_direct_segment(file, offset, useful, buf, attempt)?;
-        self.charge_multi(u64::from(aligned > 0), aligned);
+        self.charge_multi_dev(self.spec.device_of(offset), u64::from(aligned > 0), aligned);
         Ok(())
     }
 
@@ -156,6 +181,7 @@ impl IoBackend for OsFileBackend {
         }
         self.counters.reads.fetch_add(1, Ordering::Relaxed);
         self.counters.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.tally_dev_read(self.spec.device_of(offset), 1, buf.len() as u64);
         file.backing.try_read_at(offset, buf)
     }
 
@@ -165,6 +191,29 @@ impl IoBackend for OsFileBackend {
         }
         self.counters.reads.fetch_add(ops, Ordering::Relaxed);
         self.counters.read_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        // No offset: attribute to device 0 (legacy callers; engines use
+        // `charge_multi_dev`).
+        self.tally_dev_read(0, ops, bytes as u64);
+    }
+
+    fn stripe(&self) -> StripeSpec {
+        self.spec
+    }
+
+    fn charge_multi_dev(&self, dev: usize, ops: u64, bytes: usize) {
+        if ops == 0 {
+            return;
+        }
+        self.counters.reads.fetch_add(ops, Ordering::Relaxed);
+        self.counters.read_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.tally_dev_read(dev, ops, bytes as u64);
+    }
+
+    fn device_io_snapshot(&self) -> Vec<(u64, u64)> {
+        if !self.spec.is_striped() {
+            return vec![self.counters.read_snapshot()];
+        }
+        self.dev_counters.iter().map(|c| c.read_snapshot()).collect()
     }
 
     fn write_buffered(&self, _file: &SimFile, _offset: u64, len: usize) {
@@ -209,10 +258,10 @@ impl IoBackend for OsFileBackend {
     }
 
     fn reset_io_stats(&self) {
-        self.counters.reads.store(0, Ordering::Relaxed);
-        self.counters.read_bytes.store(0, Ordering::Relaxed);
-        self.counters.writes.store(0, Ordering::Relaxed);
-        self.counters.write_bytes.store(0, Ordering::Relaxed);
+        self.counters.reset();
+        for c in &self.dev_counters {
+            c.reset();
+        }
     }
 
     fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine> {
@@ -235,11 +284,17 @@ pub struct PreadPool {
 impl PreadPool {
     pub fn new(backend: Arc<dyn IoBackend>, depth: usize, threads: usize) -> Self {
         let depth = depth.max(1);
-        let core = EngineCore::new("pread pool", depth);
+        let spec = backend.stripe();
+        let core = EngineCore::new_striped("pread pool", depth, spec);
+        let devices = core.device_count();
         let policy = backend.retry_policy();
-        let workers = (0..threads.max(1).min(depth))
-            .map(|_| {
-                let port = core.worker_port();
+        // `--io-workers` threads, at least one per stripe device so no
+        // sub-queue can starve (workers bind to one device's sub-queue,
+        // round-robin).
+        let workers = (0..threads.max(1).min(depth).max(devices))
+            .map(|w| {
+                let dev = w % devices;
+                let port = core.worker_port(dev);
                 let backend = backend.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
@@ -253,7 +308,7 @@ impl PreadPool {
                         match status {
                             Ok(bytes) => {
                                 if sqe.mode == IoMode::Direct {
-                                    backend.charge_multi(1, aligned);
+                                    backend.charge_multi_dev(dev, 1, aligned);
                                 }
                                 port.complete(sqe.user_data, bytes);
                             }
@@ -300,6 +355,10 @@ impl AsyncIoEngine for PreadPool {
 
     fn drain(&self) {
         self.core.drain()
+    }
+
+    fn queue_highwater(&self) -> Vec<u64> {
+        self.core.queue_highwater()
     }
 }
 

@@ -74,6 +74,34 @@ pub struct SsdCounters {
     pub write_bytes: AtomicU64,
 }
 
+impl SsdCounters {
+    /// Tally `ops` reads totalling `bytes` (striped backends mirror member
+    /// charges into an aggregate counter through this).
+    pub fn add_read(&self, ops: u64, bytes: u64) {
+        self.reads.fetch_add(ops, Ordering::Relaxed);
+        self.read_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Tally `ops` writes totalling `bytes`.
+    pub fn add_write(&self, ops: u64, bytes: u64) {
+        self.writes.fetch_add(ops, Ordering::Relaxed);
+        self.write_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Zero every counter.
+    pub fn reset(&self) {
+        self.reads.store(0, Ordering::Relaxed);
+        self.read_bytes.store(0, Ordering::Relaxed);
+        self.writes.store(0, Ordering::Relaxed);
+        self.write_bytes.store(0, Ordering::Relaxed);
+    }
+
+    /// `(reads, read_bytes)` snapshot.
+    pub fn read_snapshot(&self) -> (u64, u64) {
+        (self.reads.load(Ordering::Relaxed), self.read_bytes.load(Ordering::Relaxed))
+    }
+}
+
 /// The simulated device. Cheap to clone (shared state).
 #[derive(Clone)]
 pub struct SsdSim {
@@ -129,11 +157,7 @@ impl SsdSim {
     }
 
     pub fn reset_stats(&self) {
-        let c = &self.inner.counters;
-        c.reads.store(0, Ordering::Relaxed);
-        c.read_bytes.store(0, Ordering::Relaxed);
-        c.writes.store(0, Ordering::Relaxed);
-        c.write_bytes.store(0, Ordering::Relaxed);
+        self.inner.counters.reset();
         *self.inner.lat_hist.lock().unwrap() = LatencyHist::default();
     }
 

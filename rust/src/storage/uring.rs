@@ -40,21 +40,31 @@ pub struct Uring {
 }
 
 impl Uring {
-    /// `depth` is the ring size (max outstanding requests).
+    /// `depth` is the ring size per stripe device (max outstanding requests
+    /// on each device's sub-queue).
     pub fn new(backend: Arc<dyn IoBackend>, depth: usize) -> Self {
         let depth = depth.max(1);
-        let core = EngineCore::new("uring", depth);
-        let worker_count = depth.min(32);
-        // Workers drain the SQ in small chunks and charge the device once
-        // per chunk (charge_multi): sustained IOPS/bandwidth are identical
-        // to per-op charging, but single-core thread-coordination overhead
-        // per request drops ~chunk-fold, keeping the simulation's critical
-        // path honest on this 1-CPU testbed (see DESIGN.md §Perf).
+        let spec = backend.stripe();
+        let core = EngineCore::new_striped("uring", depth, spec);
+        let devices = core.device_count();
+        // At least one worker per stripe device (workers bind to one
+        // device's sub-queue), capped as before so a deep ring doesn't
+        // spawn useless threads.
+        let worker_count = depth.min(32).max(devices);
+        // Workers drain their SQ in small chunks and charge the device once
+        // per chunk (charge_multi_dev): sustained IOPS/bandwidth are
+        // identical to per-op charging, but single-core thread-coordination
+        // overhead per request drops ~chunk-fold, keeping the simulation's
+        // critical path honest on this 1-CPU testbed (see DESIGN.md §Perf).
         let chunk = depth.clamp(1, 8);
         let policy = backend.retry_policy();
         let workers = (0..worker_count)
-            .map(|_| {
-                let port = core.worker_port();
+            .map(|w| {
+                // Round-robin worker→device binding: every chunk a worker
+                // pops is same-device, so its coalesced charge can debit
+                // that one device's budget.
+                let dev = w % devices;
+                let port = core.worker_port(dev);
                 let backend = backend.clone();
                 std::thread::spawn(move || {
                     crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
@@ -80,11 +90,11 @@ impl Uring {
                             }
                             statuses.push(status);
                         }
-                        // Phase 2: one coalesced device charge for the
-                        // chunk's successful direct requests (one op per
-                        // segment; failed attempts were charged by the
-                        // backend that failed them).
-                        backend.charge_multi(direct_ops, direct_bytes);
+                        // Phase 2: one coalesced charge against this
+                        // worker's device for the chunk's successful direct
+                        // requests (one op per segment; failed attempts
+                        // were charged by the backend that failed them).
+                        backend.charge_multi_dev(dev, direct_ops, direct_bytes);
                         // Phase 3: publish completions — errors drain the
                         // counters exactly like successes.
                         for (sqe, status) in sqes.iter().zip(statuses) {
@@ -134,6 +144,10 @@ impl AsyncIoEngine for Uring {
 
     fn drain(&self) {
         self.core.drain()
+    }
+
+    fn queue_highwater(&self) -> Vec<u64> {
+        self.core.queue_highwater()
     }
 }
 
@@ -342,7 +356,7 @@ mod tests {
         let (storage, file) = setup();
         let ring = Uring::new(Arc::new(storage), 4);
         // Exercise the path with a pre-closed SQ: close, then submit.
-        ring.core.sq.close();
+        ring.core.close_submission();
         let arena = StagingArena::new(3, 512);
         let sqes: Vec<Sqe> = (0..3u64)
             .map(|i| Sqe {
@@ -363,6 +377,55 @@ mod tests {
         assert_eq!(ring.inflight(), 0, "inflight leaked on failed batch submit");
         assert_eq!(ring.pending_harvest(), 0, "pending_harvest leaked");
         assert_eq!(ring.core.submitted.load(Ordering::SeqCst), 0, "submitted leaked");
+    }
+
+    #[test]
+    fn striped_ring_routes_charges_and_tracks_highwater() {
+        // 3-device striped backend, 4 KiB chunks: 512 B rows at i*512 land
+        // on device (i*512 / 4096) % 3 and must charge exactly that device.
+        let clock = Clock::new(0.2);
+        let ssds: Vec<SsdSim> =
+            (0..3).map(|_| SsdSim::new(SsdConfig::pm883(), clock.clone())).collect();
+        let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
+        let storage = Storage::new_striped(ssds, cache, 4096);
+        let bytes: Vec<u8> = (0..1u32 << 20).map(|i| (i % 241) as u8).collect();
+        let file = SimFile::new(
+            FileId::new(9, DataKind::Features),
+            Arc::new(MemBacking::new(bytes)),
+        );
+        let ring = Uring::new(Arc::new(storage.clone()), 16);
+        // 24 rows = 3 full chunks (8 rows each), one per device.
+        let n = 24usize;
+        let arena = StagingArena::new(1, n * 512);
+        let dst = SlotRef::new(arena, 0);
+        let sqes: Vec<Sqe> = (0..n).map(|i| row_sqe(&file, dst.clone(), i as u64)).collect();
+        ring.submit_batch(sqes);
+        let cqes = ring.wait_cqes(n);
+        assert!(cqes.iter().all(|c| c.is_ok()));
+        for (i, &b) in dst.bytes().iter().enumerate() {
+            assert_eq!(b, (i % 241) as u8, "byte {i}");
+        }
+        // Each device served its 8 rows; the aggregate surface sums them.
+        for d in 0..3 {
+            assert_eq!(
+                storage.device(d).counters().reads.load(Ordering::Relaxed),
+                8,
+                "device {d} request count"
+            );
+            assert_eq!(
+                storage.device(d).counters().read_bytes.load(Ordering::Relaxed),
+                8 * 512,
+                "device {d} charged bytes"
+            );
+        }
+        assert_eq!(storage.io_counters().reads.load(Ordering::Relaxed), 24);
+        assert_eq!(storage.io_counters().read_bytes.load(Ordering::Relaxed), 24 * 512);
+        // Queue-utilization observability: one high-water entry per device,
+        // each having seen at least one in-flight request.
+        let hw = ring.queue_highwater();
+        assert_eq!(hw.len(), 3);
+        assert!(hw.iter().all(|&h| h >= 1), "highwater never recorded: {hw:?}");
+        assert!(hw.iter().all(|&h| h <= 16), "highwater above depth: {hw:?}");
     }
 
     #[test]

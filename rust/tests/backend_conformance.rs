@@ -1,21 +1,29 @@
 //! Backend conformance suite: every `IoBackend` must serve identical bytes,
 //! account direct-I/O alignment identically, and drive the extractor's
 //! two-phase wave protocol to the same results — whether the backend is the
-//! simulated SSD stack or real OS files in a tempdir. Each check is a
-//! generic function run against both backends.
+//! simulated SSD stack or real OS files in a tempdir, and whether the
+//! logical byte space is flat or RAID-0-striped across several devices.
+//! Each check is a generic function run against all four backend variants
+//! (sim/os × devices ∈ {1, 3}); the aggregate counters a check observes
+//! must not depend on how many devices absorb the charges.
 
 use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
 use gnndrive::graph::{FeatureGen, FeatureTable};
 use gnndrive::membuf::{FeatureBuffer, SlotRef, StagingArena, StagingBuffer};
 use gnndrive::sim::Clock;
 use gnndrive::storage::{
-    AsyncIoEngine as _, DataKind, FileBacking, FileId, HostMemory, IoBackend, IoMode,
-    MemBacking, OsFileBackend, PageCache, SimFile, Sqe, SsdConfig, SsdSim, Storage,
+    AsyncIoEngine as _, Backing, BackingRef, DataKind, FileBacking, FileId, HostMemory,
+    IoBackend, IoMode, MemBacking, OsFileBackend, PageCache, SimFile, Sqe, SsdConfig, SsdSim,
+    Storage, StripeSpec, StripedBacking,
 };
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 const FILE_BYTES: usize = 64 * 1024;
+/// Stripe chunk for the striped conformance variants: small enough that
+/// the 64 KiB test file spans every device several times, sector-aligned
+/// so chunk splits never amplify direct-I/O alignment.
+const STRIPE: u64 = 4096;
 
 fn pattern(i: usize) -> u8 {
     (i % 247) as u8
@@ -36,40 +44,88 @@ fn unique_path(stem: &str) -> std::path::PathBuf {
     ))
 }
 
-fn sim_backend() -> Arc<dyn IoBackend> {
+fn sim_backend(devices: usize) -> Arc<dyn IoBackend> {
     let clock = Clock::new(0.05);
-    let ssd = SsdSim::new(SsdConfig::pm883(), clock);
     let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
-    Arc::new(Storage::new(ssd, cache))
-}
-
-fn os_backend() -> Arc<dyn IoBackend> {
-    Arc::new(OsFileBackend::new(512))
-}
-
-/// A patterned file for each backend: in-memory for sim, a real tempdir
-/// file for os — byte-for-byte identical content.
-fn file_for(kind: &str) -> SimFile {
-    let bytes: Vec<u8> = (0..FILE_BYTES).map(pattern).collect();
-    match kind {
-        "sim" => SimFile::new(
-            FileId::new(11, DataKind::Features),
-            Arc::new(MemBacking::new(bytes)),
-        ),
-        "os" => {
-            let path = unique_path("data");
-            std::fs::write(&path, &bytes).unwrap();
-            SimFile::new(
-                FileId::new(11, DataKind::Features),
-                Arc::new(FileBacking::open(&path).unwrap()),
-            )
-        }
-        other => panic!("unknown backend {other}"),
+    if devices == 1 {
+        Arc::new(Storage::new(SsdSim::new(SsdConfig::pm883(), clock), cache))
+    } else {
+        let ssds = (0..devices)
+            .map(|_| SsdSim::new(SsdConfig::pm883(), clock.clone()))
+            .collect();
+        Arc::new(Storage::new_striped(ssds, cache, STRIPE))
     }
 }
 
+fn os_backend(devices: usize) -> Arc<dyn IoBackend> {
+    if devices == 1 {
+        Arc::new(OsFileBackend::new(512))
+    } else {
+        Arc::new(OsFileBackend::with_stripe(512, 8, StripeSpec::new(devices, STRIPE)))
+    }
+}
+
+/// Split a flat byte image into RAID-0 member images (`stripe`-sized chunks
+/// round-robin across `devices`) — the reference layout every striped
+/// backing must reassemble exactly.
+fn stripe_split(bytes: &[u8], devices: usize, stripe: usize) -> Vec<Vec<u8>> {
+    let mut members = vec![Vec::new(); devices];
+    for (i, chunk) in bytes.chunks(stripe).enumerate() {
+        members[i % devices].extend_from_slice(chunk);
+    }
+    members
+}
+
+/// In-memory striped backing over `bytes` (the sim-side striped data source).
+fn striped_mem(bytes: &[u8], spec: StripeSpec) -> BackingRef {
+    let members: Vec<BackingRef> = stripe_split(bytes, spec.devices, spec.stripe_bytes as usize)
+        .into_iter()
+        .map(|m| Arc::new(MemBacking::new(m)) as BackingRef)
+        .collect();
+    Arc::new(StripedBacking::new(members, spec.stripe_bytes))
+}
+
+/// Real-file striped backing over `bytes` (the os-side striped data source).
+fn striped_files(stem: &str, bytes: &[u8], spec: StripeSpec) -> BackingRef {
+    let members: Vec<BackingRef> = stripe_split(bytes, spec.devices, spec.stripe_bytes as usize)
+        .into_iter()
+        .enumerate()
+        .map(|(d, m)| {
+            let path = unique_path(&format!("{stem}_{d}"));
+            std::fs::write(&path, &m).unwrap();
+            Arc::new(FileBacking::open(&path).unwrap()) as BackingRef
+        })
+        .collect();
+    Arc::new(StripedBacking::new(members, spec.stripe_bytes))
+}
+
+/// A patterned file for each backend: in-memory for sim, a real tempdir
+/// file for os — byte-for-byte identical content; striped variants split
+/// the same image across member backings matching the backend's geometry.
+fn file_for(kind: &str, spec: StripeSpec) -> SimFile {
+    let bytes: Vec<u8> = (0..FILE_BYTES).map(pattern).collect();
+    let backing: BackingRef = match (kind, spec.is_striped()) {
+        ("sim", false) => Arc::new(MemBacking::new(bytes)),
+        ("sim", true) => striped_mem(&bytes, spec),
+        ("os", false) => {
+            let path = unique_path("data");
+            std::fs::write(&path, &bytes).unwrap();
+            Arc::new(FileBacking::open(&path).unwrap())
+        }
+        ("os", true) => striped_files("data_striped", &bytes, spec),
+        (other, _) => panic!("unknown backend {other}"),
+    };
+    SimFile::new(FileId::new(11, DataKind::Features), backing)
+}
+
 fn backends() -> Vec<(Arc<dyn IoBackend>, SimFile)> {
-    vec![(sim_backend(), file_for("sim")), (os_backend(), file_for("os"))]
+    let mut v = Vec::new();
+    for devices in [1usize, 3] {
+        let spec = StripeSpec::new(devices, STRIPE);
+        v.push((sim_backend(devices), file_for("sim", spec)));
+        v.push((os_backend(devices), file_for("os", spec)));
+    }
+    v
 }
 
 // ---------------------------------------------------------------------------
@@ -306,7 +362,7 @@ fn check_extractor_reuses_arena_cleanly(io: Arc<dyn IoBackend>) {
     let name = io.name();
     let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
     let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
-    let features = features_for(name, &gen);
+    let features = features_for(io.as_ref(), &gen);
     let host = HostMemory::new(1 << 20);
     let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
     // Staging far smaller than the batch: every extract runs many waves and
@@ -350,28 +406,52 @@ fn extractor_arena_reuse_conforms_across_backends() {
 const DIM: usize = 16;
 const NODES: u64 = 200;
 
-fn features_for(io_name: &str, gen: &FeatureGen) -> FeatureTable {
-    match io_name {
-        "sim" => FeatureTable::procedural(FileId::new(21, DataKind::Features), NODES, gen.clone()),
-        "os" => {
-            let path = unique_path("features");
-            FeatureTable::write_file(&path, NODES, gen).unwrap();
-            FeatureTable::from_backing(
+fn features_for(io: &dyn IoBackend, gen: &FeatureGen) -> FeatureTable {
+    let spec = io.stripe();
+    let backing: BackingRef = match (io.name(), spec.is_striped()) {
+        ("sim", false) => {
+            return FeatureTable::procedural(
                 FileId::new(21, DataKind::Features),
                 NODES,
-                DIM,
-                Arc::new(FileBacking::open(&path).unwrap()),
+                gen.clone(),
             )
         }
-        other => panic!("unknown backend {other}"),
-    }
+        ("sim", true) => {
+            // Materialize the rows flat, then stripe-split into in-memory
+            // members — identical logical bytes to the procedural table.
+            let row = gen.row_bytes() as usize;
+            let mut bytes = vec![0u8; NODES as usize * row];
+            for v in 0..NODES {
+                gen.fill_row(v, &mut bytes[v as usize * row..(v as usize + 1) * row]);
+            }
+            striped_mem(&bytes, spec)
+        }
+        ("os", false) => {
+            let path = unique_path("features");
+            FeatureTable::write_file(&path, NODES, gen).unwrap();
+            Arc::new(FileBacking::open(&path).unwrap())
+        }
+        ("os", true) => {
+            // Exercise the production striped writer end to end.
+            let paths: Vec<std::path::PathBuf> =
+                (0..spec.devices).map(|d| unique_path(&format!("features_{d}"))).collect();
+            FeatureTable::write_file_striped(&paths, NODES, gen, spec.stripe_bytes).unwrap();
+            let members: Vec<BackingRef> = paths
+                .iter()
+                .map(|p| Arc::new(FileBacking::open(p).unwrap()) as BackingRef)
+                .collect();
+            Arc::new(StripedBacking::new(members, spec.stripe_bytes))
+        }
+        (other, _) => panic!("unknown backend {other}"),
+    };
+    FeatureTable::from_backing(FileId::new(21, DataKind::Features), NODES, DIM, backing)
 }
 
 fn check_extractor_waves(io: Arc<dyn IoBackend>, asynchronous: bool) {
     let name = io.name();
     let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
     let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
-    let features = features_for(name, &gen);
+    let features = features_for(io.as_ref(), &gen);
     let host = HostMemory::new(1 << 20);
     let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
     // 8 staging slots against 60 nodes → the extractor must run in waves.
@@ -444,7 +524,7 @@ fn run_extraction(
 ) -> (Vec<f32>, u64, u64, u64, u64) {
     let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
     let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
-    let features = features_for(io.name(), &gen);
+    let features = features_for(io.as_ref(), &gen);
     let host = HostMemory::new(1 << 20);
     let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
     let staging = StagingBuffer::new(&host, staging_slots, (DIM * 4) as usize).unwrap();
@@ -538,5 +618,91 @@ fn check_gap_boundary(io: Arc<dyn IoBackend>) {
 fn gap_boundary_conforms_across_backends() {
     for (io, _) in backends() {
         check_gap_boundary(io);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stripe address-translation edge cases
+// ---------------------------------------------------------------------------
+
+/// Both striped backing flavors (in-memory members, real-file members) over
+/// the same flat image — translation bugs would diverge from the pattern.
+fn striped_backings(stem: &str, bytes: &[u8], devices: usize, stripe: u64) -> Vec<BackingRef> {
+    let spec = StripeSpec::new(devices, stripe);
+    vec![striped_mem(bytes, spec), striped_files(stem, bytes, spec)]
+}
+
+fn assert_pattern(backing: &dyn Backing, off: usize, len: usize, what: &str) {
+    let mut buf = vec![0xEEu8; len];
+    backing.read_at(off as u64, &mut buf);
+    for (i, &b) in buf.iter().enumerate() {
+        assert_eq!(b, pattern(off + i), "{what}: byte {off}+{i}");
+    }
+}
+
+#[test]
+fn stripe_rows_on_chunk_boundaries_translate_exactly() {
+    let bytes: Vec<u8> = (0..FILE_BYTES).map(pattern).collect();
+    for backing in striped_backings("edge_boundary", &bytes, 3, STRIPE) {
+        let s = STRIPE as usize;
+        // A row starting exactly on a chunk boundary lives wholly on the
+        // next device; one ending exactly on a boundary never touches it.
+        assert_pattern(backing.as_ref(), s, 64, "row starts on boundary");
+        assert_pattern(backing.as_ref(), s - 64, 64, "row ends on boundary");
+        // A row straddling the boundary splits across two devices.
+        assert_pattern(backing.as_ref(), s - 10, 20, "row straddles boundary");
+        // Device wrap-around: chunk 2 → device 2, chunk 3 → device 0 again.
+        assert_pattern(backing.as_ref(), 3 * s - 10, 20, "wrap to device 0");
+    }
+}
+
+#[test]
+fn stripe_read_wider_than_one_chunk_spans_devices() {
+    let bytes: Vec<u8> = (0..FILE_BYTES).map(pattern).collect();
+    for backing in striped_backings("edge_wide", &bytes, 3, STRIPE) {
+        // One read wider than a whole stripe of chunks: covers every device
+        // at least once and re-enters device 0 (4 chunk splits from one
+        // logical range).
+        assert_pattern(backing.as_ref(), 100, 3 * STRIPE as usize + 123, "multi-chunk read");
+        // Whole-file read reassembles the image exactly.
+        assert_pattern(backing.as_ref(), 0, FILE_BYTES, "whole image");
+    }
+}
+
+#[test]
+fn stripe_last_partial_chunk_and_eof_zero_fill() {
+    // 2 full chunks + a 1808-byte tail: member lengths are unequal
+    // (4096, 4096, 1808) and the logical EOF sits mid-chunk on device 2.
+    let n = 2 * STRIPE as usize + 1808;
+    let bytes: Vec<u8> = (0..n).map(pattern).collect();
+    for backing in striped_backings("edge_tail", &bytes, 3, STRIPE) {
+        assert_eq!(backing.len(), n as u64, "member lengths sum to the logical size");
+        assert_pattern(backing.as_ref(), n - 1808, 1808, "partial tail chunk");
+        // A read crossing logical EOF returns the tail then zero-fills,
+        // exactly like a flat backing.
+        let mut buf = vec![0xAAu8; 2048];
+        backing.read_at((n - 1000) as u64, &mut buf);
+        for (i, &b) in buf.iter().take(1000).enumerate() {
+            assert_eq!(b, pattern(n - 1000 + i), "tail byte {i}");
+        }
+        assert!(buf[1000..].iter().all(|&b| b == 0), "overhang must zero-fill");
+        // A read entirely past EOF — including past the *member's* end on
+        // every device — is all zeros.
+        let mut past = vec![0xBBu8; 512];
+        backing.read_at((n + 3 * STRIPE as usize) as u64, &mut past);
+        assert!(past.iter().all(|&b| b == 0), "far-past-EOF read must zero-fill");
+    }
+}
+
+#[test]
+fn stripe_single_device_is_identity() {
+    let bytes: Vec<u8> = (0..FILE_BYTES).map(pattern).collect();
+    let member: BackingRef = Arc::new(MemBacking::new(bytes));
+    let striped = StripedBacking::new(vec![member], STRIPE);
+    // One member collapses to the unstriped degenerate spec: no translation.
+    assert_eq!(striped.spec(), StripeSpec::single());
+    assert_eq!(striped.len(), FILE_BYTES as u64);
+    for (off, len) in [(0usize, 512usize), (4095, 2), (700, 100), (0, FILE_BYTES)] {
+        assert_pattern(&striped, off, len, "devices=1 identity");
     }
 }

@@ -278,6 +278,145 @@ fn batch_level_re_extract_continues_the_draw_sequence() {
 }
 
 // ---------------------------------------------------------------------------
+// Striped arrays: logical-offset fault keying + --fault-device targeting
+// ---------------------------------------------------------------------------
+
+/// Extraction rig over a striped sim array wrapped in `plan`/`policy` —
+/// the striped counterpart of [`rig`] (coalescing disabled, so request
+/// offsets are exactly `node × ROW`).
+fn striped_rig(devices: usize, stripe_bytes: u64, plan: FaultPlan, policy: RetryPolicy) -> Rig {
+    let labels = Arc::new((0..NODES as usize).map(|v| (v % 4) as u16).collect::<Vec<u16>>());
+    let gen = FeatureGen::new(0xC0FFEE, DIM, 4, 0.3, labels);
+    let clock = Clock::new(0.05);
+    let ssds = (0..devices).map(|_| SsdSim::new(SsdConfig::pm883(), clock.clone())).collect();
+    let cache = Arc::new(PageCache::new(HostMemory::new(1 << 20)));
+    let inner: Arc<dyn IoBackend> = Arc::new(Storage::new_striped(ssds, cache, stripe_bytes));
+    let features =
+        FeatureTable::procedural(FileId::new(21, DataKind::Features), NODES, gen.clone());
+    let io: Arc<dyn IoBackend> =
+        Arc::new(FaultInjectBackend::new(inner, BackendKind::Sim, plan, policy, Clock::new(0.05)));
+    let host = HostMemory::new(1 << 20);
+    let fb = Arc::new(FeatureBuffer::in_host(&host, 256, DIM).unwrap());
+    let staging = StagingBuffer::new(&host, 16, DIM * 4).unwrap();
+    let ex = Extractor::with_options(
+        io.clone(),
+        16,
+        staging,
+        fb.clone(),
+        features,
+        ExtractTarget::Host,
+        ExtractOptions { coalesce: CoalesceConfig::disabled(), ..Default::default() },
+    );
+    Rig { io, fb, ex, gen }
+}
+
+#[test]
+fn fault_storms_replay_deterministically_across_striped_array() {
+    // The plan draws on logical `(offset, try#)` — never on device-local
+    // offsets — so the same storm must produce the *same* failed set on a
+    // flat backend, on a striped one, and on a striped re-run, even though
+    // striping reorders submission across per-device queues.
+    let run = |devices: usize| {
+        let plan = FaultPlan::transient(0x00D5_0001, 0.45);
+        let policy = RetryPolicy { max_retries: 1, ..RetryPolicy::default() };
+        let rig = if devices == 1 {
+            rig(BackendKind::Sim, plan, policy)
+        } else {
+            striped_rig(devices, 4096, plan, policy)
+        };
+        let nodes: Vec<u32> = (0..120).collect();
+        let failed = match rig.ex.try_extract(&nodes) {
+            Ok(aliases) => {
+                rig.fb.release_aliases(&aliases);
+                Vec::new()
+            }
+            Err(e) => {
+                let mut f = e.failed_nodes.clone();
+                f.sort_unstable();
+                rig.fb.release_aliases(&e.aliases);
+                f
+            }
+        };
+        rig.fb.check_invariants().unwrap();
+        let (r, f, _) = rig.io.direct_stats().fault_snapshot();
+        (failed, r, f)
+    };
+    let flat = run(1);
+    let striped_a = run(3);
+    let striped_b = run(3);
+    assert_eq!(striped_a, striped_b, "striped replays must be deterministic");
+    assert_eq!(flat, striped_a, "striping must not change which logical offsets fault");
+    assert!(flat.1 > 0, "a 45% storm over 120 rows must produce retries");
+}
+
+#[test]
+fn fault_device_targets_only_one_stripe_member() {
+    // Permanent failure of stripe member 1 only. 64 B rows, 1 KiB chunks on
+    // 3 devices: a chunk holds 16 rows, so device 1 owns nodes 16..32 and
+    // 64..80 within 0..96 — exactly those must fail, everything else reads.
+    let plan = FaultPlan {
+        bad_ranges: vec![(0u64, u64::MAX)],
+        device: Some(1),
+        ..FaultPlan::default()
+    };
+    let rig = striped_rig(3, 1024, plan, RetryPolicy::default());
+    let base = rig.io.direct_stats().fault_snapshot();
+    let nodes: Vec<u32> = (0..96).collect();
+    let err = rig.ex.try_extract(&nodes).expect_err("device-1 rows cannot extract");
+    assert!(matches!(err.error, IoError::BadRange { .. }), "got {:?}", err.error);
+    let mut failed = err.failed_nodes.clone();
+    failed.sort_unstable();
+    let want: Vec<u32> = (16..32).chain(64..80).collect();
+    assert_eq!(failed, want, "exactly the targeted device's rows fail");
+    let (retries, failures, _) = fault_delta(rig.io.as_ref(), base);
+    assert_eq!(retries, 0, "permanent errors must not be retried");
+    assert_eq!(failures, want.len() as u64);
+    rig.fb.release_aliases(&err.aliases);
+
+    // The surviving members keep serving bytes.
+    let good: Vec<u32> = (32..64).collect();
+    let aliases = rig.ex.try_extract(&good).expect("devices 0 and 2 are healthy");
+    verify_rows(&rig, &good, &aliases);
+    rig.fb.release_aliases(&aliases);
+    rig.fb.check_invariants().unwrap();
+}
+
+#[test]
+fn single_device_storm_degrades_gracefully_under_drop_rows() {
+    // End to end: stripe member 0 goes permanently bad mid-array; training
+    // under `--on-io-error drop-rows` must complete the epoch, dropping only
+    // the rows that live on the dead member while the other two keep serving.
+    let profile = FaultProfile {
+        plan: FaultPlan {
+            bad_ranges: vec![(0u64, u64::MAX)],
+            device: Some(0),
+            ..FaultPlan::default()
+        },
+        policy: RetryPolicy::default(),
+    };
+    let machine = Arc::new(Machine::new(
+        MachineConfig::paper().with_devices(3).with_stripe_bytes(4096).with_fault(profile),
+        Clock::new(0.05),
+    ));
+    let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
+    let engine = train_engine(&machine, &ds, quick_cfg(OnIoError::DropRows));
+    let stats = engine.try_run_epoch(0).expect("a one-member storm must not kill the epoch");
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.train.steps, 4);
+    assert!(stats.dropped_rows > 0, "the dead member's rows must be dropped");
+    assert!(stats.io_failures > 0);
+    // The healthy members carried the epoch: per-device accounting shows
+    // reads landing on more than one device.
+    assert_eq!(stats.device_reads.len(), 3, "one read breakdown entry per stripe member");
+    let active = stats.device_reads.iter().filter(|&&(r, _)| r > 0).count();
+    assert!(active >= 2, "healthy devices must keep serving: {:?}", stats.device_reads);
+    // The striped epoch line carries the per-device split and queue depths.
+    let line = stats.summary();
+    assert!(line.contains("dev["), "striped summary must show the device split: {line}");
+    engine.feature_buffer().check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------------
 // Engine-core panic containment (per-request guard + worker-loss poisoning)
 // ---------------------------------------------------------------------------
 

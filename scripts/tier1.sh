@@ -6,6 +6,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "SKIP: no cargo toolchain"
+  exit 0
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -83,6 +88,22 @@ fi
   --serve-batch 4 --fanouts 4,4 \
   --fault-rate 0.01 --io-retries 4
 
+echo "== smoke: striped storage (--devices 3, sim + os backends) =="
+# gen-data writes one member file per device; train must reassemble them
+# behind the unchanged backend seam (the geometry handshake rejects a
+# mismatched --devices/--stripe-bytes at load time).
+./target/release/gnndrive gen-data --dataset papers-tiny --out "$SMOKE_DIR/ds3" \
+  --devices 3 --stripe-bytes 64KiB
+./target/release/gnndrive train --system gnndrive --backend os \
+  --data "$SMOKE_DIR/ds3" --devices 3 --stripe-bytes 64KiB --batches 2 --epochs 1
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --data "$SMOKE_DIR/ds3" --devices 3 --stripe-bytes 64KiB --batches 2 --epochs 1
+# A permanently dead stripe member (--fault-device) must degrade only its
+# own rows: drop-rows rides out the storm and the epoch completes.
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --devices 3 --stripe-bytes 4KiB --batches 2 --epochs 1 \
+  --fault-bad-range 0:4GiB --fault-device 1 --on-io-error drop-rows
+
 echo "== bench: extract_coalesce (coalesced segment I/O trajectory) =="
 # Runs the extraction bench (release) and appends to BENCH_extract.json; the
 # bench itself asserts the ISSUE-4 acceptance gate (>= 2x fewer charged
@@ -102,6 +123,13 @@ echo "== bench: fault_tolerance (fault-rate sweep, retry vs fail-fast) =="
 # surfaced failures; fail-fast aborts with a typed error, never a hang).
 cargo bench --bench fault_tolerance
 
+echo "== bench: stripe_scaling (multi-device striped storage gates) =="
+# Runs the striping bench and appends to BENCH_stripe.json; the bench asserts
+# the ISSUE-7 gates (devices=4 charged epoch I/O time >= 2.5x lower than
+# devices=1 at the same offered load on the sim backend; devices=1 charges
+# exactly match the pre-striping flat stack — same requests, same bytes).
+cargo bench --bench stripe_scaling
+
 if [ -f BENCH_extract.json ]; then
   echo "== last BENCH_extract.json record =="
   tail -n 1 BENCH_extract.json
@@ -120,6 +148,11 @@ fi
 if [ -f BENCH_faults.json ]; then
   echo "== last BENCH_faults.json record =="
   tail -n 1 BENCH_faults.json
+fi
+
+if [ -f BENCH_stripe.json ]; then
+  echo "== last BENCH_stripe.json record =="
+  tail -n 1 BENCH_stripe.json
 fi
 
 echo "tier-1 OK"
