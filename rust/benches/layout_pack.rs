@@ -1,0 +1,261 @@
+//! `cargo bench --bench layout_pack` — packed per-batch layout vs. online
+//! coalesced extraction (ISSUE 8): pre-sample one epoch of papers-tiny,
+//! pack it (`layout::pack_dataset`), then replay the identical batch
+//! sequence through an online-coalesced extractor and a packed extractor on
+//! both backends (sim + os).
+//!
+//! Acceptance gates, per backend:
+//! * **requests** — packed extraction must charge ≥ 4× fewer SSD read
+//!   requests than the online coalesced plan at the same workload (a pack
+//!   run is ~one staging-capacity-bounded sequential segment per batch;
+//!   the online plan pays one request per ≤256 KiB span of scattered rows).
+//! * **alignment** — packed `align_overhead_bytes` must be *strictly*
+//!   lower: run starts are pre-aligned by the packer, so packed segments
+//!   bridge only already-resident holes, while online segments bridge every
+//!   inter-row gap under `--coalesce-gap`.
+//! * **replay** — the offline pre-sampler, an independent replay of the
+//!   `ScheduleSpec`, and the live pipeline engine must all derive
+//!   bit-identical batch node sets: two independent replays are compared
+//!   directly, every replayed batch must be fully placeable by the pack
+//!   index, and a full `GnnDrive` epoch with the layout attached must serve
+//!   *every* batch packed (`EpochStats::packed_batches == batches` — one
+//!   diverging node set would force that batch online).
+//!
+//! Charged counters are deterministic → the gates are noise-free.
+//! Machine-readable results append to `BENCH_layout.json` (JSONL);
+//! `scripts/tier1.sh` runs this bench and prints the last record.
+
+use gnndrive::baselines::sim_trainer;
+use gnndrive::config::{Machine, MachineConfig, TrainConfig};
+use gnndrive::extract::{ExtractOptions, ExtractTarget, Extractor};
+use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::layout::{pack_dataset, pin_hot, PackedLayout};
+use gnndrive::membuf::{FeatureBuffer, StagingBuffer};
+use gnndrive::pipeline::{GnnDrive, Variant};
+use gnndrive::runtime::simcompute::ModelKind;
+use gnndrive::sample::ScheduleSpec;
+use gnndrive::sim::Clock;
+use gnndrive::storage::{BackendKind, EpochIoSnapshot};
+use gnndrive::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const BATCH: usize = 500;
+const BATCHES: usize = 4;
+const SEED: u64 = 17;
+const HOT_THRESH: u32 = 2;
+const FB_SLOTS: usize = 80_000; // > papers-tiny node count: everything fits
+
+fn schedule() -> ScheduleSpec {
+    ScheduleSpec {
+        seed: SEED,
+        batch_size: BATCH,
+        fanouts: vec![5, 5],
+        batches_per_epoch: Some(BATCHES),
+    }
+}
+
+fn machine_for(kind: BackendKind) -> Machine {
+    // Host budget above paper scale only so one feature buffer holds every
+    // extracted row; SSD model and staging bound stay paper.
+    Machine::new(
+        MachineConfig::paper().with_backend(kind).with_host_mem(1 << 30),
+        Clock::new(0.05),
+    )
+}
+
+/// Replay the schedule's batch node sets (deterministic in the spec).
+fn replay(schedule: &ScheduleSpec, ds: &Dataset, machine: &Machine) -> Vec<Vec<u32>> {
+    let plan = schedule.plan(&ds.train_ids, 0);
+    let sampler = schedule.sampler(0);
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); plan.len()];
+    while let Some((bid, seeds)) = plan.claim() {
+        out[bid as usize] = sampler.sample_batch(ds, machine.backend.as_ref(), bid, seeds).nodes;
+    }
+    out
+}
+
+struct Run {
+    backend: &'static str,
+    mode: &'static str,
+    reads: u64,
+    read_bytes: u64,
+    align_overhead: u64,
+    pinned: usize,
+}
+
+impl Run {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".into(), Json::Str("layout_pack".into()));
+        m.insert("backend".into(), Json::Str(self.backend.into()));
+        m.insert("mode".into(), Json::Str(self.mode.into()));
+        m.insert("batches".into(), Json::Num(BATCHES as f64));
+        m.insert("charged_requests".into(), Json::Num(self.reads as f64));
+        m.insert("charged_bytes".into(), Json::Num(self.read_bytes as f64));
+        m.insert("align_overhead_bytes".into(), Json::Num(self.align_overhead as f64));
+        m.insert("hot_pinned".into(), Json::Num(self.pinned as f64));
+        Json::Obj(m)
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "{:<4} {:<7} reqs {:>5}  charged {:>10}B  align+ {:>10}B  pinned {:>5}",
+            self.backend, self.mode, self.reads, self.read_bytes, self.align_overhead, self.pinned,
+        )
+    }
+}
+
+/// Extract the epoch's batches on a fresh feature buffer; `layout` switches
+/// the packed path on (with the hot tier pinned first, outside the
+/// measured window — the pin is a one-time setup cost, not per-epoch I/O).
+fn run_epoch(
+    machine: &Machine,
+    ds: &Dataset,
+    batches: &[Vec<u32>],
+    layout: Option<&Arc<PackedLayout>>,
+    backend: &'static str,
+) -> Run {
+    let fb = Arc::new(FeatureBuffer::in_host(&machine.host, FB_SLOTS, ds.spec.dim).unwrap());
+    let staging =
+        StagingBuffer::new(&machine.host, 4096, ds.features.row_bytes() as usize).unwrap();
+    let mut ex = Extractor::with_options(
+        machine.backend.clone(),
+        128,
+        staging,
+        fb.clone(),
+        ds.features.clone(),
+        ExtractTarget::Host,
+        ExtractOptions::default(),
+    );
+    let mut pinned = 0;
+    if let Some(l) = layout {
+        ex.set_layout(l.clone());
+        pinned = pin_hot(&fb, l, machine.backend.as_ref(), FB_SLOTS / 2);
+    }
+    let snap = EpochIoSnapshot::start(machine.backend.as_ref());
+    for (bid, nodes) in batches.iter().enumerate() {
+        let aliases = ex.try_extract_at(nodes, Some((0, bid as u64))).unwrap();
+        fb.release_aliases(&aliases);
+    }
+    let io = snap.totals(machine.backend.as_ref());
+    Run {
+        backend,
+        mode: if layout.is_some() { "packed" } else { "online" },
+        reads: io.reads,
+        read_bytes: io.read_bytes,
+        align_overhead: io.align_overhead_bytes,
+        pinned,
+    }
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("gnndrive_layout_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = DatasetSpec::by_name("papers-tiny").expect("papers-tiny registered");
+    println!("writing papers-tiny to {dir:?} …");
+    Dataset::write_dir(&spec, &dir).unwrap();
+
+    // Pack once (offline step; sim machine drives the pre-sampler).
+    let sched = schedule();
+    {
+        let machine = machine_for(BackendKind::Sim);
+        let ds = Dataset::load_dir(&dir, &machine).unwrap();
+        let st = pack_dataset(&machine, &ds, &dir, &sched, 1, HOT_THRESH).unwrap();
+        println!(
+            "packed: {} batch(es), {} hot row(s), {} cold row(s), {} pack bytes ({} pad)",
+            st.batches_per_epoch, st.hot_rows, st.cold_rows, st.pack_bytes, st.pad_bytes,
+        );
+    }
+
+    let mut records = Vec::new();
+    for (kind, name) in [(BackendKind::Sim, "sim"), (BackendKind::Os, "os")] {
+        let machine = machine_for(kind);
+        let ds = Dataset::load_dir(&dir, &machine).unwrap();
+
+        // ---- replay gate: independent replays are bit-identical ----------
+        let batches = replay(&sched, &ds, &machine);
+        assert_eq!(
+            batches,
+            replay(&sched, &ds, &machine),
+            "{name}: schedule replay must be deterministic"
+        );
+        let layout = Arc::new(PackedLayout::load_dir(&dir, &machine).unwrap());
+        layout.verify_schedule(&sched).unwrap();
+        for (bid, nodes) in batches.iter().enumerate() {
+            let to_load: Vec<(u32, u32)> = nodes.iter().map(|&n| (n, 0)).collect();
+            let pp = layout
+                .plan_batch(0, bid as u64, &to_load)
+                .unwrap_or_else(|| panic!("{name}: batch {bid} not covered by the pack"));
+            assert_eq!(
+                pp.pack_rows.len() + pp.hot_rows.len(),
+                nodes.len(),
+                "{name}: batch {bid} pack row table must place every sampled node"
+            );
+        }
+
+        // ---- request + alignment gates ----------------------------------
+        let online = run_epoch(&machine, &ds, &batches, None, name);
+        println!("{}", online.row());
+        let packed = run_epoch(&machine, &ds, &batches, Some(&layout), name);
+        println!("{}", packed.row());
+        let ratio = online.reads as f64 / packed.reads.max(1) as f64;
+        println!("  -> {name}: {ratio:.1}x fewer charged requests packed");
+        assert!(
+            packed.reads * 4 <= online.reads,
+            "acceptance ({name}): packed charged {} requests vs online {} (>= 4x fewer required)",
+            packed.reads,
+            online.reads,
+        );
+        assert!(
+            packed.align_overhead < online.align_overhead,
+            "acceptance ({name}): packed align overhead {} must be strictly below online {}",
+            packed.align_overhead,
+            online.align_overhead,
+        );
+        records.push(online);
+        records.push(packed);
+    }
+
+    // ---- end-to-end replay gate: the live pipeline serves every batch
+    // packed (a single diverging node set would force that batch online). --
+    {
+        let machine = Arc::new(machine_for(BackendKind::Sim));
+        let ds = Arc::new(Dataset::load_dir(&dir, &machine).unwrap());
+        let cfg = TrainConfig {
+            batch_size: BATCH,
+            fanouts: vec![5, 5],
+            batches_per_epoch: Some(BATCHES),
+            seed: SEED,
+            ..TrainConfig::default()
+        };
+        let trainer = sim_trainer(&machine, &ds, &cfg, ModelKind::GraphSage, Variant::Gpu, 256);
+        let mut engine = GnnDrive::new(&machine, &ds, cfg, Variant::Gpu, trainer).unwrap();
+        let layout = Arc::new(PackedLayout::load_dir(&dir, &machine).unwrap());
+        let pinned = engine.attach_layout(layout).unwrap();
+        let stats = engine.try_run_epoch(0).unwrap();
+        println!(
+            "pipeline: {} batches, {} packed, {} hot hits, {} pinned",
+            stats.batches, stats.packed_batches, stats.hot_hits, pinned,
+        );
+        assert_eq!(stats.batches, BATCHES);
+        assert_eq!(
+            stats.packed_batches, BATCHES,
+            "acceptance: the pipeline must replay the pre-sampled schedule bit-identically \
+             (every batch served from its pack run)"
+        );
+    }
+    println!("acceptance: all layout_pack gates hold (requests, alignment, replay)");
+
+    let line = Json::Arr(records.iter().map(Run::json).collect()).to_string() + "\n";
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_layout.json")
+        .and_then(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+    match appended {
+        Ok(()) => println!("appended {} records to BENCH_layout.json", records.len()),
+        Err(e) => eprintln!("could not append to BENCH_layout.json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

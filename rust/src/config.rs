@@ -398,6 +398,21 @@ pub struct TrainConfig {
     pub on_io_error: OnIoError,
 }
 
+impl TrainConfig {
+    /// The deterministic batch/sampling schedule this config runs — the
+    /// single value the pipeline engine, `run_sample_only`, and the offline
+    /// `layout/` pre-sampler all derive their batches from, so a packed
+    /// dataset replays training's exact batch sequence.
+    pub fn schedule_spec(&self) -> crate::sample::ScheduleSpec {
+        crate::sample::ScheduleSpec {
+            seed: self.seed,
+            batch_size: self.batch_size,
+            fanouts: self.fanouts.clone(),
+            batches_per_epoch: self.batches_per_epoch,
+        }
+    }
+}
+
 impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {

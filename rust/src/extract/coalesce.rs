@@ -141,11 +141,27 @@ pub fn plan_segments_striped(
     spec: StripeSpec,
 ) -> Vec<Segment> {
     let row_bytes = features.row_bytes() as usize;
-    debug_assert!(staging_capacity >= row_bytes, "staging cannot hold one row");
-    let mut rows: Vec<(u64, u32, u32)> = to_load
+    let rows: Vec<(u64, u32, u32)> = to_load
         .iter()
         .map(|&(node, slot)| (features.row_offset(node as u64), node, slot))
         .collect();
+    plan_rows(rows, row_bytes, cfg, staging_capacity, spec)
+}
+
+/// Planner core over pre-computed `(file_offset, node, slot)` rows — the
+/// shared engine behind [`plan_segments_striped`] (offsets from the online
+/// feature table) and the packed-layout path (`layout/`, offsets into a
+/// batch's pack run or the hot tier). All merge rules — strict gap, span
+/// cap, staging clamp, the one-segment-one-device stripe invariant — and
+/// the round-robin device interleave apply identically to both callers.
+pub fn plan_rows(
+    mut rows: Vec<(u64, u32, u32)>,
+    row_bytes: usize,
+    cfg: &CoalesceConfig,
+    staging_capacity: usize,
+    spec: StripeSpec,
+) -> Vec<Segment> {
+    debug_assert!(staging_capacity >= row_bytes, "staging cannot hold one row");
     rows.sort_unstable_by_key(|&(off, _, _)| off);
 
     let max_span = if cfg.enabled() {

@@ -34,12 +34,14 @@
 //! never re-resolving node ids — so the whole post-extraction lifecycle
 //! stays off the coordinator's shard locks.
 
-use super::coalesce::{plan_segments_striped, CoalesceConfig, SegRow};
+use super::coalesce::{plan_rows, plan_segments_striped, CoalesceConfig, SegRow, Segment};
 use crate::graph::FeatureTable;
+use crate::layout::PackedLayout;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::sim::Latch;
 use crate::storage::api::{AsyncIoEngine, Cqe, IoBackend, IoError, IoMode, Sqe};
-use crate::storage::Pcie;
+use crate::storage::{Pcie, SimFile, StripeSpec};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -124,6 +126,17 @@ pub struct Extractor {
     /// mutex is uncontended — it only serializes the rare case of one
     /// `Extractor` value driven from several threads.
     sync_scratch: Mutex<Vec<u8>>,
+    /// Packed on-disk layout (`layout/`): when set, batches with a
+    /// pre-sampled pack entry are served from their sequential pack run and
+    /// the hot tier instead of random online rows
+    /// ([`Extractor::try_extract_at`]).
+    layout: Option<Arc<PackedLayout>>,
+    /// Batches this extractor served from the packed layout (cumulative;
+    /// the pipeline engine takes per-epoch deltas).
+    packed_batches: AtomicU64,
+    /// Hot-tier nodes that were already buffer-resident when a packed batch
+    /// began — the pin's payoff (cumulative).
+    hot_hits: AtomicU64,
 }
 
 impl Extractor {
@@ -156,7 +169,23 @@ impl Extractor {
             backend,
             opts,
             sync_scratch: Mutex::new(Vec::new()),
+            layout: None,
+            packed_batches: AtomicU64::new(0),
+            hot_hits: AtomicU64::new(0),
         }
+    }
+
+    /// Attach a packed layout: subsequent [`Extractor::try_extract_at`]
+    /// calls with a batch context look up the batch's pack entry and serve
+    /// it sequentially. Extraction without a context (or for batches the
+    /// layout does not cover) is byte-identical to the unpacked path.
+    pub fn set_layout(&mut self, layout: Arc<PackedLayout>) {
+        self.layout = Some(layout);
+    }
+
+    /// Cumulative `(packed_batches, hot_hits)` counters.
+    pub fn packed_stats(&self) -> (u64, u64) {
+        (self.packed_batches.load(Ordering::Relaxed), self.hot_hits.load(Ordering::Relaxed))
     }
 
     /// Per-device submission-queue high-water marks of this extractor's
@@ -183,6 +212,21 @@ impl Extractor {
     /// the batch returns [`ExtractError`] carrying the still-valid alias
     /// list plus the failed node ids.
     pub fn try_extract(&self, nodes: &[u32]) -> Result<Vec<i32>, ExtractError> {
+        self.try_extract_at(nodes, None)
+    }
+
+    /// [`Extractor::try_extract`] with a batch context: when a packed
+    /// layout is attached and covers `(epoch, batch_id)`, the batch's
+    /// missing rows are served from its sequential pack run (+ the hot
+    /// tier) instead of random online feature-file offsets. Every other
+    /// case — no layout, no context, an uncovered batch, any node the pack
+    /// row table cannot place, or the buffered/sync ablations — falls back
+    /// to the online plan, byte-identical to the unpacked path.
+    pub fn try_extract_at(
+        &self,
+        nodes: &[u32],
+        ctx: Option<(u64, u64)>,
+    ) -> Result<Vec<i32>, ExtractError> {
         let plan = self.fb.begin_batch(nodes);
 
         if !self.opts.asynchronous {
@@ -213,16 +257,64 @@ impl Extractor {
         // paper's D1 baseline.
         let coalesce =
             if self.opts.direct { self.opts.coalesce } else { CoalesceConfig::disabled() };
-        // Stripe-aware plan: segments stay inside one stripe chunk (one
-        // device per request) and are interleaved round-robin across
-        // devices so every per-device sub-queue fills from SQE one.
-        let segments = plan_segments_striped(
-            &plan.to_load,
-            &self.features,
-            &coalesce,
-            self.staging.capacity_bytes(),
-            self.backend.stripe(),
-        );
+        let capacity = self.staging.capacity_bytes();
+        // Packed fast path: a covered batch reads its pack run (+ hot-tier
+        // stragglers) — long sequential segments — instead of the online
+        // plan. Direct-mode only: the buffered ablation must stay the
+        // paper's D1 baseline.
+        let packed = match (&self.layout, ctx) {
+            (Some(layout), Some((epoch, batch_id))) if self.opts.direct => {
+                layout.plan_batch(epoch, batch_id, &plan.to_load)
+            }
+            _ => None,
+        };
+        // Every segment names the file it reads (feature table online; pack
+        // or hot file packed), so one wave loop serves both layouts.
+        let segments: Vec<(SimFile, Segment)> = match packed {
+            Some(pp) => {
+                let layout = self.layout.as_ref().unwrap();
+                self.packed_batches.fetch_add(1, Ordering::Relaxed);
+                // Hot nodes of the batch that did NOT need a load were
+                // served by the pinned tier (or a peer's earlier load).
+                let hot_in_batch =
+                    nodes.iter().filter(|&&n| layout.is_hot(n)).count() as u64;
+                self.hot_hits
+                    .fetch_add(hot_in_batch - pp.hot_rows.len() as u64, Ordering::Relaxed);
+                let row_bytes = self.staging.row_bytes;
+                // A pack run is one contiguous span per batch; bridge the
+                // holes of already-resident rows so the run degenerates to
+                // ~one segment (bounded only by staging capacity and the
+                // one-device-per-segment stripe rule).
+                let run_cfg = CoalesceConfig { max_bytes: capacity, gap_bytes: capacity };
+                let mut segs: Vec<(SimFile, Segment)> =
+                    plan_rows(pp.pack_rows, row_bytes, &run_cfg, capacity, self.backend.stripe())
+                        .into_iter()
+                        .map(|s| (layout.packs.clone(), s))
+                        .collect();
+                // Hot-tier stragglers (not pinned yet): ordinary coalescing
+                // over the unstriped hot file.
+                segs.extend(
+                    plan_rows(pp.hot_rows, row_bytes, &coalesce, capacity, StripeSpec::single())
+                        .into_iter()
+                        .map(|s| (layout.hot_file.clone(), s)),
+                );
+                segs
+            }
+            // Stripe-aware online plan: segments stay inside one stripe
+            // chunk (one device per request) and are interleaved
+            // round-robin across devices so every per-device sub-queue
+            // fills from SQE one.
+            None => plan_segments_striped(
+                &plan.to_load,
+                &self.features,
+                &coalesce,
+                capacity,
+                self.backend.stripe(),
+            )
+            .into_iter()
+            .map(|s| (self.features.file.clone(), s))
+            .collect(),
+        };
 
         // Waves: pack segments into the staging arena until it is full,
         // flush, repeat. Each staging range is owned by its segment's
@@ -238,10 +330,10 @@ impl Extractor {
             let mut in_wave = Vec::new();
             let mut sqes = Vec::new();
             while next < segments.len() {
-                let seg = &segments[next];
+                let (file, seg) = &segments[next];
                 let Some(dst) = wave.alloc(seg.span) else { break };
                 sqes.push(Sqe {
-                    file: self.features.file.clone(),
+                    file: file.clone(),
                     offset: seg.offset,
                     len: seg.span,
                     useful: seg.useful,
@@ -326,7 +418,7 @@ impl Extractor {
         // would abort): their rows degrade to placeholders too, so the
         // plan's loading slots all resolve and `wait_plan` cannot hang.
         if poisoned {
-            for seg in &segments[next..] {
+            for (_, seg) in &segments[next..] {
                 fail_rows(&self.fb, &seg.rows, self.staging.row_bytes);
                 failed_nodes.extend(seg.rows.iter().map(|r| r.node));
             }

@@ -334,9 +334,9 @@ impl Dataset {
         let m_spec = machine.cfg.stripe_spec();
         if ds_spec != m_spec {
             anyhow::bail!(
-                "dataset stripe geometry ({} device(s), stripe {} B) does not match the \
-                 machine ({} device(s), stripe {} B); pass matching --devices/--stripe-bytes \
-                 or regenerate with `gen-data --devices …`",
+                "dataset stripe geometry mismatch: meta.toml expects {} device(s) with \
+                 stripe {} B, but the CLI (--devices/--stripe-bytes) configured {} device(s) \
+                 with stripe {} B; pass matching flags or regenerate with `gen-data --devices …`",
                 ds_spec.devices,
                 ds_spec.stripe_bytes,
                 m_spec.devices,

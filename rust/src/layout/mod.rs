@@ -1,0 +1,702 @@
+//! Offline pre-sampling + packed per-batch on-disk feature layout
+//! (DiskGNN-style, ROADMAP direction 2).
+//!
+//! The online extraction path pays one random (coalesced) read pattern per
+//! batch because batch membership is only known at train time. But the batch
+//! sequence is *deterministic* in the [`crate::sample::ScheduleSpec`]: seed,
+//! batch size, fanouts and per-epoch cap pin every `(epoch, batch_id)` →
+//! node-set mapping bit-for-bit. `pack_dataset` exploits that by running the
+//! sampler offline over the epochs' seed schedules and rewriting the feature
+//! rows each batch will touch into a layout the train-time extractor can
+//! read *sequentially*:
+//!
+//! - **Hot tier** (`hot.bin`): rows appearing in at least `hot_thresh`
+//!   batches are stored exactly once, in ascending node order, and pinned
+//!   into the [`crate::membuf::FeatureBuffer`] at attach time ([`pin_hot`]) —
+//!   the Ginex-style cache, but computed from the *exact* future access
+//!   trace instead of a degree heuristic.
+//! - **Cold packs** (`packs.bin`, or `packs.bin.{0..N-1}` striped): for every
+//!   `(epoch, batch)`, the batch's non-hot rows are laid out back to back as
+//!   one run whose start is aligned to the stripe chunk (striped) or the
+//!   device sector (unstriped). A run is read with ~one large sequential
+//!   request per device instead of hundreds of scattered row reads, and its
+//!   alignment padding lives *between* runs on disk, never inside a request —
+//!   so packed extraction's `align_overhead_bytes` drops below the online
+//!   coalesced plan's.
+//! - **Index** (`packs.idx` + `pack_*` keys in `meta.toml`): per-run byte
+//!   offsets and row tables, plus the schedule and stripe geometry the pack
+//!   was computed under. [`PackedLayout::load_dir`] refuses a machine with a
+//!   different pack geometry and [`PackedLayout::verify_schedule`] refuses a
+//!   trainer whose schedule would diverge from the pre-sampled one —
+//!   mirroring the dataset stripe-geometry handshake.
+//!
+//! Rows are duplicated across pack runs (classic space-for-I/O trade): disk
+//! grows by roughly the epoch's cold traffic, while charged SSD requests per
+//! packed batch collapse to ~`devices` + a few hot stragglers. Any batch the
+//! pack does not cover — extra epochs, a longer cap, a node the row tables
+//! cannot place — silently falls back to the online plan, byte-identical to
+//! an unpacked run.
+
+use crate::config::Machine;
+use crate::graph::Dataset;
+use crate::membuf::FeatureBuffer;
+use crate::sample::ScheduleSpec;
+use crate::storage::{
+    BackingRef, DataKind, FileBacking, FileId, IoBackend, SimFile, StripeSpec, StripedBacking,
+};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// `packs.idx` magic (version 1).
+const IDX_MAGIC: &[u8; 8] = b"GNNPACK1";
+
+/// Pack files get their own file-id range so they never collide with the
+/// dataset loader's ids in the page cache / per-file accounting.
+fn next_file_id() -> u32 {
+    static NEXT: AtomicU32 = AtomicU32::new(9000);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Summary of one `pack_dataset` run (reported by the `pack` subcommand and
+/// asserted on by the layout bench).
+#[derive(Debug, Clone)]
+pub struct PackStats {
+    pub epochs: u64,
+    pub batches_per_epoch: u64,
+    /// Rows promoted to the hot tier (stored once in `hot.bin`).
+    pub hot_rows: u64,
+    /// Cold rows written across all pack runs (with duplication).
+    pub cold_rows: u64,
+    /// Total bytes of `packs.bin` (all members), padding included.
+    pub pack_bytes: u64,
+    /// Alignment padding bytes between runs.
+    pub pad_bytes: u64,
+}
+
+/// Sequential writer for the pack file(s): streams logical bytes in order
+/// and splits them across striped members at chunk boundaries, so every
+/// member file is a pure append (same invariant as
+/// [`crate::graph::FeatureTable::write_file_striped`]).
+struct PackWriter {
+    writers: Vec<std::io::BufWriter<std::fs::File>>,
+    spec: StripeSpec,
+    off: u64,
+}
+
+impl PackWriter {
+    fn create(dir: &Path, spec: StripeSpec) -> std::io::Result<PackWriter> {
+        let paths: Vec<std::path::PathBuf> = if spec.is_striped() {
+            (0..spec.devices).map(|d| dir.join(format!("packs.bin.{d}"))).collect()
+        } else {
+            vec![dir.join("packs.bin")]
+        };
+        let mut writers = Vec::with_capacity(paths.len());
+        for p in &paths {
+            writers.push(std::io::BufWriter::with_capacity(1 << 20, std::fs::File::create(p)?));
+        }
+        Ok(PackWriter { writers, spec, off: 0 })
+    }
+
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        if self.writers.len() == 1 {
+            self.writers[0].write_all(buf)?;
+        } else {
+            let mut taken = 0usize;
+            for (dev, _local, run) in self.spec.split(self.off, buf.len()) {
+                self.writers[dev].write_all(&buf[taken..taken + run])?;
+                taken += run;
+            }
+        }
+        self.off += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Zero-pad to the next multiple of `align`; returns the pad size.
+    fn pad_to(&mut self, align: u64) -> std::io::Result<u64> {
+        let pad = (align - self.off % align) % align;
+        if pad > 0 {
+            self.write(&vec![0u8; pad as usize])?;
+        }
+        Ok(pad)
+    }
+
+    fn finish(mut self) -> std::io::Result<u64> {
+        for w in &mut self.writers {
+            w.flush()?;
+        }
+        Ok(self.off)
+    }
+}
+
+/// Pre-sample `epochs` epochs of `schedule` over `ds` and write the packed
+/// layout (`hot.bin`, `packs.bin[.d]`, `packs.idx`, `pack_*` meta keys) into
+/// `dir` — the directory the dataset was `gen-data`'d into. Re-packing
+/// replaces any previous pack in place.
+pub fn pack_dataset(
+    machine: &Machine,
+    ds: &Dataset,
+    dir: &Path,
+    schedule: &ScheduleSpec,
+    epochs: u64,
+    hot_thresh: u32,
+) -> anyhow::Result<PackStats> {
+    anyhow::ensure!(epochs > 0, "pack: need at least one epoch");
+    anyhow::ensure!(hot_thresh > 0, "pack: --pack-hot-thresh must be positive");
+
+    // 1. Offline pre-sampling: replay the exact batch sequence the trainer
+    //    will run (same plan, same per-batch sampler streams) and record
+    //    each batch's sampled node set.
+    let mut per_epoch: Vec<Vec<Vec<u32>>> = Vec::with_capacity(epochs as usize);
+    for epoch in 0..epochs {
+        let plan = schedule.plan(&ds.train_ids, epoch);
+        let sampler = schedule.sampler(epoch);
+        let mut batches: Vec<Vec<u32>> = Vec::with_capacity(plan.len());
+        while let Some((batch_id, seeds)) = plan.claim() {
+            let sg = sampler.sample_batch(ds, machine.backend.as_ref(), batch_id, seeds);
+            debug_assert_eq!(batch_id as usize, batches.len(), "serial claim is in order");
+            batches.push(sg.nodes);
+        }
+        per_epoch.push(batches);
+    }
+    let batches_per_epoch = per_epoch[0].len() as u64;
+    anyhow::ensure!(batches_per_epoch > 0, "pack: schedule yields zero batches");
+
+    // 2. Hot/cold split: batch-frequency per node across the whole plan.
+    let mut freq: HashMap<u32, u32> = HashMap::new();
+    for batches in &per_epoch {
+        for nodes in batches {
+            for &n in nodes {
+                *freq.entry(n).or_insert(0) += 1;
+            }
+        }
+    }
+    let mut hot: Vec<u32> =
+        freq.iter().filter(|&(_, &c)| c >= hot_thresh).map(|(&n, _)| n).collect();
+    hot.sort_unstable();
+    let hot_set: std::collections::HashSet<u32> = hot.iter().copied().collect();
+
+    let row_bytes = ds.features.row_bytes();
+    let mut row = vec![0u8; row_bytes as usize];
+
+    // 3. Hot tier: each hot row once, ascending node order (rank == index).
+    {
+        let f = std::fs::File::create(dir.join("hot.bin"))?;
+        let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+        for &n in &hot {
+            ds.features.file.backing.read_at(ds.features.row_offset(n as u64), &mut row);
+            w.write_all(&row)?;
+        }
+        w.flush()?;
+    }
+
+    // 4. Cold packs: one aligned sequential run per (epoch, batch). Runs
+    //    start on a stripe-chunk (striped) or sector (unstriped) boundary so
+    //    the direct-I/O read of a run never widens past the run itself.
+    let spec = machine.cfg.stripe_spec();
+    let align = if spec.is_striped() { spec.stripe_bytes } else { machine.backend.sector() as u64 };
+    let mut pw = PackWriter::create(dir, spec)?;
+    let mut runs: Vec<(u64, Vec<u32>)> = Vec::with_capacity((epochs * batches_per_epoch) as usize);
+    let mut cold_rows = 0u64;
+    let mut pad_bytes = 0u64;
+    for batches in &per_epoch {
+        anyhow::ensure!(
+            batches.len() as u64 == batches_per_epoch,
+            "pack: epoch batch counts diverge ({} vs {batches_per_epoch})",
+            batches.len()
+        );
+        for nodes in batches {
+            pad_bytes += pw.pad_to(align)?;
+            let offset = pw.off;
+            let cold: Vec<u32> = nodes.iter().copied().filter(|n| !hot_set.contains(n)).collect();
+            for &n in &cold {
+                ds.features.file.backing.read_at(ds.features.row_offset(n as u64), &mut row);
+                pw.write(&row)?;
+            }
+            cold_rows += cold.len() as u64;
+            runs.push((offset, cold));
+        }
+    }
+    let pack_bytes = pw.finish()?;
+
+    // 5. Index: binary row tables + human-auditable schedule/geometry keys
+    //    in meta.toml (the handshake side).
+    write_index(&dir.join("packs.idx"), epochs, batches_per_epoch, &hot, &runs)?;
+    write_meta_keys(
+        &dir.join("meta.toml"),
+        schedule,
+        epochs,
+        batches_per_epoch,
+        hot_thresh,
+        spec,
+        hot.len() as u64,
+    )?;
+
+    Ok(PackStats {
+        epochs,
+        batches_per_epoch,
+        hot_rows: hot.len() as u64,
+        cold_rows,
+        pack_bytes,
+        pad_bytes,
+    })
+}
+
+fn write_index(
+    path: &Path,
+    epochs: u64,
+    batches_per_epoch: u64,
+    hot: &[u32],
+    runs: &[(u64, Vec<u32>)],
+) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+    w.write_all(IDX_MAGIC)?;
+    w.write_all(&epochs.to_le_bytes())?;
+    w.write_all(&batches_per_epoch.to_le_bytes())?;
+    w.write_all(&(hot.len() as u64).to_le_bytes())?;
+    for &n in hot {
+        w.write_all(&n.to_le_bytes())?;
+    }
+    for (offset, nodes) in runs {
+        w.write_all(&offset.to_le_bytes())?;
+        w.write_all(&(nodes.len() as u64).to_le_bytes())?;
+        for &n in nodes {
+            w.write_all(&n.to_le_bytes())?;
+        }
+    }
+    w.flush()
+}
+
+/// Append (or replace) the `pack_*` keys in `meta.toml`. The keys are the
+/// load-time handshake: schedule identity + the stripe geometry the pack
+/// offsets were computed under.
+fn write_meta_keys(
+    meta_path: &Path,
+    schedule: &ScheduleSpec,
+    epochs: u64,
+    batches_per_epoch: u64,
+    hot_thresh: u32,
+    spec: StripeSpec,
+    hot_rows: u64,
+) -> anyhow::Result<()> {
+    let old = std::fs::read_to_string(meta_path)?;
+    let mut meta: String =
+        old.lines().filter(|l| !l.trim_start().starts_with("pack_")).collect::<Vec<_>>().join("\n");
+    if !meta.is_empty() && !meta.ends_with('\n') {
+        meta.push('\n');
+    }
+    meta.push_str(&format!(
+        "pack_seed = {}\npack_batch_size = {}\npack_fanouts = \"{}\"\npack_epochs = {}\n\
+         pack_batches = {}\npack_hot_thresh = {}\npack_hot_rows = {}\n\
+         pack_devices = {}\npack_stripe_bytes = {}\n",
+        schedule.seed,
+        schedule.batch_size,
+        schedule.fanouts_str(),
+        epochs,
+        batches_per_epoch,
+        hot_thresh,
+        hot_rows,
+        spec.devices,
+        spec.stripe_bytes,
+    ));
+    std::fs::write(meta_path, meta)?;
+    Ok(())
+}
+
+/// One pre-sampled batch's extraction plan, resolved against the buffer's
+/// `to_load` list: byte offsets into the pack file / hot file per missing
+/// row. Produced by [`PackedLayout::plan_batch`], consumed by
+/// [`crate::extract::Extractor::try_extract_at`].
+pub struct PackedBatchPlan {
+    /// `(pack-file byte offset, node, slot)` — rows of this batch's
+    /// sequential run, contiguous up to already-resident holes.
+    pub pack_rows: Vec<(u64, u32, u32)>,
+    /// `(hot-file byte offset, node, slot)` — hot-tier rows not (yet)
+    /// buffer-resident, e.g. before/without pinning.
+    pub hot_rows: Vec<(u64, u32, u32)>,
+}
+
+/// One `(epoch, batch)` pack run: its byte offset and node → row-rank table.
+struct PackEntry {
+    offset: u64,
+    rank: HashMap<u32, u32>,
+}
+
+/// A loaded packed layout: the index in memory plus open handles to the pack
+/// and hot files. Shared read-only across extractors (`Arc`).
+pub struct PackedLayout {
+    /// Schedule the pack was pre-sampled under (handshake identity).
+    pub seed: u64,
+    pub batch_size: usize,
+    pub fanouts: Vec<usize>,
+    pub epochs: u64,
+    pub batches_per_epoch: u64,
+    pub hot_thresh: u32,
+    /// Hot-tier node ids, ascending; index in this list == row rank in
+    /// `hot.bin`.
+    pub hot: Vec<u32>,
+    hot_rank: HashMap<u32, u32>,
+    entries: Vec<PackEntry>,
+    pub packs: SimFile,
+    pub hot_file: SimFile,
+    pub row_bytes: u64,
+}
+
+impl PackedLayout {
+    /// Open the packed layout written by [`pack_dataset`] into `dir`.
+    /// Fails with a "not packed" error when the `pack_*` keys are absent,
+    /// and with an expected-vs-actual geometry error when the machine's
+    /// `--devices`/`--stripe-bytes` differ from the pack's — the same
+    /// handshake contract as the dataset stripe geometry check.
+    pub fn load_dir(dir: &Path, machine: &Machine) -> anyhow::Result<PackedLayout> {
+        let meta_path = dir.join("meta.toml");
+        let meta = crate::util::toml::Doc::parse(&std::fs::read_to_string(&meta_path)?)
+            .map_err(anyhow::Error::msg)?;
+        let seed = meta.get_i64("pack_seed").ok_or_else(|| {
+            anyhow::anyhow!(
+                "dataset at {} is not packed (no pack_* keys in meta.toml); \
+                 run `gnndrive pack --data …` first",
+                dir.display()
+            )
+        })? as u64;
+        let need = |k: &str| {
+            meta.get_i64(k).ok_or_else(|| anyhow::anyhow!("meta.toml: missing pack key {k}"))
+        };
+        let batch_size = need("pack_batch_size")? as usize;
+        let epochs = need("pack_epochs")? as u64;
+        let batches_per_epoch = need("pack_batches")? as u64;
+        let hot_thresh = need("pack_hot_thresh")? as u32;
+        let pack_devices = need("pack_devices")?.max(1) as usize;
+        let pack_stripe_bytes = need("pack_stripe_bytes")?.max(1) as u64;
+        let fanouts_s = meta
+            .get_str("pack_fanouts")
+            .ok_or_else(|| anyhow::anyhow!("meta.toml: missing pack key pack_fanouts"))?;
+        let fanouts: Vec<usize> = fanouts_s
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("meta.toml: bad pack_fanouts {fanouts_s:?}: {e}"))?;
+        let dim = meta.get_i64("dim").ok_or_else(|| anyhow::anyhow!("meta: dim"))? as usize;
+        let row_bytes = (dim * 4) as u64;
+
+        // Pack stripe-geometry handshake (mirrors the dataset one): run
+        // offsets were aligned to this geometry; a different machine layout
+        // would mistranslate logical ↔ device offsets.
+        let pack_spec = StripeSpec::new(pack_devices, pack_stripe_bytes);
+        let m_spec = machine.cfg.stripe_spec();
+        if pack_spec != m_spec {
+            anyhow::bail!(
+                "packed layout stripe geometry mismatch: meta.toml expects {} device(s) with \
+                 stripe {} B, but the CLI (--devices/--stripe-bytes) configured {} device(s) \
+                 with stripe {} B; pass matching flags or re-run `gnndrive pack`",
+                pack_spec.devices,
+                pack_spec.stripe_bytes,
+                m_spec.devices,
+                m_spec.stripe_bytes,
+            );
+        }
+
+        let packs_backing: BackingRef = if pack_spec.is_striped() {
+            let mut members: Vec<BackingRef> = Vec::with_capacity(pack_devices);
+            for d in 0..pack_devices {
+                members.push(Arc::new(FileBacking::open(&dir.join(format!("packs.bin.{d}")))?));
+            }
+            Arc::new(StripedBacking::new(members, pack_stripe_bytes))
+        } else {
+            Arc::new(FileBacking::open(&dir.join("packs.bin"))?)
+        };
+        let packs = SimFile::new(FileId::new(next_file_id(), DataKind::Features), packs_backing);
+        let hot_backing: BackingRef = Arc::new(FileBacking::open(&dir.join("hot.bin"))?);
+        let hot_file = SimFile::new(FileId::new(next_file_id(), DataKind::Features), hot_backing);
+
+        let (hot, entries) = read_index(&dir.join("packs.idx"), epochs, batches_per_epoch)?;
+        let hot_rank: HashMap<u32, u32> =
+            hot.iter().enumerate().map(|(i, &n)| (n, i as u32)).collect();
+
+        Ok(PackedLayout {
+            seed,
+            batch_size,
+            fanouts,
+            epochs,
+            batches_per_epoch,
+            hot_thresh,
+            hot,
+            hot_rank,
+            entries,
+            packs,
+            hot_file,
+            row_bytes,
+        })
+    }
+
+    /// Refuse a trainer schedule that would diverge from the pre-sampled
+    /// one. Strict on sampler seed / batch size / fanouts (any difference
+    /// changes batch node sets); the per-epoch cap may differ — a capped
+    /// plan is a prefix of the uncapped one, so a shorter train run replays
+    /// exactly and a longer one falls back online past the packed range.
+    pub fn verify_schedule(&self, spec: &ScheduleSpec) -> anyhow::Result<()> {
+        if spec.seed != self.seed
+            || spec.batch_size != self.batch_size
+            || spec.fanouts != self.fanouts
+        {
+            anyhow::bail!(
+                "packed layout schedule mismatch: meta.toml expects pack sampler seed {} \
+                 (batch size {}, fanouts \"{}\"), but the CLI configured seed {} (batch size {}, \
+                 fanouts \"{}\"); pass matching --seed/--batch-size/--fanouts or re-run \
+                 `gnndrive pack`",
+                self.seed,
+                self.batch_size,
+                self.fanouts.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(","),
+                spec.seed,
+                spec.batch_size,
+                spec.fanouts.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(","),
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether `node` is in the hot tier.
+    pub fn is_hot(&self, node: u32) -> bool {
+        self.hot_rank.contains_key(&node)
+    }
+
+    /// Resolve a batch's missing rows against the pack: `Some` with per-row
+    /// byte offsets when `(epoch, batch_id)` is covered and *every* missing
+    /// row can be placed (pack run or hot tier); `None` → caller falls back
+    /// to the online plan for the whole batch.
+    pub fn plan_batch(
+        &self,
+        epoch: u64,
+        batch_id: u64,
+        to_load: &[(u32, u32)],
+    ) -> Option<PackedBatchPlan> {
+        if epoch >= self.epochs || batch_id >= self.batches_per_epoch {
+            return None;
+        }
+        let entry = self.entries.get((epoch * self.batches_per_epoch + batch_id) as usize)?;
+        let mut pack_rows = Vec::with_capacity(to_load.len());
+        let mut hot_rows = Vec::new();
+        for &(node, slot) in to_load {
+            if let Some(&r) = entry.rank.get(&node) {
+                pack_rows.push((entry.offset + r as u64 * self.row_bytes, node, slot));
+            } else if let Some(&r) = self.hot_rank.get(&node) {
+                hot_rows.push((r as u64 * self.row_bytes, node, slot));
+            } else {
+                // A row the pre-sampler never saw for this batch: the
+                // schedules diverged (shouldn't happen post-handshake) or
+                // the caller passed a foreign batch. Punt wholesale.
+                return None;
+            }
+        }
+        Some(PackedBatchPlan { pack_rows, hot_rows })
+    }
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> anyhow::Result<&'a [u8]> {
+    let s = bytes
+        .get(*pos..*pos + n)
+        .ok_or_else(|| anyhow::anyhow!("packs.idx truncated at byte {pos}"))?;
+    *pos += n;
+    Ok(s)
+}
+
+fn rd_u64(bytes: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+}
+
+fn rd_u32(bytes: &[u8], pos: &mut usize) -> anyhow::Result<u32> {
+    Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()))
+}
+
+fn read_index(
+    path: &Path,
+    epochs: u64,
+    batches_per_epoch: u64,
+) -> anyhow::Result<(Vec<u32>, Vec<PackEntry>)> {
+    let bytes = std::fs::read(path)?;
+    let mut pos = 0usize;
+    let magic = take(&bytes, &mut pos, 8)?;
+    anyhow::ensure!(magic == IDX_MAGIC, "packs.idx: bad magic {magic:?}");
+    let idx_epochs = rd_u64(&bytes, &mut pos)?;
+    let idx_batches = rd_u64(&bytes, &mut pos)?;
+    anyhow::ensure!(
+        idx_epochs == epochs && idx_batches == batches_per_epoch,
+        "packs.idx disagrees with meta.toml: {idx_epochs}×{idx_batches} vs \
+         {epochs}×{batches_per_epoch} (re-run `gnndrive pack`)"
+    );
+    let hot_count = rd_u64(&bytes, &mut pos)? as usize;
+    let mut hot = Vec::with_capacity(hot_count);
+    for _ in 0..hot_count {
+        hot.push(rd_u32(&bytes, &mut pos)?);
+    }
+    let n_entries = (epochs * batches_per_epoch) as usize;
+    let mut entries = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let offset = rd_u64(&bytes, &mut pos)?;
+        let n_rows = rd_u64(&bytes, &mut pos)? as usize;
+        let mut rank = HashMap::with_capacity(n_rows);
+        for r in 0..n_rows {
+            rank.insert(rd_u32(&bytes, &mut pos)?, r as u32);
+        }
+        entries.push(PackEntry { offset, rank });
+    }
+    anyhow::ensure!(pos == bytes.len(), "packs.idx: {} trailing byte(s)", bytes.len() - pos);
+    Ok((hot, entries))
+}
+
+/// Pin up to `budget` hot-tier rows into the feature buffer and never
+/// release them: their references hold the rows resident for the whole run,
+/// so every later batch aliases them for free (`hot_hits`). Loads are
+/// charged as large sequential reads — `hot.bin` is read front to back.
+/// Returns the number of rows pinned; callers size `budget` to the slots the
+/// pipeline can spare ([`crate::pipeline::GnnDrive::attach_layout`]).
+pub fn pin_hot(
+    fb: &FeatureBuffer,
+    layout: &PackedLayout,
+    io: &dyn IoBackend,
+    budget: usize,
+) -> usize {
+    let n = budget.min(layout.hot.len());
+    if n == 0 {
+        return 0;
+    }
+    let row_bytes = layout.row_bytes as usize;
+    let mut buf = vec![0u8; row_bytes];
+    let mut pinned = 0usize;
+    // Chunked so each begin_batch stays far below the buffer's claimable
+    // headroom (the caller's budget guarantees total fit).
+    for chunk in layout.hot[..n].chunks(256) {
+        let plan = fb.begin_batch(chunk);
+        for &(node, slot) in &plan.to_load {
+            let r = layout.hot_rank[&node];
+            layout.hot_file.backing.read_at(r as u64 * layout.row_bytes, &mut buf);
+            fb.publish_le_bytes(node, slot, &buf);
+        }
+        if !plan.to_load.is_empty() {
+            io.charge_read(plan.to_load.len() * row_bytes);
+        }
+        fb.wait_plan(&plan);
+        // Intentionally no release: the plan's references are the pin.
+        pinned += chunk.len();
+    }
+    pinned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::graph::DatasetSpec;
+    use crate::sim::Clock;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec::by_name("unit-test").unwrap()
+    }
+
+    fn temp_dir(stem: &str) -> std::path::PathBuf {
+        static SEQ: AtomicU32 = AtomicU32::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "gnndrive_layout_{stem}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn schedule() -> ScheduleSpec {
+        ScheduleSpec { seed: 17, batch_size: 64, fanouts: vec![4, 4], batches_per_epoch: Some(4) }
+    }
+
+    #[test]
+    fn pack_then_load_roundtrips_and_places_every_row() {
+        let dir = temp_dir("roundtrip");
+        let spec = tiny_spec();
+        Dataset::write_dir(&spec, &dir).unwrap();
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::load_dir(&dir, &machine).unwrap();
+        let sched = schedule();
+        let stats = pack_dataset(&machine, &ds, &dir, &sched, 2, 2).unwrap();
+        assert_eq!(stats.epochs, 2);
+        assert_eq!(stats.batches_per_epoch, 4);
+
+        let layout = PackedLayout::load_dir(&dir, &machine).unwrap();
+        layout.verify_schedule(&sched).unwrap();
+        assert_eq!(layout.hot.len() as u64, stats.hot_rows);
+
+        // Replay the schedule: every sampled node of every covered batch
+        // must place (pack run or hot tier), and pack rows must read back
+        // the exact feature bytes.
+        let mut row = vec![0u8; ds.features.row_bytes() as usize];
+        let mut expect = vec![0u8; ds.features.row_bytes() as usize];
+        for epoch in 0..2u64 {
+            let plan = sched.plan(&ds.train_ids, epoch);
+            let sampler = sched.sampler(epoch);
+            while let Some((bid, seeds)) = plan.claim() {
+                let nodes = sampler.sample_batch(&ds, machine.backend.as_ref(), bid, seeds).nodes;
+                let to_load: Vec<(u32, u32)> =
+                    nodes.iter().map(|&n| (n, 0u32)).collect();
+                let pp = layout.plan_batch(epoch, bid, &to_load).expect("batch covered");
+                assert_eq!(pp.pack_rows.len() + pp.hot_rows.len(), nodes.len());
+                for &(off, node, _) in pp.pack_rows.iter().take(8) {
+                    layout.packs.backing.read_at(off, &mut row);
+                    ds.features.file.backing.read_at(ds.features.row_offset(node as u64), &mut expect);
+                    assert_eq!(row, expect, "pack row for node {node}");
+                }
+                for &(off, node, _) in pp.hot_rows.iter().take(8) {
+                    layout.hot_file.backing.read_at(off, &mut row);
+                    ds.features.file.backing.read_at(ds.features.row_offset(node as u64), &mut expect);
+                    assert_eq!(row, expect, "hot row for node {node}");
+                }
+            }
+        }
+        // Outside the packed range: graceful fallback.
+        assert!(layout.plan_batch(2, 0, &[]).is_none());
+        assert!(layout.plan_batch(0, 99, &[]).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schedule_mismatch_is_refused_with_expected_vs_actual() {
+        let dir = temp_dir("handshake");
+        let spec = tiny_spec();
+        Dataset::write_dir(&spec, &dir).unwrap();
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::load_dir(&dir, &machine).unwrap();
+        let sched = schedule();
+        pack_dataset(&machine, &ds, &dir, &sched, 1, 2).unwrap();
+        let layout = PackedLayout::load_dir(&dir, &machine).unwrap();
+
+        let mut other = sched.clone();
+        other.seed ^= 1;
+        let err = layout.verify_schedule(&other).unwrap_err().to_string();
+        assert!(err.contains("pack sampler seed"), "{err}");
+        assert!(err.contains(&format!("seed {}", sched.seed)), "{err}");
+        assert!(err.contains(&format!("seed {}", other.seed)), "{err}");
+        // Cap-only differences are allowed (prefix replay).
+        let mut capped = sched.clone();
+        capped.batches_per_epoch = Some(2);
+        layout.verify_schedule(&capped).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_starts_are_aligned() {
+        let dir = temp_dir("align");
+        let spec = tiny_spec();
+        Dataset::write_dir(&spec, &dir).unwrap();
+        let machine = Machine::new(MachineConfig::paper(), Clock::new(0.05));
+        let ds = Dataset::load_dir(&dir, &machine).unwrap();
+        pack_dataset(&machine, &ds, &dir, &schedule(), 1, 2).unwrap();
+        let layout = PackedLayout::load_dir(&dir, &machine).unwrap();
+        let sector = machine.backend.sector() as u64;
+        for e in &layout.entries {
+            assert_eq!(e.offset % sector, 0, "run offset {} not sector-aligned", e.offset);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,7 @@ pub mod bench;
 pub mod config;
 pub mod experiments;
 pub mod graph;
+pub mod layout;
 pub mod metrics;
 pub mod extract;
 pub mod membuf;

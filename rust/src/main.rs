@@ -4,9 +4,24 @@
 //!   gen-data   materialize a dataset to a real on-disk directory
 //!   table1     print the dataset summary (paper Table 1)
 //!   train      run epochs of one system on one dataset (sim or PJRT)
+//!   pack       pre-sample the epoch schedule offline and rewrite an
+//!              on-disk dataset into a packed per-batch layout (hot.bin +
+//!              sequential per-batch packs); `train --packed` then serves
+//!              covered batches with ~one large request per device
 //!   serve      multi-tenant online-inference frontend over the same stack
 //!   figure     regenerate a paper figure/table (2,3,8,9,10,11,12,13,14,tab2,b1)
 //!   iostat     fio-style sync/async I/O study on the SSD model (Fig B.1)
+//!
+//! Packed layout workflow (`pack` → `train --packed`):
+//!   gnndrive gen-data --dataset papers-tiny --out d
+//!   gnndrive pack --data d --pack-epochs 2 --pack-hot-thresh 2 \
+//!       --batch-size 1000 --fanouts 10,10,10 --seed 17
+//!   gnndrive train --backend os --data d --packed --epochs 2 \
+//!       --batch-size 1000 --fanouts 10,10,10 --seed 17
+//! The pack records its schedule (seed/batch-size/fanouts) and stripe
+//! geometry in `meta.toml`; `train --packed` refuses a mismatched schedule
+//! or geometry, and batches beyond the packed range fall back to the online
+//! extraction path unchanged.
 //!
 //! The I/O stack is pluggable (`--backend`):
 //!   sim   simulated SSD + page cache (default; the paper's timing model)
@@ -50,10 +65,12 @@
 //! responses instead). On a striped array `--fault-device i` confines the
 //! storm to the stripe member `i` (a single-device brownout).
 
-use gnndrive::baselines::{build_system, SystemKind};
+use gnndrive::baselines::{build_system, sim_trainer, SystemKind};
 use gnndrive::config::{FaultProfile, Machine, MachineConfig, OnIoError, TrainConfig};
 use gnndrive::extract::CoalesceConfig;
 use gnndrive::graph::{Dataset, DatasetSpec};
+use gnndrive::layout::PackedLayout;
+use gnndrive::pipeline::{GnnDrive, Variant};
 use gnndrive::runtime::simcompute::ModelKind;
 use gnndrive::serve::{BatchSpec, ServeConfig, ServeEngine, ServeReport};
 use gnndrive::sim::Clock;
@@ -64,7 +81,7 @@ use std::sync::Arc;
 fn main() {
     let args = Args::new(
         "gnndrive — disk-based GNN training (ICPP '24 reproduction)\n\n\
-         USAGE: gnndrive <gen-data|table1|train|serve|figure|iostat> [options]",
+         USAGE: gnndrive <gen-data|table1|train|pack|serve|figure|iostat> [options]",
     )
     .opt("dataset", "papers100m-mini", "dataset name (see table1)")
     .opt("system", "gnndrive", "gnndrive|gnndrive-cpu|pyg+|ginex|marius (case-insensitive)")
@@ -97,6 +114,13 @@ fn main() {
     .opt("batches", "", "mini-batches per epoch (default: full epoch)")
     .opt("batch-size", "1000", "mini-batch size")
     .opt("fanouts", "10,10,10", "comma-separated neighbor fanouts")
+    .opt("seed", "17", "shuffle/sampling seed (must match between pack and train --packed)")
+    .opt("pack-epochs", "1", "pack: epochs of the schedule to pre-sample and pack")
+    .opt(
+        "pack-hot-thresh",
+        "2",
+        "pack: rows appearing in at least this many batches go to the hot tier (hot.bin)",
+    )
     .opt("memory-gb", "32", "host memory in paper-scale GB (divided by 256)")
     .opt("dim", "", "feature dimension override")
     .opt("out", "data/papers-tiny", "output directory for gen-data")
@@ -148,6 +172,11 @@ fn main() {
         "serve-while-train",
         "serve: run a concurrent training loop sharing the serving feature buffer",
     )
+    .flag(
+        "packed",
+        "train: serve pre-sampled batches from the packed layout in --data \
+         (a `gnndrive pack` output); gnndrive system only",
+    )
     .flag("full", "full sweep grids for `figure` (default: quick)")
     .parse();
 
@@ -159,6 +188,7 @@ fn main() {
             0
         }
         "train" => cmd_train(&args),
+        "pack" => cmd_pack(&args),
         "serve" => cmd_serve(&args),
         "figure" => cmd_figure(&args),
         "iostat" => {
@@ -170,7 +200,10 @@ fn main() {
             if cmd == "help" {
                 0
             } else {
-                eprintln!("\nunknown command {cmd:?}");
+                eprintln!(
+                    "\nunknown command {cmd:?}; valid commands: \
+                     gen-data, table1, train, pack, serve, figure, iostat"
+                );
                 2
             }
         }
@@ -221,10 +254,23 @@ fn parse_fanouts(s: &str) -> Vec<usize> {
     s.split(',').filter_map(|p| p.trim().parse().ok()).collect()
 }
 
-/// Parse `--stripe-bytes`; `Err` carries the process exit code.
+/// Parse and validate `--stripe-bytes`; `Err` carries the process exit
+/// code. Both backends issue sector-granular direct I/O, so a stripe chunk
+/// that is not a positive multiple of the sector would split requests at
+/// unreadable offsets — reject it at parse time instead.
 fn parse_stripe_bytes(args: &Args) -> Result<u64, i32> {
+    const SECTOR: u64 = 512; // MachineConfig::paper() sector, both backends
     match gnndrive::util::units::parse_bytes(args.get_or_default("stripe-bytes")) {
-        Ok(v) => Ok(v.max(1)),
+        Ok(v) if v > 0 && v % SECTOR == 0 => Ok(v),
+        Ok(v) => {
+            eprintln!(
+                "--stripe-bytes: {} is not a positive multiple of the {}-byte device sector \
+                 (try 4KiB, 64KiB, 1MiB, …)",
+                gnndrive::util::units::fmt_bytes(v),
+                SECTOR,
+            );
+            Err(2)
+        }
         Err(e) => {
             eprintln!("--stripe-bytes: {e}");
             Err(2)
@@ -412,6 +458,7 @@ fn cmd_train(args: &Args) -> i32 {
         batch_size: args.get_usize("batch-size").unwrap_or(1000),
         fanouts: parse_fanouts(args.get_or_default("fanouts")),
         batches_per_epoch: args.get("batches").and_then(|b| b.parse().ok()),
+        seed: args.get_usize("seed").unwrap_or(17) as u64,
         coalesce_bytes,
         coalesce_gap,
         on_io_error,
@@ -429,6 +476,9 @@ fn cmd_train(args: &Args) -> i32 {
         gnndrive::util::units::fmt_bytes(machine.cfg.host_mem),
         machine.backend.name(),
     );
+    if args.has("packed") {
+        return cmd_train_packed(args, kind, &machine, &ds, cfg, model, epochs);
+    }
     let mut sys = match build_system(kind, &machine, &ds, cfg, model) {
         Ok(s) => s,
         Err(e) => {
@@ -446,6 +496,112 @@ fn cmd_train(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// `train --packed`: build the GNNDrive engine directly (the packed layout
+/// is a GNNDrive-only mechanism), attach the layout from `--data`, run.
+fn cmd_train_packed(
+    args: &Args,
+    kind: SystemKind,
+    machine: &Arc<Machine>,
+    ds: &Arc<Dataset>,
+    cfg: TrainConfig,
+    model: ModelKind,
+    epochs: usize,
+) -> i32 {
+    if kind != SystemKind::GnnDriveGpu {
+        eprintln!("--packed is only supported for --system gnndrive");
+        return 2;
+    }
+    let Some(dir) = args.get("data").filter(|d| !d.is_empty()) else {
+        eprintln!(
+            "--packed serves batches from a packed on-disk layout and needs \
+             --data <dir> (a `gnndrive pack` output)"
+        );
+        return 2;
+    };
+    let layout = match PackedLayout::load_dir(std::path::Path::new(dir), machine) {
+        Ok(l) => Arc::new(l),
+        Err(e) => {
+            eprintln!("packed layout {dir:?}: {e}");
+            return 1;
+        }
+    };
+    let trainer = sim_trainer(machine, ds, &cfg, model, Variant::Gpu, 256);
+    let mut engine = match GnnDrive::new(machine, ds, cfg, Variant::Gpu, trainer) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("gnndrive: {e}");
+            return 1;
+        }
+    };
+    match engine.attach_layout(layout) {
+        Ok(pinned) => println!("packed layout attached: {pinned} hot row(s) pinned"),
+        Err(e) => {
+            eprintln!("packed layout: {e}");
+            return 1;
+        }
+    }
+    for e in 0..epochs {
+        match engine.try_run_epoch(e as u64) {
+            Ok(st) => println!("epoch {e}: {}", st.summary()),
+            Err(err) => {
+                eprintln!("epoch {e}: {err}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// `pack`: pre-sample `--pack-epochs` epochs of the train schedule and
+/// rewrite the dataset dir into the packed layout.
+fn cmd_pack(args: &Args) -> i32 {
+    let Some(dir) = args.get("data").filter(|d| !d.is_empty()) else {
+        eprintln!(
+            "pack rewrites an on-disk dataset in place and needs --data <dir> \
+             (a `gnndrive gen-data` output)"
+        );
+        return 2;
+    };
+    let dir = std::path::PathBuf::from(dir);
+    let (machine, ds) = match setup_machine_and_dataset(args) {
+        Ok(pair) => pair,
+        Err(code) => return code,
+    };
+    let cfg = TrainConfig {
+        batch_size: args.get_usize("batch-size").unwrap_or(1000),
+        fanouts: parse_fanouts(args.get_or_default("fanouts")),
+        batches_per_epoch: args.get("batches").and_then(|b| b.parse().ok()),
+        seed: args.get_usize("seed").unwrap_or(17) as u64,
+        ..TrainConfig::default()
+    };
+    let schedule = cfg.schedule_spec();
+    let epochs = args.get_usize("pack-epochs").unwrap_or(1).max(1) as u64;
+    let hot_thresh = args.get_usize("pack-hot-thresh").unwrap_or(2).max(1) as u32;
+    println!(
+        "packing {dir:?}: {epochs} epoch(s), batch {}, fanouts {:?}, seed {}, hot-thresh {hot_thresh} …",
+        schedule.batch_size, schedule.fanouts, schedule.seed,
+    );
+    match gnndrive::layout::pack_dataset(&machine, &ds, &dir, &schedule, epochs, hot_thresh) {
+        Ok(st) => {
+            println!(
+                "packed: {} epoch(s) × {} batch(es), {} hot row(s), {} cold row(s), \
+                 packs {} ({} alignment pad)",
+                st.epochs,
+                st.batches_per_epoch,
+                st.hot_rows,
+                st.cold_rows,
+                gnndrive::util::units::fmt_bytes(st.pack_bytes),
+                gnndrive::util::units::fmt_bytes(st.pad_bytes),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("pack failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_serve(args: &Args) -> i32 {

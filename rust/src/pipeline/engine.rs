@@ -12,9 +12,10 @@
 use crate::config::{Machine, OnIoError, TrainConfig};
 use crate::extract::{CoalesceConfig, ExtractError, ExtractOptions, ExtractTarget, Extractor};
 use crate::graph::Dataset;
+use crate::layout::PackedLayout;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::metrics::state::{self, Role, State};
-use crate::sample::{EpochPlan, PaddedSubgraph, Sampler};
+use crate::sample::PaddedSubgraph;
 use crate::sim::queue::BoundedQueue;
 use crate::sim::Stopwatch;
 use crate::storage::{EpochIoSnapshot, IoBackend as _};
@@ -114,6 +115,12 @@ pub struct EpochStats {
     pub queue_highwater: Vec<u64>,
     /// The per-device `--io-depth` budget the high-water marks compare to.
     pub io_depth_per_device: usize,
+    /// Batches served from the packed layout this epoch (`train --packed`;
+    /// zero on unpacked runs — the log line stays byte-identical).
+    pub packed_batches: usize,
+    /// Hot-tier rows that were already buffer-resident when their packed
+    /// batch began (the pin's payoff).
+    pub hot_hits: u64,
 }
 
 impl EpochStats {
@@ -154,6 +161,13 @@ impl EpochStats {
                     self.queue_highwater.iter().map(|h| h.to_string()).collect();
                 s.push_str(&format!("  q[{}]/{}", q.join(","), self.io_depth_per_device));
             }
+        }
+        // Packed-layout runs only (the unpacked log line stays byte-identical).
+        if self.packed_batches > 0 {
+            s.push_str(&format!(
+                "  packed {}/{}  hot_hits {}",
+                self.packed_batches, self.batches, self.hot_hits
+            ));
         }
         s
     }
@@ -291,6 +305,48 @@ impl GnnDrive {
         self.variant
     }
 
+    /// Attach a packed layout (`train --packed`): verifies the schedule
+    /// handshake, pins as many hot-tier rows as the feature buffer can spare
+    /// beyond the pipeline's working floor, and hands the layout to every
+    /// extractor so covered batches extract from their sequential pack runs.
+    /// Returns the number of hot rows pinned.
+    pub fn attach_layout(&mut self, layout: Arc<PackedLayout>) -> anyhow::Result<usize> {
+        layout.verify_schedule(&self.cfg.schedule_spec())?;
+        anyhow::ensure!(
+            self.cfg.segment.is_none(),
+            "packed layout was pre-sampled over the full train split; \
+             it cannot serve a segmented (multi-worker) plan"
+        );
+        // Pin budget: slots beyond what the pipeline needs to keep
+        // `groups` batches in flight at the padded cap. With the default
+        // --feature-buffer-mult 1 this is ~0 (no pin — hot rows still read
+        // sequentially from hot.bin); raise the mult to buy pin headroom.
+        let cap_l = *self.caps.last().unwrap();
+        let mut groups = self.cfg.train_queue_cap + self.cfg.extractors + 1;
+        if self.cfg.enforce_order {
+            groups += self.cfg.extractors;
+        }
+        let floor = groups * cap_l;
+        let budget = self.fb.n_slots.saturating_sub(floor);
+        let pinned =
+            crate::layout::pin_hot(&self.fb, &layout, self.machine.backend.as_ref(), budget);
+        for ex in &self.extractors {
+            ex.lock().unwrap_or_else(|e| e.into_inner()).set_layout(layout.clone());
+        }
+        Ok(pinned)
+    }
+
+    /// Sum of `(packed_batches, hot_hits)` across this engine's extractors.
+    fn packed_totals(&self) -> (u64, u64) {
+        let mut t = (0u64, 0u64);
+        for ex in &self.extractors {
+            let (p, h) = ex.lock().unwrap_or_else(|e| e.into_inner()).packed_stats();
+            t.0 += p;
+            t.1 += h;
+        }
+        t
+    }
+
     /// This engine's share of the train split (strided segment, §4.3).
     fn segment_ids(&self) -> Vec<u32> {
         match self.cfg.segment {
@@ -331,13 +387,11 @@ impl GnnDrive {
     pub fn try_run_epoch(&self, epoch: u64) -> anyhow::Result<EpochStats> {
         let clock = &self.machine.clock;
         let ids = self.segment_ids();
-        let plan = EpochPlan::new(
-            &ids,
-            self.cfg.batch_size,
-            self.cfg.seed,
-            epoch,
-            self.cfg.batches_per_epoch,
-        );
+        // One ScheduleSpec derives both the plan and the samplers, so this
+        // epoch replays bit-identically to the offline pre-sampler's
+        // (`layout::pack_dataset`) — the packed-extraction correctness hinge.
+        let schedule = self.cfg.schedule_spec();
+        let plan = schedule.plan(&ids, epoch);
         let total_batches = plan.len();
         let extract_q = BoundedQueue::<Arc<PaddedSubgraph>>::new(self.cfg.extract_queue_cap);
         let train_q = BoundedQueue::<TrainItem>::new(self.cfg.train_queue_cap);
@@ -361,6 +415,8 @@ impl GnnDrive {
         let epoch_watch = Stopwatch::start(clock);
         let io_snap = EpochIoSnapshot::start(self.machine.backend.as_ref());
         let dev_snap = self.machine.backend.device_io_snapshot();
+        // Extractor packed counters are cumulative; take per-epoch deltas.
+        let packed0 = self.packed_totals();
 
         std::thread::scope(|s| {
             // ---- samplers ----
@@ -370,8 +426,7 @@ impl GnnDrive {
                 let sample_ns = &sample_ns;
                 let samplers_left = &samplers_left;
                 let truncated = &truncated;
-                let sampler =
-                    Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8));
+                let sampler = schedule.sampler(epoch);
                 s.spawn(move || {
                     state::register(Role::Sampler);
                     let _ = t;
@@ -423,7 +478,8 @@ impl GnnDrive {
                         };
                         let sw = Stopwatch::start(clock);
                         let nodes = &padded.nodes[..padded.real_nodes];
-                        let mut result = ex.try_extract(nodes);
+                        let ctx = Some((epoch, padded.batch_id));
+                        let mut result = ex.try_extract_at(nodes, ctx);
                         if let (Err(e), OnIoError::Retry) = (&result, on_io_error) {
                             // One bounded re-extract: drop the degraded
                             // batch's refs, evict the failed rows' zeroed
@@ -431,7 +487,7 @@ impl GnnDrive {
                             // them as cached hits), read again.
                             fb.release_aliases(&e.aliases);
                             fb.evict_if_idle(&e.failed_nodes);
-                            result = ex.try_extract(nodes);
+                            result = ex.try_extract_at(nodes, ctx);
                         }
                         let aliases = match result {
                             Ok(a) => a,
@@ -600,6 +656,7 @@ impl GnnDrive {
                 }
             }
         }
+        let packed1 = self.packed_totals();
         Ok(EpochStats {
             epoch_time: epoch_watch.elapsed(),
             prep_time: Duration::ZERO,
@@ -621,6 +678,8 @@ impl GnnDrive {
             device_reads,
             queue_highwater,
             io_depth_per_device: self.cfg.io_depth,
+            packed_batches: (packed1.0 - packed0.0) as usize,
+            hot_hits: packed1.1 - packed0.1,
         })
     }
 
@@ -629,20 +688,14 @@ impl GnnDrive {
     pub fn run_sample_only(&self, epoch: u64) -> Duration {
         let clock = &self.machine.clock;
         let ids = self.segment_ids();
-        let plan = EpochPlan::new(
-            &ids,
-            self.cfg.batch_size,
-            self.cfg.seed,
-            epoch,
-            self.cfg.batches_per_epoch,
-        );
+        let schedule = self.cfg.schedule_spec();
+        let plan = schedule.plan(&ids, epoch);
         let sample_ns = AtomicU64::new(0);
         std::thread::scope(|s| {
             for _ in 0..self.cfg.samplers {
                 let plan = &plan;
                 let sample_ns = &sample_ns;
-                let sampler =
-                    Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ (epoch << 8));
+                let sampler = schedule.sampler(epoch);
                 s.spawn(move || {
                     state::register(Role::Sampler);
                     while let Some((batch_id, seeds)) = plan.claim() {

@@ -3,8 +3,10 @@
 
 pub mod batch;
 pub mod sampler;
+pub mod schedule;
 pub mod subgraph;
 
 pub use batch::EpochPlan;
 pub use sampler::{SamplePolicy, Sampler};
+pub use schedule::ScheduleSpec;
 pub use subgraph::{LayerAdj, PaddedSubgraph, SampledSubgraph};

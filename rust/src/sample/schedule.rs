@@ -1,0 +1,80 @@
+//! Replayable sampling schedule: one value that pins everything the batch
+//! sequence depends on — seed, batch size, fanouts, per-epoch cap — so two
+//! independent consumers (the online training pipeline and the offline
+//! `layout/` pre-sampler) derive *bit-identical* batches and sampled node
+//! sets for every (epoch, batch_id).
+//!
+//! Determinism contract: `plan` shuffles with `Pcg::with_stream(seed ^ …,
+//! epoch)` and `sampler` draws with `Pcg::with_stream(sampler_seed ^ …,
+//! batch_id)`, so results depend only on (schedule, epoch, batch_id) — never
+//! on which thread claims a batch or in what order batches complete. The
+//! packed-layout handshake (`layout::PackedLayout`) verifies a dataset's
+//! recorded schedule against the one the trainer is about to run.
+
+use super::batch::EpochPlan;
+use super::sampler::Sampler;
+
+/// Everything the deterministic batch sequence depends on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScheduleSpec {
+    pub seed: u64,
+    pub batch_size: usize,
+    pub fanouts: Vec<usize>,
+    /// Optional cap on batches per epoch (quick runs / benches); `None`
+    /// covers the whole shuffled train split.
+    pub batches_per_epoch: Option<usize>,
+}
+
+impl ScheduleSpec {
+    /// The epoch's batch plan — the exact shuffle + chunking the pipeline
+    /// engine runs (`EpochPlan::new` with this spec's knobs).
+    pub fn plan(&self, train_ids: &[u32], epoch: u64) -> EpochPlan {
+        EpochPlan::new(train_ids, self.batch_size, self.seed, epoch, self.batches_per_epoch)
+    }
+
+    /// The epoch's sampler. Seeding matches the pipeline engine
+    /// (`seed ^ (epoch << 8)`), and sampling itself is keyed per batch_id,
+    /// so one sampler replayed serially equals N samplers racing over the
+    /// shared cursor.
+    pub fn sampler(&self, epoch: u64) -> Sampler {
+        Sampler::new(self.fanouts.clone(), self.seed ^ (epoch << 8))
+    }
+
+    /// Fanouts in the canonical `meta.toml` form (`"10,10,10"`).
+    pub fn fanouts_str(&self) -> String {
+        self.fanouts.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ScheduleSpec {
+        ScheduleSpec { seed: 17, batch_size: 8, fanouts: vec![4, 4], batches_per_epoch: Some(3) }
+    }
+
+    #[test]
+    fn plan_matches_direct_epoch_plan() {
+        let ids: Vec<u32> = (0..100).collect();
+        let a = spec().plan(&ids, 2);
+        let b = EpochPlan::new(&ids, 8, 17, 2, Some(3));
+        assert_eq!(a.len(), b.len());
+        while let (Some((ia, ba)), Some((ib, bb))) = (a.claim(), b.claim()) {
+            assert_eq!(ia, ib);
+            assert_eq!(ba, bb);
+        }
+    }
+
+    #[test]
+    fn sampler_seed_matches_engine_rule() {
+        let s = spec().sampler(3);
+        assert_eq!(s.seed, 17 ^ (3u64 << 8));
+        assert_eq!(s.fanouts, vec![4, 4]);
+    }
+
+    #[test]
+    fn fanouts_str_roundtrips() {
+        assert_eq!(spec().fanouts_str(), "4,4");
+    }
+}

@@ -90,6 +90,33 @@
 //!   charges and [`api::DirectIoStats`], and bridged gap bytes show up
 //!   honestly as alignment overhead.
 //!
+//! ## Packed layout (`pack` → `train --packed`)
+//!
+//! The packed on-disk layout ([`crate::layout`]) changes *what* is read,
+//! never *how* — the storage stack is unchanged and unaware of it. The
+//! ownership split:
+//!
+//! * **`layout/` owns the pack index.** [`crate::layout::PackedLayout`]
+//!   maps `(epoch, batch_id, node)` to byte offsets in the pack file
+//!   (`packs.bin[.d]`, opened as one [`SimFile`] over a [`backing::FileBacking`]
+//!   or [`backing::StripedBacking`]) and the hot file (`hot.bin`). The
+//!   stripe geometry the pack was written under is recorded in `meta.toml`
+//!   and handshaken at load — exactly the dataset geometry contract.
+//! * **Packed segments charge like any other segment.** The extractor plans
+//!   a packed batch's run with the same stripe-aware planner (wide-gap
+//!   config over the run's contiguous offsets), and each resulting SQE
+//!   names the pack/hot `SimFile` instead of the feature table. Engines and
+//!   backends see ordinary segment-granular direct reads: one request, one
+//!   `charge_multi_dev` on the owning device, useful = Σ row bytes, aligned
+//!   span as alignment overhead. Run starts are pre-aligned to the stripe
+//!   chunk (striped) or sector (unstriped) by the packer, so packed
+//!   segments carry less alignment overhead than the online plan's
+//!   scattered rows — the bench gate in `benches/layout_pack.rs`.
+//! * **Hot-tier pins charge sequential reads.** [`crate::layout::pin_hot`]
+//!   loads `hot.bin` front to back at attach time through
+//!   [`IoBackend::charge_read`] — large sequential charges, once per run,
+//!   not per epoch.
+//!
 //! ## Error contract
 //!
 //! I/O failure is a *typed completion*, never a panic and never a hang.

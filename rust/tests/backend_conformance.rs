@@ -706,3 +706,176 @@ fn stripe_single_device_is_identity() {
         assert_pattern(&striped, off, len, "devices=1 identity");
     }
 }
+
+// ---------------------------------------------------------------------------
+// meta.toml handshake negative paths (dataset geometry + packed layout)
+// ---------------------------------------------------------------------------
+
+/// Every `meta.toml` contract violation must be refused at load time with a
+/// message naming the expected *and* the actual value — on both backends,
+/// since `--backend os` is exactly where a stale or mismatched on-disk
+/// dataset is most likely.
+mod meta_handshake {
+    use gnndrive::config::{Machine, MachineConfig};
+    use gnndrive::graph::{Dataset, DatasetSpec};
+    use gnndrive::layout::{pack_dataset, PackedLayout};
+    use gnndrive::sample::ScheduleSpec;
+    use gnndrive::sim::Clock;
+    use gnndrive::storage::BackendKind;
+    use std::path::{Path, PathBuf};
+
+    const KINDS: [BackendKind; 2] = [BackendKind::Sim, BackendKind::Os];
+
+    fn machine(kind: BackendKind, devices: usize, stripe: u64) -> Machine {
+        let mut cfg = MachineConfig::paper().with_backend(kind).with_host_mem(1 << 30);
+        if devices > 1 {
+            cfg = cfg.with_devices(devices).with_stripe_bytes(stripe);
+        }
+        Machine::new(cfg, Clock::new(0.05))
+    }
+
+    /// Fresh dataset directory per call (tests run concurrently).
+    fn fresh_dir(stem: &str) -> PathBuf {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static NEXT: AtomicU32 = AtomicU32::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "gnndrive_handshake_{stem}_{}_{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_unit_test(dir: &Path, devices: usize) {
+        let spec = DatasetSpec::by_name("unit-test").unwrap();
+        if devices > 1 {
+            Dataset::write_dir_striped(&spec, dir, devices, super::STRIPE).unwrap();
+        } else {
+            Dataset::write_dir(&spec, dir).unwrap();
+        }
+    }
+
+    fn sched(seed: u64) -> ScheduleSpec {
+        ScheduleSpec { seed, batch_size: 64, fanouts: vec![4, 4], batches_per_epoch: Some(3) }
+    }
+
+    fn kind_name(kind: BackendKind) -> &'static str {
+        match kind {
+            BackendKind::Sim => "sim",
+            BackendKind::Os => "os",
+        }
+    }
+
+    #[test]
+    fn missing_meta_is_refused() {
+        for kind in KINDS {
+            let name = kind_name(kind);
+            let dir = fresh_dir("no_meta");
+            let m = machine(kind, 1, 0);
+            assert!(Dataset::load_dir(&dir, &m).is_err(), "{name}: dataset load must fail");
+            assert!(PackedLayout::load_dir(&dir, &m).is_err(), "{name}: layout load must fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_meta_is_refused() {
+        for kind in KINDS {
+            let name = kind_name(kind);
+            let dir = fresh_dir("bad_meta");
+            // Valid dataset files, then clobber the metadata with non-TOML.
+            write_unit_test(&dir, 1);
+            std::fs::write(dir.join("meta.toml"), "nodes = [unterminated\ngarbage").unwrap();
+            let m = machine(kind, 1, 0);
+            let err = Dataset::load_dir(&dir, &m).unwrap_err().to_string();
+            assert!(err.contains("line"), "{name}: parse error must locate the line: {err}");
+            assert!(PackedLayout::load_dir(&dir, &m).is_err(), "{name}: layout load must fail");
+        }
+    }
+
+    #[test]
+    fn stripe_geometry_mismatch_reports_expected_vs_actual() {
+        for kind in KINDS {
+            let name = kind_name(kind);
+            // Unstriped dataset opened by a 3-device machine.
+            let dir = fresh_dir("geom_flat");
+            write_unit_test(&dir, 1);
+            let m3 = machine(kind, 3, super::STRIPE);
+            let err = Dataset::load_dir(&dir, &m3).unwrap_err().to_string();
+            assert!(err.contains("stripe geometry mismatch"), "{name}: {err}");
+            assert!(err.contains("1 device(s)"), "{name}: expected geometry missing: {err}");
+            assert!(err.contains("3 device(s)"), "{name}: actual geometry missing: {err}");
+
+            // Striped dataset opened with the right device count but the
+            // wrong chunk size: both byte values must be in the message.
+            let dir = fresh_dir("geom_chunk");
+            write_unit_test(&dir, 3);
+            let m_wrong = machine(kind, 3, 2 * super::STRIPE);
+            let err = Dataset::load_dir(&dir, &m_wrong).unwrap_err().to_string();
+            assert!(err.contains("stripe geometry mismatch"), "{name}: {err}");
+            assert!(
+                err.contains(&super::STRIPE.to_string())
+                    && err.contains(&(2 * super::STRIPE).to_string()),
+                "{name}: both chunk sizes must be reported: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_layout_requires_a_pack_and_matching_geometry() {
+        // Pack once under the sim machine (the pack files are plain files —
+        // both backends read the same bytes).
+        let dir = fresh_dir("packed");
+        write_unit_test(&dir, 1);
+        let sim = machine(BackendKind::Sim, 1, 0);
+        let ds = Dataset::load_dir(&dir, &sim).unwrap();
+        pack_dataset(&sim, &ds, &dir, &sched(17), 1, 2).unwrap();
+
+        for kind in KINDS {
+            let name = kind_name(kind);
+            // An unpacked dataset dir is not a packed layout.
+            let plain = fresh_dir("unpacked");
+            write_unit_test(&plain, 1);
+            let m = machine(kind, 1, 0);
+            let err = PackedLayout::load_dir(&plain, &m).unwrap_err().to_string();
+            assert!(err.contains("pack"), "{name}: must point at `gnndrive pack`: {err}");
+
+            // A pack written unstriped refuses a striped machine.
+            let m3 = machine(kind, 3, super::STRIPE);
+            let err = PackedLayout::load_dir(&dir, &m3).unwrap_err().to_string();
+            assert!(err.contains("stripe geometry mismatch"), "{name}: {err}");
+            assert!(
+                err.contains("1 device(s)") && err.contains("3 device(s)"),
+                "{name}: expected vs actual geometry missing: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn pack_sampler_seed_mismatch_reports_expected_vs_actual() {
+        let dir = fresh_dir("seed");
+        write_unit_test(&dir, 1);
+        let sim = machine(BackendKind::Sim, 1, 0);
+        let ds = Dataset::load_dir(&dir, &sim).unwrap();
+        pack_dataset(&sim, &ds, &dir, &sched(17), 1, 2).unwrap();
+
+        for kind in KINDS {
+            let name = kind_name(kind);
+            let m = machine(kind, 1, 0);
+            let layout = PackedLayout::load_dir(&dir, &m).unwrap();
+            // The matching schedule is accepted (a tighter batch cap is not
+            // a mismatch: the capped plan is a prefix of the packed one).
+            layout.verify_schedule(&sched(17)).unwrap();
+            let mut capped = sched(17);
+            capped.batches_per_epoch = Some(2);
+            layout.verify_schedule(&capped).unwrap();
+            // A different sampler seed is refused with both values named.
+            let err = layout.verify_schedule(&sched(18)).unwrap_err().to_string();
+            assert!(err.contains("pack sampler seed"), "{name}: {err}");
+            assert!(
+                err.contains("17") && err.contains("18"),
+                "{name}: expected vs actual seed missing: {err}"
+            );
+        }
+    }
+}

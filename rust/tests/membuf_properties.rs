@@ -3,8 +3,10 @@
 //! must preserve every structural invariant and never lose or duplicate
 //! data.
 
+use gnndrive::extract::coalesce::{plan_segments_striped, CoalesceConfig};
+use gnndrive::graph::{FeatureGen, FeatureTable};
 use gnndrive::membuf::FeatureBuffer;
-use gnndrive::storage::DeviceMemory;
+use gnndrive::storage::{DataKind, DeviceMemory, FileId, StripeSpec};
 use gnndrive::util::prop::{self, Config};
 use gnndrive::util::rng::Pcg;
 use std::sync::Arc;
@@ -161,6 +163,114 @@ fn concurrent_extractors_never_duplicate_loads() {
                 fb.release(set);
             }
             fb.check_invariants()?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn plan_segments_emits_every_row_once_inside_one_stripe_chunk() {
+    // The coalescing planner feeds the extractor's wave protocol *and* the
+    // packed-layout path, so its conservation laws guard both: every input
+    // row appears in exactly one segment at its true file offset, and no
+    // segment ever grows past the stripe chunk owning its first byte —
+    // over randomized row sets × {devices 1, 3} × coalescing on/off ×
+    // staging capacities.
+    const DIM: usize = 16; // 64-byte rows
+    const ROW: usize = DIM * 4;
+    const NODES: u32 = 4096;
+    const CHUNK: u64 = 256; // 4 rows per stripe chunk (row-aligned)
+
+    fn table() -> FeatureTable {
+        let labels = Arc::new(vec![0u16; NODES as usize]);
+        let gen = FeatureGen::new(1, DIM, 2, 0.1, labels);
+        FeatureTable::procedural(FileId::new(78, DataKind::Features), NODES as u64, gen)
+    }
+
+    prop::check(
+        Config::default().cases(60).sizes(1, 200),
+        "plan_segments conservation + stripe-chunk containment",
+        |rng: &mut Pcg, size| {
+            let mut v: Vec<u32> = (0..size).map(|_| rng.below(NODES)).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        },
+        |ids| prop::shrink_vec(ids),
+        |ids| {
+            if ids.is_empty() {
+                return Ok(());
+            }
+            let t = table();
+            let to_load: Vec<(u32, u32)> =
+                ids.iter().enumerate().map(|(i, &n)| (n, i as u32)).collect();
+            let configs = [
+                CoalesceConfig::disabled(),
+                CoalesceConfig::default(),
+                // Tight caps so span/gap limits actually bite at this scale.
+                CoalesceConfig { max_bytes: 4 * ROW, gap_bytes: 2 * ROW },
+            ];
+            for devices in [1usize, 3] {
+                let spec = StripeSpec::new(devices, CHUNK);
+                for cfg in configs {
+                    for capacity in [4 * ROW, 1 << 20] {
+                        let segs = plan_segments_striped(&to_load, &t, &cfg, capacity, spec);
+                        let what = format!(
+                            "devices={devices} cfg={cfg:?} capacity={capacity} ids={ids:?}"
+                        );
+                        let mut seen: Vec<u32> = Vec::new();
+                        for s in &segs {
+                            if s.span < s.useful || s.span > capacity {
+                                return Err(format!(
+                                    "segment span {} vs useful {} cap {capacity}: {what}",
+                                    s.span, s.useful
+                                ));
+                            }
+                            if s.useful != s.rows.len() * ROW {
+                                return Err(format!(
+                                    "useful {} != {} rows * {ROW}: {what}",
+                                    s.useful,
+                                    s.rows.len()
+                                ));
+                            }
+                            // CHUNK is a multiple of ROW, so even a single
+                            // row can never straddle a chunk boundary here —
+                            // the containment law holds unconditionally.
+                            if s.offset + s.span as u64 > spec.chunk_end(s.offset) {
+                                return Err(format!(
+                                    "segment [{}, +{}) crosses chunk_end {}: {what}",
+                                    s.offset,
+                                    s.span,
+                                    spec.chunk_end(s.offset)
+                                ));
+                            }
+                            for r in &s.rows {
+                                if s.offset + r.rel_off as u64 != t.row_offset(r.node as u64) {
+                                    return Err(format!(
+                                        "node {} placed at {}+{}: {what}",
+                                        r.node, s.offset, r.rel_off
+                                    ));
+                                }
+                                if to_load[r.slot as usize] != (r.node, r.slot) {
+                                    return Err(format!(
+                                        "row (node {}, slot {}) lost its pairing: {what}",
+                                        r.node, r.slot
+                                    ));
+                                }
+                                seen.push(r.node);
+                            }
+                        }
+                        seen.sort_unstable();
+                        if seen != *ids {
+                            return Err(format!(
+                                "planner emitted {} rows for {} inputs: {what}",
+                                seen.len(),
+                                ids.len()
+                            ));
+                        }
+                    }
+                }
+            }
             Ok(())
         },
     );

@@ -104,6 +104,27 @@ echo "== smoke: striped storage (--devices 3, sim + os backends) =="
   --dataset unit-test --devices 3 --stripe-bytes 4KiB --batches 2 --epochs 1 \
   --fault-bad-range 0:4GiB --fault-device 1 --on-io-error drop-rows
 
+echo "== smoke: packed layout (pack -> train --packed, sim + os) =="
+# Offline pre-sample + pack, then replay the identical schedule from the
+# packed layout. seed/batch-size/fanouts must match between pack and train
+# (the meta.toml handshake refuses a mismatch at load time).
+./target/release/gnndrive pack --data "$SMOKE_DIR/ds" \
+  --batch-size 500 --fanouts 5,5 --batches 2 --seed 17 --pack-hot-thresh 2
+./target/release/gnndrive train --system gnndrive --backend sim --packed \
+  --data "$SMOKE_DIR/ds" --batch-size 500 --fanouts 5,5 --batches 2 \
+  --epochs 1 --seed 17
+./target/release/gnndrive train --system gnndrive --backend os --packed \
+  --data "$SMOKE_DIR/ds" --batch-size 500 --fanouts 5,5 --batches 2 \
+  --epochs 1 --seed 17
+# Packed + striped: the pack inherits ds3's 3-device geometry (chunk-aligned
+# run starts) and the packed replay runs on the striped array.
+./target/release/gnndrive pack --data "$SMOKE_DIR/ds3" \
+  --devices 3 --stripe-bytes 64KiB \
+  --batch-size 500 --fanouts 5,5 --batches 2 --seed 17
+./target/release/gnndrive train --system gnndrive --backend sim --packed \
+  --data "$SMOKE_DIR/ds3" --devices 3 --stripe-bytes 64KiB \
+  --batch-size 500 --fanouts 5,5 --batches 2 --epochs 1 --seed 17
+
 echo "== bench: extract_coalesce (coalesced segment I/O trajectory) =="
 # Runs the extraction bench (release) and appends to BENCH_extract.json; the
 # bench itself asserts the ISSUE-4 acceptance gate (>= 2x fewer charged
@@ -130,6 +151,14 @@ echo "== bench: stripe_scaling (multi-device striped storage gates) =="
 # exactly match the pre-striping flat stack — same requests, same bytes).
 cargo bench --bench stripe_scaling
 
+echo "== bench: layout_pack (packed per-batch feature layout gates) =="
+# Runs the packed-layout bench and appends to BENCH_layout.json; the bench
+# asserts the ISSUE-8 gates on both backends (packed extraction charges
+# >= 4x fewer SSD requests and strictly lower align_overhead_bytes than the
+# online coalesced plan at the same workload, and the pipeline replays the
+# pre-sampled schedule bit-identically — every batch served packed).
+cargo bench --bench layout_pack
+
 if [ -f BENCH_extract.json ]; then
   echo "== last BENCH_extract.json record =="
   tail -n 1 BENCH_extract.json
@@ -153,6 +182,11 @@ fi
 if [ -f BENCH_stripe.json ]; then
   echo "== last BENCH_stripe.json record =="
   tail -n 1 BENCH_stripe.json
+fi
+
+if [ -f BENCH_layout.json ]; then
+  echo "== last BENCH_layout.json record =="
+  tail -n 1 BENCH_layout.json
 fi
 
 echo "tier-1 OK"
