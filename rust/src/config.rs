@@ -330,17 +330,37 @@ impl Machine {
         } else {
             Storage::new(SsdSim::new(cfg.ssd.clone(), clock.clone()), cache)
         };
-        let mut backend: Arc<dyn IoBackend> = match cfg.backend {
+        // `--backend uring` is runtime-gated: a failed probe (old kernel,
+        // seccomp, unsupported arch) warns once and builds the `os` pread
+        // stack instead — the typed-fallback contract of ISSUE 9. The
+        // resolved kind also steers the fault wrapper's engine choice.
+        let resolved_kind = match cfg.backend {
+            BackendKind::Uring => match crate::storage::probe_uring() {
+                Ok(()) => BackendKind::Uring,
+                Err(e) => {
+                    eprintln!(
+                        "[config] WARN: --backend uring unavailable ({e}); \
+                         falling back to the os pread backend"
+                    );
+                    BackendKind::Os
+                }
+            },
+            other => other,
+        };
+        let mut backend: Arc<dyn IoBackend> = match resolved_kind {
             BackendKind::Sim => Arc::new(storage.clone()),
             BackendKind::Os => {
                 Arc::new(OsFileBackend::with_stripe(cfg.ssd.sector, cfg.io_workers, spec))
+            }
+            BackendKind::Uring => {
+                Arc::new(OsFileBackend::with_stripe_uring(cfg.ssd.sector, cfg.io_workers, spec))
             }
         };
         if let Some(profile) = &cfg.fault {
             backend = Arc::new(
                 FaultInjectBackend::new(
                     backend,
-                    cfg.backend,
+                    resolved_kind,
                     profile.plan.clone(),
                     profile.policy,
                     clock.clone(),
@@ -382,6 +402,18 @@ pub struct TrainConfig {
     /// Strict upper bound on the bridged byte gap between rows merged into
     /// one segment (`--coalesce-gap`).
     pub coalesce_gap: usize,
+    /// Pin the adaptive coalescing governor off: the effective per-device
+    /// config stays at the base values forever. Set by `main.rs` whenever
+    /// either coalesce flag was passed explicitly — the user's setting is
+    /// the experiment.
+    pub coalesce_pinned: bool,
+    /// Hedged reissue of straggler extraction segments (`--hedge`): when a
+    /// wave's in-flight segments exceed the p99 completion latency, re-issue
+    /// them into fresh staging ranges and take whichever copy lands first.
+    pub hedge: bool,
+    /// Pinned hedge threshold in µs (`--hedge-us`); `None` derives the
+    /// threshold adaptively from the observed p99 segment latency.
+    pub hedge_us: Option<u64>,
     pub seed: u64,
     pub learning_rate: f32,
     /// Data-parallel segment `(worker, of_n)`: this pipeline trains the
@@ -428,6 +460,9 @@ impl Default for TrainConfig {
             io_depth: 128,
             coalesce_bytes: crate::extract::CoalesceConfig::default().max_bytes,
             coalesce_gap: crate::extract::CoalesceConfig::default().gap_bytes,
+            coalesce_pinned: false,
+            hedge: false,
+            hedge_us: None,
             seed: 17,
             learning_rate: 0.01,
             segment: None,
@@ -476,6 +511,21 @@ mod tests {
             Clock::new(1.0),
         );
         assert_eq!(m.backend.name(), "os");
+        assert_eq!(m.backend.sector(), 512);
+    }
+
+    #[test]
+    fn uring_backend_probes_and_falls_back_typed() {
+        let m = Machine::new(
+            MachineConfig::paper().with_backend(BackendKind::Uring),
+            Clock::new(1.0),
+        );
+        // Kernel-dependent but never wrong: a passing probe yields the real
+        // uring backend, a failing one the documented os fallback.
+        match crate::storage::probe_uring() {
+            Ok(()) => assert_eq!(m.backend.name(), "uring"),
+            Err(_) => assert_eq!(m.backend.name(), "os"),
+        }
         assert_eq!(m.backend.sector(), 512);
     }
 

@@ -1,0 +1,277 @@
+//! Adaptive coalescing governor: closes the feedback loop over the
+//! per-device utilization counters PR 7 introduced.
+//!
+//! The static `--coalesce-gap`/`--coalesce-bytes` trade-off is
+//! workload-dependent: on an IOPS-bound device, bridging wider gaps turns
+//! many small charged requests into fewer large ones (good); on a
+//! bandwidth-bound device the bridged gap bytes *are* the bottleneck and
+//! narrower merges win. The [`CoalesceGovernor`] retunes the *effective*
+//! per-device [`CoalesceConfig`] once per epoch from three observed
+//! signals, all already collected by the storage stack:
+//!
+//! * **IOPS headroom** — charged requests/s vs the device model's ceiling
+//!   ([`crate::storage::SsdConfig::iops`]);
+//! * **bandwidth headroom** — charged bytes/s vs `read_bw`;
+//! * **queue pressure** — the engine's per-device in-flight high-water mark
+//!   vs `--io-depth` ([`crate::storage::AsyncIoEngine::queue_highwater`]).
+//!
+//! The policy is deliberately a monotone ratchet, not a model: congestion
+//! signals only ever *widen* merging, abundant slack only ever *narrows* it
+//! back toward the base config, and each epoch moves one power of two at
+//! most — so the governor cannot oscillate within an epoch and its charged
+//! request count stays within a small factor of the best static setting
+//! (`benches/uring_engine.rs` gates the 10% bound of ISSUE 9).
+//!
+//! **Pinning.** Explicitly passed `--coalesce-gap`/`--coalesce-bytes` CLI
+//! values pin the governor off: the user's setting is the experiment, and
+//! an adaptive layer silently rewriting it would poison ablations. The
+//! pipeline constructs the governor with `pinned = true` whenever either
+//! flag was given explicitly (see `main.rs`).
+
+use crate::extract::coalesce::CoalesceConfig;
+
+/// One device's utilization observation for one epoch, all fractions in
+/// `[0, 1]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceIoObservation {
+    /// Unused fraction of the device's IOPS ceiling (1.0 = idle, 0.0 =
+    /// request-rate saturated).
+    pub iops_headroom: f64,
+    /// Unused fraction of the device's read bandwidth.
+    pub bw_headroom: f64,
+    /// Engine queue pressure: per-device in-flight high-water mark over
+    /// `--io-depth`.
+    pub queue_frac: f64,
+}
+
+impl DeviceIoObservation {
+    /// Clamp-from-raw helper: `ops`/`bytes` charged over `secs` against the
+    /// device's `iops`/`read_bw` ceilings, `highwater` against `depth`.
+    pub fn from_charges(
+        ops: u64,
+        bytes: u64,
+        secs: f64,
+        iops_ceiling: f64,
+        bw_ceiling: f64,
+        highwater: u64,
+        depth: usize,
+    ) -> Self {
+        let secs = secs.max(1e-9);
+        let used_iops = ops as f64 / secs;
+        let used_bw = bytes as f64 / secs;
+        let frac = |used: f64, ceil: f64| {
+            if ceil <= 0.0 {
+                1.0 // no ceiling known: report full headroom
+            } else {
+                (1.0 - used / ceil).clamp(0.0, 1.0)
+            }
+        };
+        DeviceIoObservation {
+            iops_headroom: frac(used_iops, iops_ceiling),
+            bw_headroom: frac(used_bw, bw_ceiling),
+            queue_frac: if depth == 0 {
+                0.0
+            } else {
+                (highwater as f64 / depth as f64).clamp(0.0, 1.0)
+            },
+        }
+    }
+}
+
+/// Below this headroom fraction a resource counts as saturated.
+const SATURATED: f64 = 0.15;
+/// Above this headroom fraction a resource counts as having ample slack.
+const AMPLE: f64 = 0.50;
+/// Queue high-water fraction above which the submission path is congested.
+const QUEUE_HOT: f64 = 0.75;
+/// Widest the governor will stretch either knob, as a multiple of base.
+const MAX_WIDEN: usize = 8;
+
+/// Per-device adaptive tuner of the effective coalescing config. See the
+/// module docs for the policy; the public surface is deliberately small:
+/// feed one [`DeviceIoObservation`] slice per epoch, read per-device
+/// configs when planning.
+#[derive(Debug)]
+pub struct CoalesceGovernor {
+    base: CoalesceConfig,
+    pinned: bool,
+    per_dev: Vec<CoalesceConfig>,
+}
+
+impl CoalesceGovernor {
+    /// Governor over `devices` devices starting from `base`. `pinned`
+    /// freezes every device at `base` forever (explicit CLI values).
+    pub fn new(base: CoalesceConfig, devices: usize, pinned: bool) -> Self {
+        let devices = devices.max(1);
+        CoalesceGovernor { base, pinned, per_dev: vec![base; devices] }
+    }
+
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
+    pub fn base(&self) -> CoalesceConfig {
+        self.base
+    }
+
+    /// Effective config for `dev` (device indices past the observed set
+    /// clamp to the last device, mirroring engine routing).
+    pub fn config_for(&self, dev: usize) -> CoalesceConfig {
+        self.per_dev[dev.min(self.per_dev.len() - 1)]
+    }
+
+    /// All effective per-device configs.
+    pub fn configs(&self) -> &[CoalesceConfig] {
+        &self.per_dev
+    }
+
+    /// Whether any device currently deviates from the base config.
+    pub fn adapted(&self) -> bool {
+        self.per_dev.iter().any(|c| *c != self.base)
+    }
+
+    /// Fold one epoch's observations in. Devices beyond `obs.len()` keep
+    /// their config; a pinned or coalescing-disabled governor never moves.
+    pub fn observe_epoch(&mut self, obs: &[DeviceIoObservation]) {
+        if self.pinned || !self.base.enabled() {
+            return;
+        }
+        for (dev, o) in obs.iter().enumerate().take(self.per_dev.len()) {
+            let cur = &mut self.per_dev[dev];
+            let iops_bound = o.iops_headroom < SATURATED;
+            let queue_hot = o.queue_frac > QUEUE_HOT;
+            let bw_bound = o.bw_headroom < SATURATED;
+            if (iops_bound || queue_hot) && !bw_bound {
+                // Request-rate congested with bandwidth to spare: bridge
+                // wider gaps so more rows share one charged request.
+                cur.gap_bytes = (cur.gap_bytes.max(1) * 2).min(self.base.gap_bytes * MAX_WIDEN);
+                cur.max_bytes = (cur.max_bytes * 2).min(self.base.max_bytes * MAX_WIDEN);
+            } else if bw_bound && o.iops_headroom > AMPLE {
+                // Wire-bound with request slack: stop paying bridged gap
+                // bytes, fall back toward the base merge width.
+                cur.gap_bytes = (cur.gap_bytes / 2).max(self.base.gap_bytes);
+                cur.max_bytes = (cur.max_bytes / 2).max(self.base.max_bytes);
+            }
+            // Otherwise: hold. Ambiguous epochs must not walk the config.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> CoalesceConfig {
+        CoalesceConfig::default()
+    }
+
+    fn idle() -> DeviceIoObservation {
+        DeviceIoObservation { iops_headroom: 1.0, bw_headroom: 1.0, queue_frac: 0.0 }
+    }
+
+    fn iops_storm() -> DeviceIoObservation {
+        DeviceIoObservation { iops_headroom: 0.05, bw_headroom: 0.9, queue_frac: 0.9 }
+    }
+
+    fn bw_storm() -> DeviceIoObservation {
+        DeviceIoObservation { iops_headroom: 0.9, bw_headroom: 0.05, queue_frac: 0.3 }
+    }
+
+    #[test]
+    fn widens_monotonically_under_iops_pressure() {
+        let mut gov = CoalesceGovernor::new(base(), 1, false);
+        let mut prev = gov.config_for(0);
+        for epoch in 0..6 {
+            gov.observe_epoch(&[iops_storm()]);
+            let cur = gov.config_for(0);
+            assert!(
+                cur.gap_bytes >= prev.gap_bytes && cur.max_bytes >= prev.max_bytes,
+                "epoch {epoch}: shrank under sustained congestion: {prev:?} -> {cur:?}"
+            );
+            prev = cur;
+        }
+        // Saturates at the cap instead of growing forever.
+        assert_eq!(prev.gap_bytes, base().gap_bytes * 8);
+        assert_eq!(prev.max_bytes, base().max_bytes * 8);
+        assert!(gov.adapted());
+    }
+
+    #[test]
+    fn narrows_back_under_bandwidth_pressure_but_never_below_base() {
+        let mut gov = CoalesceGovernor::new(base(), 1, false);
+        for _ in 0..3 {
+            gov.observe_epoch(&[iops_storm()]);
+        }
+        assert!(gov.config_for(0).gap_bytes > base().gap_bytes);
+        for _ in 0..10 {
+            gov.observe_epoch(&[bw_storm()]);
+        }
+        assert_eq!(gov.config_for(0), base(), "must floor at the base config");
+        assert!(!gov.adapted());
+    }
+
+    #[test]
+    fn idle_and_ambiguous_epochs_hold() {
+        let mut gov = CoalesceGovernor::new(base(), 1, false);
+        gov.observe_epoch(&[idle()]);
+        assert_eq!(gov.config_for(0), base());
+        // Both-bound (iops AND bw saturated) is ambiguous: hold.
+        gov.observe_epoch(&[DeviceIoObservation {
+            iops_headroom: 0.05,
+            bw_headroom: 0.05,
+            queue_frac: 0.9,
+        }]);
+        assert_eq!(gov.config_for(0), base());
+    }
+
+    #[test]
+    fn pinned_governor_never_moves() {
+        let mut gov = CoalesceGovernor::new(base(), 2, true);
+        for _ in 0..8 {
+            gov.observe_epoch(&[iops_storm(), bw_storm()]);
+        }
+        assert_eq!(gov.config_for(0), base());
+        assert_eq!(gov.config_for(1), base());
+        assert!(gov.pinned());
+        assert!(!gov.adapted());
+    }
+
+    #[test]
+    fn disabled_coalescing_never_moves() {
+        let mut gov = CoalesceGovernor::new(CoalesceConfig::disabled(), 1, false);
+        gov.observe_epoch(&[iops_storm()]);
+        assert_eq!(gov.config_for(0), CoalesceConfig::disabled());
+    }
+
+    #[test]
+    fn devices_adapt_independently() {
+        let mut gov = CoalesceGovernor::new(base(), 3, false);
+        gov.observe_epoch(&[iops_storm(), idle(), iops_storm()]);
+        assert!(gov.config_for(0).gap_bytes > base().gap_bytes);
+        assert_eq!(gov.config_for(1), base());
+        assert!(gov.config_for(2).gap_bytes > base().gap_bytes);
+        // Out-of-range device clamps to the last (engine routing rule).
+        assert_eq!(gov.config_for(99), gov.config_for(2));
+    }
+
+    #[test]
+    fn observation_from_charges_clamps() {
+        let o = DeviceIoObservation::from_charges(
+            97_000, // exactly the pm883 IOPS ceiling over 1s
+            520_000_000,
+            1.0,
+            97_000.0,
+            520e6,
+            12,
+            16,
+        );
+        assert!(o.iops_headroom.abs() < 1e-9);
+        assert!(o.bw_headroom.abs() < 1e-9);
+        assert!((o.queue_frac - 0.75).abs() < 1e-9);
+        // Over-ceiling usage clamps to zero headroom, not negative.
+        let o = DeviceIoObservation::from_charges(1000, 1000, 1e-12, 10.0, 10.0, 99, 16);
+        assert_eq!(o.iops_headroom, 0.0);
+        assert_eq!(o.bw_headroom, 0.0);
+        assert_eq!(o.queue_frac, 1.0);
+    }
+}

@@ -155,24 +155,66 @@ pub fn plan_segments_striped(
 /// cap, staging clamp, the one-segment-one-device stripe invariant — and
 /// the round-robin device interleave apply identically to both callers.
 pub fn plan_rows(
-    mut rows: Vec<(u64, u32, u32)>,
+    rows: Vec<(u64, u32, u32)>,
     row_bytes: usize,
     cfg: &CoalesceConfig,
     staging_capacity: usize,
     spec: StripeSpec,
 ) -> Vec<Segment> {
+    plan_rows_adaptive(rows, row_bytes, std::slice::from_ref(cfg), staging_capacity, spec)
+}
+
+/// Per-device flavor of [`plan_segments_striped`]: `cfgs[d]` governs the
+/// segments whose starting offset maps to stripe device `d` (indices past
+/// the slice clamp to its last entry, mirroring engine routing). This is
+/// the adaptive-coalescing entry point — the governor
+/// ([`crate::extract::CoalesceGovernor`]) hands the extractor one effective
+/// config per device, and the one-segment-one-device invariant guarantees
+/// each merge decision has exactly one governing device. A one-element
+/// slice reproduces [`plan_segments_striped`] byte-for-byte.
+pub fn plan_segments_striped_adaptive(
+    to_load: &[(u32, u32)],
+    features: &FeatureTable,
+    cfgs: &[CoalesceConfig],
+    staging_capacity: usize,
+    spec: StripeSpec,
+) -> Vec<Segment> {
+    let row_bytes = features.row_bytes() as usize;
+    let rows: Vec<(u64, u32, u32)> = to_load
+        .iter()
+        .map(|&(node, slot)| (features.row_offset(node as u64), node, slot))
+        .collect();
+    plan_rows_adaptive(rows, row_bytes, cfgs, staging_capacity, spec)
+}
+
+/// Planner core generalized over per-device configs (see
+/// [`plan_segments_striped_adaptive`]); [`plan_rows`] is the one-config
+/// special case.
+pub fn plan_rows_adaptive(
+    mut rows: Vec<(u64, u32, u32)>,
+    row_bytes: usize,
+    cfgs: &[CoalesceConfig],
+    staging_capacity: usize,
+    spec: StripeSpec,
+) -> Vec<Segment> {
     debug_assert!(staging_capacity >= row_bytes, "staging cannot hold one row");
+    assert!(!cfgs.is_empty(), "planner needs at least one coalesce config");
     rows.sort_unstable_by_key(|&(off, _, _)| off);
 
-    let max_span = if cfg.enabled() {
-        cfg.max_bytes.clamp(row_bytes, staging_capacity)
-    } else {
-        row_bytes
-    };
+    // A segment's governing config is its starting offset's device; the
+    // chunk constraint below keeps the whole segment on that device, so the
+    // choice is unambiguous.
+    let cfg_for = |off: u64| &cfgs[spec.device_of(off).min(cfgs.len() - 1)];
 
     let mut segments: Vec<Segment> = Vec::new();
     for (off, node, slot) in rows {
         if let Some(seg) = segments.last_mut() {
+            let cfg = cfg_for(seg.offset);
+            let max_span = if cfg.enabled() {
+                cfg.max_bytes.clamp(row_bytes, staging_capacity)
+            } else {
+                row_bytes
+            };
             let end = seg.offset + seg.span as u64;
             // `to_load` holds distinct nodes, so sorted rows never overlap:
             // `off >= end` always. gap == 0 (contiguous) always merges.
@@ -397,6 +439,49 @@ mod tests {
         for s in &segs {
             assert_eq!(s.rows.len(), 1);
             assert_eq!(s.span, 64);
+        }
+    }
+
+    #[test]
+    fn adaptive_plan_applies_per_device_configs() {
+        let t = table();
+        // 64-byte rows, 256-byte chunks, 2 devices. Nodes 0..8 cover chunk
+        // 0 (dev 0) and chunk 1 (dev 1). Dev 0 gets coalescing disabled,
+        // dev 1 keeps wide merging: dev-0 rows must stay one-per-segment
+        // while dev-1 rows merge into one 256-byte segment.
+        let spec = StripeSpec::new(2, 256);
+        let cfgs = [
+            CoalesceConfig::disabled(),
+            CoalesceConfig { max_bytes: 1 << 20, gap_bytes: 4096 },
+        ];
+        let segs = plan_segments_striped_adaptive(
+            &nodes(&[0, 1, 2, 3, 4, 5, 6, 7]),
+            &t,
+            &cfgs,
+            1 << 20,
+            spec,
+        );
+        let (dev0, dev1): (Vec<_>, Vec<_>) =
+            segs.iter().partition(|s| spec.device_of(s.offset) == 0);
+        assert_eq!(dev0.len(), 4, "disabled config: one row per segment");
+        assert!(dev0.iter().all(|s| s.rows.len() == 1 && s.span == 64));
+        assert_eq!(dev1.len(), 1, "wide config: whole chunk merges");
+        assert_eq!(dev1[0].rows.len(), 4);
+        assert_eq!(dev1[0].span, 256);
+        // One-element slice reproduces the single-config planner.
+        let cfg = CoalesceConfig { max_bytes: 1 << 20, gap_bytes: 4096 };
+        let a = plan_segments_striped(&nodes(&[0, 1, 2, 3, 8, 9]), &t, &cfg, 1 << 20, spec);
+        let b = plan_segments_striped_adaptive(
+            &nodes(&[0, 1, 2, 3, 8, 9]),
+            &t,
+            &[cfg],
+            1 << 20,
+            spec,
+        );
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.offset, x.span, x.useful), (y.offset, y.span, y.useful));
+            assert_eq!(x.rows, y.rows);
         }
     }
 

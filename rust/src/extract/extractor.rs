@@ -34,7 +34,7 @@
 //! never re-resolving node ids — so the whole post-extraction lifecycle
 //! stays off the coordinator's shard locks.
 
-use super::coalesce::{plan_rows, plan_segments_striped, CoalesceConfig, SegRow, Segment};
+use super::coalesce::{plan_rows, plan_segments_striped_adaptive, CoalesceConfig, SegRow, Segment};
 use crate::graph::FeatureTable;
 use crate::layout::PackedLayout;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
@@ -43,7 +43,7 @@ use crate::storage::api::{AsyncIoEngine, Cqe, IoBackend, IoError, IoMode, Sqe};
 use crate::storage::{Pcie, SimFile, StripeSpec};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A batch extraction that completed *degraded*: every row of the batch is
 /// present and the wave protocol fully resolved (aliases are valid, staging
@@ -87,6 +87,46 @@ pub enum ExtractTarget {
     Host,
 }
 
+/// Straggler-hedging knobs (`--hedge` / `--hedge-us`): re-issue the slowest
+/// in-flight segments of a wave once their service time exceeds a
+/// threshold. Original and hedge read the same span into **two distinct
+/// staging ranges** of the same wave, so a late original can never scatter
+/// into bytes the hedge already published — the first successful completion
+/// wins (`done[]` guard), the loser is harvested and discarded, and both
+/// requests are charged honestly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HedgeConfig {
+    /// Master switch; `false` leaves the wave loop byte-identical to the
+    /// pre-hedging extractor (no polling, no latency tracking).
+    pub enabled: bool,
+    /// Explicit reissue threshold in microseconds. `None` → p99-driven:
+    /// the extractor tracks recent wave-relative segment completion times
+    /// and hedges once a wave has been in flight past their p99.
+    pub pin_us: Option<u64>,
+}
+
+impl HedgeConfig {
+    pub fn disabled() -> Self {
+        HedgeConfig { enabled: false, pin_us: None }
+    }
+
+    /// Hedge at a fixed threshold (tests, `--hedge-us`).
+    pub fn pinned(us: u64) -> Self {
+        HedgeConfig { enabled: true, pin_us: Some(us) }
+    }
+
+    /// Hedge at the observed p99 (`--hedge`).
+    pub fn adaptive() -> Self {
+        HedgeConfig { enabled: true, pin_us: None }
+    }
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig::disabled()
+    }
+}
+
 /// Ablation switches (paper mechanisms turned off individually).
 #[derive(Clone, Copy, Debug)]
 pub struct ExtractOptions {
@@ -101,6 +141,9 @@ pub struct ExtractOptions {
     /// buffered and synchronous ablations keep per-row requests so they
     /// stay faithful baselines.
     pub coalesce: CoalesceConfig,
+    /// Hedged reissue of straggler segments (default off). Direct
+    /// asynchronous path only — the ablation baselines never hedge.
+    pub hedge: HedgeConfig,
 }
 
 impl Default for ExtractOptions {
@@ -109,9 +152,18 @@ impl Default for ExtractOptions {
             asynchronous: true,
             direct: true,
             coalesce: CoalesceConfig::default(),
+            hedge: HedgeConfig::disabled(),
         }
     }
 }
+
+/// Completion-latency samples kept for the p99-driven hedge threshold.
+const LAT_WINDOW: usize = 512;
+/// Samples required before an adaptive (un-pinned) threshold is trusted.
+const MIN_HEDGE_SAMPLES: usize = 32;
+/// Poll interval of the hedging harvest loop while a hedge could still be
+/// issued (the non-hedging path blocks in `wait_cqe` and never polls).
+const HEDGE_TICK: Duration = Duration::from_micros(100);
 
 pub struct Extractor {
     engine: Box<dyn AsyncIoEngine>,
@@ -137,6 +189,14 @@ pub struct Extractor {
     /// Hot-tier nodes that were already buffer-resident when a packed batch
     /// began — the pin's payoff (cumulative).
     hot_hits: AtomicU64,
+    /// Per-device effective coalescing configs pushed by the adaptive
+    /// governor (`pipeline` feeds [`Extractor::set_coalesce_configs`] each
+    /// epoch). Empty → plan with `opts.coalesce` exactly as before.
+    coalesce_override: Mutex<Vec<CoalesceConfig>>,
+    /// Recent wave-relative segment completion times in µs (ring of
+    /// [`LAT_WINDOW`]), the sample pool of the p99 hedge threshold. Only
+    /// fed while hedging is enabled.
+    lat_us: Mutex<Vec<u64>>,
 }
 
 impl Extractor {
@@ -160,8 +220,15 @@ impl Extractor {
         target: ExtractTarget,
         opts: ExtractOptions,
     ) -> Self {
+        let engine = backend.clone().async_engine(io_depth);
+        // Advertise the staging arena once: every SQE destination this
+        // extractor ever submits lives inside it, so engines that can
+        // pre-register DMA buffers (the io_uring path) serve the whole
+        // workload as READ_FIXED. A pure hint — see the trait docs.
+        let (arena_addr, arena_len) = staging.arena_range();
+        engine.register_buffer_range(arena_addr, arena_len);
         Extractor {
-            engine: backend.clone().async_engine(io_depth),
+            engine,
             staging,
             fb,
             features,
@@ -172,7 +239,45 @@ impl Extractor {
             layout: None,
             packed_batches: AtomicU64::new(0),
             hot_hits: AtomicU64::new(0),
+            coalesce_override: Mutex::new(Vec::new()),
+            lat_us: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Install the governor's per-device effective coalescing configs for
+    /// subsequent extractions (`cfgs[d]` governs stripe device `d`; empty
+    /// restores `opts.coalesce`). Applies to the asynchronous direct online
+    /// plan only — ablation baselines and the packed fast path are never
+    /// rewritten by the governor.
+    pub fn set_coalesce_configs(&self, cfgs: &[CoalesceConfig]) {
+        let mut o = self.coalesce_override.lock().unwrap_or_else(|e| e.into_inner());
+        o.clear();
+        o.extend_from_slice(cfgs);
+    }
+
+    /// Current hedge threshold in µs: the explicit pin, or the observed p99
+    /// once enough samples accumulated (`None` = cannot hedge yet).
+    fn hedge_threshold_us(&self) -> Option<u64> {
+        if let Some(us) = self.opts.hedge.pin_us {
+            return Some(us.max(1));
+        }
+        let v = self.lat_us.lock().unwrap_or_else(|e| e.into_inner());
+        if v.len() < MIN_HEDGE_SAMPLES {
+            return None;
+        }
+        let mut s = v.clone();
+        drop(v);
+        s.sort_unstable();
+        Some(s[(s.len() * 99 / 100).min(s.len() - 1)].max(1))
+    }
+
+    /// Record one original segment's wave-relative completion time.
+    fn record_latency(&self, since_submit: Duration) {
+        let mut v = self.lat_us.lock().unwrap_or_else(|e| e.into_inner());
+        if v.len() >= LAT_WINDOW {
+            v.swap_remove(0);
+        }
+        v.push(since_submit.as_micros() as u64);
     }
 
     /// Attach a packed layout: subsequent [`Extractor::try_extract_at`]
@@ -303,17 +408,31 @@ impl Extractor {
             // Stripe-aware online plan: segments stay inside one stripe
             // chunk (one device per request) and are interleaved
             // round-robin across devices so every per-device sub-queue
-            // fills from SQE one.
-            None => plan_segments_striped(
-                &plan.to_load,
-                &self.features,
-                &coalesce,
-                capacity,
-                self.backend.stripe(),
-            )
-            .into_iter()
-            .map(|s| (self.features.file.clone(), s))
-            .collect(),
+            // fills from SQE one. The governor's per-device effective
+            // configs (if pushed, and only while the direct path keeps
+            // coalescing on) replace the static config here.
+            None => {
+                let over = self
+                    .coalesce_override
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .clone();
+                let cfgs: Vec<CoalesceConfig> = if coalesce.enabled() && !over.is_empty() {
+                    over
+                } else {
+                    vec![coalesce]
+                };
+                plan_segments_striped_adaptive(
+                    &plan.to_load,
+                    &self.features,
+                    &cfgs,
+                    capacity,
+                    self.backend.stripe(),
+                )
+                .into_iter()
+                .map(|s| (self.features.file.clone(), s))
+                .collect()
+            }
         };
 
         // Waves: pack segments into the staging arena until it is full,
@@ -321,6 +440,7 @@ impl Extractor {
         // request until the CQE is harvested (the SlotRef protocol); the
         // wave-end latch keeps the next wave from reusing arena bytes
         // before every transfer of this wave has landed.
+        let hedging = self.opts.hedge.enabled && self.opts.direct;
         let mut failed_nodes: Vec<u32> = Vec::new();
         let mut first_err: Option<IoError> = None;
         let mut poisoned = false;
@@ -342,13 +462,15 @@ impl Extractor {
                     user_data: in_wave.len() as u64,
                     mode,
                 });
-                in_wave.push((seg, dst));
+                in_wave.push((file, seg, dst));
                 next += 1;
             }
             assert!(!in_wave.is_empty(), "segment exceeds staging capacity");
 
             // Phase 1: submit every segment load asynchronously.
             let latch = Arc::new(Latch::new(in_wave.len()));
+            let submit_at = Instant::now();
+            let thr_us = if hedging { self.hedge_threshold_us() } else { None };
             self.engine.submit_batch(sqes);
 
             // Phase 2: as each segment completes, launch its transfer
@@ -356,15 +478,77 @@ impl Extractor {
             // completes with an error degrades in place: its rows publish
             // as zeroed placeholders (keeping the latch/wait protocol
             // balanced) and are reported to the caller.
+            //
+            // Hedging (when enabled and a threshold is known): once the
+            // wave has been in flight past the threshold, every live
+            // not-yet-hedged segment is re-issued into a *fresh* staging
+            // range of this same wave. Each request — original or hedge —
+            // produces exactly one CQE and all of them are harvested before
+            // the wave ends, so no range leaks and no late completion can
+            // touch recycled arena bytes. `done[]` makes the first
+            // successful completion the only one that scatters.
             let mut done = vec![false; in_wave.len()];
-            for _ in 0..in_wave.len() {
-                let cqe = self.engine.wait_cqe();
+            let mut hedged = vec![false; in_wave.len()];
+            let mut outstanding: Vec<u32> = vec![1; in_wave.len()];
+            let mut stashed_err: Vec<Option<IoError>> = vec![None; in_wave.len()];
+            // Hedge ordinal → (wave index, the duplicate's staging range);
+            // hedge k carries user_data in_wave.len() + k.
+            let mut hedges: Vec<(usize, crate::membuf::SlotRef)> = Vec::new();
+            let mut arena_full = false;
+            let mut pending = in_wave.len();
+            while pending > 0 {
+                // Poll (instead of block) only while a hedge could still
+                // fire; once nothing is hedgeable, fall back to the
+                // blocking harvest — which also surfaces engine poisoning,
+                // something `peek_cqe` never synthesizes.
+                let can_hedge = thr_us.is_some()
+                    && !arena_full
+                    && done.iter().zip(&hedged).any(|(d, h)| !*d && !*h);
+                let cqe = if can_hedge {
+                    match self.engine.peek_cqe() {
+                        Some(c) => c,
+                        None => {
+                            let thr = thr_us.unwrap();
+                            if submit_at.elapsed().as_micros() as u64 > thr {
+                                for idx in 0..in_wave.len() {
+                                    if done[idx] || hedged[idx] {
+                                        continue;
+                                    }
+                                    let (file, seg, _) = &in_wave[idx];
+                                    let Some(dst) = wave.alloc(seg.span) else {
+                                        arena_full = true;
+                                        break;
+                                    };
+                                    self.engine.submit(Sqe {
+                                        file: (*file).clone(),
+                                        offset: seg.offset,
+                                        len: seg.span,
+                                        useful: seg.useful,
+                                        dst: dst.clone(),
+                                        dst_off: 0,
+                                        user_data: (in_wave.len() + hedges.len()) as u64,
+                                        mode,
+                                    });
+                                    self.backend.direct_stats().count_hedge();
+                                    hedged[idx] = true;
+                                    outstanding[idx] += 1;
+                                    hedges.push((idx, dst));
+                                    pending += 1;
+                                }
+                            }
+                            std::thread::sleep(HEDGE_TICK);
+                            continue;
+                        }
+                    }
+                } else {
+                    self.engine.wait_cqe()
+                };
                 if cqe.user_data == Cqe::POISON_USER_DATA {
                     // The engine died with this wave outstanding: every
                     // unharvested segment is failed; the core has already
                     // reconciled its counters and a late completion can no
                     // longer scatter (workers are gone).
-                    for (harvested, (seg, _)) in done.iter().zip(&in_wave) {
+                    for (harvested, (_, seg, _)) in done.iter().zip(&in_wave) {
                         if !harvested {
                             fail_rows(&self.fb, &seg.rows, self.staging.row_bytes);
                             failed_nodes.extend(seg.rows.iter().map(|r| r.node));
@@ -375,38 +559,72 @@ impl Extractor {
                     poisoned = true;
                     break;
                 }
-                done[cqe.user_data as usize] = true;
-                let (seg, staged) = &in_wave[cqe.user_data as usize];
+                pending -= 1;
+                let (idx, is_hedge, staged) = if (cqe.user_data as usize) < in_wave.len() {
+                    (cqe.user_data as usize, false, &in_wave[cqe.user_data as usize].2)
+                } else {
+                    let (idx, dst) = &hedges[cqe.user_data as usize - in_wave.len()];
+                    (*idx, true, dst)
+                };
+                outstanding[idx] -= 1;
+                if done[idx] {
+                    // The loser of a hedged pair: its bytes stay in their
+                    // own (wave-owned) range and are simply discarded.
+                    continue;
+                }
+                let (_, seg, _) = &in_wave[idx];
                 match &cqe.status {
                     Err(e) => {
+                        if outstanding[idx] > 0 {
+                            // The sibling request may still deliver; fail
+                            // the segment only when both halves are in.
+                            stashed_err[idx].get_or_insert(e.clone());
+                            continue;
+                        }
                         // Staging bytes are undefined: never decode them.
+                        done[idx] = true;
                         fail_rows(&self.fb, &seg.rows, self.staging.row_bytes);
                         failed_nodes.extend(seg.rows.iter().map(|r| r.node));
-                        first_err.get_or_insert(e.clone());
+                        let err = stashed_err[idx].take().unwrap_or_else(|| e.clone());
+                        first_err.get_or_insert(err);
                         latch.count_down();
                     }
-                    Ok(_) => match &self.target {
-                        ExtractTarget::Device(pcie) => {
-                            let fb = self.fb.clone();
-                            let latch = latch.clone();
-                            let staged = staged.clone();
-                            let rows = seg.rows.clone();
-                            let row_bytes = self.staging.row_bytes;
-                            // Only the rows cross PCIe — bridged gap bytes
-                            // die in staging.
-                            pcie.transfer_async(seg.useful, move || {
-                                // Decode straight from the staging bytes
-                                // into the arena rows — no intermediate
-                                // Vec<f32>, no per-row lock.
-                                publish_rows(&fb, &rows, &staged, row_bytes);
+                    Ok(_) => {
+                        done[idx] = true;
+                        if is_hedge {
+                            self.backend.direct_stats().count_hedge_win();
+                        } else if hedging {
+                            self.record_latency(submit_at.elapsed());
+                        }
+                        match &self.target {
+                            ExtractTarget::Device(pcie) => {
+                                let fb = self.fb.clone();
+                                let latch = latch.clone();
+                                let staged = staged.clone();
+                                let rows = seg.rows.clone();
+                                let row_bytes = self.staging.row_bytes;
+                                // Only the rows cross PCIe — bridged gap
+                                // bytes die in staging.
+                                pcie.transfer_async(seg.useful, move || {
+                                    // Decode straight from the staging
+                                    // bytes into the arena rows — no
+                                    // intermediate Vec<f32>, no per-row
+                                    // lock.
+                                    publish_rows(&fb, &rows, &staged, row_bytes);
+                                    latch.count_down();
+                                });
+                            }
+                            ExtractTarget::Host => {
+                                publish_rows(
+                                    &self.fb,
+                                    &seg.rows,
+                                    staged,
+                                    self.staging.row_bytes,
+                                );
                                 latch.count_down();
-                            });
+                            }
                         }
-                        ExtractTarget::Host => {
-                            publish_rows(&self.fb, &seg.rows, staged, self.staging.row_bytes);
-                            latch.count_down();
-                        }
-                    },
+                    }
                 }
             }
             // All transfers of this wave must land before its staging
@@ -820,6 +1038,137 @@ mod tests {
             .misses
             .load(std::sync::atomic::Ordering::Relaxed);
         assert!(touches > 0, "-direct ablation must go through the page cache");
+    }
+
+    #[test]
+    fn governor_override_rewrites_effective_coalescing() {
+        // Pushing a disabled per-device config must restore the per-row
+        // request baseline even though opts.coalesce stays enabled — and
+        // clearing the override must bring merging back.
+        let (m, ds, _) = setup();
+        let dev = DeviceMemory::new(8 << 20);
+        let nodes: Vec<u32> = (400..464).collect(); // dense rows
+
+        let fb = Arc::new(FeatureBuffer::in_device(&dev, 512, ds.spec.dim).unwrap());
+        let ex = extractor(&m, &ds, fb.clone(), 64);
+        ex.set_coalesce_configs(&[CoalesceConfig::disabled()]);
+        m.storage.ssd.reset_stats();
+        ex.extract(&nodes);
+        let reads_overridden =
+            m.storage.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(reads_overridden, 64, "disabled override must plan one request per row");
+
+        let fb2 = Arc::new(FeatureBuffer::in_device(&dev, 512, ds.spec.dim).unwrap());
+        let ex2 = extractor(&m, &ds, fb2.clone(), 64);
+        ex2.set_coalesce_configs(&[CoalesceConfig::disabled()]);
+        ex2.set_coalesce_configs(&[]); // clear → back to opts.coalesce
+        m.storage.ssd.reset_stats();
+        ex2.extract(&nodes);
+        let reads_cleared =
+            m.storage.ssd.counters().reads.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            reads_cleared * 2 <= reads_overridden,
+            "cleared override must coalesce again: {reads_cleared} vs {reads_overridden}"
+        );
+        fb2.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hedged_reissue_beats_stalled_originals_without_double_scatter() {
+        use crate::storage::{BackendKind, FaultInjectBackend, FaultPlan, RetryPolicy};
+
+        let clock = Clock::new(0.05);
+        let m = Machine::new(MachineConfig::paper(), clock.clone());
+        let ds = Dataset::materialize(&DatasetSpec::unit_test(), &m).unwrap();
+        let fb = Arc::new(FeatureBuffer::in_host(&m.host, 256, ds.spec.dim).unwrap());
+
+        let nodes: Vec<u32> = (300..316).collect();
+        let offsets: Vec<u64> =
+            nodes.iter().map(|&n| ds.features.row_offset(n as u64)).collect();
+        // Deterministic storm: select a seed where ≥3 offsets stall on
+        // their first service draw (the original's) but not their second
+        // (the hedge's), and no offset stalls on both draws — so at least
+        // one hedge must win and no hedged pair is a double-stall washout.
+        let seed = (0..5_000u64)
+            .find(|&s| {
+                let plan =
+                    FaultPlan { seed: s, stall_rate: 0.4, stall_us: 1, ..FaultPlan::default() };
+                let mut winnable = 0;
+                for &off in &offsets {
+                    let d0 = plan.stall_verdict(off, 0);
+                    let d1 = plan.stall_verdict(off, 1);
+                    if d0 && d1 {
+                        return false;
+                    }
+                    if d0 && !d1 {
+                        winnable += 1;
+                    }
+                }
+                winnable >= 3
+            })
+            .expect("no usable stall seed in 0..5000");
+        // 100 ms of simulated stall ≈ 5 ms real at clock scale 0.05 — far
+        // past the 500 µs hedge pin, far under test-timeout scale.
+        let plan = FaultPlan {
+            seed,
+            stall_rate: 0.4,
+            stall_us: 100_000,
+            ..FaultPlan::default()
+        };
+        let faulty = Arc::new(FaultInjectBackend::new(
+            m.backend.clone(),
+            BackendKind::Sim,
+            plan,
+            RetryPolicy::default(),
+            clock,
+        ));
+
+        let staging =
+            StagingBuffer::new(&m.host, 64, ds.features.row_bytes() as usize).unwrap();
+        let ex = Extractor::with_options(
+            faulty.clone(),
+            64,
+            staging,
+            fb.clone(),
+            ds.features.clone(),
+            ExtractTarget::Host,
+            ExtractOptions {
+                // Per-row segments keep wave offsets == the seed-searched
+                // row offsets; a pinned threshold needs no warm-up samples.
+                coalesce: CoalesceConfig::disabled(),
+                hedge: HedgeConfig::pinned(500),
+                ..Default::default()
+            },
+        );
+
+        let aliases = ex.extract(&nodes);
+        // Correct bytes regardless of which copy won.
+        let mut out = vec![0f32; ds.spec.dim];
+        let mut want = vec![0u8; ds.spec.dim * 4];
+        for (i, &v) in nodes.iter().enumerate() {
+            fb.gather(&aliases[i..i + 1], &mut out);
+            ds.feature_gen.fill_row(v as u64, &mut want);
+            assert_eq!(out, crate::graph::FeatureGen::decode_row(&want), "node {v}");
+        }
+        // Counters reconcile: hedges were issued, at least one won, and
+        // wins never exceed issues.
+        let (hedges, wins) = faulty.direct_stats().hedge_snapshot();
+        assert!(hedges >= 3, "stalled originals must have been hedged: {hedges}");
+        assert!(wins >= 1, "an unstalled hedge must beat its stalled original");
+        assert!(wins <= hedges);
+        // Exactly one scatter per node: a hedge/original pair must publish
+        // once, never twice.
+        let (_, _, _, loads) = fb.stats();
+        assert_eq!(loads, nodes.len() as u64, "double scatter detected");
+        fb.check_invariants().unwrap();
+
+        // No leaked staging ranges or stray CQEs: the arena reissues
+        // cleanly for a second batch on the same extractor.
+        fb.release(&nodes);
+        let nodes2: Vec<u32> = (600..608).collect();
+        let a2 = ex.extract(&nodes2);
+        assert_eq!(a2.len(), nodes2.len());
+        fb.check_invariants().unwrap();
     }
 
     #[test]

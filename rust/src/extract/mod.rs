@@ -1,8 +1,13 @@
 //! Extract stage: asynchronous two-phase feature extraction (Algorithm 1)
-//! over coalesced multi-row segments (§4.4).
+//! over coalesced multi-row segments (§4.4), with per-epoch adaptive
+//! coalescing ([`adapt`]) and hedged reissue of straggler segments.
 
+pub mod adapt;
 pub mod coalesce;
 pub mod extractor;
 
-pub use coalesce::{plan_segments, CoalesceConfig, SegRow, Segment};
-pub use extractor::{ExtractError, ExtractOptions, ExtractTarget, Extractor};
+pub use adapt::{CoalesceGovernor, DeviceIoObservation};
+pub use coalesce::{
+    plan_segments, plan_segments_striped_adaptive, CoalesceConfig, SegRow, Segment,
+};
+pub use extractor::{ExtractError, ExtractOptions, ExtractTarget, Extractor, HedgeConfig};

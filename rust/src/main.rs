@@ -24,9 +24,26 @@
 //! extraction path unchanged.
 //!
 //! The I/O stack is pluggable (`--backend`):
-//!   sim   simulated SSD + page cache (default; the paper's timing model)
-//!   os    real OS files via pread — requires an on-disk dataset, e.g.
-//!         `gnndrive gen-data --out d && gnndrive train --backend os --data d`
+//!   sim    simulated SSD + page cache (default; the paper's timing model)
+//!   os     real OS files via a pread worker pool — requires an on-disk
+//!          dataset, e.g. `gnndrive gen-data --out d &&
+//!          gnndrive train --backend os --data d`
+//!   uring  real OS files via raw io_uring syscalls (registered files +
+//!          buffers, true kernel async). Runtime-probed: on kernels without
+//!          io_uring it warns once and falls back to the `os` pread stack.
+//!          `gnndrive uring-probe` reports availability (exit 0/1).
+//!          Incompatible with `--sync-extract` (rejected at parse time).
+//!
+//! Unless `--coalesce-bytes`/`--coalesce-gap` are passed explicitly, an
+//! adaptive governor retunes the *effective* per-device coalescing config
+//! once per epoch from charged IOPS/bandwidth headroom and engine queue
+//! pressure (the `hr%[..]` column on striped runs). Explicit values pin the
+//! governor off — the user's setting is the experiment.
+//!
+//! `--hedge` re-issues straggler extraction segments once their in-flight
+//! time exceeds the observed p99 segment latency (`--hedge-us` pins the
+//! threshold); whichever copy completes first wins, the loser is discarded
+//! in place. The epoch summary appends `hedge Nw/M` when hedges fired.
 //!
 //! Both backends stripe across `--devices N` physical devices in
 //! `--stripe-bytes` RAID-0 chunks: per-device engine queues (the `io_depth`
@@ -81,13 +98,18 @@ use std::sync::Arc;
 fn main() {
     let args = Args::new(
         "gnndrive — disk-based GNN training (ICPP '24 reproduction)\n\n\
-         USAGE: gnndrive <gen-data|table1|train|pack|serve|figure|iostat> [options]",
+         USAGE: gnndrive <gen-data|table1|train|pack|serve|figure|iostat|uring-probe> [options]",
     )
     .opt("dataset", "papers100m-mini", "dataset name (see table1)")
     .opt("system", "gnndrive", "gnndrive|gnndrive-cpu|pyg+|ginex|marius (case-insensitive)")
     .opt("model", "graphsage", "graphsage|gcn|gat")
-    .opt("backend", "sim", "I/O backend: sim (simulated SSD) | os (real files via pread)")
-    .opt("data", "", "on-disk dataset dir (gen-data output); required for --backend os")
+    .opt(
+        "backend",
+        "sim",
+        "I/O backend: sim (simulated SSD) | os (real files via pread) | uring \
+         (real files via io_uring; probes at startup, falls back to os)",
+    )
+    .opt("data", "", "on-disk dataset dir (gen-data output); required for --backend os/uring")
     .opt(
         "devices",
         "1",
@@ -99,6 +121,11 @@ fn main() {
         "io-workers",
         "8",
         "os backend: pread-pool threads, bound round-robin to stripe devices",
+    )
+    .opt(
+        "io-depth",
+        "128",
+        "async engine submission-queue depth per extractor (applies PER DEVICE on a stripe)",
     )
     .opt(
         "coalesce-bytes",
@@ -177,6 +204,22 @@ fn main() {
         "train: serve pre-sampled batches from the packed layout in --data \
          (a `gnndrive pack` output); gnndrive system only",
     )
+    .flag(
+        "sync-extract",
+        "train ablation: synchronous extraction (no async I/O overlap); \
+         incompatible with --backend uring",
+    )
+    .flag(
+        "hedge",
+        "train: hedged reissue of straggler extraction segments past the \
+         observed p99 in-flight latency (first copy wins)",
+    )
+    .opt(
+        "hedge-us",
+        "",
+        "train: pin the hedge threshold to a fixed microsecond count \
+         (implies --hedge; default: adaptive p99)",
+    )
     .flag("full", "full sweep grids for `figure` (default: quick)")
     .parse();
 
@@ -195,6 +238,18 @@ fn main() {
             print!("{}", gnndrive::experiments::figb1(!args.has("full")));
             0
         }
+        // Machine-readable probe for scripts (`scripts/tier1.sh` downgrades
+        // its uring smokes to SKIP on exit 1).
+        "uring-probe" => match gnndrive::storage::probe_uring() {
+            Ok(()) => {
+                println!("io_uring: available");
+                0
+            }
+            Err(e) => {
+                println!("io_uring: unavailable ({e})");
+                1
+            }
+        },
         _ => {
             args.print_help();
             if cmd == "help" {
@@ -202,7 +257,7 @@ fn main() {
             } else {
                 eprintln!(
                     "\nunknown command {cmd:?}; valid commands: \
-                     gen-data, table1, train, pack, serve, figure, iostat"
+                     gen-data, table1, train, pack, serve, figure, iostat, uring-probe"
                 );
                 2
             }
@@ -355,7 +410,10 @@ fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>)
         Ok(v) => v,
         Err(code) => return Err(code),
     };
-    let io_workers = args.get_usize("io-workers").unwrap_or(8).max(1);
+    let io_workers = match parse_positive_count(args, "io-workers", "pread-pool thread count") {
+        Ok(v) => v,
+        Err(code) => return Err(code),
+    };
     let mut mcfg = MachineConfig::paper()
         .with_paper_host_gb(gb)
         .with_backend(backend)
@@ -374,11 +432,13 @@ fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>)
     let machine = Arc::new(Machine::new(mcfg, Clock::from_env()));
 
     let data_dir = args.get("data").filter(|d| !d.is_empty());
-    if backend == BackendKind::Os && data_dir.is_none() {
+    if matches!(backend, BackendKind::Os | BackendKind::Uring) && data_dir.is_none() {
         eprintln!(
-            "--backend os reads real files and needs an on-disk dataset:\n  \
+            "--backend {} reads real files and needs an on-disk dataset:\n  \
              gnndrive gen-data --dataset papers-tiny --out <dir>\n  \
-             gnndrive <train|serve> --backend os --data <dir> …"
+             gnndrive <train|serve> --backend {} --data <dir> …",
+            backend.label(),
+            backend.label(),
         );
         return Err(2);
     }
@@ -411,8 +471,13 @@ fn setup_machine_and_dataset(args: &Args) -> Result<(Arc<Machine>, Arc<Dataset>)
 }
 
 /// Parse `--coalesce-bytes` / `--coalesce-gap` (shared by `train` and
-/// `serve`). `Err` carries the process exit code.
+/// `serve`). `Err` carries the process exit code. The max segment span is
+/// issued as sector-granular direct I/O, so anything that is neither 0
+/// (coalescing off) nor a positive multiple of the sector would split every
+/// merge at an unreadable boundary — reject it at parse time, mirroring
+/// `--stripe-bytes`.
 fn parse_coalesce(args: &Args) -> Result<(usize, usize), i32> {
+    const SECTOR: u64 = 512; // MachineConfig::paper() sector, both backends
     let parse_size =
         |key: &str| match gnndrive::util::units::parse_bytes(args.get_or_default(key)) {
             Ok(v) => Ok(v as usize),
@@ -421,7 +486,51 @@ fn parse_coalesce(args: &Args) -> Result<(usize, usize), i32> {
                 Err(2)
             }
         };
-    Ok((parse_size("coalesce-bytes")?, parse_size("coalesce-gap")?))
+    let bytes = parse_size("coalesce-bytes")?;
+    if bytes != 0 && (bytes as u64) % SECTOR != 0 {
+        eprintln!(
+            "--coalesce-bytes: {} is neither 0 (coalescing off) nor a positive multiple \
+             of the {}-byte device sector (try 4KiB, 64KiB, 256KiB, …)",
+            gnndrive::util::units::fmt_bytes(bytes as u64),
+            SECTOR,
+        );
+        return Err(2);
+    }
+    Ok((bytes, parse_size("coalesce-gap")?))
+}
+
+/// Parse and validate one positive-count engine knob (`--io-depth`,
+/// `--io-workers`): a zero queue depth or empty worker pool would deadlock
+/// the engine at the first submit, so reject with the expected shape in the
+/// message instead. `Err` carries the process exit code.
+fn parse_positive_count(args: &Args, key: &str, what: &str) -> Result<usize, i32> {
+    match args.get_usize(key) {
+        Ok(v) if v > 0 => Ok(v),
+        Ok(v) => {
+            eprintln!("--{key}: expected a positive {what}, got {v}");
+            Err(2)
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            Err(2)
+        }
+    }
+}
+
+/// Parse the hedging knobs: `--hedge-us` pins the threshold and implies
+/// `--hedge`. Returns `(enabled, pin_us)`; `Err` carries the exit code.
+fn parse_hedge(args: &Args) -> Result<(bool, Option<u64>), i32> {
+    let pin = match args.get("hedge-us").filter(|s| !s.is_empty()) {
+        None => None,
+        Some(s) => match s.parse::<u64>() {
+            Ok(v) if v > 0 => Some(v),
+            _ => {
+                eprintln!("--hedge-us: expected a positive microsecond count, got {s:?}");
+                return Err(2);
+            }
+        },
+    };
+    Ok((args.has("hedge") || pin.is_some(), pin))
 }
 
 fn cmd_train(args: &Args) -> i32 {
@@ -437,6 +546,26 @@ fn cmd_train(args: &Args) -> i32 {
     let Some(model) = ModelKind::by_name(model_name) else {
         eprintln!("unknown model {model_name:?}; valid models: graphsage, gcn, gat");
         return 2;
+    };
+    // Contradictory knob combos are user errors, not silent overrides:
+    // uring exists to overlap I/O, `--sync-extract` forbids overlap.
+    if BackendKind::by_name(args.get_or_default("backend")) == Some(BackendKind::Uring)
+        && args.has("sync-extract")
+    {
+        eprintln!(
+            "--backend uring is an asynchronous engine and cannot run with \
+             --sync-extract; drop one of the two (use --backend os for the \
+             synchronous ablation)"
+        );
+        return 2;
+    }
+    let io_depth = match parse_positive_count(args, "io-depth", "per-device queue depth") {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let (hedge, hedge_us) = match parse_hedge(args) {
+        Ok(pair) => pair,
+        Err(code) => return code,
     };
     let (machine, ds) = match setup_machine_and_dataset(args) {
         Ok(pair) => pair,
@@ -461,6 +590,14 @@ fn cmd_train(args: &Args) -> i32 {
         seed: args.get_usize("seed").unwrap_or(17) as u64,
         coalesce_bytes,
         coalesce_gap,
+        // Explicit CLI coalesce values pin the adaptive governor off: the
+        // user's setting is the experiment.
+        coalesce_pinned: args.get("coalesce-bytes").is_some()
+            || args.get("coalesce-gap").is_some(),
+        io_depth,
+        sync_extract: args.has("sync-extract"),
+        hedge,
+        hedge_us,
         on_io_error,
         ..TrainConfig::default()
     };

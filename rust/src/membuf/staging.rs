@@ -61,6 +61,15 @@ impl StagingArena {
         self.data.len()
     }
 
+    /// Base address of the arena's contiguous byte store, for engines that
+    /// register the arena as a fixed I/O buffer
+    /// (`AsyncIoEngine::register_buffer_range`). `UnsafeCell<u8>` is
+    /// `repr(transparent)`, so this is the first byte of `capacity()`
+    /// contiguous bytes, valid for the arena's lifetime.
+    pub fn base_addr(&self) -> usize {
+        self.data.as_ptr() as usize
+    }
+
     fn byte_ptr(&self, off: usize) -> *mut u8 {
         debug_assert!(off < self.data.len(), "offset {off} out of range");
         // `UnsafeCell<u8>` is `repr(transparent)`, so the boxed slice is a
@@ -182,6 +191,12 @@ impl StagingBuffer {
     /// Total arena bytes available to one wave of segments.
     pub fn capacity_bytes(&self) -> usize {
         self.arena.capacity()
+    }
+
+    /// `(base address, capacity)` of the backing arena — what an extractor
+    /// advertises to its engine for registered-buffer reads.
+    pub fn arena_range(&self) -> (usize, usize) {
+        (self.arena.base_addr(), self.arena.capacity())
     }
 
     /// Fresh bump allocator for one extraction wave. The caller must

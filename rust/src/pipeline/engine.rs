@@ -10,7 +10,10 @@
 //! exactly the paper's: a full queue blocks its producers.
 
 use crate::config::{Machine, OnIoError, TrainConfig};
-use crate::extract::{CoalesceConfig, ExtractError, ExtractOptions, ExtractTarget, Extractor};
+use crate::extract::{
+    CoalesceConfig, CoalesceGovernor, DeviceIoObservation, ExtractError, ExtractOptions,
+    ExtractTarget, Extractor, HedgeConfig,
+};
 use crate::graph::Dataset;
 use crate::layout::PackedLayout;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
@@ -115,6 +118,14 @@ pub struct EpochStats {
     pub queue_highwater: Vec<u64>,
     /// The per-device `--io-depth` budget the high-water marks compare to.
     pub io_depth_per_device: usize,
+    /// Per-device `(iops_headroom, bw_headroom)` fractions observed this
+    /// epoch — the adaptive-coalescing governor's inputs, surfaced so a log
+    /// reader can see *why* the effective config moved.
+    pub device_headroom: Vec<(f64, f64)>,
+    /// Hedged reissues of straggler segments this epoch (`--hedge`).
+    pub io_hedges: u64,
+    /// Hedges whose duplicate completed before the stalled original.
+    pub hedge_wins: u64,
     /// Batches served from the packed layout this epoch (`train --packed`;
     /// zero on unpacked runs — the log line stays byte-identical).
     pub packed_batches: usize,
@@ -161,6 +172,18 @@ impl EpochStats {
                     self.queue_highwater.iter().map(|h| h.to_string()).collect();
                 s.push_str(&format!("  q[{}]/{}", q.join(","), self.io_depth_per_device));
             }
+            if !self.device_headroom.is_empty() {
+                let hr: Vec<String> = self
+                    .device_headroom
+                    .iter()
+                    .map(|(io, bw)| format!("{:.0}/{:.0}", io * 100.0, bw * 100.0))
+                    .collect();
+                s.push_str(&format!("  hr%[{}]", hr.join(" ")));
+            }
+        }
+        // Hedging runs only (the default no-hedge log line stays identical).
+        if self.io_hedges > 0 {
+            s.push_str(&format!("  hedge {}w/{}", self.hedge_wins, self.io_hedges));
         }
         // Packed-layout runs only (the unpacked log line stays byte-identical).
         if self.packed_batches > 0 {
@@ -199,6 +222,10 @@ pub struct GnnDrive {
     extractors: Vec<Mutex<Extractor>>,
     trainer: Mutex<Box<dyn TrainStep>>,
     caps: Vec<usize>,
+    /// Adaptive coalescing governor: retunes the effective per-device
+    /// `CoalesceConfig` once per epoch from charged-rate headroom and queue
+    /// pressure. Pinned (inert) when the CLI passed explicit coalesce values.
+    governor: Mutex<CoalesceGovernor>,
 }
 
 impl GnnDrive {
@@ -250,6 +277,13 @@ impl GnnDrive {
         // reservation fits, down to a 256-row floor. Extraction then simply
         // proceeds in more waves.
         let mut staging_slots = cap_l.min(4096);
+        let coalesce =
+            CoalesceConfig { max_bytes: cfg.coalesce_bytes, gap_bytes: cfg.coalesce_gap };
+        let governor = Mutex::new(CoalesceGovernor::new(
+            coalesce,
+            machine.backend.stripe().devices,
+            cfg.coalesce_pinned,
+        ));
         let mut extractors = Vec::with_capacity(cfg.extractors);
         for _ in 0..cfg.extractors {
             let staging = loop {
@@ -273,10 +307,8 @@ impl GnnDrive {
                 ExtractOptions {
                     asynchronous: !cfg.sync_extract,
                     direct: !cfg.buffered_features,
-                    coalesce: CoalesceConfig {
-                        max_bytes: cfg.coalesce_bytes,
-                        gap_bytes: cfg.coalesce_gap,
-                    },
+                    coalesce,
+                    hedge: HedgeConfig { enabled: cfg.hedge, pin_us: cfg.hedge_us },
                 },
             )));
         }
@@ -290,6 +322,7 @@ impl GnnDrive {
             extractors,
             trainer: Mutex::new(trainer),
             caps,
+            governor,
         })
     }
 
@@ -657,8 +690,45 @@ impl GnnDrive {
             }
         }
         let packed1 = self.packed_totals();
+        let epoch_time = epoch_watch.elapsed();
+        // Close the adaptive-coalescing feedback loop (ISSUE 9): fold this
+        // epoch's per-device charge rates into the governor, then push the
+        // retuned effective configs into every extractor so the *next*
+        // epoch plans with them. The device model's ceilings come from the
+        // machine's SSD config (nominal for the OS backends — from_charges
+        // reports full headroom when a ceiling is unknown/zero).
+        let ssd = &self.machine.cfg.ssd;
+        let secs = epoch_time.as_secs_f64();
+        let obs: Vec<DeviceIoObservation> = device_reads
+            .iter()
+            .enumerate()
+            .map(|(d, &(reads, bytes))| {
+                DeviceIoObservation::from_charges(
+                    reads,
+                    bytes,
+                    secs,
+                    ssd.iops,
+                    ssd.read_bw,
+                    queue_highwater.get(d).copied().unwrap_or(0),
+                    self.cfg.io_depth,
+                )
+            })
+            .collect();
+        let device_headroom: Vec<(f64, f64)> =
+            obs.iter().map(|o| (o.iops_headroom, o.bw_headroom)).collect();
+        {
+            let mut gov = self.governor.lock().unwrap_or_else(|e| e.into_inner());
+            gov.observe_epoch(&obs);
+            if !gov.pinned() {
+                for ex in &self.extractors {
+                    ex.lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .set_coalesce_configs(gov.configs());
+                }
+            }
+        }
         Ok(EpochStats {
-            epoch_time: epoch_watch.elapsed(),
+            epoch_time,
             prep_time: Duration::ZERO,
             sample_time: Duration::from_nanos(sample_ns.into_inner()),
             extract_time: Duration::from_nanos(extract_ns.into_inner()),
@@ -678,6 +748,9 @@ impl GnnDrive {
             device_reads,
             queue_highwater,
             io_depth_per_device: self.cfg.io_depth,
+            device_headroom,
+            io_hedges: io.io_hedges,
+            hedge_wins: io.hedge_wins,
             packed_batches: (packed1.0 - packed0.0) as usize,
             hot_hits: packed1.1 - packed0.1,
         })
@@ -870,6 +943,57 @@ mod tests {
         assert!(hits1 > hits0, "no cross-epoch reuse: {hits0}->{hits1}");
         assert!(loads1 > loads0);
         engine.feature_buffer().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn summary_renders_headroom_and_hedges_only_when_present() {
+        let mut st = EpochStats::default();
+        assert!(!st.summary().contains("hr%"), "flat summary must stay clean");
+        assert!(!st.summary().contains("hedge"), "no-hedge summary must stay clean");
+        st.device_reads = vec![(1, 512), (2, 1024)];
+        st.queue_highwater = vec![3, 4];
+        st.io_depth_per_device = 32;
+        st.device_headroom = vec![(0.5, 0.25), (1.0, 0.0)];
+        st.io_hedges = 7;
+        st.hedge_wins = 2;
+        let s = st.summary();
+        assert!(s.contains("hr%[50/25 100/0]"), "missing headroom: {s}");
+        assert!(s.contains("hedge 2w/7"), "missing hedge counters: {s}");
+    }
+
+    #[test]
+    fn striped_epoch_reports_headroom_and_feeds_governor() {
+        let machine = Arc::new(Machine::new(
+            MachineConfig::paper().with_devices(3).with_stripe_bytes(4096),
+            Clock::new(0.05),
+        ));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
+        let cfg = quick_cfg();
+        let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
+        let stats = engine.run_epoch(0);
+        assert_eq!(stats.device_headroom.len(), 3);
+        for &(io, bw) in &stats.device_headroom {
+            assert!((0.0..=1.0).contains(&io), "iops headroom out of range: {io}");
+            assert!((0.0..=1.0).contains(&bw), "bw headroom out of range: {bw}");
+        }
+        assert!(stats.summary().contains("hr%["));
+        assert_eq!(stats.io_hedges, 0, "hedging is opt-in and off by default");
+        // The governor is wired per device and unpinned by default.
+        let gov = engine.governor.lock().unwrap();
+        assert_eq!(gov.configs().len(), 3);
+        assert!(!gov.pinned());
+    }
+
+    #[test]
+    fn pinned_governor_leaves_extractor_overrides_alone() {
+        let machine = Arc::new(Machine::new(MachineConfig::paper(), Clock::new(0.05)));
+        let ds = Arc::new(Dataset::materialize(&DatasetSpec::unit_test(), &machine).unwrap());
+        let mut cfg = quick_cfg();
+        cfg.coalesce_pinned = true;
+        let engine = build_engine(&machine, &ds, &cfg, Variant::Gpu);
+        let stats = engine.run_epoch(0);
+        assert_eq!(stats.batches, 4);
+        assert!(engine.governor.lock().unwrap().pinned());
     }
 
     #[test]

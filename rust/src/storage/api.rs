@@ -173,6 +173,12 @@ pub struct DirectIoStats {
     /// fallback instead of a real `O_DIRECT` descriptor (OS backend on
     /// filesystems that refuse `O_DIRECT`, or memory-backed files).
     pub direct_fallbacks: AtomicU64,
+    /// Speculative duplicate issues of straggling in-flight segments
+    /// (hedged reissue; each hedge is a real, honestly-charged request).
+    pub io_hedges: AtomicU64,
+    /// Hedges whose completion arrived before the straggling original's —
+    /// the hedge's bytes were the ones scattered.
+    pub hedge_wins: AtomicU64,
 }
 
 impl DirectIoStats {
@@ -214,6 +220,21 @@ impl DirectIoStats {
     pub fn count_fallback(&self) {
         self.direct_fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
+
+    /// `(io_hedges, hedge_wins)` snapshot — process-cumulative like
+    /// `snapshot`; consumed as per-epoch deltas.
+    pub fn hedge_snapshot(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.io_hedges.load(Relaxed), self.hedge_wins.load(Relaxed))
+    }
+
+    pub fn count_hedge(&self) {
+        self.io_hedges.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn count_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
 }
 
 /// Start-of-epoch I/O bookmark: zeroes the backend's `io_counters` and pins
@@ -223,6 +244,7 @@ impl DirectIoStats {
 pub struct EpochIoSnapshot {
     dio: (u64, u64),
     faults: (u64, u64, u64),
+    hedges: (u64, u64),
 }
 
 /// Per-epoch charged-I/O totals derived from an [`EpochIoSnapshot`]
@@ -235,6 +257,8 @@ pub struct EpochIoTotals {
     pub io_retries: u64,
     pub io_failures: u64,
     pub direct_fallbacks: u64,
+    pub io_hedges: u64,
+    pub hedge_wins: u64,
 }
 
 impl EpochIoSnapshot {
@@ -243,6 +267,7 @@ impl EpochIoSnapshot {
         EpochIoSnapshot {
             dio: backend.direct_stats().snapshot(),
             faults: backend.direct_stats().fault_snapshot(),
+            hedges: backend.direct_stats().hedge_snapshot(),
         }
     }
 
@@ -251,6 +276,8 @@ impl EpochIoSnapshot {
         let c = backend.io_counters();
         let (retries0, failures0, fallbacks0) = self.faults;
         let (retries, failures, fallbacks) = backend.direct_stats().fault_snapshot();
+        let (hedges0, wins0) = self.hedges;
+        let (hedges, wins) = backend.direct_stats().hedge_snapshot();
         EpochIoTotals {
             reads: c.reads.load(Ordering::Relaxed),
             read_bytes: c.read_bytes.load(Ordering::Relaxed),
@@ -258,6 +285,8 @@ impl EpochIoSnapshot {
             io_retries: retries.saturating_sub(retries0),
             io_failures: failures.saturating_sub(failures0),
             direct_fallbacks: fallbacks.saturating_sub(fallbacks0),
+            io_hedges: hedges.saturating_sub(hedges0),
+            hedge_wins: wins.saturating_sub(wins0),
         }
     }
 }
@@ -376,6 +405,20 @@ pub trait AsyncIoEngine: Send + Sync {
     /// completion contract.
     fn queue_highwater(&self) -> Vec<u64> {
         Vec::new()
+    }
+
+    /// Advertise one host byte range `[addr, addr+len)` that every future
+    /// SQE destination will fall inside (the extractor's staging arena).
+    /// Engines that can pre-register DMA buffers with the kernel
+    /// (`UringEngine` via `IORING_REGISTER_BUFFERS`) use it to serve reads
+    /// as `READ_FIXED`; everyone else ignores it. Purely an optimization
+    /// hint: correctness never depends on the call, and destinations
+    /// outside the range must still work (served unregistered). The caller
+    /// must keep the range alive for the engine's lifetime — the extractor
+    /// satisfies this because it owns both the staging arena and the engine
+    /// and the arena outlives the engine.
+    fn register_buffer_range(&self, addr: usize, len: usize) {
+        let _ = (addr, len);
     }
 }
 
@@ -548,6 +591,21 @@ pub trait IoBackend: Send + Sync {
     /// Build this backend's asynchronous engine with `depth` max outstanding
     /// requests.
     fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine>;
+
+    /// Kernel-submittable translation of `[offset, offset+len)` of `file`:
+    /// `Some((raw_fd, physical_offset))` when the whole span lives in one
+    /// real OS file the `UringEngine` may read directly (striped backings
+    /// translate to the owning member; spans straddling members return
+    /// `None`). `None` (the default) routes the request through the
+    /// `serve_sqe` fallback path instead — sim backends, fault-injecting
+    /// wrappers with an active plan, and procedural backings all say `None`
+    /// so their semantics (charging by sleeping, deterministic fault draws,
+    /// generated bytes) are never bypassed by a raw kernel read. The fd
+    /// stays owned by the backing; callers must not close it.
+    fn uring_target(&self, file: &SimFile, offset: u64, len: usize) -> Option<(i32, u64)> {
+        let _ = (file, offset, len);
+        None
+    }
 }
 
 /// Which backend to instantiate (CLI/config selector).
@@ -561,6 +619,12 @@ pub enum BackendKind {
     /// thread-pool async engine. Requires a dataset written to disk
     /// (`gnndrive gen-data` + `--data`).
     Os,
+    /// Real OS files served by the genuine `io_uring` syscall engine
+    /// (`storage/uring_os.rs`). Runtime-gated: selection probes the kernel
+    /// at startup and falls back to the `Os` pread path (with a one-time
+    /// warning) when io_uring is unavailable. Same dataset requirements as
+    /// `Os`.
+    Uring,
 }
 
 impl BackendKind {
@@ -569,6 +633,7 @@ impl BackendKind {
         match s.to_ascii_lowercase().as_str() {
             "sim" | "simulated" => Some(BackendKind::Sim),
             "os" | "os-file" | "osfile" => Some(BackendKind::Os),
+            "uring" | "io-uring" | "io_uring" => Some(BackendKind::Uring),
             _ => None,
         }
     }
@@ -577,12 +642,13 @@ impl BackendKind {
         match self {
             BackendKind::Sim => "sim",
             BackendKind::Os => "os",
+            BackendKind::Uring => "uring",
         }
     }
 
     /// Valid CLI names, for error messages.
     pub fn names() -> &'static str {
-        "sim, os"
+        "sim, os, uring"
     }
 }
 
@@ -597,6 +663,20 @@ mod tests {
         assert_eq!(BackendKind::by_name("Os"), Some(BackendKind::Os));
         assert_eq!(BackendKind::by_name("OS-FILE"), Some(BackendKind::Os));
         assert_eq!(BackendKind::by_name("nvme"), None);
+        assert_eq!(BackendKind::by_name("uring"), Some(BackendKind::Uring));
+        assert_eq!(BackendKind::by_name("IO-URING"), Some(BackendKind::Uring));
+        assert_eq!(BackendKind::by_name("io_uring"), Some(BackendKind::Uring));
+        assert_eq!(BackendKind::Uring.label(), "uring");
         assert_eq!(BackendKind::default(), BackendKind::Sim);
+    }
+
+    #[test]
+    fn hedge_counters_snapshot_as_deltas() {
+        let s = DirectIoStats::default();
+        assert_eq!(s.hedge_snapshot(), (0, 0));
+        s.count_hedge();
+        s.count_hedge();
+        s.count_hedge_win();
+        assert_eq!(s.hedge_snapshot(), (2, 1));
     }
 }

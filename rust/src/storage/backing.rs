@@ -61,6 +61,20 @@ pub trait Backing: Send + Sync {
         Ok(self.read_direct_at(offset, buf))
     }
 
+    /// Kernel-submittable translation of `[offset, offset+len)`: `Some((fd,
+    /// physical_offset))` when the whole span is served by one real OS file
+    /// descriptor at a single contiguous physical offset (so an `io_uring`
+    /// read of `(fd, physical_offset, len)` returns exactly the bytes
+    /// `read_at(offset, ..)` would). `None` (the default) for stores with no
+    /// fd (memory, procedural) or spans straddling stripe members — those
+    /// route through the engine's `serve_sqe` fallback instead. The returned
+    /// fd remains owned by the backing; callers must not close it and must
+    /// not outlive the backing.
+    fn uring_target(&self, offset: u64, len: usize) -> Option<(i32, u64)> {
+        let _ = (offset, len);
+        None
+    }
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -210,6 +224,15 @@ impl Backing for StripedBacking {
             at += run;
         }
         Ok(all_direct)
+    }
+
+    fn uring_target(&self, offset: u64, len: usize) -> Option<(i32, u64)> {
+        // Only a span confined to ONE member translates to one contiguous
+        // physical read; multi-chunk spans reassemble through read_at.
+        match self.spec.split(offset, len).as_slice() {
+            [(dev, local, run)] => self.members[*dev].uring_target(*local, *run),
+            _ => None,
+        }
     }
 }
 
@@ -413,6 +436,16 @@ impl Backing for FileBacking {
             return Ok(true);
         }
         self.try_read_at(offset, buf).map(|()| false)
+    }
+
+    fn uring_target(&self, offset: u64, len: usize) -> Option<(i32, u64)> {
+        // Spans overhanging EOF fall back: read_at zero-fills the overhang
+        // while a kernel read would come back short.
+        if offset + len as u64 > self.len {
+            return None;
+        }
+        use std::os::unix::io::AsRawFd;
+        Some((self.file.as_raw_fd(), offset))
     }
 }
 
@@ -649,6 +682,39 @@ mod tests {
             striped.read_at(off as u64, &mut b);
             assert_eq!(a, b, "off={off} len={len}");
         }
+    }
+
+    #[test]
+    fn uring_target_translates_only_single_file_spans() {
+        // Memory stores never translate.
+        let mem = MemBacking::new(vec![0u8; 256]);
+        assert_eq!(mem.uring_target(0, 64), None);
+
+        // A real file translates in-bounds spans to (fd, same offset) and
+        // refuses EOF-overhanging ones.
+        let dir = std::env::temp_dir().join("gnndrive_test_backing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("uring_target_{}.bin", std::process::id()));
+        std::fs::write(&path, vec![7u8; 1000]).unwrap();
+        let fb = FileBacking::open(&path).unwrap();
+        let (fd, phys) = fb.uring_target(100, 200).expect("in-bounds span translates");
+        assert!(fd >= 0);
+        assert_eq!(phys, 100);
+        assert_eq!(fb.uring_target(900, 200), None, "EOF overhang must not translate");
+
+        // Striped: one-member spans translate through the member at the
+        // LOCAL offset; chunk-straddling spans do not.
+        let members: Vec<BackingRef> = (0..2)
+            .map(|d| {
+                let p = dir.join(format!("uring_member_{}_{d}.bin", std::process::id()));
+                std::fs::write(&p, vec![d as u8; 512]).unwrap();
+                Arc::new(FileBacking::open(&p).unwrap()) as BackingRef
+            })
+            .collect();
+        let sb = StripedBacking::new(members, 64);
+        let (_, local) = sb.uring_target(64, 32).expect("single-chunk span translates");
+        assert_eq!(local, 0, "logical 64 is member 1's local 0");
+        assert_eq!(sb.uring_target(60, 32), None, "chunk straddle must not translate");
     }
 
     #[test]

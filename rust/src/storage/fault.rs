@@ -38,6 +38,7 @@ use super::engine::SimFile;
 use super::osfile::{PreadPool, DEFAULT_POOL_THREADS};
 use super::ssd::SsdCounters;
 use super::uring::Uring;
+use super::uring_os::UringEngine;
 use crate::sim::Clock;
 use crate::util::rng::hash3;
 use std::collections::HashMap;
@@ -114,6 +115,14 @@ impl FaultPlan {
     /// shapes instead of asserting on probabilities.
     pub fn transient_verdict(&self, offset: u64, try_no: u32) -> bool {
         self.roll(STREAM_TRANSIENT, offset, try_no, self.transient_rate)
+    }
+
+    /// Stall-stream verdict for `(offset, try#)`: would this draw sleep?
+    /// Public for the same reason as [`FaultPlan::transient_verdict`] —
+    /// hedging tests *select* seeds where an original's first service draw
+    /// stalls and its hedge's draw does not, instead of hoping.
+    pub fn stall_verdict(&self, offset: u64, try_no: u32) -> bool {
+        self.roll(STREAM_STALL, offset, try_no, self.stall_rate)
     }
 
     /// Deterministic Bernoulli roll on `stream` for `(offset, try#)`.
@@ -254,6 +263,7 @@ impl IoBackend for FaultInjectBackend {
         match self.inner.name() {
             "sim" => "sim+fault",
             "os" => "os+fault",
+            "uring" => "uring+fault",
             _ => "fault",
         }
     }
@@ -374,6 +384,18 @@ impl IoBackend for FaultInjectBackend {
         self.inner.reset_io_stats()
     }
 
+    fn uring_target(&self, file: &SimFile, offset: u64, len: usize) -> Option<(i32, u64)> {
+        // An active plan must see every attempt: kernel-direct reads would
+        // bypass the fault rolls entirely, so route everything through the
+        // serve_sqe path while faults can fire. Inactive wrappers are
+        // transparent.
+        if self.plan.is_active() {
+            None
+        } else {
+            self.inner.uring_target(file, offset, len)
+        }
+    }
+
     fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine> {
         // The wrapper itself becomes the engine's backend, so every engine
         // worker read passes through the fault plan and the retry policy the
@@ -383,6 +405,10 @@ impl IoBackend for FaultInjectBackend {
             BackendKind::Os => {
                 let threads = self.io_workers;
                 Box::new(PreadPool::new(self, depth, threads))
+            }
+            BackendKind::Uring => {
+                let threads = self.io_workers;
+                Box::new(UringEngine::new(self, depth, threads))
             }
         }
     }

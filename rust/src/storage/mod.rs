@@ -17,9 +17,51 @@
 //!   (direct reads use a real `O_DIRECT` descriptor where the filesystem
 //!   grants it, with graceful cached fallback), and a `pread` thread pool
 //!   ([`osfile::PreadPool`]) as its async engine; charges degrade to pure
-//!   accounting. Both async engines share one submit/harvest core
+//!   accounting. `--backend uring` is the same `OsFileBackend` surface with
+//!   the genuine kernel ring ([`uring_os::UringEngine`]) as its async
+//!   engine. All three async engines share one submit/harvest core
 //!   ([`engine_core::EngineCore`]), so the SQ/CQ + counter ordering
 //!   invariants live in exactly one place.
+//!
+//! ## The three-engine contract (`--backend sim | os | uring`)
+//!
+//! Every async engine is [`engine_core::EngineCore`] plus a worker policy;
+//! the engine-specific part is only *how a popped SQE turns into bytes*:
+//!
+//! * [`uring::Uring`] (sim) — workers sleep out simulated device time and
+//!   copy from the backing.
+//! * [`osfile::PreadPool`] (os) — workers issue one positional `pread` per
+//!   SQE through `serve_sqe` (bounded retries, deadline, panic containment).
+//! * [`uring_os::UringEngine`] (uring) — workers batch SQEs into a real
+//!   kernel io_uring: raw `io_uring_setup`/`enter`/`register` syscalls
+//!   (inline asm; the build links no libc), mmap'd SQ/CQ rings, one private
+//!   ring per worker.
+//!
+//! Ownership and fallback rules for the kernel engine:
+//!
+//! * **Ring memory is worker-owned.** Each worker thread creates, mmaps,
+//!   and drops its own ring; `EngineCore` never sees kernel memory. Engine
+//!   drop closes the core, joins workers, and the rings unmap with them.
+//! * **fd translation is backend-owned.** [`IoBackend::uring_target`] maps
+//!   `(file, offset, len)` to a real `(fd, physical_offset)` only when the
+//!   whole span lies in one OS file; the fd stays owned by the backing.
+//!   `None` (sim files, fault wrappers with an active plan, spans
+//!   straddling stripe members) routes that SQE through the `serve_sqe`
+//!   fallback inside the same worker — per-request, not per-engine.
+//! * **Registered buffers borrow the staging arena.** The extractor
+//!   advertises the arena range via
+//!   [`api::AsyncIoEngine::register_buffer_range`]; workers register it as
+//!   fixed buffer 0 and use `READ_FIXED` when a destination lies inside.
+//!   The caller guarantees the arena outlives the engine (it does: the
+//!   extractor drops engines before buffers). Registration failure
+//!   (`RLIMIT_MEMLOCK`) is sticky and silently downgrades to plain `READ`.
+//! * **Probe, then fall back typed.** `--backend uring` is gated by
+//!   [`uring_os::probe_uring`] (ring setup + NOP round-trip) at machine
+//!   build; a failed probe warns once and builds the `os` pread stack
+//!   instead, so CI on kernels without io_uring passes identically. A ring
+//!   that fails *after* a good probe (seccomp, fd limits) degrades that
+//!   worker to the pread loop with a one-time warning — the engine
+//!   contract, accounting, and fault matrix are engine-path-independent.
 //! * **Backings** — where bytes live ([`backing`]): a real file, process
 //!   memory, or a deterministic procedural generator. Both backends read
 //!   through the same [`SimFile`] handle, so a dataset can move between
@@ -79,8 +121,8 @@
 //! * **The submitter owns the row table.** Engines never see which rows
 //!   live inside a segment — they serve one contiguous read into one
 //!   staging range and complete it; the extractor scatters rows out of the
-//!   completed range. This keeps the engine contract minimal (and a future
-//!   real-io_uring engine trivial).
+//!   completed range. This keeps the engine contract minimal — it is what
+//!   let the real-io_uring engine slot in as just another worker loop.
 //! * **The backend owns segment accounting.** A direct segment goes through
 //!   [`IoBackend::read_direct_segment_nocharge`], which records one
 //!   request, `Sqe::useful` useful bytes (Σ row bytes) and the
@@ -179,6 +221,7 @@ pub mod page_cache;
 pub mod pcie;
 pub mod ssd;
 pub mod uring;
+pub mod uring_os;
 
 pub use api::{
     AsyncIoEngine, BackendKind, Cqe, DirectIoStats, EpochIoSnapshot, EpochIoTotals, IoBackend,
@@ -196,3 +239,4 @@ pub use page_cache::{DataKind, FileId, PageCache, PAGE_SIZE};
 pub use pcie::{Pcie, PcieConfig};
 pub use ssd::{SsdConfig, SsdCounters, SsdSim};
 pub use uring::Uring;
+pub use uring_os::{probe_uring, UringEngine};

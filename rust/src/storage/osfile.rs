@@ -46,6 +46,13 @@ pub struct OsFileBackend {
     /// aggregate `counters` above stays the `io_counters` surface. One
     /// entry per device; len 1 when unstriped.
     dev_counters: Vec<SsdCounters>,
+    /// When true, `async_engine` mints the genuine io_uring submission
+    /// path ([`super::uring_os::UringEngine`]) instead of [`PreadPool`].
+    /// The backend surface (charging, O_DIRECT fallback accounting,
+    /// per-device breakdown) is identical either way — only the syscall
+    /// engine behind `async_engine` changes, so conformance and fault
+    /// coverage carry over. Set only after `probe_uring()` succeeded.
+    uring: bool,
 }
 
 impl OsFileBackend {
@@ -70,7 +77,20 @@ impl OsFileBackend {
             direct_stats: DirectIoStats::default(),
             spec,
             dev_counters: (0..spec.devices.max(1)).map(|_| SsdCounters::default()).collect(),
+            uring: false,
         }
+    }
+
+    /// Same backend, but `async_engine` mints the io_uring syscall engine.
+    /// Callers must gate this behind [`super::uring_os::probe_uring`]:
+    /// constructing it on a kernel without io_uring still works (workers
+    /// degrade to the serve_sqe fallback with a one-time warning), but the
+    /// intended selection path is probe-then-construct so `--backend uring`
+    /// falls back to the pread pool *typed*, not silently degraded.
+    pub fn with_stripe_uring(sector: usize, pool_threads: usize, spec: StripeSpec) -> Self {
+        let mut be = Self::with_stripe(sector, pool_threads, spec);
+        be.uring = true;
+        be
     }
 
     /// Sector-aligned size of a `[offset, offset+len)` request.
@@ -88,10 +108,15 @@ impl OsFileBackend {
             self.dev_counters[dev.min(self.dev_counters.len() - 1)].add_read(ops, bytes);
         }
     }
+}
 
 impl IoBackend for OsFileBackend {
     fn name(&self) -> &'static str {
-        "os"
+        if self.uring {
+            "uring"
+        } else {
+            "os"
+        }
     }
 
     fn sector(&self) -> usize {
@@ -264,9 +289,20 @@ impl IoBackend for OsFileBackend {
         }
     }
 
+    fn uring_target(&self, file: &SimFile, offset: u64, len: usize) -> Option<(i32, u64)> {
+        // Pure translation: the backing answers only when the whole span
+        // lands inside one real OS file at a contiguous physical offset.
+        // Charging stays with the engine that consumes the answer.
+        file.backing.uring_target(offset, len)
+    }
+
     fn async_engine(self: Arc<Self>, depth: usize) -> Box<dyn AsyncIoEngine> {
         let threads = self.pool_threads;
-        Box::new(PreadPool::new(self, depth, threads))
+        if self.uring {
+            Box::new(super::uring_os::UringEngine::new(self, depth, threads))
+        } else {
+            Box::new(PreadPool::new(self, depth, threads))
+        }
     }
 }
 

@@ -1,0 +1,1052 @@
+//! Genuine `io_uring` asynchronous engine over real OS files — the third
+//! [`AsyncIoEngine`], selected with `--backend uring`.
+//!
+//! Unlike the sim ring ([`super::uring::Uring`]) and the `pread` pool
+//! ([`super::osfile::PreadPool`]), this engine actually talks to the kernel:
+//! raw `io_uring_setup`/`io_uring_enter`/`io_uring_register` syscalls (no
+//! external crate — the offline build has no libc, so the syscalls are
+//! inline `asm!`, gated to x86_64/aarch64), mmap'd SQ/CQ rings, registered
+//! files, and — when the kernel grants it — registered buffers over the
+//! staging arena so segment reads land with `IORING_OP_READ_FIXED`.
+//!
+//! ## Division of labour
+//!
+//! [`EngineCore`] still owns the engine contract: bounded per-device
+//! sub-queues, the unbounded CQ, the `submitted`/`inflight`/`harvested`
+//! counter discipline, poison/drain semantics. This module is *only* a
+//! worker loop: each worker binds one stripe device's sub-queue and one
+//! private kernel ring, pops a chunk of SQEs, partitions it into
+//! kernel-eligible requests (the backend translated `(file, offset, len)`
+//! into a single real `(fd, physical_offset)` via
+//! [`IoBackend::uring_target`]) and fallback requests (sim-backed files,
+//! fault wrappers with an active plan, chunk-straddling spans), serves the
+//! fallback half through [`serve_sqe`] exactly like the pread pool, and
+//! drives the kernel half through one `io_uring_enter` per chunk.
+//!
+//! ## Accounting parity
+//!
+//! A kernel-completed direct segment records *exactly* what the pread pool
+//! records for the same request: one `requests` tick, `useful` bytes,
+//! sector-rounded `aligned` bytes, and one `charge_multi_dev(dev, 1,
+//! aligned)` — so `iostat`, the redundancy analysis, and the per-device
+//! breakdown are engine-independent. The one intentional difference is
+//! `direct_fallbacks`: kernel reads go through the cached fd (an arena
+//! destination carries no O_DIRECT alignment guarantee), so every kernel
+//! read counts one fallback, mirroring the "cached pread stand-in for
+//! O_DIRECT" bookkeeping.
+//!
+//! ## Degradation ladder
+//!
+//! `--backend uring` is runtime-gated by [`probe_uring`] (ring setup + NOP
+//! round-trip). If the probe fails at startup the *backend* falls back to
+//! the pread pool with a typed warning (see `config.rs`). If a worker's
+//! ring setup fails later anyway (e.g. seccomp), the worker degrades to a
+//! pure `serve_sqe` loop — identical semantics, one-time warning. If a
+//! single kernel CQE comes back short or errored, that request alone
+//! retries through `serve_sqe` (counted as a retry) — the fault/retry
+//! matrix holds for every request regardless of which path served it.
+
+use super::api::{AsyncIoEngine, Cqe, IoBackend, IoMode, Sqe};
+use super::engine_core::{serve_sqe, EngineCore, WorkerPort};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, Once};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// Raw syscall layer (no libc in this build: inline asm, arch-gated).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod sys {
+    pub const SYS_CLOSE: usize = 3;
+    pub const SYS_MMAP: usize = 9;
+    pub const SYS_MUNMAP: usize = 11;
+    pub const SYS_IO_URING_SETUP: usize = 425;
+    pub const SYS_IO_URING_ENTER: usize = 426;
+    pub const SYS_IO_URING_REGISTER: usize = 427;
+
+    /// Six-argument raw syscall. Returns the kernel's raw result:
+    /// negative values are `-errno`.
+    ///
+    /// # Safety
+    /// The caller must uphold the invoked syscall's own contract (valid
+    /// pointers/lengths for the given syscall number).
+    pub unsafe fn syscall6(
+        nr: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    pub const SUPPORTED: bool = true;
+}
+
+#[cfg(target_arch = "aarch64")]
+mod sys {
+    pub const SYS_CLOSE: usize = 57;
+    pub const SYS_MMAP: usize = 222;
+    pub const SYS_MUNMAP: usize = 215;
+    pub const SYS_IO_URING_SETUP: usize = 425;
+    pub const SYS_IO_URING_ENTER: usize = 426;
+    pub const SYS_IO_URING_REGISTER: usize = 427;
+
+    /// See the x86_64 twin.
+    ///
+    /// # Safety
+    /// The caller must uphold the invoked syscall's own contract.
+    pub unsafe fn syscall6(
+        nr: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+
+    pub const SUPPORTED: bool = true;
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    pub const SYS_CLOSE: usize = 0;
+    pub const SYS_MMAP: usize = 0;
+    pub const SYS_MUNMAP: usize = 0;
+    pub const SYS_IO_URING_SETUP: usize = 0;
+    pub const SYS_IO_URING_ENTER: usize = 0;
+    pub const SYS_IO_URING_REGISTER: usize = 0;
+
+    /// No raw-syscall support on this architecture: everything returns
+    /// `-ENOSYS`, so the probe fails typed and the backend falls back to
+    /// the pread pool.
+    ///
+    /// # Safety
+    /// Trivially safe — never touches the kernel.
+    pub unsafe fn syscall6(
+        _nr: usize,
+        _a1: usize,
+        _a2: usize,
+        _a3: usize,
+        _a4: usize,
+        _a5: usize,
+        _a6: usize,
+    ) -> isize {
+        -38 // ENOSYS
+    }
+
+    pub const SUPPORTED: bool = false;
+}
+
+// ---------------------------------------------------------------------------
+// io_uring ABI (uapi/linux/io_uring.h, stable since 5.1).
+// ---------------------------------------------------------------------------
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct SqringOffsets {
+    head: u32,
+    tail: u32,
+    ring_mask: u32,
+    ring_entries: u32,
+    flags: u32,
+    dropped: u32,
+    array: u32,
+    resv1: u32,
+    user_addr: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct CqringOffsets {
+    head: u32,
+    tail: u32,
+    ring_mask: u32,
+    ring_entries: u32,
+    overflow: u32,
+    cqes: u32,
+    flags: u32,
+    resv1: u32,
+    user_addr: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct IoUringParams {
+    sq_entries: u32,
+    cq_entries: u32,
+    flags: u32,
+    sq_thread_cpu: u32,
+    sq_thread_idle: u32,
+    features: u32,
+    wq_fd: u32,
+    resv: [u32; 3],
+    sq_off: SqringOffsets,
+    cq_off: CqringOffsets,
+}
+
+/// One kernel submission-queue entry (64 bytes). Field unions in the uapi
+/// header are flattened to the members this engine uses.
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct KernelSqe {
+    opcode: u8,
+    flags: u8,
+    ioprio: u16,
+    fd: i32,
+    off: u64,
+    addr: u64,
+    len: u32,
+    rw_flags: u32,
+    user_data: u64,
+    buf_index: u16,
+    personality: u16,
+    splice_fd_in: i32,
+    pad2: [u64; 2],
+}
+
+/// One kernel completion-queue entry (16 bytes).
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+struct KernelCqe {
+    user_data: u64,
+    res: i32,
+    flags: u32,
+}
+
+/// `struct iovec` for `IORING_REGISTER_BUFFERS`.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct IoVec {
+    base: usize,
+    len: usize,
+}
+
+const IORING_OFF_SQ_RING: usize = 0;
+const IORING_OFF_CQ_RING: usize = 0x0800_0000;
+const IORING_OFF_SQES: usize = 0x1000_0000;
+
+const IORING_ENTER_GETEVENTS: usize = 1;
+
+const IORING_REGISTER_BUFFERS: usize = 0;
+const IORING_UNREGISTER_BUFFERS: usize = 1;
+const IORING_REGISTER_FILES: usize = 2;
+const IORING_UNREGISTER_FILES: usize = 3;
+
+const IORING_OP_NOP: u8 = 0;
+const IORING_OP_READ_FIXED: u8 = 4;
+const IORING_OP_READ: u8 = 22;
+
+/// `IOSQE_FIXED_FILE`: `fd` is an index into the registered-file table.
+const IOSQE_FIXED_FILE: u8 = 1;
+
+const PROT_READ_WRITE: usize = 0x3;
+const MAP_SHARED_POPULATE: usize = 0x8001;
+
+const EINTR: isize = -4;
+const EAGAIN: isize = -11;
+
+/// Max distinct fds a worker keeps in its registered-file table before new
+/// fds just ride as plain descriptors (a training run touches a handful of
+/// feature/packed files; this is headroom, not a limit that binds).
+const MAX_REGISTERED_FILES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// The kernel ring.
+// ---------------------------------------------------------------------------
+
+struct MmapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            // SAFETY: ptr/len came from a successful mmap and nothing else
+            // unmaps this region.
+            unsafe {
+                sys::syscall6(sys::SYS_MUNMAP, self.ptr as usize, self.len, 0, 0, 0, 0);
+            }
+        }
+    }
+}
+
+/// A private kernel io_uring instance: ring fd plus the three mmaps and the
+/// cached ring-geometry pointers. One ring per worker thread — single
+/// producer, single consumer, so the only synchronization needed is the
+/// acquire/release pairing with the kernel on the head/tail indices.
+struct Ring {
+    fd: i32,
+    sq_entries: u32,
+    sq_mask: u32,
+    cq_mask: u32,
+    sq_head: *const AtomicU32,
+    sq_tail: *const AtomicU32,
+    sq_array: *mut u32,
+    sqes: *mut KernelSqe,
+    cq_head: *const AtomicU32,
+    cq_tail: *const AtomicU32,
+    cqes: *const KernelCqe,
+    /// Keeps the mappings alive for the ring's lifetime (field order puts
+    /// them after the raw pointers purely for readability; Drop unmaps).
+    _sq_map: MmapRegion,
+    _cq_map: MmapRegion,
+    _sqe_map: MmapRegion,
+    /// fds registered with `IORING_REGISTER_FILES`, index = table slot.
+    registered_files: Vec<i32>,
+    /// `None` = never tried; `Some(range)` = this arena range is currently
+    /// registered as buffer 0; `Some((0, 0))` is never stored (a failed
+    /// registration resets to `None` with `buf_reg_failed` set).
+    registered_buf: Option<(usize, usize)>,
+    /// Buffer registration failed once (e.g. RLIMIT_MEMLOCK): stop trying.
+    buf_reg_failed: bool,
+}
+
+// SAFETY: a Ring is confined to the worker thread that created it; Send is
+// needed only to move it into that thread at spawn.
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn mmap(fd: i32, len: usize, offset: usize) -> Result<MmapRegion, String> {
+        // SAFETY: plain mmap of the ring fd at a kernel-defined offset.
+        let ret = unsafe {
+            sys::syscall6(
+                sys::SYS_MMAP,
+                0,
+                len,
+                PROT_READ_WRITE,
+                MAP_SHARED_POPULATE,
+                fd as usize,
+                offset,
+            )
+        };
+        if ret < 0 {
+            return Err(format!("mmap(io_uring, off={offset:#x}) failed: errno {}", -ret));
+        }
+        Ok(MmapRegion { ptr: ret as *mut u8, len })
+    }
+
+    /// Set up a kernel ring with at least `entries` SQEs (the kernel rounds
+    /// up to a power of two). Fails typed on any setup/mmap error — the
+    /// caller decides whether that means "fall back" or "probe failed".
+    fn new(entries: u32) -> Result<Ring, String> {
+        if !sys::SUPPORTED {
+            return Err("io_uring unavailable: no raw-syscall support on this arch".into());
+        }
+        let entries = entries.clamp(1, 4096).next_power_of_two();
+        let mut params = IoUringParams::default();
+        // SAFETY: params is a properly sized/aligned io_uring_params.
+        let fd = unsafe {
+            sys::syscall6(
+                sys::SYS_IO_URING_SETUP,
+                entries as usize,
+                &mut params as *mut IoUringParams as usize,
+                0,
+                0,
+                0,
+                0,
+            )
+        };
+        if fd < 0 {
+            return Err(format!("io_uring_setup failed: errno {}", -fd));
+        }
+        let fd = fd as i32;
+        let close_on_err = |fd: i32| {
+            // SAFETY: closing the fd we just opened.
+            unsafe { sys::syscall6(sys::SYS_CLOSE, fd as usize, 0, 0, 0, 0, 0) };
+        };
+
+        let sq_len = params.sq_off.array as usize + params.sq_entries as usize * 4;
+        let cq_len = params.cq_off.cqes as usize
+            + params.cq_entries as usize * std::mem::size_of::<KernelCqe>();
+        let sqe_len = params.sq_entries as usize * std::mem::size_of::<KernelSqe>();
+        let sq_map = match Self::mmap(fd, sq_len, IORING_OFF_SQ_RING) {
+            Ok(m) => m,
+            Err(e) => {
+                close_on_err(fd);
+                return Err(e);
+            }
+        };
+        let cq_map = match Self::mmap(fd, cq_len, IORING_OFF_CQ_RING) {
+            Ok(m) => m,
+            Err(e) => {
+                close_on_err(fd);
+                return Err(e);
+            }
+        };
+        let sqe_map = match Self::mmap(fd, sqe_len, IORING_OFF_SQES) {
+            Ok(m) => m,
+            Err(e) => {
+                close_on_err(fd);
+                return Err(e);
+            }
+        };
+
+        // SAFETY: every offset below comes from the kernel's own
+        // io_uring_params for these mappings.
+        let ring = unsafe {
+            Ring {
+                fd,
+                sq_entries: params.sq_entries,
+                sq_mask: *(sq_map.ptr.add(params.sq_off.ring_mask as usize) as *const u32),
+                cq_mask: *(cq_map.ptr.add(params.cq_off.ring_mask as usize) as *const u32),
+                sq_head: sq_map.ptr.add(params.sq_off.head as usize) as *const AtomicU32,
+                sq_tail: sq_map.ptr.add(params.sq_off.tail as usize) as *const AtomicU32,
+                sq_array: sq_map.ptr.add(params.sq_off.array as usize) as *mut u32,
+                sqes: sqe_map.ptr as *mut KernelSqe,
+                cq_head: cq_map.ptr.add(params.cq_off.head as usize) as *const AtomicU32,
+                cq_tail: cq_map.ptr.add(params.cq_off.tail as usize) as *const AtomicU32,
+                cqes: cq_map.ptr.add(params.cq_off.cqes as usize) as *const KernelCqe,
+                _sq_map: sq_map,
+                _cq_map: cq_map,
+                _sqe_map: sqe_map,
+                registered_files: Vec::new(),
+                registered_buf: None,
+                buf_reg_failed: false,
+            }
+        };
+        Ok(ring)
+    }
+
+    /// Queue one SQE; `false` when the kernel SQ is full (the caller
+    /// enters and retries — with chunked submit ≤ ring size this only
+    /// happens when a chunk exceeds `sq_entries`).
+    fn push(&mut self, sqe: KernelSqe) -> bool {
+        // SAFETY (all pointer ops below): the pointers are derived from
+        // live mappings; this thread is the only SQ producer, the kernel
+        // the only SQ consumer.
+        unsafe {
+            let tail = (*self.sq_tail).load(Ordering::Relaxed);
+            let head = (*self.sq_head).load(Ordering::Acquire);
+            if tail.wrapping_sub(head) >= self.sq_entries {
+                return false;
+            }
+            let idx = tail & self.sq_mask;
+            *self.sqes.add(idx as usize) = sqe;
+            *self.sq_array.add(idx as usize) = idx;
+            (*self.sq_tail).store(tail.wrapping_add(1), Ordering::Release);
+        }
+        true
+    }
+
+    /// `io_uring_enter(to_submit, min_complete, GETEVENTS)`, retrying
+    /// `EINTR`/`EAGAIN`.
+    fn enter(&self, to_submit: u32, min_complete: u32) -> Result<(), String> {
+        loop {
+            // SAFETY: fd is a live ring fd; no sigset is passed.
+            let ret = unsafe {
+                sys::syscall6(
+                    sys::SYS_IO_URING_ENTER,
+                    self.fd as usize,
+                    to_submit as usize,
+                    min_complete as usize,
+                    IORING_ENTER_GETEVENTS,
+                    0,
+                    0,
+                )
+            };
+            if ret >= 0 {
+                return Ok(());
+            }
+            if ret == EINTR || ret == EAGAIN {
+                continue;
+            }
+            return Err(format!("io_uring_enter failed: errno {}", -ret));
+        }
+    }
+
+    /// Pop one kernel CQE if ready.
+    fn pop_cqe(&mut self) -> Option<KernelCqe> {
+        // SAFETY: see `push` — this thread is the only CQ consumer.
+        unsafe {
+            let head = (*self.cq_head).load(Ordering::Relaxed);
+            let tail = (*self.cq_tail).load(Ordering::Acquire);
+            if head == tail {
+                return None;
+            }
+            let cqe = *self.cqes.add((head & self.cq_mask) as usize);
+            (*self.cq_head).store(head.wrapping_add(1), Ordering::Release);
+            Some(cqe)
+        }
+    }
+
+    fn register(&self, opcode: usize, arg: usize, nr: u32) -> isize {
+        // SAFETY: arg/nr match the register opcode's contract at each call
+        // site below.
+        unsafe {
+            sys::syscall6(
+                sys::SYS_IO_URING_REGISTER,
+                self.fd as usize,
+                opcode,
+                arg,
+                nr as usize,
+                0,
+                0,
+            )
+        }
+    }
+
+    /// Slot of `fd` in the registered-file table, registering it on first
+    /// sight (table re-registered whole — a handful of syscalls per run,
+    /// not per I/O). `None` = not registered (table full or kernel refused);
+    /// the caller uses the plain fd.
+    fn fixed_slot(&mut self, fd: i32) -> Option<u16> {
+        if let Some(pos) = self.registered_files.iter().position(|&f| f == fd) {
+            return Some(pos as u16);
+        }
+        if self.registered_files.len() >= MAX_REGISTERED_FILES {
+            return None;
+        }
+        if !self.registered_files.is_empty() {
+            self.register(IORING_UNREGISTER_FILES, 0, 0);
+        }
+        self.registered_files.push(fd);
+        let ret = self.register(
+            IORING_REGISTER_FILES,
+            self.registered_files.as_ptr() as usize,
+            self.registered_files.len() as u32,
+        );
+        if ret < 0 {
+            self.registered_files.clear();
+            return None;
+        }
+        Some((self.registered_files.len() - 1) as u16)
+    }
+
+    /// (Re-)register `range` as fixed buffer 0 if it differs from what is
+    /// currently registered. Failure is sticky — buffer registration pins
+    /// pages and a `RLIMIT_MEMLOCK` refusal will not heal itself.
+    fn ensure_buffer(&mut self, range: (usize, usize)) {
+        if self.buf_reg_failed || self.registered_buf == Some(range) {
+            return;
+        }
+        if self.registered_buf.is_some() {
+            self.register(IORING_UNREGISTER_BUFFERS, 0, 0);
+            self.registered_buf = None;
+        }
+        let iov = IoVec { base: range.0, len: range.1 };
+        let ret = self.register(IORING_REGISTER_BUFFERS, &iov as *const IoVec as usize, 1);
+        if ret < 0 {
+            self.buf_reg_failed = true;
+        } else {
+            self.registered_buf = Some(range);
+        }
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        // SAFETY: closing the ring fd; the kernel releases registrations
+        // and the MmapRegion drops unmap the rings.
+        unsafe {
+            sys::syscall6(sys::SYS_CLOSE, self.fd as usize, 0, 0, 0, 0, 0);
+        }
+    }
+}
+
+/// Startup gate for `--backend uring`: set up a small ring, run one NOP
+/// through submit → enter → harvest, tear down. `Err` carries the typed
+/// reason (unsupported arch, ENOSYS, seccomp, mmap refusal, …) that the
+/// fallback warning prints.
+pub fn probe_uring() -> Result<(), String> {
+    let mut ring = Ring::new(4)?;
+    let nop = KernelSqe { opcode: IORING_OP_NOP, fd: -1, user_data: 0x1dea, ..Default::default() };
+    if !ring.push(nop) {
+        return Err("io_uring probe: fresh ring rejected a NOP".into());
+    }
+    ring.enter(1, 1)?;
+    match ring.pop_cqe() {
+        Some(cqe) if cqe.user_data == 0x1dea => Ok(()),
+        Some(cqe) => Err(format!("io_uring probe: NOP came back with user_data {:#x}", cqe.user_data)),
+        None => Err("io_uring probe: no completion after GETEVENTS".into()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine.
+// ---------------------------------------------------------------------------
+
+fn warn_ring_degraded(err: &str) {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        eprintln!("[uring] WARN: ring setup failed ({err}); worker degraded to pread fallback");
+    });
+}
+
+/// Sector-rounded span of a request — must match
+/// `OsFileBackend::aligned_len` so kernel-path accounting is
+/// charge-identical to the pread path.
+fn aligned_len(sector: usize, offset: u64, len: usize) -> usize {
+    let sector = sector.max(1) as u64;
+    let lo = offset / sector * sector;
+    let hi = (offset + len as u64).div_ceil(sector) * sector;
+    (hi - lo) as usize
+}
+
+/// The genuine io_uring engine: [`EngineCore`] in front, per-device worker
+/// threads each owning a private kernel [`Ring`] behind.
+pub struct UringEngine {
+    core: EngineCore,
+    workers: Vec<JoinHandle<()>>,
+    /// Staging-arena range advertised via
+    /// [`AsyncIoEngine::register_buffer_range`]; workers pick it up lazily
+    /// and register it as fixed buffer 0 on their ring.
+    buf_range: Arc<Mutex<Option<(usize, usize)>>>,
+}
+
+impl UringEngine {
+    pub fn new(backend: Arc<dyn IoBackend>, depth: usize, threads: usize) -> Self {
+        let depth = depth.max(1);
+        let spec = backend.stripe();
+        let core = EngineCore::new_striped("uring engine", depth, spec);
+        let devices = core.device_count();
+        let policy = backend.retry_policy();
+        // Chunked harvest amortizes io_uring_enter: one syscall submits and
+        // reaps up to `chunk` segments. Deeper rings earn bigger chunks —
+        // this is where the ≥ depth-8 submit+harvest win comes from.
+        let chunk = depth.clamp(1, 32);
+        let buf_range: Arc<Mutex<Option<(usize, usize)>>> = Arc::new(Mutex::new(None));
+        // Same sizing rule as the pread pool: `--io-workers` threads, at
+        // least one per stripe device, never more than the ring is deep.
+        let workers = (0..threads.max(1).min(depth).max(devices))
+            .map(|w| {
+                let dev = w % devices;
+                let port = core.worker_port(dev);
+                let backend = backend.clone();
+                let buf_range = buf_range.clone();
+                let ring = Ring::new(depth as u32);
+                std::thread::spawn(move || {
+                    crate::metrics::state::register(crate::metrics::state::Role::IoWorker);
+                    let guard = port.poison_guard();
+                    match ring {
+                        Ok(ring) => {
+                            worker_loop(ring, &port, backend.as_ref(), &policy, dev, chunk, &buf_range)
+                        }
+                        Err(e) => {
+                            // Ring refused after a successful probe (eg
+                            // per-thread seccomp): identical semantics via
+                            // the serve_sqe path, engine stays live.
+                            warn_ring_degraded(&e);
+                            fallback_loop(&port, backend.as_ref(), &policy, dev);
+                        }
+                    }
+                    drop(guard);
+                    crate::metrics::state::deregister();
+                })
+            })
+            .collect();
+        UringEngine { core, workers, buf_range }
+    }
+}
+
+/// Degraded worker: byte-for-byte the pread-pool loop.
+fn fallback_loop(port: &WorkerPort, backend: &dyn IoBackend, policy: &super::api::RetryPolicy, dev: usize) {
+    while let Ok(sqe) = port.pop() {
+        let (status, aligned) = serve_sqe(backend, policy, &sqe);
+        match status {
+            Ok(bytes) => {
+                if sqe.mode == IoMode::Direct {
+                    backend.charge_multi_dev(dev, 1, aligned);
+                }
+                port.complete(sqe.user_data, bytes);
+            }
+            Err(e) => port.complete_err(sqe.user_data, e),
+        }
+    }
+}
+
+/// Serve one request through `serve_sqe` and publish — shared by the
+/// fallback partition and the kernel-error retry path.
+fn serve_and_publish(
+    port: &WorkerPort,
+    backend: &dyn IoBackend,
+    policy: &super::api::RetryPolicy,
+    dev: usize,
+    sqe: &Sqe,
+) {
+    let (status, aligned) = serve_sqe(backend, policy, sqe);
+    match status {
+        Ok(bytes) => {
+            if sqe.mode == IoMode::Direct {
+                backend.charge_multi_dev(dev, 1, aligned);
+            }
+            port.complete(sqe.user_data, bytes);
+        }
+        Err(e) => port.complete_err(sqe.user_data, e),
+    }
+}
+
+/// Kernel-ring worker loop: chunked pop, partition, batch-enter, harvest.
+fn worker_loop(
+    mut ring: Ring,
+    port: &WorkerPort,
+    backend: &dyn IoBackend,
+    policy: &super::api::RetryPolicy,
+    dev: usize,
+    chunk: usize,
+    buf_range: &Mutex<Option<(usize, usize)>>,
+) {
+    let sector = backend.sector();
+    while let Ok(sqes) = port.pop_many(chunk) {
+        // Pick up a (re)advertised staging arena before building SQEs so
+        // READ_FIXED eligibility is decided against the current range.
+        let registered = {
+            let adv = *buf_range.lock().expect("buf_range lock");
+            if let Some(range) = adv {
+                ring.ensure_buffer(range);
+            }
+            ring.registered_buf
+        };
+
+        // Partition: direct requests the backend can translate to one real
+        // (fd, physical offset) go to the kernel; everything else (sim
+        // files, active fault plans, chunk-straddling spans, buffered
+        // reads that must tick the page-cache accounting) serves inline.
+        let mut kernel: Vec<(usize, i32, u64)> = Vec::with_capacity(sqes.len());
+        for (i, sqe) in sqes.iter().enumerate() {
+            let target = if sqe.mode == IoMode::Direct {
+                backend.uring_target(&sqe.file, sqe.offset, sqe.len)
+            } else {
+                None
+            };
+            match target {
+                Some((fd, phys)) => kernel.push((i, fd, phys)),
+                None => serve_and_publish(port, backend, policy, dev, sqe),
+            }
+        }
+        if kernel.is_empty() {
+            continue;
+        }
+
+        // Build + submit the kernel half. user_data is the chunk-local
+        // index; ring depth ≥ chunk so one push pass always fits.
+        let mut submitted: Vec<usize> = Vec::with_capacity(kernel.len());
+        for &(i, fd, phys) in &kernel {
+            let sqe = &sqes[i];
+            // SAFETY: the worker owns this staging sub-range until the
+            // completion publishes (SlotRef range protocol) — same
+            // justification as serve_sqe's slice_mut.
+            let dst = unsafe { sqe.dst.slice_mut(sqe.dst_off, sqe.len) };
+            let addr = dst.as_mut_ptr() as usize;
+            let mut ksqe = KernelSqe {
+                opcode: IORING_OP_READ,
+                fd,
+                off: phys,
+                addr: addr as u64,
+                len: sqe.len as u32,
+                user_data: i as u64,
+                ..Default::default()
+            };
+            if let Some((base, blen)) = registered {
+                if addr >= base && addr + sqe.len <= base + blen {
+                    ksqe.opcode = IORING_OP_READ_FIXED;
+                    ksqe.buf_index = 0;
+                }
+            }
+            if let Some(slot) = ring.fixed_slot(fd) {
+                ksqe.fd = slot as i32;
+                ksqe.flags |= IOSQE_FIXED_FILE;
+            }
+            if ring.push(ksqe) {
+                submitted.push(i);
+            } else {
+                // Ring full (chunk > sq_entries after kernel rounding):
+                // serve the overflow inline rather than stalling.
+                serve_and_publish(port, backend, policy, dev, sqe);
+            }
+        }
+        if submitted.is_empty() {
+            continue;
+        }
+
+        // One enter drives the whole chunk; harvest until every submitted
+        // request has its CQE. An enter failure downgrades the entire
+        // outstanding set to the serve_sqe path — completions must never
+        // be dropped.
+        let mut outstanding: Vec<bool> = vec![false; sqes.len()];
+        for &i in &submitted {
+            outstanding[i] = true;
+        }
+        let mut remaining = submitted.len();
+        if let Err(e) = ring.enter(submitted.len() as u32, submitted.len() as u32) {
+            warn_ring_degraded(&e);
+            for &i in &submitted {
+                serve_and_publish(port, backend, policy, dev, &sqes[i]);
+            }
+            continue;
+        }
+        let mut direct_ops = 0u64;
+        let mut direct_bytes = 0usize;
+        while remaining > 0 {
+            let Some(kcqe) = ring.pop_cqe() else {
+                // GETEVENTS returned before all CQEs were visible (the
+                // kernel only guarantees min_complete); wait for the rest.
+                if let Err(e) = ring.enter(0, 1) {
+                    warn_ring_degraded(&e);
+                    break;
+                }
+                continue;
+            };
+            let i = kcqe.user_data as usize;
+            if i >= sqes.len() || !outstanding[i] {
+                continue; // stray/duplicate kernel CQE: ignore defensively
+            }
+            outstanding[i] = false;
+            remaining -= 1;
+            let sqe = &sqes[i];
+            if kcqe.res == sqe.len as i32 {
+                // Full-length kernel read: mirror the pread pool's direct
+                // accounting exactly — one request, useful vs aligned
+                // bytes, a fallback tick (cached fd, not O_DIRECT), one
+                // charged op of the aligned span (batched per chunk).
+                let aligned = aligned_len(sector, sqe.offset, sqe.len);
+                let stats = backend.direct_stats();
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.useful_bytes.fetch_add(sqe.useful as u64, Ordering::Relaxed);
+                stats.aligned_bytes.fetch_add(aligned as u64, Ordering::Relaxed);
+                stats.count_fallback();
+                direct_ops += 1;
+                direct_bytes += aligned;
+                port.complete(sqe.user_data, sqe.len);
+            } else {
+                // Short read or kernel error (-errno): retry this one
+                // request through the bounded-retry pread path.
+                backend.direct_stats().count_retry();
+                serve_and_publish(port, backend, policy, dev, sqe);
+            }
+        }
+        backend.charge_multi_dev(dev, direct_ops, direct_bytes);
+        // Anything still outstanding after a mid-harvest enter failure
+        // downgrades to the inline path.
+        for (i, pending) in outstanding.into_iter().enumerate() {
+            if pending {
+                serve_and_publish(port, backend, policy, dev, &sqes[i]);
+            }
+        }
+    }
+}
+
+impl AsyncIoEngine for UringEngine {
+    fn submit(&self, sqe: Sqe) {
+        self.core.submit(sqe)
+    }
+
+    fn submit_batch(&self, sqes: Vec<Sqe>) {
+        self.core.submit_batch(sqes)
+    }
+
+    fn wait_cqe(&self) -> Cqe {
+        self.core.wait_cqe()
+    }
+
+    fn wait_cqes(&self, n: usize) -> Vec<Cqe> {
+        self.core.wait_cqes(n)
+    }
+
+    fn peek_cqe(&self) -> Option<Cqe> {
+        self.core.peek_cqe()
+    }
+
+    fn inflight(&self) -> u64 {
+        self.core.inflight()
+    }
+
+    fn pending_harvest(&self) -> u64 {
+        self.core.pending_harvest()
+    }
+
+    fn drain(&self) {
+        self.core.drain()
+    }
+
+    fn queue_highwater(&self) -> Vec<u64> {
+        self.core.queue_highwater()
+    }
+
+    fn register_buffer_range(&self, addr: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        // Workers observe the new range at their next chunk and
+        // re-register; the caller keeps the arena alive for the engine's
+        // lifetime (AsyncIoEngine contract).
+        *self.buf_range.lock().expect("buf_range lock") = Some((addr, len));
+    }
+}
+
+impl Drop for UringEngine {
+    fn drop(&mut self) {
+        self.core.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Rings live on the worker stacks and unmap/close as the threads
+        // exit; buf_range outlives them harmlessly.
+        let _ = self.buf_range.lock().map(|mut r| *r = None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::membuf::{SlotRef, StagingArena};
+    use crate::storage::backing::{FileBacking, MemBacking};
+    use crate::storage::engine::SimFile;
+    use crate::storage::osfile::OsFileBackend;
+    use crate::storage::page_cache::{DataKind, FileId};
+
+    #[test]
+    fn abi_struct_sizes_match_kernel() {
+        use std::mem::size_of;
+        assert_eq!(size_of::<IoUringParams>(), 120);
+        assert_eq!(size_of::<KernelSqe>(), 64);
+        assert_eq!(size_of::<KernelCqe>(), 16);
+        assert_eq!(size_of::<SqringOffsets>(), 40);
+        assert_eq!(size_of::<CqringOffsets>(), 40);
+    }
+
+    #[test]
+    fn probe_round_trips_a_nop_or_fails_typed() {
+        match probe_uring() {
+            Ok(()) => {}
+            Err(e) => {
+                assert!(!e.is_empty());
+                println!("SKIP: no io_uring ({e})");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_reads_match_file_contents_and_pread_accounting() {
+        if let Err(e) = probe_uring() {
+            println!("SKIP: no io_uring ({e})");
+            return;
+        }
+        let dir = std::env::temp_dir().join("gnndrive_uring_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("kern_{}.bin", std::process::id()));
+        std::fs::write(&path, (0..16384u32).map(|i| (i % 251) as u8).collect::<Vec<u8>>())
+            .unwrap();
+        let file = SimFile::new(
+            FileId::new(7, DataKind::Features),
+            Arc::new(FileBacking::open(&path).unwrap()),
+        );
+        let be: Arc<dyn IoBackend> = Arc::new(OsFileBackend::with_stripe_uring(
+            512,
+            4,
+            crate::storage::backing::StripeSpec::single(),
+        ));
+        let engine = UringEngine::new(be.clone(), 16, 4);
+        let arena = StagingArena::new(1, 8 * 512);
+        let dst = SlotRef::new(arena, 0);
+        engine.register_buffer_range(dst.bytes().as_ptr() as usize, 8 * 512);
+        let sqes: Vec<Sqe> = (0..8u64)
+            .map(|i| Sqe {
+                file: file.clone(),
+                offset: 100 + i * 512,
+                len: 512,
+                useful: 512,
+                dst: dst.clone(),
+                dst_off: (i * 512) as usize,
+                user_data: i,
+                mode: IoMode::Direct,
+            })
+            .collect();
+        engine.submit_batch(sqes);
+        let cqes = engine.wait_cqes(8);
+        assert!(cqes.iter().all(|c| c.is_ok()), "{cqes:?}");
+        assert_eq!(engine.inflight(), 0);
+        for (i, &b) in dst.bytes().iter().enumerate() {
+            assert_eq!(b, ((100 + i) % 251) as u8, "byte {i}");
+        }
+        // Charge parity with the pread pool: 8 requests, each 512 useful
+        // bytes inside a 1024-byte aligned span (offset 100 straddles a
+        // sector boundary).
+        let stats = be.direct_stats();
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 8);
+        assert_eq!(stats.useful_bytes.load(Ordering::Relaxed), 8 * 512);
+        assert_eq!(stats.aligned_bytes.load(Ordering::Relaxed), 8 * 1024);
+        assert_eq!(be.io_counters().reads.load(Ordering::Relaxed), 8);
+        assert_eq!(be.io_counters().read_bytes.load(Ordering::Relaxed), 8 * 1024);
+    }
+
+    #[test]
+    fn untranslatable_files_fall_back_to_serve_sqe() {
+        // MemBacking has no fd → every request rides the serve_sqe
+        // partition; works with or without kernel io_uring.
+        let bytes: Vec<u8> = (0..8192u32).map(|i| (i % 239) as u8).collect();
+        let file =
+            SimFile::new(FileId::new(5, DataKind::Features), Arc::new(MemBacking::new(bytes)));
+        let be: Arc<dyn IoBackend> = Arc::new(OsFileBackend::with_stripe_uring(
+            512,
+            2,
+            crate::storage::backing::StripeSpec::single(),
+        ));
+        let engine = UringEngine::new(be.clone(), 8, 2);
+        let arena = StagingArena::new(1, 1024);
+        engine.submit(Sqe {
+            file,
+            offset: 700,
+            len: 1024,
+            useful: 1024,
+            dst: SlotRef::new(arena.clone(), 0),
+            dst_off: 0,
+            user_data: 42,
+            mode: IoMode::Direct,
+        });
+        let cqe = engine.wait_cqe();
+        assert_eq!(cqe.user_data, 42);
+        assert_eq!(cqe.bytes, 1024);
+        let dst = SlotRef::new(arena, 0);
+        for (i, &b) in dst.bytes().iter().enumerate() {
+            assert_eq!(b, ((700 + i) % 239) as u8, "byte {i}");
+        }
+        assert_eq!(be.io_counters().reads.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn backend_factory_respects_uring_flag() {
+        let be = Arc::new(OsFileBackend::with_stripe_uring(
+            512,
+            2,
+            crate::storage::backing::StripeSpec::single(),
+        ));
+        assert_eq!(crate::storage::api::IoBackend::name(be.as_ref()), "uring");
+        let engine = be.clone().async_engine(4);
+        assert_eq!(engine.inflight(), 0);
+        drop(engine);
+    }
+}

@@ -3,9 +3,11 @@
 //! two-phase wave protocol to the same results — whether the backend is the
 //! simulated SSD stack or real OS files in a tempdir, and whether the
 //! logical byte space is flat or RAID-0-striped across several devices.
-//! Each check is a generic function run against all four backend variants
-//! (sim/os × devices ∈ {1, 3}); the aggregate counters a check observes
-//! must not depend on how many devices absorb the charges.
+//! Each check is a generic function run against every backend variant
+//! (sim/os/uring × devices ∈ {1, 3}); the aggregate counters a check
+//! observes must not depend on how many devices absorb the charges. The
+//! uring column self-skips (with a printed reason) on kernels without
+//! io_uring — the other columns still run.
 
 use gnndrive::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
 use gnndrive::graph::{FeatureGen, FeatureTable};
@@ -65,6 +67,25 @@ fn os_backend(devices: usize) -> Arc<dyn IoBackend> {
     }
 }
 
+fn uring_backend(devices: usize) -> Arc<dyn IoBackend> {
+    let spec =
+        if devices == 1 { StripeSpec::single() } else { StripeSpec::new(devices, STRIPE) };
+    Arc::new(OsFileBackend::with_stripe_uring(512, 8, spec))
+}
+
+/// Whether the third conformance column (real io_uring) can run here; on
+/// failure the reason is printed once so a skipped column is visible in the
+/// test output rather than silently green.
+fn uring_available() -> bool {
+    match gnndrive::storage::probe_uring() {
+        Ok(()) => true,
+        Err(e) => {
+            println!("SKIP: uring conformance column: no io_uring ({e})");
+            false
+        }
+    }
+}
+
 /// Split a flat byte image into RAID-0 member images (`stripe`-sized chunks
 /// round-robin across `devices`) — the reference layout every striped
 /// backing must reassemble exactly.
@@ -107,23 +128,29 @@ fn file_for(kind: &str, spec: StripeSpec) -> SimFile {
     let backing: BackingRef = match (kind, spec.is_striped()) {
         ("sim", false) => Arc::new(MemBacking::new(bytes)),
         ("sim", true) => striped_mem(&bytes, spec),
-        ("os", false) => {
+        // uring reads the same real files the pread backend does — only the
+        // submission path differs.
+        ("os" | "uring", false) => {
             let path = unique_path("data");
             std::fs::write(&path, &bytes).unwrap();
             Arc::new(FileBacking::open(&path).unwrap())
         }
-        ("os", true) => striped_files("data_striped", &bytes, spec),
+        ("os" | "uring", true) => striped_files("data_striped", &bytes, spec),
         (other, _) => panic!("unknown backend {other}"),
     };
     SimFile::new(FileId::new(11, DataKind::Features), backing)
 }
 
 fn backends() -> Vec<(Arc<dyn IoBackend>, SimFile)> {
+    let uring = uring_available();
     let mut v = Vec::new();
     for devices in [1usize, 3] {
         let spec = StripeSpec::new(devices, STRIPE);
         v.push((sim_backend(devices), file_for("sim", spec)));
         v.push((os_backend(devices), file_for("os", spec)));
+        if uring {
+            v.push((uring_backend(devices), file_for("uring", spec)));
+        }
     }
     v
 }
@@ -426,12 +453,12 @@ fn features_for(io: &dyn IoBackend, gen: &FeatureGen) -> FeatureTable {
             }
             striped_mem(&bytes, spec)
         }
-        ("os", false) => {
+        ("os" | "uring", false) => {
             let path = unique_path("features");
             FeatureTable::write_file(&path, NODES, gen).unwrap();
             Arc::new(FileBacking::open(&path).unwrap())
         }
-        ("os", true) => {
+        ("os" | "uring", true) => {
             // Exercise the production striped writer end to end.
             let paths: Vec<std::path::PathBuf> =
                 (0..spec.devices).map(|d| unique_path(&format!("features_{d}"))).collect();
@@ -724,7 +751,10 @@ mod meta_handshake {
     use gnndrive::storage::BackendKind;
     use std::path::{Path, PathBuf};
 
-    const KINDS: [BackendKind; 2] = [BackendKind::Sim, BackendKind::Os];
+    // Uring rides along: `Machine::new` probe-falls-back to the pread stack
+    // on kernels without io_uring, and the meta.toml handshake is
+    // engine-independent, so this column never needs to skip.
+    const KINDS: [BackendKind; 3] = [BackendKind::Sim, BackendKind::Os, BackendKind::Uring];
 
     fn machine(kind: BackendKind, devices: usize, stripe: u64) -> Machine {
         let mut cfg = MachineConfig::paper().with_backend(kind).with_host_mem(1 << 30);
@@ -761,10 +791,7 @@ mod meta_handshake {
     }
 
     fn kind_name(kind: BackendKind) -> &'static str {
-        match kind {
-            BackendKind::Sim => "sim",
-            BackendKind::Os => "os",
-        }
+        kind.label()
     }
 
     #[test]

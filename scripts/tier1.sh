@@ -104,6 +104,32 @@ echo "== smoke: striped storage (--devices 3, sim + os backends) =="
   --dataset unit-test --devices 3 --stripe-bytes 4KiB --batches 2 --epochs 1 \
   --fault-bad-range 0:4GiB --fault-device 1 --on-io-error drop-rows
 
+echo "== smoke: io_uring backend (--backend uring, probe-gated) =="
+# The uring engine needs kernel support; `gnndrive uring-probe` exits 0 when
+# a ring can be set up. Without it the train smokes downgrade to the
+# documented fallback path (--backend uring warns once and runs on the
+# pread pool), which must also keep working.
+if ./target/release/gnndrive uring-probe; then
+  ./target/release/gnndrive train --system gnndrive --backend uring \
+    --data "$SMOKE_DIR/ds" --batches 2 --epochs 1
+  ./target/release/gnndrive train --system gnndrive --backend uring \
+    --data "$SMOKE_DIR/ds3" --devices 3 --stripe-bytes 64KiB --batches 2 --epochs 1
+else
+  echo "SKIP: no io_uring (uring train smokes run the os-fallback path only)"
+  ./target/release/gnndrive train --system gnndrive --backend uring \
+    --data "$SMOKE_DIR/ds" --batches 2 --epochs 1
+fi
+# --backend uring is an asynchronous engine: combining it with the
+# synchronous-extraction ablation must be rejected at parse time (exit 2),
+# kernel support or not.
+uring_rc=0
+./target/release/gnndrive train --system gnndrive --backend uring \
+  --data "$SMOKE_DIR/ds" --batches 2 --epochs 1 --sync-extract || uring_rc=$?
+if [ "$uring_rc" -ne 2 ]; then
+  echo "uring smoke: expected --backend uring --sync-extract rejection (exit 2), got exit $uring_rc" >&2
+  exit 1
+fi
+
 echo "== smoke: packed layout (pack -> train --packed, sim + os) =="
 # Offline pre-sample + pack, then replay the identical schedule from the
 # packed layout. seed/batch-size/fanouts must match between pack and train
@@ -159,6 +185,17 @@ echo "== bench: layout_pack (packed per-batch feature layout gates) =="
 # pre-sampled schedule bit-identically — every batch served packed).
 cargo bench --bench layout_pack
 
+echo "== bench: uring_engine (engine parity, governor, hedging gates) =="
+# Runs the io_uring/governor/hedging bench and appends to BENCH_uring.json;
+# the bench asserts the ISSUE-9 gates (uring charged-I/O accounting exactly
+# equals the pread pool while submit+harvest wall-clock is strictly lower at
+# depth >= 8 — self-skipping with "SKIP: no io_uring" on unsupported
+# kernels; the adaptive governor stays within 1.10x of the best static
+# coalesce config's charged requests; hedged reissue under a seeded stall
+# storm strictly lowers p99 time-to-publish with hedge_wins > 0 and zero
+# duplicate scatters).
+cargo bench --bench uring_engine
+
 if [ -f BENCH_extract.json ]; then
   echo "== last BENCH_extract.json record =="
   tail -n 1 BENCH_extract.json
@@ -187,6 +224,11 @@ fi
 if [ -f BENCH_layout.json ]; then
   echo "== last BENCH_layout.json record =="
   tail -n 1 BENCH_layout.json
+fi
+
+if [ -f BENCH_uring.json ]; then
+  echo "== last BENCH_uring.json record =="
+  tail -n 1 BENCH_uring.json
 fi
 
 echo "tier-1 OK"
