@@ -428,6 +428,17 @@ pub struct TrainConfig {
     /// Batch-level policy when extraction I/O exhausts the engine retry
     /// policy (`--on-io-error fail|retry|drop-rows`).
     pub on_io_error: OnIoError,
+    /// Feature placement tier (`--tier host|gpu`). `Host` is the pre-tier
+    /// single-buffer path, byte- and charge-identical to it; `Gpu` layers a
+    /// device-resident hot tier above the host buffer.
+    pub tier: crate::tier::TierKind,
+    /// GPU hot-tier capacity in bytes (`--gpu-mem`); required (> 0) when
+    /// `tier == Gpu`, ignored otherwise.
+    pub gpu_mem: u64,
+    /// UVM-style oversubscription ablation (`--gpu-oversub`): the GPU tier
+    /// admits past capacity and pays a modeled fault-migration transfer per
+    /// over-capacity access instead of demoting.
+    pub gpu_oversub: bool,
 }
 
 impl TrainConfig {
@@ -470,6 +481,9 @@ impl Default for TrainConfig {
             buffered_features: false,
             enforce_order: false,
             on_io_error: OnIoError::default(),
+            tier: crate::tier::TierKind::Host,
+            gpu_mem: 0,
+            gpu_oversub: false,
         }
     }
 }

@@ -39,6 +39,7 @@ use crate::graph::FeatureTable;
 use crate::layout::PackedLayout;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::sim::Latch;
+use crate::tier::TieredFeatureStore;
 use crate::storage::api::{AsyncIoEngine, Cqe, IoBackend, IoError, IoMode, Sqe};
 use crate::storage::{Pcie, SimFile, StripeSpec};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -197,6 +198,11 @@ pub struct Extractor {
     /// [`LAT_WINDOW`]), the sample pool of the p99 hedge threshold. Only
     /// fed while hedging is enabled.
     lat_us: Mutex<Vec<u64>>,
+    /// Tiered placement store (`--tier gpu`): when set, batch planning
+    /// routes through the store so GPU-resident nodes are aliased into the
+    /// device tier before the host buffer plans its misses. `None` (and
+    /// `--tier host`) is the pre-tier path, byte- and charge-identical.
+    tier: Option<Arc<TieredFeatureStore>>,
 }
 
 impl Extractor {
@@ -237,6 +243,7 @@ impl Extractor {
             opts,
             sync_scratch: Mutex::new(Vec::new()),
             layout: None,
+            tier: None,
             packed_batches: AtomicU64::new(0),
             hot_hits: AtomicU64::new(0),
             coalesce_override: Mutex::new(Vec::new()),
@@ -288,6 +295,24 @@ impl Extractor {
         self.layout = Some(layout);
     }
 
+    /// Attach the tiered placement store (`--tier gpu`). Must wrap the same
+    /// `FeatureBuffer` this extractor publishes into: the store only changes
+    /// *planning* (GPU-tier aliasing, promotion bookkeeping); loads and
+    /// publishes still go through the host buffer slots of `plan.to_load`.
+    pub fn set_tier(&mut self, tier: Arc<TieredFeatureStore>) {
+        debug_assert!(Arc::ptr_eq(tier.buffer(), &self.fb));
+        self.tier = Some(tier);
+    }
+
+    /// Begin a batch through the tier store when attached, else directly on
+    /// the host buffer (identical plans when no GPU tier exists).
+    fn begin_batch(&self, nodes: &[u32]) -> crate::membuf::BatchPlan {
+        match &self.tier {
+            Some(t) => t.begin_batch(nodes),
+            None => self.fb.begin_batch(nodes),
+        }
+    }
+
     /// Cumulative `(packed_batches, hot_hits)` counters.
     pub fn packed_stats(&self) -> (u64, u64) {
         (self.packed_batches.load(Ordering::Relaxed), self.hot_hits.load(Ordering::Relaxed))
@@ -332,7 +357,7 @@ impl Extractor {
         nodes: &[u32],
         ctx: Option<(u64, u64)>,
     ) -> Result<Vec<i32>, ExtractError> {
-        let plan = self.fb.begin_batch(nodes);
+        let plan = self.begin_batch(nodes);
 
         if !self.opts.asynchronous {
             let (failed_nodes, first_err) = self.try_extract_sync(&plan.to_load);

@@ -560,7 +560,21 @@ pub fn pin_hot(
     io: &dyn IoBackend,
     budget: usize,
 ) -> usize {
-    let n = budget.min(layout.hot.len());
+    pin_hot_from(fb, layout, io, budget, 0)
+}
+
+/// [`pin_hot`] starting at hot-rank `start` instead of rank 0: the overflow
+/// path of tiered placement, which pins the head of `hot.bin` into the GPU
+/// tier ([`pin_hot_gpu`]) and hands the remainder to the host buffer.
+pub fn pin_hot_from(
+    fb: &FeatureBuffer,
+    layout: &PackedLayout,
+    io: &dyn IoBackend,
+    budget: usize,
+    start: usize,
+) -> usize {
+    let start = start.min(layout.hot.len());
+    let n = budget.min(layout.hot.len() - start);
     if n == 0 {
         return 0;
     }
@@ -569,7 +583,7 @@ pub fn pin_hot(
     let mut pinned = 0usize;
     // Chunked so each begin_batch stays far below the buffer's claimable
     // headroom (the caller's budget guarantees total fit).
-    for chunk in layout.hot[..n].chunks(256) {
+    for chunk in layout.hot[start..start + n].chunks(256) {
         let plan = fb.begin_batch(chunk);
         for &(node, slot) in &plan.to_load {
             let r = layout.hot_rank[&node];
@@ -582,6 +596,46 @@ pub fn pin_hot(
         fb.wait_plan(&plan);
         // Intentionally no release: the plan's references are the pin.
         pinned += chunk.len();
+    }
+    pinned
+}
+
+/// Pin the head of `hot.bin` into the GPU hot tier (`--packed` +
+/// `--tier gpu`): rows go in hot-rank order until the tier's free list is
+/// exhausted, so the hottest rows sit one PCIe hop from compute and the
+/// remainder overflows to the host pin ([`pin_hot_from`]). SSD loads charge
+/// through `io` in the same 256-row bursts as the host pin; the host→device
+/// upload charges through the store's PCIe model. Returns rows pinned (0 in
+/// host mode).
+pub fn pin_hot_gpu(
+    store: &crate::tier::TieredFeatureStore,
+    layout: &PackedLayout,
+    io: &dyn IoBackend,
+) -> usize {
+    if !store.is_gpu() {
+        return 0;
+    }
+    let row_bytes = layout.row_bytes as usize;
+    let mut buf = vec![0u8; row_bytes];
+    let mut pinned = 0usize;
+    let mut burst = 0usize;
+    for &node in &layout.hot {
+        let r = layout.hot_rank[&node];
+        layout.hot_file.backing.read_at(r as u64 * layout.row_bytes, &mut buf);
+        if !store.pin_gpu_row(node, &buf) {
+            break; // tier full — the rest overflows to the host pin
+        }
+        pinned += 1;
+        burst += 1;
+        if burst == 256 {
+            io.charge_read(burst * row_bytes);
+            store.charge_tier_upload(burst * row_bytes);
+            burst = 0;
+        }
+    }
+    if burst > 0 {
+        io.charge_read(burst * row_bytes);
+        store.charge_tier_upload(burst * row_bytes);
     }
     pinned
 }

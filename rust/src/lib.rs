@@ -17,6 +17,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod sample;
 pub mod serve;
+pub mod tier;
 pub mod train;
 pub mod sim;
 pub mod storage;

@@ -74,6 +74,17 @@
 //! p50/p95/p99 (admission/sample/extract/compute) are reported per epoch
 //! and merged into a final summary.
 //!
+//! Tiered feature placement (`--tier`): `--tier gpu --gpu-mem <bytes>`
+//! layers a simulated-GPU-resident hot tier above the host feature buffer
+//! for `train` and `serve` — frequency/degree-weighted promotion on
+//! repeated host hits, batched background demotion, admission bypass for
+//! one-off cold seeds, host→device transfers charged through the PCIe
+//! model. `--tier host` (the default) is byte- and charge-identical to the
+//! pre-tier single-buffer stack. `--gpu-oversub` is the UVM
+//! oversubscription ablation: the tier admits past capacity and pays a
+//! modeled fault-migration transfer per over-capacity access instead of
+//! demoting. The epoch/run summary appends `tier gpu …` counters.
+//!
 //! Fault tolerance: `--fault-rate/--fault-short/--fault-stall/
 //! --fault-bad-range` wrap the selected backend in deterministic seeded
 //! fault injection (`--fault-seed`); engines retry per `--io-retries`, and
@@ -92,6 +103,7 @@ use gnndrive::runtime::simcompute::ModelKind;
 use gnndrive::serve::{BatchSpec, ServeConfig, ServeEngine, ServeReport};
 use gnndrive::sim::Clock;
 use gnndrive::storage::{BackendKind, FaultPlan, IoBackend as _, RetryPolicy};
+use gnndrive::tier::TierKind;
 use gnndrive::util::args::Args;
 use std::sync::Arc;
 
@@ -168,6 +180,22 @@ fn main() {
         "hot-nodes",
         "0",
         "serve: size of the popular-seed head requests concentrate on (0 = whole graph)",
+    )
+    .opt(
+        "tier",
+        "host",
+        "feature placement: host (single host buffer, the pre-tier path) | gpu \
+         (GPU-resident hot tier above it; requires --gpu-mem)",
+    )
+    .opt(
+        "gpu-mem",
+        "",
+        "GPU hot-tier capacity in bytes (accepts KiB/MiB/GiB); required with --tier gpu",
+    )
+    .flag(
+        "gpu-oversub",
+        "tier ablation: UVM-style oversubscription — admit past --gpu-mem and pay a \
+         modeled fault migration per over-capacity access (requires --tier gpu)",
     )
     .opt("fault-seed", "1024023", "fault injection: root seed of the deterministic fault plan")
     .opt("fault-rate", "0", "fault injection: transient-error probability per read try")
@@ -533,6 +561,49 @@ fn parse_hedge(args: &Args) -> Result<(bool, Option<u64>), i32> {
     Ok((args.has("hedge") || pin.is_some(), pin))
 }
 
+/// Parse the tiered-placement knobs: `--tier host|gpu`, `--gpu-mem`,
+/// `--gpu-oversub`. Returns `(tier, gpu_mem_bytes, oversub)`; `Err` carries
+/// the process exit code. A GPU tier with no capacity (or a capacity string
+/// that does not parse) cannot place a single row, and oversubscription is
+/// an ablation *of* the GPU tier — both are user errors, rejected here with
+/// the offending flag named rather than silently ignored downstream.
+fn parse_tier(args: &Args) -> Result<(TierKind, u64, bool), i32> {
+    let tier_name = args.get_or_default("tier");
+    let Some(tier) = TierKind::by_name(tier_name) else {
+        eprintln!("unknown --tier {tier_name:?}; valid tiers: {}", TierKind::names());
+        return Err(2);
+    };
+    let gpu_mem = match args.get("gpu-mem").filter(|s| !s.is_empty()) {
+        None => 0,
+        Some(s) => match gnndrive::util::units::parse_bytes(s) {
+            Ok(v) if v > 0 => v,
+            Ok(_) => {
+                eprintln!("--gpu-mem: expected a positive byte count, got {s:?}");
+                return Err(2);
+            }
+            Err(e) => {
+                eprintln!("--gpu-mem: {e} (try 256MiB, 1GiB, …)");
+                return Err(2);
+            }
+        },
+    };
+    if tier == TierKind::Gpu && gpu_mem == 0 {
+        eprintln!(
+            "--tier gpu needs a device budget: pass --gpu-mem with a positive \
+             byte count (e.g. --tier gpu --gpu-mem 256MiB)"
+        );
+        return Err(2);
+    }
+    if args.has("gpu-oversub") && tier != TierKind::Gpu {
+        eprintln!(
+            "--gpu-oversub is an ablation of the GPU hot tier and requires \
+             --tier gpu"
+        );
+        return Err(2);
+    }
+    Ok((tier, gpu_mem, args.has("gpu-oversub")))
+}
+
 fn cmd_train(args: &Args) -> i32 {
     let system_name = args.get_or_default("system");
     let Some(kind) = SystemKind::by_name(system_name) else {
@@ -567,6 +638,10 @@ fn cmd_train(args: &Args) -> i32 {
         Ok(pair) => pair,
         Err(code) => return code,
     };
+    let (tier, gpu_mem, gpu_oversub) = match parse_tier(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
     let (machine, ds) = match setup_machine_and_dataset(args) {
         Ok(pair) => pair,
         Err(code) => return code,
@@ -599,6 +674,9 @@ fn cmd_train(args: &Args) -> i32 {
         hedge,
         hedge_us,
         on_io_error,
+        tier,
+        gpu_mem,
+        gpu_oversub,
         ..TrainConfig::default()
     };
     let epochs = args.get_usize("epochs").unwrap_or(1);
@@ -747,6 +825,20 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("unknown model {model_name:?}; valid models: graphsage, gcn, gat");
         return 2;
     };
+    let (tier, gpu_mem, gpu_oversub) = match parse_tier(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
+    // The GPU tier sits above the *shared* buffer; per-tenant buffers have
+    // no single host tier for it to extend. Reject the combination here, at
+    // parse time, rather than deep in engine construction.
+    if tier == TierKind::Gpu && args.has("per-tenant-buffer") {
+        eprintln!(
+            "--tier gpu extends the shared feature buffer and cannot combine \
+             with --per-tenant-buffer; drop one of the two"
+        );
+        return 2;
+    }
     let (machine, ds) = match setup_machine_and_dataset(args) {
         Ok(pair) => pair,
         Err(code) => return code,
@@ -783,6 +875,9 @@ fn cmd_serve(args: &Args) -> i32 {
         hot_nodes: args.get_usize("hot-nodes").unwrap_or(0) as u32,
         model,
         hidden: 256, // paper §5 hidden dimension, same as training
+        tier,
+        gpu_mem,
+        gpu_oversub,
         ..ServeConfig::default()
     };
     let epochs = args.get_usize("epochs").unwrap_or(1).max(1);

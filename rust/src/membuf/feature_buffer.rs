@@ -731,6 +731,25 @@ impl FeatureBuffer {
         }
     }
 
+    /// Whether `node` currently has a published row in this buffer: a live
+    /// mapping entry (generation still matching) with the valid bit set.
+    /// No reference is taken, so the answer can go stale the moment it
+    /// returns — callers own the coordination (the tiered store consults
+    /// this from its quiesced drain paths).
+    pub fn is_resident(&self, node: u32) -> bool {
+        let handle = {
+            let st = self.shards[self.node_shard(node)].state.lock().unwrap();
+            st.map.get(&node).map(|e| (e.slot, e.generation))
+        };
+        match handle {
+            Some((slot, generation)) => {
+                let w = self.states.load(slot);
+                slot_state::generation(w) == generation && slot_state::is_valid(w)
+            }
+            None => false,
+        }
+    }
+
     /// (hits, shared, steals, loads) counters for the reuse diagnostics.
     pub fn stats(&self) -> (u64, u64, u64, u64) {
         (

@@ -6,6 +6,30 @@
 //! coordinator generations used as contention baselines by
 //! `benches/micro_hotpath.rs`: the original single-global-mutex design and
 //! the PR-1 sharded mutex-LRU design.
+//!
+//! ## Tier contract (`--tier`, [`crate::tier`])
+//!
+//! The [`FeatureBuffer`] is the *host* tier of the tiered feature store
+//! ([`crate::tier::TieredFeatureStore`]); the contract between the layers:
+//!
+//! * **Placement is owned above this module.** The buffer never knows a GPU
+//!   tier exists: it plans, publishes, and evicts host slots exactly as in
+//!   single-tier operation. The tier layer routes nodes *before* calling
+//!   [`FeatureBuffer::begin_batch`] (GPU residents never reach the host
+//!   planner) and encodes device residency purely in the alias space —
+//!   aliases `>= n_slots` name GPU slots and are masked to `-1` before any
+//!   host-side gather/release, so a host alias is always a valid host slot.
+//! * **One tier per node.** After a promotion the host copy is released
+//!   back through the normal idle-eviction path
+//!   ([`FeatureBuffer::evict_if_idle`], deferred until the promoting
+//!   batch's references drop); `TieredFeatureStore::check_exclusive`
+//!   verifies no node is resident in both tiers at quiesce.
+//! * **This module charges nothing new.** Host loads charge SSD reads as
+//!   always; all host→device traffic (promotions, pinned-layout uploads,
+//!   oversubscription fault migrations) is charged by the tier layer
+//!   through the PCIe model. Under `--tier host` the store is a pure
+//!   delegate and every counter on this buffer — hits, shared, steals,
+//!   loads — is byte-identical to the pre-tier stack.
 
 mod arena;
 pub mod feature_buffer;

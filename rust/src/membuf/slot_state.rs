@@ -189,6 +189,14 @@ impl SlotStates {
     pub fn clear_clock(&self, slot: u32) -> u64 {
         self.words[slot as usize].fetch_and(!CLOCK, Ordering::SeqCst)
     }
+
+    /// Mark the slot recently used without taking a reference (fresh
+    /// placements that should survive the next clock pass; the GPU tier's
+    /// promotion path). Composes safely with concurrent ref/claim CASes.
+    #[inline]
+    pub fn set_clock(&self, slot: u32) -> u64 {
+        self.words[slot as usize].fetch_or(CLOCK, Ordering::SeqCst)
+    }
 }
 
 #[cfg(test)]

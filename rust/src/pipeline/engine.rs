@@ -22,6 +22,7 @@ use crate::sample::PaddedSubgraph;
 use crate::sim::queue::BoundedQueue;
 use crate::sim::Stopwatch;
 use crate::storage::{EpochIoSnapshot, IoBackend as _};
+use crate::tier::{TierKind, TierPolicy, TierSnapshot, TieredFeatureStore};
 use crate::train::{TrainStats, TrainStep};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -132,6 +133,12 @@ pub struct EpochStats {
     /// Hot-tier rows that were already buffer-resident when their packed
     /// batch began (the pin's payoff).
     pub hot_hits: u64,
+    /// Per-epoch GPU-tier counters (`--tier gpu`; `None` on the host-only
+    /// path, whose log line stays byte-identical).
+    pub tier: Option<TierSnapshot>,
+    /// `READ_FIXED` registration failures that silently downgraded the
+    /// uring engine to plain `READ` this epoch (`RLIMIT_MEMLOCK`).
+    pub fixed_fallbacks: u64,
 }
 
 impl EpochStats {
@@ -192,6 +199,25 @@ impl EpochStats {
                 self.packed_batches, self.batches, self.hot_hits
             ));
         }
+        // GPU-tier runs only (`--tier host` log line stays byte-identical).
+        if let Some(t) = &self.tier {
+            s.push_str(&format!(
+                "  tier gpu {}h/{}h  promo {}  demo {}  byp {}  saved {}",
+                t.gpu_hits,
+                t.host_hits,
+                t.promotions,
+                t.demotions,
+                t.bypassed,
+                crate::util::units::fmt_bytes(t.pcie_saved_bytes),
+            ));
+            if t.oversub_faults > 0 {
+                s.push_str(&format!("  ovsub_faults {}", t.oversub_faults));
+            }
+        }
+        // Registered-buffer degradation (uring backend past RLIMIT_MEMLOCK).
+        if self.fixed_fallbacks > 0 {
+            s.push_str(&format!("  fixed_fallbk {}", self.fixed_fallbacks));
+        }
         s
     }
 }
@@ -219,6 +245,10 @@ pub struct GnnDrive {
     #[allow(dead_code)]
     device_idx: usize,
     fb: Arc<FeatureBuffer>,
+    /// Tiered placement facade over `fb` (`--tier`). In host mode a pure
+    /// delegate — gathers/releases through it are identical to the buffer's
+    /// own — so every call site routes through the store unconditionally.
+    store: Arc<TieredFeatureStore>,
     extractors: Vec<Mutex<Extractor>>,
     trainer: Mutex<Box<dyn TrainStep>>,
     caps: Vec<usize>,
@@ -270,6 +300,24 @@ impl GnnDrive {
                 .map_err(anyhow::Error::new)?,
         };
         let fb = Arc::new(fb);
+        // Tiered placement (`--tier gpu`): the hot tier's arena is reserved
+        // against the same GPU's memory as the feature buffer, sized by
+        // `--gpu-mem`, with the graph's degree array as the promotion prior.
+        let store = match cfg.tier {
+            TierKind::Host => TieredFeatureStore::host(fb.clone()),
+            TierKind::Gpu => TieredFeatureStore::gpu(
+                fb.clone(),
+                &machine.devices[device_idx],
+                machine.pcie.clone(),
+                cfg.gpu_mem,
+                TierPolicy {
+                    oversub: cfg.gpu_oversub,
+                    indptr: Some(ds.graph.indptr.clone()),
+                    ..TierPolicy::default()
+                },
+            )
+            .map_err(anyhow::Error::new)?,
+        };
         let row_bytes = ds.features.row_bytes() as usize;
         // The staging buffer "can be expanded or shrunk … with regard to the
         // volume of topological data and the capacity of available host
@@ -297,7 +345,7 @@ impl GnnDrive {
                 Variant::Gpu => ExtractTarget::Device(machine.pcie.clone()),
                 Variant::Cpu => ExtractTarget::Host,
             };
-            extractors.push(Mutex::new(Extractor::with_options(
+            let mut extractor = Extractor::with_options(
                 machine.backend.clone(),
                 cfg.io_depth,
                 staging,
@@ -310,7 +358,11 @@ impl GnnDrive {
                     coalesce,
                     hedge: HedgeConfig { enabled: cfg.hedge, pin_us: cfg.hedge_us },
                 },
-            )));
+            );
+            if store.is_gpu() {
+                extractor.set_tier(store.clone());
+            }
+            extractors.push(Mutex::new(extractor));
         }
         Ok(GnnDrive {
             machine: machine.clone(),
@@ -319,6 +371,7 @@ impl GnnDrive {
             variant,
             device_idx,
             fb,
+            store,
             extractors,
             trainer: Mutex::new(trainer),
             caps,
@@ -332,6 +385,11 @@ impl GnnDrive {
 
     pub fn feature_buffer(&self) -> &Arc<FeatureBuffer> {
         &self.fb
+    }
+
+    /// The tiered placement store (a pure delegate in `--tier host` runs).
+    pub fn tiered_store(&self) -> &Arc<TieredFeatureStore> {
+        &self.store
     }
 
     pub fn variant(&self) -> Variant {
@@ -361,12 +419,22 @@ impl GnnDrive {
         }
         let floor = groups * cap_l;
         let budget = self.fb.n_slots.saturating_sub(floor);
-        let pinned =
-            crate::layout::pin_hot(&self.fb, &layout, self.machine.backend.as_ref(), budget);
+        // Tiered runs pin the hottest rows into the GPU tier first; the
+        // remainder (and the whole hot set in host mode) overflows to the
+        // host buffer's pin budget.
+        let gpu_pinned =
+            crate::layout::pin_hot_gpu(&self.store, &layout, self.machine.backend.as_ref());
+        let pinned = crate::layout::pin_hot_from(
+            &self.fb,
+            &layout,
+            self.machine.backend.as_ref(),
+            budget,
+            gpu_pinned,
+        );
         for ex in &self.extractors {
             ex.lock().unwrap_or_else(|e| e.into_inner()).set_layout(layout.clone());
         }
-        Ok(pinned)
+        Ok(gpu_pinned + pinned)
     }
 
     /// Sum of `(packed_batches, hot_hits)` across this engine's extractors.
@@ -450,6 +518,8 @@ impl GnnDrive {
         let dev_snap = self.machine.backend.device_io_snapshot();
         // Extractor packed counters are cumulative; take per-epoch deltas.
         let packed0 = self.packed_totals();
+        // Tier counters likewise (all-zero snapshot in host mode).
+        let tier0 = self.store.snapshot();
 
         std::thread::scope(|s| {
             // ---- samplers ----
@@ -496,7 +566,7 @@ impl GnnDrive {
                 let extractors_left = &extractors_left;
                 let dropped = &dropped;
                 let epoch_err = &epoch_err;
-                let fb = &self.fb;
+                let fb = &self.store;
                 let on_io_error = self.cfg.on_io_error;
                 s.spawn(move || {
                     state::register(Role::Extractor);
@@ -570,7 +640,7 @@ impl GnnDrive {
                 let train_ns = &train_ns;
                 let train_stats = &train_stats;
                 let train_order = &train_order;
-                let fb = &self.fb;
+                let fb = &self.store;
                 s.spawn(move || {
                     state::register(Role::Trainer);
                     let mut trainer = self.trainer.lock().unwrap();
@@ -633,7 +703,7 @@ impl GnnDrive {
             // ---- releaser ----
             {
                 let release_q = &release_q;
-                let fb = &self.fb;
+                let fb = &self.store;
                 s.spawn(move || {
                     state::register(Role::Releaser);
                     loop {
@@ -690,6 +760,15 @@ impl GnnDrive {
             }
         }
         let packed1 = self.packed_totals();
+        // Converge tier housekeeping (queued demotions, deferred host
+        // evictions) off the epoch's critical path before snapshotting —
+        // a no-op in host mode.
+        self.store.quiesce();
+        let tier = if self.store.is_gpu() {
+            Some(self.store.snapshot().since(&tier0))
+        } else {
+            None
+        };
         let epoch_time = epoch_watch.elapsed();
         // Close the adaptive-coalescing feedback loop (ISSUE 9): fold this
         // epoch's per-device charge rates into the governor, then push the
@@ -753,6 +832,8 @@ impl GnnDrive {
             hedge_wins: io.hedge_wins,
             packed_batches: (packed1.0 - packed0.0) as usize,
             hot_hits: packed1.1 - packed0.1,
+            tier,
+            fixed_fallbacks: io.fixed_fallbacks,
         })
     }
 

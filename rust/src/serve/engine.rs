@@ -36,7 +36,7 @@ use super::request::{
     run_closed_loop_client, run_open_loop, Admission, AdmissionCounts, SeedSkew,
 };
 use crate::config::Machine;
-use crate::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor};
+use crate::extract::{CoalesceConfig, ExtractOptions, ExtractTarget, Extractor, HedgeConfig};
 use crate::graph::Dataset;
 use crate::membuf::{FeatureBuffer, StagingBuffer};
 use crate::metrics::state::{self, Role};
@@ -46,6 +46,7 @@ use crate::sample::{EpochPlan, Sampler};
 use crate::sim::queue::BoundedQueue;
 use crate::sim::Stopwatch;
 use crate::storage::EpochIoSnapshot;
+use crate::tier::{TierKind, TierPolicy, TierSnapshot, TieredFeatureStore};
 use crate::train::TrainStep;
 use crate::util::stats::LatencyHist;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -94,6 +95,15 @@ pub struct ServeConfig {
     pub model: ModelKind,
     pub hidden: usize,
     pub seed: u64,
+    /// Feature placement tier (`--tier host|gpu`); `Host` is the pre-tier
+    /// single-buffer path. GPU tiering requires the shared buffer (it is
+    /// incompatible with `--per-tenant-buffer`).
+    pub tier: TierKind,
+    /// GPU hot-tier capacity in bytes (`--gpu-mem`); required when
+    /// `tier == Gpu`.
+    pub gpu_mem: u64,
+    /// UVM oversubscription ablation (`--gpu-oversub`).
+    pub gpu_oversub: bool,
 }
 
 impl Default for ServeConfig {
@@ -119,6 +129,9 @@ impl Default for ServeConfig {
             model: ModelKind::GraphSage,
             hidden: 64,
             seed: 17,
+            tier: TierKind::Host,
+            gpu_mem: 0,
+            gpu_oversub: false,
         }
     }
 }
@@ -174,6 +187,9 @@ pub struct ServeReport {
     pub buffer_loads: u64,
     /// Mini-batch steps the concurrent trainer completed.
     pub train_steps: u64,
+    /// GPU-tier counters over the run (`--tier gpu`; `None` on the host
+    /// path, whose report stays byte-identical to the pre-tier stack).
+    pub tier: Option<TierSnapshot>,
 }
 
 impl ServeReport {
@@ -216,7 +232,24 @@ impl ServeReport {
             } else {
                 String::new()
             },
-        )
+        ) + &match &self.tier {
+            Some(t) => {
+                let mut s = format!(
+                    "  tier gpu {}h/{}h  promo {}  demo {}  byp {}  saved {}",
+                    t.gpu_hits,
+                    t.host_hits,
+                    t.promotions,
+                    t.demotions,
+                    t.bypassed,
+                    crate::util::units::fmt_bytes(t.pcie_saved_bytes),
+                );
+                if t.oversub_faults > 0 {
+                    s.push_str(&format!("  ovsub_faults {}", t.oversub_faults));
+                }
+                s
+            }
+            None => String::new(),
+        }
     }
 
     /// Multi-line per-stage tail breakdown (the final summary).
@@ -249,6 +282,11 @@ impl ServeReport {
         self.buffer_steals += other.buffer_steals;
         self.buffer_loads += other.buffer_loads;
         self.train_steps += other.train_steps;
+        match (&mut self.tier, &other.tier) {
+            (Some(mine), Some(theirs)) => mine.merge(theirs),
+            (None, Some(theirs)) => self.tier = Some(*theirs),
+            _ => {}
+        }
     }
 }
 
@@ -274,6 +312,10 @@ pub struct ServeEngine {
     /// allocation always terminates even with every worker in one buffer
     /// group), times `buffer_mult` for cross-request residency.
     buffers: Vec<Arc<FeatureBuffer>>,
+    /// Tiered placement store per buffer group (pure delegates in
+    /// `--tier host`). GPU tiering runs only on the shared buffer, so at
+    /// most `stores[0]` ever owns a device arena.
+    stores: Vec<Arc<TieredFeatureStore>>,
 }
 
 impl ServeEngine {
@@ -317,7 +359,31 @@ impl ServeEngine {
                     .map_err(anyhow::Error::new)
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(ServeEngine { machine: machine.clone(), ds: ds.clone(), cfg, caps, buffers })
+        if cfg.tier == TierKind::Gpu && cfg.per_tenant_buffer {
+            anyhow::bail!(
+                "--tier gpu requires the shared feature buffer; \
+                 it cannot combine with --per-tenant-buffer"
+            );
+        }
+        let stores = buffers
+            .iter()
+            .map(|fb| match cfg.tier {
+                TierKind::Host => Ok(TieredFeatureStore::host(fb.clone())),
+                TierKind::Gpu => TieredFeatureStore::gpu(
+                    fb.clone(),
+                    &machine.devices[0],
+                    machine.pcie.clone(),
+                    cfg.gpu_mem,
+                    TierPolicy {
+                        oversub: cfg.gpu_oversub,
+                        indptr: Some(ds.graph.indptr.clone()),
+                        ..TierPolicy::default()
+                    },
+                )
+                .map_err(anyhow::Error::new),
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ServeEngine { machine: machine.clone(), ds: ds.clone(), cfg, caps, buffers, stores })
     }
 
     pub fn caps(&self) -> &[usize] {
@@ -328,14 +394,21 @@ impl ServeEngine {
         &self.buffers
     }
 
+    /// Tiered placement stores, parallel to [`ServeEngine::buffers`].
+    pub fn stores(&self) -> &[Arc<TieredFeatureStore>] {
+        &self.stores
+    }
+
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
     }
 
-    /// Build one extractor bound to `fb`, with its own bounded staging
-    /// arena (halved until the host reservation fits, like the training
-    /// engine).
-    fn build_extractor(&self, fb: &Arc<FeatureBuffer>) -> anyhow::Result<Extractor> {
+    /// Build one extractor bound to buffer group `group`, with its own
+    /// bounded staging arena (halved until the host reservation fits, like
+    /// the training engine). Under `--tier gpu` the extractor plans through
+    /// the group's tiered store.
+    fn build_extractor(&self, group: usize) -> anyhow::Result<Extractor> {
+        let fb = &self.buffers[group];
         let row_bytes = self.ds.features.row_bytes() as usize;
         let cap_l = *self.caps.last().unwrap();
         let mut staging_slots = cap_l.min(1024);
@@ -346,7 +419,7 @@ impl ServeEngine {
                 Err(e) => return Err(anyhow::Error::new(e)),
             }
         };
-        Ok(Extractor::with_options(
+        let mut extractor = Extractor::with_options(
             self.machine.backend.clone(),
             self.cfg.io_depth,
             staging,
@@ -360,13 +433,19 @@ impl ServeEngine {
                 asynchronous: true,
                 direct: true,
                 coalesce: self.cfg.coalesce,
+                hedge: HedgeConfig::disabled(),
             },
-        ))
+        );
+        let store = &self.stores[group];
+        if store.is_gpu() {
+            extractor.set_tier(store.clone());
+        }
+        Ok(extractor)
     }
 
     /// Build one worker's extractor set: one extractor per buffer group.
     fn build_extractors(&self) -> anyhow::Result<Vec<Extractor>> {
-        self.buffers.iter().map(|fb| self.build_extractor(fb)).collect()
+        (0..self.buffers.len()).map(|g| self.build_extractor(g)).collect()
     }
 
     /// The serving compute step: the roofline cost model's forward-only
@@ -411,7 +490,7 @@ impl ServeEngine {
         let trainer_ex = if cfg.serve_while_train {
             // The trainer shares buffer group 0 — with the default shared
             // buffer that is *the* buffer every serving worker uses.
-            Some(self.build_extractor(&self.buffers[0])?)
+            Some(self.build_extractor(0)?)
         } else {
             None
         };
@@ -436,6 +515,9 @@ impl ServeEngine {
 
         let fb0: Vec<(u64, u64, u64, u64)> =
             self.buffers.iter().map(|fb| fb.stats()).collect();
+        // Tier counters are cumulative across runs; take per-run deltas
+        // (all-zero in host mode).
+        let tier0 = self.stores[0].snapshot();
         let io_snap = EpochIoSnapshot::start(self.machine.backend.as_ref());
         let wall = Stopwatch::start(clock);
 
@@ -504,6 +586,14 @@ impl ServeEngine {
             (outcomes, batches)
         });
 
+        // Converge queued demotions / deferred host evictions before the
+        // buffer-reuse deltas are read (no-op in host mode).
+        self.stores[0].quiesce();
+        let tier = if self.stores[0].is_gpu() {
+            Some(self.stores[0].snapshot().since(&tier0))
+        } else {
+            None
+        };
         let wall = wall.elapsed();
         let io = io_snap.totals(self.machine.backend.as_ref());
         let mut stages = StageHists::default();
@@ -525,6 +615,7 @@ impl ServeEngine {
             ssd_read_bytes: io.read_bytes,
             align_overhead_bytes: io.align_overhead_bytes,
             train_steps: train_steps.into_inner(),
+            tier,
             ..Default::default()
         };
         for (fb, before) in self.buffers.iter().zip(&fb0) {
@@ -591,9 +682,9 @@ impl ServeEngine {
                     // serving — one bad sector must not take the frontend
                     // down. The degraded rows' refs are dropped here (the
                     // batch never reaches gather/release below).
-                    let fb = &self.buffers[batch.group.min(self.buffers.len() - 1)];
-                    fb.release_aliases(&e.aliases);
-                    fb.evict_if_idle(&e.failed_nodes);
+                    let store = &self.stores[batch.group.min(self.stores.len() - 1)];
+                    store.release_aliases(&e.aliases);
+                    store.evict_if_idle(&e.failed_nodes);
                     for r in batch.requests {
                         errors += 1;
                         if let Some(done) = r.done {
@@ -606,15 +697,15 @@ impl ServeEngine {
             };
             let t2 = Instant::now();
 
-            let fb = &self.buffers[batch.group.min(self.buffers.len() - 1)];
+            let store = &self.stores[batch.group.min(self.stores.len() - 1)];
             {
                 let _busy = state::enter(state::State::Busy);
-                fb.gather(&aliases, &mut feats[..aliases.len() * dim]);
+                store.gather(&aliases, &mut feats[..aliases.len() * dim]);
                 feats[aliases.len() * dim..].fill(0.0);
             }
             let _ = stepper.forward(&padded, &feats);
             let t3 = Instant::now();
-            fb.release_aliases(&aliases);
+            store.release_aliases(&aliases);
 
             let (d_sample, d_extract, d_compute) = (
                 clock.to_sim(t1 - t0),
@@ -652,7 +743,7 @@ impl ServeEngine {
         state::register(Role::Trainer);
         let sampler = Sampler::new(self.cfg.fanouts.clone(), self.cfg.seed ^ 0x7EA1);
         let mut stepper = self.forward_step();
-        let fb = &self.buffers[0];
+        let fb = &self.stores[0];
         let batch_size = self.caps[0];
         let mut inner_epoch = epoch;
         'outer: while !stop.load(Ordering::SeqCst) {

@@ -179,6 +179,12 @@ pub struct DirectIoStats {
     /// Hedges whose completion arrived before the straggling original's —
     /// the hedge's bytes were the ones scattered.
     pub hedge_wins: AtomicU64,
+    /// `READ_FIXED` opportunities the kernel-uring engine downgraded to a
+    /// plain `READ` because registering the staging arena as a fixed buffer
+    /// failed (sticky per worker past `RLIMIT_MEMLOCK`). Zero on every
+    /// other engine; a non-zero count is the "registered buffers silently
+    /// degraded" signal surfaced in `EpochStats::summary()`.
+    pub fixed_fallbacks: AtomicU64,
 }
 
 impl DirectIoStats {
@@ -235,6 +241,16 @@ impl DirectIoStats {
     pub fn count_hedge_win(&self) {
         self.hedge_wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
+
+    /// Process-cumulative `fixed_fallbacks` value; consumed as per-epoch
+    /// deltas like the other snapshots.
+    pub fn fixed_fallback_snapshot(&self) -> u64 {
+        self.fixed_fallbacks.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn count_fixed_fallback(&self) {
+        self.fixed_fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
 }
 
 /// Start-of-epoch I/O bookmark: zeroes the backend's `io_counters` and pins
@@ -245,6 +261,7 @@ pub struct EpochIoSnapshot {
     dio: (u64, u64),
     faults: (u64, u64, u64),
     hedges: (u64, u64),
+    fixed: u64,
 }
 
 /// Per-epoch charged-I/O totals derived from an [`EpochIoSnapshot`]
@@ -259,6 +276,7 @@ pub struct EpochIoTotals {
     pub direct_fallbacks: u64,
     pub io_hedges: u64,
     pub hedge_wins: u64,
+    pub fixed_fallbacks: u64,
 }
 
 impl EpochIoSnapshot {
@@ -268,6 +286,7 @@ impl EpochIoSnapshot {
             dio: backend.direct_stats().snapshot(),
             faults: backend.direct_stats().fault_snapshot(),
             hedges: backend.direct_stats().hedge_snapshot(),
+            fixed: backend.direct_stats().fixed_fallback_snapshot(),
         }
     }
 
@@ -287,6 +306,10 @@ impl EpochIoSnapshot {
             direct_fallbacks: fallbacks.saturating_sub(fallbacks0),
             io_hedges: hedges.saturating_sub(hedges0),
             hedge_wins: wins.saturating_sub(wins0),
+            fixed_fallbacks: backend
+                .direct_stats()
+                .fixed_fallback_snapshot()
+                .saturating_sub(self.fixed),
         }
     }
 }

@@ -157,7 +157,29 @@
 //! * **Hot-tier pins charge sequential reads.** [`crate::layout::pin_hot`]
 //!   loads `hot.bin` front to back at attach time through
 //!   [`IoBackend::charge_read`] — large sequential charges, once per run,
-//!   not per epoch.
+//!   not per epoch. Under `--tier gpu` the hottest rows are pinned into the
+//!   device tier first ([`crate::layout::pin_hot_gpu`]): the SSD read is
+//!   still charged here, and the host→device upload is charged separately
+//!   to [`pcie`] by the tier layer.
+//!
+//! ## Tiered placement (`--tier`, [`crate::tier`])
+//!
+//! The GPU hot tier sits entirely *above* this substrate; the charging
+//! contract:
+//!
+//! * **Backends never see the tier.** A GPU-tier hit performs no storage
+//!   operation at all — nothing lands in [`IoBackend::io_counters`] or
+//!   [`api::DirectIoStats`]. Only host-tier misses reach the backend, as
+//!   ordinary (segment-granular, striped, retried) reads.
+//! * **The tier layer owns PCIe charging.** Promotions, pinned-layout
+//!   uploads, and `--gpu-oversub` fault migrations charge the [`pcie`] link
+//!   model directly and accrue in the tier's own snapshot
+//!   (`pcie_tier_bytes`), never in storage counters; avoided host→device
+//!   batch transfers accrue as `pcie_saved_bytes`.
+//! * **`--tier host` is charge-identical.** With the host tier selected the
+//!   store delegates every call, so charged requests, bytes, and
+//!   buffer-reuse counters are exactly those of the pre-tier stack — the
+//!   parity gate in `benches/tier_placement.rs`.
 //!
 //! ## Error contract
 //!

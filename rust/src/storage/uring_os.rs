@@ -723,12 +723,12 @@ fn worker_loop(
     while let Ok(sqes) = port.pop_many(chunk) {
         // Pick up a (re)advertised staging arena before building SQEs so
         // READ_FIXED eligibility is decided against the current range.
-        let registered = {
+        let (registered, reg_failed, advertised) = {
             let adv = *buf_range.lock().expect("buf_range lock");
             if let Some(range) = adv {
                 ring.ensure_buffer(range);
             }
-            ring.registered_buf
+            (ring.registered_buf, ring.buf_reg_failed, adv)
         };
 
         // Partition: direct requests the backend can translate to one real
@@ -774,6 +774,17 @@ fn worker_loop(
                 if addr >= base && addr + sqe.len <= base + blen {
                     ksqe.opcode = IORING_OP_READ_FIXED;
                     ksqe.buf_index = 0;
+                }
+            } else if reg_failed {
+                // The destination sits inside the advertised arena, so this
+                // read *would* have been READ_FIXED — registration failed
+                // (RLIMIT_MEMLOCK) and it degrades to a plain READ. Counted
+                // so the downgrade is visible in EpochStats instead of
+                // silent (the one-time stderr warning scrolls away).
+                if let Some((base, blen)) = advertised {
+                    if addr >= base && addr + sqe.len <= base + blen {
+                        backend.direct_stats().count_fixed_fallback();
+                    }
                 }
             }
             if let Some(slot) = ring.fixed_slot(fd) {

@@ -1,0 +1,1254 @@
+//! Tiered feature placement: a simulated-GPU-resident hot tier above the
+//! host [`FeatureBuffer`].
+//!
+//! GNNDrive's host feature buffer is one PCIe hop away from compute. Skewed
+//! workloads (power-law degrees, a serving hot head) concentrate most
+//! feature traffic on a small set of rows that could live *in* device
+//! memory instead: Data Tiering (arxiv 2111.05894) shows frequency/degree-
+//! weighted placement of hot features in GPU memory removes most
+//! host↔device transfer from the critical path, and Ginex (arxiv
+//! 2208.09151) shows how much a good admission/eviction policy beats LRU on
+//! exactly this access pattern.
+//!
+//! [`TieredFeatureStore`] is the single façade the pipeline and the serve
+//! engine talk to. In `--tier host` mode it is a pure delegate to the
+//! wrapped [`FeatureBuffer`] — no extra state, no extra charges, byte- and
+//! charge-identical to the pre-tier stack. In `--tier gpu` mode it layers a
+//! [`GpuTier`] above the host buffer:
+//!
+//! * **Placement.** A batch resolves each node GPU tier → host buffer →
+//!   SSD. GPU residents are aliased as `fb.n_slots + gpu_slot` (the alias
+//!   space above the host arena), so one `i32` alias vector still describes
+//!   the whole batch and `gather`/`release_aliases` split it by range.
+//! * **Promotion.** A node that hits in the *host* buffer repeatedly
+//!   (frequency ≥ threshold, with the threshold lowered for above-average-
+//!   degree nodes — the Data-Tiering degree prior) is copied up into the
+//!   GPU arena. The copy is charged to the PCIe model (`transfer_sync`),
+//!   and the node's host row is released back to the host buffer off the
+//!   critical path, so a row is resident in at most one tier once the
+//!   pipeline quiesces.
+//! * **Demotion.** Victim selection mirrors the host buffer's second-chance
+//!   clock over packed atomic slot words ([`slot_state`]), but the actual
+//!   unmapping is batched through a bounded queue drained by a background
+//!   demoter thread — eviction work stays off the extraction critical path.
+//!   Demotion moves no bytes (tier rows are clean copies of SSD truth).
+//! * **Admission.** One-off cold seeds — nodes seen for the first time that
+//!   had to be loaded from SSD — bypass both tiers: they are never promoted
+//!   and their host row is dropped back to the free list as soon as it
+//!   idles, so cold scans cannot wash out the hot set.
+//! * **Oversubscription ablation** (`--gpu-oversub`). Instead of demoting,
+//!   the tier admits past capacity into a UVM-style spill region and pays a
+//!   modeled fault-migration transfer for every access to an over-capacity
+//!   row — the naive alternative the bench compares explicit tiering
+//!   against.
+//!
+//! Charging contract: the GPU tier charges the PCIe link for promotions,
+//! pinned-layout uploads, and oversubscription faults, and it *saves* one
+//! row transfer per GPU hit (`pcie_saved_bytes`). SSD charging is untouched
+//! — only the host buffer loads from storage. See `membuf/mod.rs` and
+//! `storage/mod.rs` for the cross-layer contract.
+
+use crate::membuf::{slot_state, BatchPlan, FeatureBuffer};
+use crate::storage::mem::{DeviceMemory, OutOfMemory, Reservation};
+use crate::storage::pcie::Pcie;
+use std::cell::UnsafeCell;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::sim::queue::BoundedQueue;
+
+/// Which placement stack a run uses (`--tier`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TierKind {
+    /// Single-tier host buffer — the pre-tier stack, charge-identical.
+    #[default]
+    Host,
+    /// GPU-resident hot tier above the host buffer.
+    Gpu,
+}
+
+impl TierKind {
+    pub fn by_name(name: &str) -> Option<TierKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "host" => Some(TierKind::Host),
+            "gpu" => Some(TierKind::Gpu),
+            _ => None,
+        }
+    }
+
+    pub fn names() -> &'static str {
+        "host|gpu"
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            TierKind::Host => "host",
+            TierKind::Gpu => "gpu",
+        }
+    }
+}
+
+/// Placement policy knobs for the GPU tier.
+#[derive(Clone, Debug)]
+pub struct TierPolicy {
+    /// Host hits before a node is promoted (frequency threshold). The
+    /// effective threshold drops by one (floor 1) for nodes whose degree is
+    /// above the graph average — high-degree nodes are structurally hot.
+    pub promote_threshold: u32,
+    /// UVM-style oversubscription ablation: admit past capacity into a
+    /// spill region and pay a fault-migration transfer per access.
+    pub oversub: bool,
+    /// CSR `indptr` of the training graph, for the degree prior. `None`
+    /// disables degree weighting (pure frequency).
+    pub indptr: Option<Arc<Vec<u64>>>,
+}
+
+impl Default for TierPolicy {
+    fn default() -> Self {
+        TierPolicy { promote_threshold: 2, oversub: false, indptr: None }
+    }
+}
+
+/// Monotonic per-tier counters; epoch deltas via [`TierSnapshot::since`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierSnapshot {
+    /// Batch nodes served out of the GPU arena.
+    pub gpu_hits: u64,
+    /// Batch nodes served out of the host buffer (hit or shared wait).
+    pub host_hits: u64,
+    /// Rows copied host → GPU by the placement policy.
+    pub promotions: u64,
+    /// Rows unmapped from the GPU arena by the background demoter.
+    pub demotions: u64,
+    /// One-off cold seeds whose host row was dropped early (admission
+    /// bypass).
+    pub bypassed: u64,
+    /// Accesses to over-capacity (spill-region) rows under `--gpu-oversub`.
+    pub oversub_faults: u64,
+    /// Host→device row transfers avoided because the row was GPU-resident.
+    pub pcie_saved_bytes: u64,
+    /// PCIe bytes the tier itself charged (promotions + pinned uploads +
+    /// oversubscription fault migrations).
+    pub pcie_tier_bytes: u64,
+}
+
+impl TierSnapshot {
+    /// Delta since an earlier snapshot of the same store.
+    pub fn since(&self, start: &TierSnapshot) -> TierSnapshot {
+        TierSnapshot {
+            gpu_hits: self.gpu_hits - start.gpu_hits,
+            host_hits: self.host_hits - start.host_hits,
+            promotions: self.promotions - start.promotions,
+            demotions: self.demotions - start.demotions,
+            bypassed: self.bypassed - start.bypassed,
+            oversub_faults: self.oversub_faults - start.oversub_faults,
+            pcie_saved_bytes: self.pcie_saved_bytes - start.pcie_saved_bytes,
+            pcie_tier_bytes: self.pcie_tier_bytes - start.pcie_tier_bytes,
+        }
+    }
+
+    /// Merge another snapshot in (per-tenant report aggregation).
+    pub fn merge(&mut self, other: &TierSnapshot) {
+        self.gpu_hits += other.gpu_hits;
+        self.host_hits += other.host_hits;
+        self.promotions += other.promotions;
+        self.demotions += other.demotions;
+        self.bypassed += other.bypassed;
+        self.oversub_faults += other.oversub_faults;
+        self.pcie_saved_bytes += other.pcie_saved_bytes;
+        self.pcie_tier_bytes += other.pcie_tier_bytes;
+    }
+
+    /// Fraction of buffered hits the GPU tier served (the bench's ≥80%
+    /// hot-head gate).
+    pub fn gpu_hit_fraction(&self) -> f64 {
+        let total = self.gpu_hits + self.host_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.gpu_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Degree prior for promotion: above-average-degree nodes promote one hit
+/// earlier.
+struct Degrees {
+    indptr: Arc<Vec<u64>>,
+    avg: u64,
+}
+
+impl Degrees {
+    fn new(indptr: Arc<Vec<u64>>) -> Self {
+        let nodes = indptr.len().saturating_sub(1).max(1) as u64;
+        let edges = indptr.last().copied().unwrap_or(0);
+        Degrees { avg: edges / nodes, indptr }
+    }
+
+    fn degree(&self, node: u32) -> u64 {
+        let v = node as usize;
+        if v + 1 >= self.indptr.len() {
+            return 0;
+        }
+        self.indptr[v + 1] - self.indptr[v]
+    }
+}
+
+/// Flat f32 row arena for the GPU tier. A row is written only while its
+/// slot is unmapped and invalid (exclusive ownership under the tier lock)
+/// and read only through a published alias whose batch holds a reference,
+/// so the raw-pointer copies never overlap; the happens-before edge is the
+/// SeqCst store of the slot word on publish against the acquire load before
+/// a gather (the same protocol as the host buffer's arena).
+struct RowArena {
+    data: UnsafeCell<Box<[f32]>>,
+    dim: usize,
+}
+
+unsafe impl Sync for RowArena {}
+
+impl RowArena {
+    fn new(rows: usize, dim: usize) -> Self {
+        RowArena { data: UnsafeCell::new(vec![0.0f32; rows * dim].into_boxed_slice()), dim }
+    }
+
+    /// Safety: caller owns `slot` exclusively (unmapped + invalid, under
+    /// the tier lock).
+    unsafe fn write_row(&self, slot: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dim);
+        let dst = (*self.data.get()).as_mut_ptr().add(slot * self.dim);
+        std::ptr::copy_nonoverlapping(row.as_ptr(), dst, self.dim);
+    }
+
+    /// Safety: as [`RowArena::write_row`]; decodes little-endian f32 bytes
+    /// (the on-disk feature format). Tolerates longer byte slices exactly
+    /// like `FeatureBuffer::publish_le_bytes` (padded layout rows).
+    unsafe fn write_row_le(&self, slot: usize, bytes: &[u8]) {
+        let n = self.dim.min(bytes.len() / 4);
+        let dst = (*self.data.get()).as_mut_ptr().add(slot * self.dim);
+        for (i, chunk) in bytes.chunks_exact(4).take(n).enumerate() {
+            *dst.add(i) = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+    }
+
+    /// Safety: caller holds a reference on a valid slot and performed an
+    /// acquire load of its slot word.
+    unsafe fn read_row(&self, slot: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let src = (*self.data.get()).as_ptr().add(slot * self.dim);
+        std::ptr::copy_nonoverlapping(src, out.as_mut_ptr(), self.dim);
+    }
+}
+
+/// Sentinel for "slot holds no tenant" in `Inner::slot_node`.
+const NO_NODE: u32 = u32::MAX;
+
+/// Victims the clock sweep hands to the demoter per allocation failure.
+const SWEEP_ENQUEUE_MAX: usize = 32;
+
+/// Demoter batch size: victims unmapped per queue drain.
+const DEMOTE_BATCH: usize = 64;
+
+/// Mutable tier state: the mapping table and free lists. One mutex — the
+/// tier is consulted once per batch (tens to thousands of nodes), not per
+/// row, and every refcount *increment* happens under this lock, which is
+/// what makes the demoter's refs==0 check stable (releases only decrement).
+struct Inner {
+    /// node → GPU slot.
+    map: HashMap<u32, u32>,
+    /// slot → tenant node, `NO_NODE` when unmapped.
+    slot_node: Vec<u32>,
+    /// Pinned (packed-layout) slots: never demoted.
+    pinned: Vec<bool>,
+    /// Free device-resident slots (`< capacity`).
+    free: Vec<u32>,
+    /// Freed spill-region slots (oversubscription only).
+    spill_free: Vec<u32>,
+    /// Next never-used spill slot; starts at `capacity`.
+    spill_next: usize,
+    /// Access frequency per node (the promotion signal).
+    freq: HashMap<u32, u32>,
+    /// Promoted nodes whose *host* row still needs eviction (exclusivity).
+    pending_host_evict: Vec<u32>,
+    /// One-off cold seeds (node → drain age). A candidate ages one step
+    /// per drain and is only dropped at age ≥ 1, so a node re-accessed in
+    /// the very next batch is rescued before its host row is torn down.
+    bypass_pending: HashMap<u32, u32>,
+    /// Second-chance clock cursor over the device-resident region.
+    hand: usize,
+    /// Demotion order observed by unit tests.
+    #[cfg(test)]
+    demote_log: Vec<u32>,
+}
+
+/// The simulated-GPU-resident hot tier: its own slot arena + packed atomic
+/// slot words, capacity charged to [`DeviceMemory`], transfers charged to
+/// the [`Pcie`] model.
+pub struct GpuTier {
+    dim: usize,
+    row_bytes: usize,
+    /// Device-resident rows (`--gpu-mem / row_bytes`).
+    capacity: usize,
+    /// Total arena rows: `capacity`, or `2 × capacity` with the
+    /// oversubscription spill region.
+    arena_rows: usize,
+    oversub: bool,
+    promote_threshold: u32,
+    degrees: Option<Degrees>,
+    states: slot_state::SlotStates,
+    arena: RowArena,
+    inner: Mutex<Inner>,
+    pcie: Arc<Pcie>,
+    demote_q: BoundedQueue<u32>,
+    gpu_hits: AtomicU64,
+    host_hits: AtomicU64,
+    promotions: AtomicU64,
+    demotions: AtomicU64,
+    bypassed: AtomicU64,
+    oversub_faults: AtomicU64,
+    pcie_saved_bytes: AtomicU64,
+    pcie_tier_bytes: AtomicU64,
+    _reservation: Reservation,
+}
+
+impl GpuTier {
+    fn new(
+        fb: &FeatureBuffer,
+        device: &DeviceMemory,
+        pcie: Arc<Pcie>,
+        gpu_mem: u64,
+        policy: &TierPolicy,
+    ) -> Result<GpuTier, OutOfMemory> {
+        let dim = fb.dim;
+        let row_bytes = dim * 4;
+        let reservation = device.reserve("gpu hot tier", gpu_mem)?;
+        let capacity = ((gpu_mem as usize) / row_bytes).max(1);
+        let arena_rows = if policy.oversub { capacity * 2 } else { capacity };
+        // GPU aliases live above the host arena in i32 alias space.
+        assert!(
+            fb.n_slots + arena_rows < i32::MAX as usize,
+            "combined alias space overflows i32"
+        );
+        Ok(GpuTier {
+            dim,
+            row_bytes,
+            capacity,
+            arena_rows,
+            oversub: policy.oversub,
+            promote_threshold: policy.promote_threshold.max(1),
+            degrees: policy.indptr.clone().map(Degrees::new),
+            states: slot_state::SlotStates::new(arena_rows),
+            arena: RowArena::new(arena_rows, dim),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                slot_node: vec![NO_NODE; arena_rows],
+                pinned: vec![false; arena_rows],
+                // Descending push so pops hand out ascending slot ids
+                // (diagnostic friendliness, same as the host free stack).
+                free: (0..capacity as u32).rev().collect(),
+                spill_free: Vec::new(),
+                spill_next: capacity,
+                freq: HashMap::new(),
+                pending_host_evict: Vec::new(),
+                bypass_pending: HashMap::new(),
+                hand: 0,
+                #[cfg(test)]
+                demote_log: Vec::new(),
+            }),
+            pcie,
+            demote_q: BoundedQueue::new(1024),
+            gpu_hits: AtomicU64::new(0),
+            host_hits: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
+            bypassed: AtomicU64::new(0),
+            oversub_faults: AtomicU64::new(0),
+            pcie_saved_bytes: AtomicU64::new(0),
+            pcie_tier_bytes: AtomicU64::new(0),
+            _reservation: reservation,
+        })
+    }
+
+    /// Effective promotion threshold for `node` (degree prior).
+    fn threshold_for(&self, node: u32) -> u32 {
+        match &self.degrees {
+            Some(d) if d.degree(node) > d.avg => (self.promote_threshold - 1).max(1),
+            _ => self.promote_threshold,
+        }
+    }
+
+    /// Take one reference on a mapped slot. Called under the tier lock, so
+    /// the generation is stable and the CAS loop converges; the CAS also
+    /// sets the clock bit (the slot was just used).
+    fn take_ref(&self, slot: u32) {
+        loop {
+            let w = self.states.load(slot);
+            if self.states.try_ref(slot, slot_state::generation(w)).is_ok() {
+                return;
+            }
+        }
+    }
+
+    /// Pop a free slot: device region first, then (oversubscription only)
+    /// the spill region.
+    fn alloc_slot(&self, inner: &mut Inner) -> Option<u32> {
+        if let Some(s) = inner.free.pop() {
+            return Some(s);
+        }
+        if self.oversub {
+            if let Some(s) = inner.spill_free.pop() {
+                return Some(s);
+            }
+            if inner.spill_next < self.arena_rows {
+                let s = inner.spill_next as u32;
+                inner.spill_next += 1;
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// Second-chance clock sweep over the device region: clear the clock
+    /// bit where it is set, enqueue zero-reference unpinned slots whose bit
+    /// was already clear for the background demoter. Mirrors the host
+    /// buffer's discipline, but the unmapping itself is deferred off this
+    /// path. One cycle per call: a slot whose bit this call cleared is only
+    /// demotable by a *later* sweep, so every resident genuinely gets its
+    /// second chance even under a burst of allocation failures.
+    fn sweep_victims(&self, inner: &mut Inner) {
+        if self.oversub || self.capacity == 0 {
+            // The ablation never demotes: it spills instead.
+            return;
+        }
+        let mut enqueued = 0usize;
+        for _ in 0..self.capacity {
+            let s = inner.hand % self.capacity;
+            inner.hand = inner.hand.wrapping_add(1);
+            let node = inner.slot_node[s];
+            if node == NO_NODE || inner.pinned[s] {
+                continue;
+            }
+            let w = self.states.load(s as u32);
+            if slot_state::refs(w) != 0 {
+                continue;
+            }
+            if slot_state::has_clock(w) {
+                self.states.clear_clock(s as u32);
+                continue;
+            }
+            if self.demote_q.try_push(node).is_err() {
+                break; // queue full or closed: the demoter will catch up
+            }
+            enqueued += 1;
+            if enqueued >= SWEEP_ENQUEUE_MAX {
+                break;
+            }
+        }
+    }
+
+    /// Unmap a batch of demotion victims (demoter thread / test flush).
+    /// Every reference increment happens under the tier lock, so refs==0
+    /// observed here cannot be raced upward; a clock bit set since the
+    /// sweep means the row was re-used and gets its second chance.
+    fn process_victims(&self, nodes: &[u32]) {
+        if nodes.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for &n in nodes {
+            let Some(&slot) = inner.map.get(&n) else { continue };
+            if inner.pinned[slot as usize] {
+                continue;
+            }
+            let w = self.states.load(slot);
+            if slot_state::refs(w) != 0 || slot_state::has_clock(w) {
+                continue;
+            }
+            inner.map.remove(&n);
+            inner.slot_node[slot as usize] = NO_NODE;
+            self.states.reset(slot, 0, false, slot_state::generation(w).wrapping_add(1));
+            if (slot as usize) < self.capacity {
+                inner.free.push(slot);
+            } else {
+                inner.spill_free.push(slot);
+            }
+            self.demotions.fetch_add(1, Ordering::Relaxed);
+            #[cfg(test)]
+            inner.demote_log.push(n);
+        }
+    }
+
+    /// Apply deferred host-side bookkeeping off the allocation path:
+    /// release the host rows of freshly promoted nodes (tier exclusivity)
+    /// and drop the host rows of one-off cold seeds (admission bypass).
+    /// Rows still referenced by in-flight batches are retried next call.
+    fn drain_pending(&self, fb: &FeatureBuffer) {
+        let (evicts, bypass) = {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.pending_host_evict.is_empty() && inner.bypass_pending.is_empty() {
+                return;
+            }
+            let evicts = std::mem::take(&mut inner.pending_host_evict);
+            // Only ripe candidates (age ≥ 1) are dropped; the rest age one
+            // step, giving a node one batch window to prove it is not a
+            // one-off.
+            let mut bypass = Vec::new();
+            for (&n, age) in inner.bypass_pending.iter_mut() {
+                if *age >= 1 {
+                    bypass.push(n);
+                } else {
+                    *age += 1;
+                }
+            }
+            (evicts, bypass)
+        };
+        let mut retry = Vec::new();
+        for n in evicts {
+            if fb.is_resident(n) && fb.evict_if_idle(&[n]) == 0 {
+                retry.push(n);
+            }
+        }
+        let mut done = Vec::new();
+        let mut bypassed = 0u64;
+        for n in bypass {
+            if !fb.is_resident(n) {
+                done.push(n); // dropped or naturally evicted already
+            } else if fb.evict_if_idle(&[n]) == 1 {
+                bypassed += 1;
+                done.push(n);
+            }
+        }
+        if bypassed > 0 {
+            self.bypassed.fetch_add(bypassed, Ordering::Relaxed);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.pending_host_evict.extend(retry);
+        for n in done {
+            inner.bypass_pending.remove(&n);
+        }
+    }
+
+    fn snapshot(&self) -> TierSnapshot {
+        TierSnapshot {
+            gpu_hits: self.gpu_hits.load(Ordering::Relaxed),
+            host_hits: self.host_hits.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+            demotions: self.demotions.load(Ordering::Relaxed),
+            bypassed: self.bypassed.load(Ordering::Relaxed),
+            oversub_faults: self.oversub_faults.load(Ordering::Relaxed),
+            pcie_saved_bytes: self.pcie_saved_bytes.load(Ordering::Relaxed),
+            pcie_tier_bytes: self.pcie_tier_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The two-tier façade the pipeline and serve engine construct behind
+/// `--tier`. Host mode delegates everything to the wrapped buffer; GPU
+/// mode splits each batch across the tiers.
+pub struct TieredFeatureStore {
+    fb: Arc<FeatureBuffer>,
+    gpu: Option<Arc<GpuTier>>,
+    demoter: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl TieredFeatureStore {
+    /// `--tier host`: a pure delegate. No tier state is allocated, nothing
+    /// extra is ever charged — byte- and charge-identical to handing the
+    /// [`FeatureBuffer`] out directly.
+    pub fn host(fb: Arc<FeatureBuffer>) -> Arc<TieredFeatureStore> {
+        Arc::new(TieredFeatureStore { fb, gpu: None, demoter: Mutex::new(None) })
+    }
+
+    /// `--tier gpu`: layer a GPU-resident hot tier of `gpu_mem` bytes
+    /// (reserved against `device`) above `fb`, with transfers charged to
+    /// `pcie`.
+    pub fn gpu(
+        fb: Arc<FeatureBuffer>,
+        device: &DeviceMemory,
+        pcie: Arc<Pcie>,
+        gpu_mem: u64,
+        policy: TierPolicy,
+    ) -> Result<Arc<TieredFeatureStore>, OutOfMemory> {
+        let gpu = Arc::new(GpuTier::new(&fb, device, pcie, gpu_mem, &policy)?);
+        let worker = {
+            let g = gpu.clone();
+            std::thread::Builder::new()
+                .name("tier-demoter".into())
+                .spawn(move || {
+                    while let Ok(first) = g.demote_q.pop() {
+                        let mut batch = Vec::with_capacity(DEMOTE_BATCH);
+                        batch.push(first);
+                        while batch.len() < DEMOTE_BATCH {
+                            match g.demote_q.try_pop() {
+                                Some(n) => batch.push(n),
+                                None => break,
+                            }
+                        }
+                        g.process_victims(&batch);
+                    }
+                })
+                .expect("spawn tier demoter")
+        };
+        Ok(Arc::new(TieredFeatureStore {
+            fb,
+            gpu: Some(gpu),
+            demoter: Mutex::new(Some(worker)),
+        }))
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        self.gpu.is_some()
+    }
+
+    /// The wrapped host buffer (stats, invariant checks, staging).
+    pub fn buffer(&self) -> &Arc<FeatureBuffer> {
+        &self.fb
+    }
+
+    /// Device-resident rows of the GPU tier (0 in host mode).
+    pub fn gpu_capacity_rows(&self) -> usize {
+        self.gpu.as_ref().map_or(0, |g| g.capacity)
+    }
+
+    /// Plan a batch across the tiers. GPU residents are referenced and
+    /// aliased immediately (`fb.n_slots + slot`); the rest goes through the
+    /// host buffer's planner unchanged, so `to_load`/`wait_*` only ever
+    /// name host work. Repeated host hits promote, first-touch loads mark
+    /// for admission bypass.
+    pub fn begin_batch(&self, nodes: &[u32]) -> BatchPlan {
+        let Some(gpu) = &self.gpu else {
+            return self.fb.begin_batch(nodes);
+        };
+        gpu.drain_pending(&self.fb);
+
+        let base = self.fb.n_slots as i32;
+        let mut gpu_alias: Vec<i32> = Vec::with_capacity(nodes.len());
+        let mut rest: Vec<u32> = Vec::new();
+        let mut rest_freq: Vec<u32> = Vec::new();
+        let mut spill_hits = 0u64;
+        {
+            let mut inner = gpu.inner.lock().unwrap();
+            for &n in nodes {
+                let f = {
+                    let e = inner.freq.entry(n).or_insert(0);
+                    *e += 1;
+                    *e
+                };
+                match inner.map.get(&n).copied() {
+                    Some(slot) => {
+                        gpu.take_ref(slot);
+                        inner.bypass_pending.remove(&n);
+                        gpu_alias.push(base + slot as i32);
+                        if (slot as usize) >= gpu.capacity {
+                            spill_hits += 1;
+                        }
+                    }
+                    None => {
+                        if f >= 2 {
+                            // Re-accessed: no longer a one-off cold seed.
+                            inner.bypass_pending.remove(&n);
+                        }
+                        gpu_alias.push(-1);
+                        rest.push(n);
+                        rest_freq.push(f);
+                    }
+                }
+            }
+        }
+        let n_gpu = (nodes.len() - rest.len()) as u64;
+        if n_gpu > 0 {
+            gpu.gpu_hits.fetch_add(n_gpu, Ordering::Relaxed);
+            gpu.pcie_saved_bytes
+                .fetch_add((n_gpu - spill_hits) * gpu.row_bytes as u64, Ordering::Relaxed);
+        }
+        if spill_hits > 0 {
+            // UVM oversubscription: every access to an over-capacity row
+            // pays a fault migration, charged as one burst per batch.
+            gpu.oversub_faults.fetch_add(spill_hits, Ordering::Relaxed);
+            gpu.pcie_tier_bytes
+                .fetch_add(spill_hits * gpu.row_bytes as u64, Ordering::Relaxed);
+            gpu.pcie.transfer_sync(spill_hits as usize * gpu.row_bytes);
+        }
+
+        let mut plan = self.fb.begin_batch(&rest);
+        gpu.host_hits
+            .fetch_add((rest.len() - plan.to_load.len()) as u64, Ordering::Relaxed);
+
+        // Promotion: host hits past the frequency/degree threshold are
+        // copied up. Loads and shared waits are skipped — their rows are
+        // not valid yet; they promote on a later hit.
+        let loading: HashSet<u32> = plan.to_load.iter().map(|&(n, _)| n).collect();
+        let waiting: HashSet<u32> = plan.wait_list.iter().copied().collect();
+        let mut promoted_bytes = 0usize;
+        let mut row = vec![0f32; gpu.dim];
+        let mut seen: HashSet<u32> = HashSet::new();
+        for (i, &n) in rest.iter().enumerate() {
+            if loading.contains(&n) || waiting.contains(&n) || !seen.insert(n) {
+                continue;
+            }
+            if rest_freq[i] < gpu.threshold_for(n) {
+                continue;
+            }
+            let alias = plan.aliases[i];
+            if alias < 0 {
+                continue;
+            }
+            // The plan holds a reference on the host slot, so the row is
+            // stable; copy it out before taking the tier lock.
+            self.fb.gather(std::slice::from_ref(&alias), &mut row);
+            let mut inner = gpu.inner.lock().unwrap();
+            if inner.map.contains_key(&n) {
+                continue; // a peer batch promoted it meanwhile
+            }
+            let Some(slot) = gpu.alloc_slot(&mut inner) else {
+                // Capacity pressure: feed the demoter and stop promoting
+                // this batch (eviction stays off the critical path).
+                gpu.sweep_victims(&mut inner);
+                break;
+            };
+            // Exclusive ownership: the slot is unmapped and invalid.
+            unsafe { gpu.arena.write_row(slot as usize, &row) };
+            let gen = slot_state::generation(gpu.states.load(slot));
+            gpu.states.reset(slot, 0, true, gen.wrapping_add(1));
+            // Recently-used protection: a fresh promotion survives the next
+            // clock pass instead of being the sweep's first victim.
+            gpu.states.set_clock(slot);
+            inner.slot_node[slot as usize] = n;
+            inner.pinned[slot as usize] = false;
+            inner.map.insert(n, slot);
+            // The current batch keeps its host alias; the *host* row is
+            // released back once it idles so the node ends up resident in
+            // exactly one tier.
+            inner.pending_host_evict.push(n);
+            drop(inner);
+            gpu.promotions.fetch_add(1, Ordering::Relaxed);
+            promoted_bytes += gpu.row_bytes;
+        }
+        if promoted_bytes > 0 {
+            gpu.pcie_tier_bytes.fetch_add(promoted_bytes as u64, Ordering::Relaxed);
+            gpu.pcie.transfer_sync(promoted_bytes);
+        }
+
+        // Admission bypass: first-touch loads are one-off cold seeds until
+        // proven otherwise — their host row is dropped once it idles past
+        // one batch window without a second access.
+        {
+            let mut inner = gpu.inner.lock().unwrap();
+            for &(n, _) in &plan.to_load {
+                if inner.freq.get(&n).copied().unwrap_or(0) <= 1 {
+                    inner.bypass_pending.entry(n).or_insert(0);
+                }
+            }
+        }
+
+        // Splice the GPU aliases back into batch order: host aliases are
+        // consumed in `rest` order, which is the batch order of non-GPU
+        // nodes.
+        let mut merged = Vec::with_capacity(nodes.len());
+        let mut host_it = plan.aliases.iter();
+        for ga in &gpu_alias {
+            merged.push(if *ga >= 0 {
+                *ga
+            } else {
+                *host_it.next().expect("one host alias per non-GPU node")
+            });
+        }
+        plan.aliases = merged;
+        plan
+    }
+
+    /// Block until the plan's host-side rows are published (GPU rows are
+    /// valid by construction).
+    pub fn wait_plan(&self, plan: &BatchPlan) {
+        self.fb.wait_plan(plan);
+    }
+
+    /// Gather rows for a (possibly mixed) alias vector into `out`
+    /// (`aliases.len() × dim`). Negative aliases zero-fill, exactly like
+    /// the host buffer.
+    pub fn gather(&self, aliases: &[i32], out: &mut [f32]) {
+        let Some(gpu) = &self.gpu else {
+            return self.fb.gather(aliases, out);
+        };
+        let base = self.fb.n_slots as i32;
+        if aliases.iter().all(|&a| a < base) {
+            return self.fb.gather(aliases, out);
+        }
+        // Mask GPU aliases to -1 for the host gather (it zero-fills), then
+        // overwrite those rows from the GPU arena.
+        let masked: Vec<i32> = aliases.iter().map(|&a| if a >= base { -1 } else { a }).collect();
+        self.fb.gather(&masked, out);
+        let dim = gpu.dim;
+        for (i, &a) in aliases.iter().enumerate() {
+            if a >= base {
+                let slot = (a - base) as u32;
+                // Acquire pairs with the publishing SeqCst store.
+                let w = gpu.states.load_acquire(slot);
+                debug_assert!(slot_state::is_valid(w), "gather of unpublished tier slot");
+                debug_assert!(slot_state::refs(w) > 0, "gather of unreferenced tier slot");
+                unsafe { gpu.arena.read_row(slot as usize, &mut out[i * dim..(i + 1) * dim]) };
+            }
+        }
+    }
+
+    /// Release a batch's references across both tiers. Negative aliases
+    /// are skipped, mirroring the host buffer.
+    pub fn release_aliases(&self, aliases: &[i32]) {
+        let Some(gpu) = &self.gpu else {
+            return self.fb.release_aliases(aliases);
+        };
+        let base = self.fb.n_slots as i32;
+        let mut any_gpu = false;
+        for &a in aliases {
+            if a >= base {
+                any_gpu = true;
+                let prev = gpu.states.sub_ref((a - base) as u32);
+                debug_assert!(slot_state::refs(prev) > 0, "tier release without reference");
+            }
+        }
+        if !any_gpu {
+            return self.fb.release_aliases(aliases);
+        }
+        let masked: Vec<i32> = aliases.iter().map(|&a| if a >= base { -1 } else { a }).collect();
+        self.fb.release_aliases(&masked);
+    }
+
+    /// Evict idle host rows (failed-load recovery path); the GPU tier is
+    /// untouched — tier rows leave only through the demoter.
+    pub fn evict_if_idle(&self, nodes: &[u32]) -> usize {
+        self.fb.evict_if_idle(nodes)
+    }
+
+    /// Pin one packed-layout hot row directly into the GPU tier
+    /// (`attach_layout`): pinned rows are device-resident for the lifetime
+    /// of the store and never demoted. Returns `false` when the
+    /// device-resident region is full — the caller overflows to the host
+    /// pinning path. Callers charge the PCIe upload in one burst via
+    /// [`TieredFeatureStore::charge_tier_upload`].
+    pub fn pin_gpu_row(&self, node: u32, le_bytes: &[u8]) -> bool {
+        let Some(gpu) = &self.gpu else {
+            return false;
+        };
+        debug_assert!(le_bytes.len() >= gpu.row_bytes, "pinned row too short");
+        let mut inner = gpu.inner.lock().unwrap();
+        if inner.map.contains_key(&node) {
+            return true;
+        }
+        // Pins never spill: the oversubscription region is for dynamic
+        // admissions only.
+        let Some(slot) = inner.free.pop() else {
+            return false;
+        };
+        unsafe { gpu.arena.write_row_le(slot as usize, le_bytes) };
+        let gen = slot_state::generation(gpu.states.load(slot));
+        // A permanent reference backs up the pinned flag: the clock sweep
+        // skips referenced slots without even consulting `pinned`.
+        gpu.states.reset(slot, 1, true, gen.wrapping_add(1));
+        inner.slot_node[slot as usize] = node;
+        inner.pinned[slot as usize] = true;
+        inner.map.insert(node, slot);
+        true
+    }
+
+    /// Charge one batched host→device upload (pinned-layout attach) to the
+    /// PCIe model and the tier's transfer counter.
+    pub fn charge_tier_upload(&self, bytes: usize) {
+        if let Some(gpu) = &self.gpu {
+            if bytes > 0 {
+                gpu.pcie_tier_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                gpu.pcie.transfer_sync(bytes);
+            }
+        }
+    }
+
+    /// Synchronously drain the demotion queue (tests and quiesce — the
+    /// background demoter normally does this).
+    pub fn flush_demotions(&self) {
+        if let Some(gpu) = &self.gpu {
+            let mut batch = Vec::new();
+            while let Some(n) = gpu.demote_q.try_pop() {
+                batch.push(n);
+            }
+            gpu.process_victims(&batch);
+        }
+    }
+
+    /// Settle all deferred bookkeeping: demotions and pending host-side
+    /// evictions. Call with no batch in flight (end of epoch, tests).
+    pub fn quiesce(&self) {
+        if let Some(gpu) = &self.gpu {
+            self.flush_demotions();
+            gpu.drain_pending(&self.fb);
+        }
+    }
+
+    /// Monotonic tier counters (all zero in host mode).
+    pub fn snapshot(&self) -> TierSnapshot {
+        self.gpu.as_ref().map_or(TierSnapshot::default(), |g| g.snapshot())
+    }
+
+    /// Structural invariants of both tiers (tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.fb.check_invariants()?;
+        let Some(gpu) = &self.gpu else {
+            return Ok(());
+        };
+        let inner = gpu.inner.lock().unwrap();
+        let accounted = inner.map.len() + inner.free.len() + inner.spill_free.len();
+        if accounted != inner.spill_next {
+            return Err(format!(
+                "tier slots leaked: {} mapped + {} free + {} spill-free != {} activated",
+                inner.map.len(),
+                inner.free.len(),
+                inner.spill_free.len(),
+                inner.spill_next
+            ));
+        }
+        for (&n, &s) in &inner.map {
+            if inner.slot_node[s as usize] != n {
+                return Err(format!("tier map {n}->{s} but slot_node says {}", {
+                    inner.slot_node[s as usize]
+                }));
+            }
+            if !slot_state::is_valid(gpu.states.load(s)) {
+                return Err(format!("mapped tier slot {s} is not valid"));
+            }
+        }
+        for &s in inner.free.iter().chain(inner.spill_free.iter()) {
+            if inner.slot_node[s as usize] != NO_NODE {
+                return Err(format!("free tier slot {s} still has a tenant"));
+            }
+            let w = gpu.states.load(s);
+            if slot_state::is_valid(w) || slot_state::refs(w) != 0 {
+                return Err(format!("free tier slot {s} has live state {w:#x}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Tier exclusivity: after [`TieredFeatureStore::quiesce`], no node may
+    /// be resident in both tiers (the property-test gate).
+    pub fn check_exclusive(&self) -> Result<(), String> {
+        let Some(gpu) = &self.gpu else {
+            return Ok(());
+        };
+        let inner = gpu.inner.lock().unwrap();
+        for &n in inner.map.keys() {
+            if self.fb.is_resident(n) {
+                return Err(format!("node {n} resident in both tiers"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TieredFeatureStore {
+    fn drop(&mut self) {
+        if let Some(gpu) = &self.gpu {
+            gpu.demote_q.close();
+        }
+        if let Some(h) = self.demoter.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Clock;
+    use crate::storage::mem::HostMemory;
+    use crate::storage::pcie::{Pcie, PcieConfig};
+
+    const DIM: usize = 4;
+    const ROW_BYTES: u64 = (DIM * 4) as u64;
+
+    fn fb(slots: usize) -> Arc<FeatureBuffer> {
+        let host = HostMemory::new(1 << 30);
+        Arc::new(FeatureBuffer::in_host(&host, slots, DIM).unwrap())
+    }
+
+    fn pcie() -> Arc<Pcie> {
+        // Effectively free transfers: unit tests assert placement, not time.
+        Pcie::new(
+            PcieConfig { bandwidth: 1e12, latency: std::time::Duration::ZERO, engines: 1 },
+            Clock::new(1.0),
+        )
+    }
+
+    fn gpu_store(fb_slots: usize, gpu_rows: u64, policy: TierPolicy) -> Arc<TieredFeatureStore> {
+        let dev = DeviceMemory::new(1 << 30);
+        TieredFeatureStore::gpu(fb(fb_slots), &dev, pcie(), gpu_rows * ROW_BYTES, policy)
+            .unwrap()
+    }
+
+    /// Run one batch end to end: plan, publish any loads, wait, gather,
+    /// release. Returns the plan's aliases.
+    fn run_batch(store: &TieredFeatureStore, nodes: &[u32]) -> Vec<i32> {
+        let plan = store.begin_batch(nodes);
+        for &(node, slot) in &plan.to_load {
+            let row: Vec<f32> = (0..DIM).map(|d| node as f32 + d as f32 / 10.0).collect();
+            store.buffer().publish(node, slot, &row);
+        }
+        store.wait_plan(&plan);
+        let mut out = vec![0f32; nodes.len() * DIM];
+        store.gather(&plan.aliases, &mut out);
+        for (i, &n) in nodes.iter().enumerate() {
+            assert_eq!(out[i * DIM], n as f32, "row content for node {n}");
+        }
+        let aliases = plan.aliases.clone();
+        store.release_aliases(&plan.aliases);
+        aliases
+    }
+
+    #[test]
+    fn host_mode_is_pure_delegation() {
+        let store = TieredFeatureStore::host(fb(8));
+        assert!(!store.is_gpu());
+        run_batch(&store, &[1, 2, 3]);
+        assert_eq!(store.snapshot(), TierSnapshot::default());
+        let (hits, _, _, loads) = store.buffer().stats();
+        assert_eq!(loads, 3);
+        assert_eq!(hits, 0);
+        run_batch(&store, &[1, 2, 3]);
+        let (hits, _, _, loads) = store.buffer().stats();
+        assert_eq!((hits, loads), (3, 3), "host mode charges exactly like the raw buffer");
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promotion_needs_frequency_threshold() {
+        let store = gpu_store(16, 8, TierPolicy::default());
+        // Access 1: load (freq 1). Access 2: host hit at freq 2 → promote.
+        run_batch(&store, &[5]);
+        assert_eq!(store.snapshot().promotions, 0, "first touch must not promote");
+        run_batch(&store, &[5]);
+        let snap = store.snapshot();
+        assert_eq!(snap.promotions, 1, "second touch (host hit) promotes");
+        assert_eq!(snap.gpu_hits, 0);
+        // Access 3: GPU hit, saving one row transfer.
+        let aliases = run_batch(&store, &[5]);
+        let snap = store.snapshot();
+        assert_eq!(snap.gpu_hits, 1);
+        assert_eq!(snap.pcie_saved_bytes, ROW_BYTES);
+        assert!(aliases[0] >= store.buffer().n_slots as i32, "alias must be GPU-range");
+        // Exclusivity: once quiesced, the host copy is gone.
+        store.quiesce();
+        store.check_exclusive().unwrap();
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn degree_prior_lowers_threshold() {
+        // Graph with avg degree 2; node 0 has degree 6 (above average) and
+        // node 1 degree 1 (below).
+        let indptr = Arc::new(vec![0u64, 6, 7, 8, 8]);
+        let policy = TierPolicy { indptr: Some(indptr), ..TierPolicy::default() };
+        let store = gpu_store(16, 8, policy);
+        run_batch(&store, &[0, 1]); // both load (freq 1)
+        run_batch(&store, &[0, 1]); // host hits at freq 2: both ≥ threshold
+        let snap = store.snapshot();
+        assert_eq!(snap.promotions, 2);
+        // With a raised base threshold the degree prior separates the two:
+        // the high-degree node promotes one hit earlier.
+        let indptr = Arc::new(vec![0u64, 6, 7, 8, 8]);
+        let policy =
+            TierPolicy { promote_threshold: 3, indptr: Some(indptr), ..TierPolicy::default() };
+        let store = gpu_store(16, 8, policy);
+        run_batch(&store, &[0, 1]); // load, freq 1
+        run_batch(&store, &[0, 1]); // freq 2: node 0 (thresh 2) promotes, node 1 (thresh 3) not
+        let snap = store.snapshot();
+        assert_eq!(snap.promotions, 1, "only the high-degree node promotes at freq 2");
+        run_batch(&store, &[0, 1]); // freq 3: node 1 reaches its threshold
+        assert_eq!(store.snapshot().promotions, 2);
+    }
+
+    #[test]
+    fn batched_demotion_preserves_queue_order() {
+        let store = gpu_store(32, 2, TierPolicy::default());
+        let gpu = store.gpu.as_ref().unwrap();
+        // Fill the 2-row tier with nodes 10 and 11.
+        for _ in 0..2 {
+            run_batch(&store, &[10, 11]);
+        }
+        assert_eq!(store.snapshot().promotions, 2);
+        // A third hot node finds the tier full: the sweep clears clock bits
+        // first (second chance), so force two allocation failures.
+        for _ in 0..3 {
+            run_batch(&store, &[12, 13]);
+        }
+        store.quiesce();
+        // Victims were enqueued and demoted in clock order: slot 0's
+        // tenant (node 10) before slot 1's (node 11).
+        let log = gpu.inner.lock().unwrap().demote_log.clone();
+        assert!(!log.is_empty(), "capacity pressure must demote");
+        let p10 = log.iter().position(|&n| n == 10);
+        let p11 = log.iter().position(|&n| n == 11);
+        if let (Some(a), Some(b)) = (p10, p11) {
+            assert!(a < b, "demotion preserves clock/FIFO order: {log:?}");
+        }
+        store.check_invariants().unwrap();
+        store.check_exclusive().unwrap();
+    }
+
+    #[test]
+    fn admission_bypass_drops_one_off_seeds() {
+        let store = gpu_store(64, 8, TierPolicy::default());
+        // Nodes 100..104 are touched exactly once (cold seeds); node 7 is
+        // touched repeatedly (hot).
+        run_batch(&store, &[7, 100, 101, 102, 103]);
+        run_batch(&store, &[7]); // freq-2 host hit: promoted + rescued from bypass
+        let aliases = run_batch(&store, &[7]); // GPU hit; ripe seeds dropped
+        store.quiesce();
+        let snap = store.snapshot();
+        assert!(snap.bypassed >= 4, "one-off seeds must be dropped, got {}", snap.bypassed);
+        assert_eq!(snap.promotions, 1);
+        for n in 100..104 {
+            assert!(!store.buffer().is_resident(n), "cold seed {n} still occupies the buffer");
+        }
+        // The hot node survives — in the GPU tier, not the host buffer.
+        assert!(aliases[0] >= store.buffer().n_slots as i32);
+        store.check_invariants().unwrap();
+        store.check_exclusive().unwrap();
+    }
+
+    #[test]
+    fn repeat_access_rescues_a_bypass_candidate() {
+        let store = gpu_store(64, 8, TierPolicy::default());
+        run_batch(&store, &[42]); // cold load → bypass candidate (age 0)
+        run_batch(&store, &[42]); // re-accessed before ripening: rescued + promoted
+        store.quiesce();
+        store.quiesce();
+        let snap = store.snapshot();
+        assert_eq!(snap.bypassed, 0, "re-accessed node must not count as bypassed");
+        assert_eq!(snap.promotions, 1);
+    }
+
+    #[test]
+    fn oversub_spills_past_capacity_and_charges_faults() {
+        let policy = TierPolicy { oversub: true, ..TierPolicy::default() };
+        let store = gpu_store(64, 2, policy);
+        // Promote 4 hot nodes into a 2-row tier: the extra two land in the
+        // spill region instead of evicting.
+        for _ in 0..2 {
+            run_batch(&store, &[1, 2, 3, 4]);
+        }
+        let snap = store.snapshot();
+        assert_eq!(snap.promotions, 4, "oversubscription admits past capacity");
+        assert_eq!(snap.demotions, 0, "the ablation never demotes");
+        // Hitting all four now faults on the two over-capacity rows.
+        run_batch(&store, &[1, 2, 3, 4]);
+        let snap = store.snapshot();
+        assert_eq!(snap.gpu_hits, 4);
+        assert_eq!(snap.oversub_faults, 2, "spill-region accesses pay fault migrations");
+        assert!(snap.pcie_tier_bytes >= 4 * ROW_BYTES + 2 * ROW_BYTES);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn explicit_tiering_never_spills() {
+        let store = gpu_store(64, 2, TierPolicy::default());
+        for _ in 0..3 {
+            run_batch(&store, &[1, 2, 3, 4]);
+        }
+        store.quiesce();
+        let snap = store.snapshot();
+        assert_eq!(snap.oversub_faults, 0);
+        let gpu = store.gpu.as_ref().unwrap();
+        assert_eq!(gpu.inner.lock().unwrap().spill_next, gpu.capacity, "no spill slot used");
+    }
+
+    #[test]
+    fn pinned_rows_are_never_demoted() {
+        let store = gpu_store(64, 2, TierPolicy::default());
+        // Row bytes match what run_batch expects to gather back.
+        let row90: Vec<u8> =
+            (0..DIM).flat_map(|d| (90.0f32 + d as f32 / 10.0).to_le_bytes()).collect();
+        assert!(store.pin_gpu_row(90, &row90));
+        store.charge_tier_upload(ROW_BYTES as usize);
+        // Heavy churn through the remaining single slot.
+        for n in 0..8u32 {
+            for _ in 0..3 {
+                run_batch(&store, &[n]);
+            }
+        }
+        store.quiesce();
+        let aliases = run_batch(&store, &[90]);
+        assert!(aliases[0] >= store.buffer().n_slots as i32, "pinned row stays GPU-resident");
+        assert!(store.snapshot().pcie_tier_bytes >= ROW_BYTES);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_overflows_to_host_when_full() {
+        let store = gpu_store(64, 2, TierPolicy::default());
+        let row = |n: u32| -> Vec<u8> {
+            let mut v = Vec::new();
+            for d in 0..DIM {
+                v.extend_from_slice(&(n as f32 + d as f32 / 10.0).to_le_bytes());
+            }
+            v
+        };
+        assert!(store.pin_gpu_row(1, &row(1)));
+        assert!(store.pin_gpu_row(2, &row(2)));
+        assert!(!store.pin_gpu_row(3, &row(3)), "full device region refuses the pin");
+    }
+
+    #[test]
+    fn residency_is_exclusive_and_refs_balance_after_churn() {
+        // Property test: random-ish churn with duplicates across a small
+        // two-tier stack, then quiesce — every node in at most one tier,
+        // no leaked references, structural invariants hold.
+        let store = gpu_store(32, 4, TierPolicy::default());
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut step = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        for _ in 0..300 {
+            let len = 1 + (step() % 6) as usize;
+            let nodes: Vec<u32> = (0..len).map(|_| step() % 24).collect();
+            run_batch(&store, &nodes);
+        }
+        store.quiesce();
+        store.quiesce(); // second pass settles evictions deferred by refs
+        store.check_invariants().unwrap();
+        store.check_exclusive().unwrap();
+        // Zero leaked refs: every mapped GPU slot is back to its baseline
+        // reference count (0 dynamic, 1 pinned).
+        let gpu = store.gpu.as_ref().unwrap();
+        let inner = gpu.inner.lock().unwrap();
+        for (&n, &s) in &inner.map {
+            let w = gpu.states.load(s);
+            let baseline = if inner.pinned[s as usize] { 1 } else { 0 };
+            assert_eq!(
+                slot_state::refs(w),
+                baseline,
+                "node {n} slot {s} leaked references after churn"
+            );
+        }
+    }
+
+    #[test]
+    fn tier_kind_parses() {
+        assert_eq!(TierKind::by_name("host"), Some(TierKind::Host));
+        assert_eq!(TierKind::by_name("GPU"), Some(TierKind::Gpu));
+        assert_eq!(TierKind::by_name("uvm"), None);
+        assert_eq!(TierKind::default(), TierKind::Host);
+    }
+
+    #[test]
+    fn snapshot_since_and_merge() {
+        let a = TierSnapshot { gpu_hits: 10, host_hits: 5, ..TierSnapshot::default() };
+        let b = TierSnapshot { gpu_hits: 25, host_hits: 9, ..TierSnapshot::default() };
+        let d = b.since(&a);
+        assert_eq!((d.gpu_hits, d.host_hits), (15, 4));
+        let mut m = a;
+        m.merge(&d);
+        assert_eq!(m, b);
+        assert!((b.gpu_hit_fraction() - 25.0 / 34.0).abs() < 1e-12);
+        assert_eq!(TierSnapshot::default().gpu_hit_fraction(), 0.0);
+    }
+}

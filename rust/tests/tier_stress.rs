@@ -1,0 +1,203 @@
+//! Concurrency stress for the tiered feature store: ≥8 tenants hammer
+//! begin_batch / publish / wait_plan / gather / release_aliases on a GPU
+//! hot tier layered over a small, high-steal host buffer, with overlapping
+//! skewed node sets. Mirrors `membuf_stress.rs`, one layer up: every
+//! gather is content-checked (including rows served from the device
+//! arena), and at quiesce points one thread settles the demotion queue and
+//! validates the cross-tier structural invariants — zero leaked
+//! references in either tier and no node resident in both.
+
+use gnndrive::membuf::FeatureBuffer;
+use gnndrive::sim::Clock;
+use gnndrive::storage::{DeviceMemory, HostMemory, Pcie, PcieConfig};
+use gnndrive::tier::{TierPolicy, TieredFeatureStore};
+use gnndrive::util::rng::Pcg;
+use std::sync::{Arc, Barrier};
+
+const THREADS: usize = 8;
+const BATCH: usize = 24;
+const ITERS: u64 = 200;
+const QUIESCE_EVERY: u64 = 50;
+const DIM: usize = 4;
+const ROW_BYTES: u64 = (DIM * 4) as u64;
+/// Same engine sizing rule as the membuf stress: total live references
+/// (THREADS × BATCH = 192) always fit, so blocking allocations terminate.
+const SLOTS: usize = 256;
+/// Node universe ~8× the host slot count: heavy steal + cross-tenant
+/// sharing pressure underneath the tier.
+const ID_SPACE: u32 = 2000;
+
+fn pcie() -> Arc<Pcie> {
+    // Effectively free transfers: this test asserts placement and
+    // accounting, not time.
+    Pcie::new(
+        PcieConfig { bandwidth: 1e12, latency: std::time::Duration::ZERO, engines: 1 },
+        Clock::new(1.0),
+    )
+}
+
+fn gpu_store(fb_slots: usize, gpu_rows: u64) -> Arc<TieredFeatureStore> {
+    let host = HostMemory::new(1 << 30);
+    let fb = Arc::new(FeatureBuffer::in_host(&host, fb_slots, DIM).unwrap());
+    let dev = DeviceMemory::new(1 << 30);
+    TieredFeatureStore::gpu(fb, &dev, pcie(), gpu_rows * ROW_BYTES, TierPolicy::default())
+        .unwrap()
+}
+
+/// Skewed per-tenant batches: half the draws from a shared hot head (so
+/// promotions and GPU hits happen), half from the full id space (so the
+/// host buffer steals and the tier demotes).
+fn batch_for(thread: usize, iter: u64, hot: u32) -> Vec<u32> {
+    let mut rng = Pcg::with_stream(0x71E4 + thread as u64, iter);
+    let mut ids: Vec<u32> = (0..BATCH)
+        .map(|k| if k % 2 == 0 { rng.below(hot) } else { rng.below(ID_SPACE) })
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+/// One full batch lifecycle against the store, with content checks on
+/// every row regardless of which tier served it (promotion copies the
+/// published host row up, so the bytes must be identical).
+fn run_checked_batch(store: &TieredFeatureStore, batch: &[u32], out: &mut [f32], tag: &str) {
+    let plan = store.begin_batch(batch);
+    for &(node, slot) in &plan.to_load {
+        let row: Vec<f32> = (0..DIM).map(|j| (node * 10 + j as u32) as f32).collect();
+        store.buffer().publish(node, slot, &row);
+    }
+    store.wait_plan(&plan);
+    store.gather(&plan.aliases, &mut out[..batch.len() * DIM]);
+    for (k, &node) in batch.iter().enumerate() {
+        assert_eq!(out[k * DIM], (node * 10) as f32, "{tag}: node {node} row corrupted");
+        assert_eq!(
+            out[k * DIM + DIM - 1],
+            (node * 10 + DIM as u32 - 1) as f32,
+            "{tag}: node {node} row tail corrupted"
+        );
+    }
+    store.release_aliases(&plan.aliases);
+}
+
+#[test]
+fn concurrent_tiered_batches_stress() {
+    // GPU tier big enough to hold the hot head, small against the full id
+    // space: promotions, GPU hits, and clock-sweep demotions all happen
+    // while the host buffer underneath steals constantly.
+    let store = gpu_store(SLOTS, 128);
+    let hot: u32 = 96;
+    let quiesce = Barrier::new(THREADS);
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let store = store.clone();
+            let quiesce = &quiesce;
+            s.spawn(move || {
+                let mut out = vec![0f32; BATCH * DIM];
+                for i in 0..ITERS {
+                    let batch = batch_for(t, i, hot);
+                    run_checked_batch(&store, &batch, &mut out, &format!("thread {t} iter {i}"));
+                    // Quiesce: everyone between release and next begin, one
+                    // thread settles demotions and validates both tiers.
+                    if (i + 1) % QUIESCE_EVERY == 0 {
+                        quiesce.wait();
+                        if t == 0 {
+                            store.quiesce();
+                            store.check_invariants().unwrap_or_else(|e| {
+                                panic!("invariants broken at iter {i}: {e}")
+                            });
+                            store.check_exclusive().unwrap_or_else(|e| {
+                                panic!("tier exclusivity broken at iter {i}: {e}")
+                            });
+                            // All batches released → zero refs on the host
+                            // tier (GPU refs are checked by the sub_ref
+                            // debug assertions on every release).
+                            assert_eq!(
+                                store.buffer().standby_len(),
+                                SLOTS,
+                                "host refcount leak at quiesce (iter {i})"
+                            );
+                        }
+                        quiesce.wait();
+                    }
+                }
+            });
+        }
+    });
+
+    store.quiesce();
+    store.check_invariants().unwrap();
+    store.check_exclusive().unwrap();
+    assert_eq!(store.buffer().standby_len(), SLOTS, "all host slots zero-ref after join");
+    let snap = store.snapshot();
+    assert!(snap.promotions > 0, "hot head must promote under this skew");
+    assert!(snap.gpu_hits > 0, "promoted rows must serve later hits");
+    assert!(snap.pcie_saved_bytes > 0, "GPU hits must bank saved transfers");
+    let (_, _, steals, loads) = store.buffer().stats();
+    assert!(loads > 0, "stress never loaded anything");
+    assert!(steals > 0, "a {SLOTS}-slot host buffer over {ID_SPACE} ids must steal");
+}
+
+#[test]
+fn multi_tenant_serving_tenants_share_one_tiered_store() {
+    // The serving frontend's tenancy contract at the tier layer: N serving
+    // tenants plus one cold-walking "trainer" share ONE tiered store. The
+    // hot head must end up device-resident (promotions then GPU hits), the
+    // tiny tier must churn (demotions), and after shutdown + quiesce there
+    // must be zero leaked references and no dual-resident node.
+    const SERVERS: usize = 7; // + 1 trainer below
+    let store = gpu_store(SLOTS, 48); // tier smaller than the hot head: forced demotions
+    let hot: u32 = 150;
+    let quiesce = Barrier::new(SERVERS + 1);
+
+    std::thread::scope(|s| {
+        for t in 0..SERVERS + 1 {
+            let store = store.clone();
+            let quiesce = &quiesce;
+            s.spawn(move || {
+                let mut out = vec![0f32; BATCH * DIM];
+                for i in 0..ITERS {
+                    let batch = if t == SERVERS {
+                        // The trainer walks the whole id space: pure churn.
+                        let mut rng = Pcg::with_stream(0x7124 + t as u64, i);
+                        let mut ids: Vec<u32> =
+                            (0..BATCH).map(|_| rng.below(ID_SPACE)).collect();
+                        ids.sort_unstable();
+                        ids.dedup();
+                        ids
+                    } else {
+                        batch_for(t, i, hot)
+                    };
+                    run_checked_batch(&store, &batch, &mut out, &format!("tenant {t} iter {i}"));
+                    if (i + 1) % QUIESCE_EVERY == 0 {
+                        quiesce.wait();
+                        if t == 0 {
+                            store.quiesce();
+                            store.check_invariants().unwrap_or_else(|e| {
+                                panic!("invariants broken at iter {i}: {e}")
+                            });
+                            store.check_exclusive().unwrap_or_else(|e| {
+                                panic!("tier exclusivity broken at iter {i}: {e}")
+                            });
+                        }
+                        quiesce.wait();
+                    }
+                }
+            });
+        }
+    });
+
+    store.quiesce();
+    store.check_invariants().unwrap();
+    store.check_exclusive().unwrap();
+    assert_eq!(store.buffer().standby_len(), SLOTS, "host references leaked after shutdown");
+    let snap = store.snapshot();
+    assert!(snap.promotions > 0, "cross-tenant hot head must promote");
+    assert!(snap.gpu_hits > 0, "tenants must share device-resident rows");
+    assert!(
+        snap.demotions > 0,
+        "a 48-row tier under a {hot}-node hot head must demote (promotions {})",
+        snap.promotions
+    );
+    assert_eq!(snap.oversub_faults, 0, "no oversubscription configured");
+}

@@ -151,6 +151,52 @@ echo "== smoke: packed layout (pack -> train --packed, sim + os) =="
   --data "$SMOKE_DIR/ds3" --devices 3 --stripe-bytes 64KiB \
   --batch-size 500 --fanouts 5,5 --batches 2 --epochs 1 --seed 17
 
+echo "== smoke: tiered feature placement (--tier gpu, sim + os) =="
+# The GPU hot tier must train end to end on both backends (promotions,
+# background demotion, PCIe-charged transfers) …
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 2 --tier gpu --gpu-mem 1MiB
+./target/release/gnndrive train --system gnndrive --backend os \
+  --data "$SMOKE_DIR/ds" --batches 2 --epochs 2 --tier gpu --gpu-mem 1MiB
+# … serve a skewed hot head (the workload the tier exists for) …
+./target/release/gnndrive serve --backend sim --dataset unit-test \
+  --requests 60 --clients 3 --tenants 2 --serve-workers 2 \
+  --serve-batch 8 --fanouts 4,4 --hot-nodes 200 \
+  --tier gpu --gpu-mem 1MiB
+# … run the oversubscription ablation …
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 2 \
+  --tier gpu --gpu-mem 64KiB --gpu-oversub
+# … and keep the default charge-identical: --tier host is the pre-tier
+# single-buffer path (the bench asserts exact parity; this asserts it runs).
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1 --tier host
+# Parse-time validation: a GPU tier without a device budget, an
+# oversubscription flag without a GPU tier, and a per-tenant-buffer serve
+# with a GPU tier must all be rejected at exit 2 with the flag named.
+tier_rc=0
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1 --tier gpu || tier_rc=$?
+if [ "$tier_rc" -ne 2 ]; then
+  echo "tier smoke: expected --tier gpu without --gpu-mem rejection (exit 2), got exit $tier_rc" >&2
+  exit 1
+fi
+tier_rc=0
+./target/release/gnndrive train --system gnndrive --backend sim \
+  --dataset unit-test --batches 2 --epochs 1 --gpu-oversub || tier_rc=$?
+if [ "$tier_rc" -ne 2 ]; then
+  echo "tier smoke: expected --gpu-oversub without --tier gpu rejection (exit 2), got exit $tier_rc" >&2
+  exit 1
+fi
+tier_rc=0
+./target/release/gnndrive serve --backend sim --dataset unit-test \
+  --requests 30 --clients 2 --tenants 2 --serve-workers 1 \
+  --per-tenant-buffer --tier gpu --gpu-mem 1MiB || tier_rc=$?
+if [ "$tier_rc" -ne 2 ]; then
+  echo "tier smoke: expected --per-tenant-buffer with --tier gpu rejection (exit 2), got exit $tier_rc" >&2
+  exit 1
+fi
+
 echo "== bench: extract_coalesce (coalesced segment I/O trajectory) =="
 # Runs the extraction bench (release) and appends to BENCH_extract.json; the
 # bench itself asserts the ISSUE-4 acceptance gate (>= 2x fewer charged
@@ -196,6 +242,15 @@ echo "== bench: uring_engine (engine parity, governor, hedging gates) =="
 # duplicate scatters).
 cargo bench --bench uring_engine
 
+echo "== bench: tier_placement (GPU hot-tier placement gates) =="
+# Runs the tiered-placement bench and appends to BENCH_tier.json; the bench
+# asserts the ISSUE-10 gates (a warm GPU tier serves >= 80% of hits on the
+# cubic-skew serve workload; tiered p99 extract latency strictly beats the
+# single-tier host buffer at the same load; explicit promote/demote charges
+# strictly fewer PCIe bytes than the --gpu-oversub ablation; --tier host
+# charges exactly equal to the pre-tier stack).
+cargo bench --bench tier_placement
+
 if [ -f BENCH_extract.json ]; then
   echo "== last BENCH_extract.json record =="
   tail -n 1 BENCH_extract.json
@@ -229,6 +284,11 @@ fi
 if [ -f BENCH_uring.json ]; then
   echo "== last BENCH_uring.json record =="
   tail -n 1 BENCH_uring.json
+fi
+
+if [ -f BENCH_tier.json ]; then
+  echo "== last BENCH_tier.json record =="
+  tail -n 1 BENCH_tier.json
 fi
 
 echo "tier-1 OK"
